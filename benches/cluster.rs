@@ -1,0 +1,80 @@
+//! Bench/report: the cluster performance model across the paper's expert
+//! ladder — regenerates the SHAPE of the TFLOPS/GPU columns (Tables 1, 7,
+//! 8), including the efficiency drop at extreme expert counts (Table 8's
+//! 131072-expert row) and the §3.1 shrinking-batch effect.
+
+use moe::cluster::perf::{model_step, ClusterSpec};
+use moe::metrics::OpsModel;
+use moe::runtime::ModelConfig;
+
+fn cfg(n_experts: usize, k: usize, devices: usize) -> ModelConfig {
+    let d = 64;
+    let eh = 256;
+    ModelConfig {
+        name: format!("moe-{n_experts}"),
+        vocab: 2048,
+        d_model: d,
+        lstm_hidden: d,
+        lstm_proj: 0,
+        middle: "moe".into(),
+        n_experts,
+        k,
+        groups: 0,
+        expert_hidden: eh,
+        capacity: 64,
+        k_effective: k,
+        batch: 16 * devices,
+        seq_len: 16,
+        w_importance: 0.1,
+        w_load: 0.1,
+        ops_per_timestep: (2 * 4 * (d * d + d * d) * 2 + k * 2 * d * eh) as u64,
+        moe_params: (n_experts * 2 * d * eh) as u64,
+        optimizer: "adam".into(),
+    }
+}
+
+fn main() {
+    println!("== modelled TFLOPS/GPU vs expert count (k=4, batch grows with devices) ==");
+    println!(
+        "{:>9} {:>8} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "experts", "devices", "tokens", "dense(ms)", "moe(ms)", "a2a(ms)", "TFLOPS"
+    );
+    for (n, devices) in [(4usize, 16usize), (32, 16), (256, 16), (1024, 32),
+                         (4096, 32), (16384, 64), (65536, 64), (131072, 128)] {
+        let c = cfg(n, 4, devices);
+        let cluster = ClusterSpec::k40s(devices);
+        let tokens = c.batch * c.seq_len;
+        let routed = tokens * c.k_effective;
+        let loads = vec![routed / n.max(1); n];
+        let t = model_step(&c, &cluster, tokens / devices, &loads);
+        let ops = OpsModel::from_config(&c);
+        println!(
+            "{:>9} {:>8} {:>10} {:>12.2} {:>12.2} {:>12.2} {:>10.2}",
+            n,
+            devices,
+            tokens,
+            t.dense_time * 1e3,
+            t.moe_compute_time * 1e3,
+            t.all_to_all_time * 1e3,
+            ops.tflops_per_device(tokens as u64, t.total(), devices)
+        );
+    }
+
+    println!("\n== load-imbalance cost (n=256, 16 devices): step time vs max/mean ==");
+    let c = cfg(256, 4, 16);
+    let cluster = ClusterSpec::k40s(16);
+    let tokens = c.batch * c.seq_len;
+    let routed = tokens * 4;
+    for imbalance in [1.0f64, 2.0, 4.0, 8.0, 17.8] {
+        let mean = routed as f64 / 256.0;
+        let mut loads = vec![mean as usize; 256];
+        loads[0] = (mean * imbalance) as usize;
+        let t = model_step(&c, &cluster, tokens / 16, &loads);
+        println!(
+            "max/mean {:>5.1}: step {:.2} ms (moe {:.2} ms)",
+            imbalance,
+            t.total() * 1e3,
+            t.moe_compute_time * 1e3
+        );
+    }
+}

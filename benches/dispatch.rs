@@ -1,0 +1,92 @@
+//! Bench: router + dispatcher + combine throughput (the L3 hot path).
+//! Backs the §3.1 shrinking-batch analysis and the Table 7/8 efficiency
+//! columns: reports tokens/s through the all-to-all at several expert
+//! counts and device counts.
+
+use moe::coordinator::router::Router;
+use moe::coordinator::scheduler::{ExpertBackend, ExpertWeights, Scheduler, ShardLayout};
+use moe::coordinator::Dispatcher;
+use moe::runtime::TensorF;
+use moe::util::bench::{black_box, Bencher};
+use moe::util::rng::Rng;
+
+fn weights(n: usize, d: usize, h: usize, rng: &mut Rng) -> Vec<ExpertWeights> {
+    (0..n)
+        .map(|_| ExpertWeights {
+            w_in: (0..d * h).map(|_| rng.normal_f32() * 0.2).collect(),
+            w_out: (0..h * d).map(|_| rng.normal_f32() * 0.2).collect(),
+            d_model: d,
+            hidden: h,
+        })
+        .collect()
+}
+
+fn main() {
+    let b = Bencher::default();
+    let d = 64;
+    let tokens = 4096;
+    println!("== dispatch/combine throughput (d_model={d}, {tokens} tokens) ==");
+    for n in [8, 64, 512] {
+        let k = 4.min(n);
+        let mut rng = Rng::new(1);
+        let router = Router::flat_native(
+            d, n, k,
+            (0..d * n).map(|_| rng.normal_f32() * 0.4).collect(),
+            Some((0..d * n).map(|_| rng.normal_f32() * 0.4).collect()),
+        );
+        let x = TensorF::new(
+            vec![tokens, d],
+            (0..tokens * d).map(|_| rng.normal_f32()).collect(),
+        );
+        let mut nrng = rng.fold_in(7);
+        let dec = router.route(&x, Some(&mut nrng)).unwrap();
+
+        let r = b.run(&format!("route n={n} k={k}"), || {
+            let mut nrng = Rng::new(2);
+            black_box(router.route(&x, Some(&mut nrng)).unwrap());
+        });
+        r.report_throughput("tok", tokens as f64);
+
+        let decisions = vec![dec];
+        let r = b.run(&format!("plan n={n}"), || {
+            black_box(Dispatcher::plan(&decisions, n));
+        });
+        r.report_throughput("tok", tokens as f64);
+
+        let plan = Dispatcher::plan(&decisions, n);
+        let r = b.run(&format!("gather+combine n={n}"), || {
+            let outs: Vec<TensorF> = (0..n)
+                .map(|e| Dispatcher::gather(&plan, e, &[&x]))
+                .collect();
+            black_box(Dispatcher::combine(&plan, &outs, d));
+        });
+        r.report_throughput("tok", tokens as f64);
+    }
+
+    println!("\n== full native MoE step vs devices (n=64, k=4) ==");
+    let n = 64;
+    let mut rng = Rng::new(3);
+    let w = weights(n, d, 4 * d, &mut rng);
+    let router = Router::flat_native(
+        d, n, 4,
+        (0..d * n).map(|_| rng.normal_f32() * 0.4).collect(),
+        Some((0..d * n).map(|_| rng.normal_f32() * 0.4).collect()),
+    );
+    let x = TensorF::new(
+        vec![tokens, d],
+        (0..tokens * d).map(|_| rng.normal_f32()).collect(),
+    );
+    let mut nrng = rng.fold_in(9);
+    let dec = router.route(&x, Some(&mut nrng)).unwrap();
+    let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
+    for devices in [1, 2, 4, 8] {
+        let sched = Scheduler {
+            layout: ShardLayout::new(devices, n),
+            backend: ExpertBackend::Native,
+        };
+        let r = b.run(&format!("moe step, {devices} device(s)"), || {
+            black_box(sched.execute(&plan, &[&x], &w).unwrap());
+        });
+        r.report_throughput("tok", tokens as f64);
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: end-to-end training-step latency per config (the Table 1/7
+//! "Training Time" axis).  Measures the full rust->PJRT->rust round trip
+//! of the AOT'd train step, which is what a paper-scale deployment pays
+//! per step on this substrate.
+
+use moe::data::synthetic::{CorpusSpec, TopicCorpus};
+use moe::data::Batcher;
+use moe::runtime::{Engine, Manifest};
+use moe::train::Trainer;
+use moe::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new()?;
+    let manifest = Manifest::load("artifacts")?;
+    let bench = Bencher::quick();
+    println!("== train-step latency (AOT artifact, CPU PJRT) ==");
+    for cfg in ["moe-4", "moe-32", "moe-256", "moe-256-h", "lstm-4x",
+                "moe-1-wide"] {
+        if manifest.config(cfg).is_err() {
+            eprintln!("skipping {cfg}: not in manifest");
+            continue;
+        }
+        let trainer = Trainer::new(&engine, &manifest, cfg)?;
+        let c = trainer.entry.config.clone();
+        let corpus = TopicCorpus::new(CorpusSpec {
+            vocab: c.vocab,
+            ..Default::default()
+        });
+        let mut batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+        let mut state = trainer.init(0)?;
+        let tokens = batcher.next_batch();
+        let tokens_per_step = (c.batch * c.seq_len) as f64;
+        let r = bench.run(&format!("step {cfg}"), || {
+            trainer.step(&mut state, &tokens).unwrap();
+        });
+        r.report_throughput("tok", tokens_per_step);
+    }
+    Ok(())
+}

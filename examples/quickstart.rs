@@ -1,0 +1,85 @@
+//! Quickstart: load the AOT artifacts, run a few training steps of a
+//! small MoE language model, evaluate perplexity, and route a batch
+//! through the distributed coordinator.
+//!
+//! ```bash
+//! make artifacts                       # once: lower the JAX/Pallas model
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use moe::coordinator::Dispatcher;
+use moe::data::synthetic::{CorpusSpec, TopicCorpus};
+use moe::data::Batcher;
+use moe::harness::distributed::{expert_weights, router_for};
+use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
+use moe::runtime::{Engine, Manifest, TensorF};
+use moe::train::Trainer;
+use moe::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // --- 1. load artifacts ---
+    let engine = Engine::new()?;
+    let manifest = Manifest::load("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // --- 2. train a 4-expert MoE LM for a handful of steps ---
+    let cfg = "test-tiny";
+    let trainer = Trainer::new(&engine, &manifest, cfg)?;
+    let c = trainer.entry.config.clone();
+    println!(
+        "config {cfg}: {} experts, k={}, {} params",
+        c.n_experts, c.k, trainer.entry.param_size
+    );
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab: c.vocab,
+        n_topics: 4,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+    let mut state = trainer.init(0)?;
+    let metrics = trainer.run(&mut state, &mut batcher, 30, 10)?;
+    println!(
+        "loss: {:.3} -> {:.3} over {} steps",
+        metrics.first().unwrap().loss,
+        metrics.last().unwrap().loss,
+        metrics.len()
+    );
+
+    // --- 3. held-out perplexity ---
+    let mut test = Batcher::new(&corpus, c.batch, c.seq_len, 1 << 32);
+    let eval = trainer.evaluate(&state, &mut test, 10)?;
+    println!("test perplexity: {:.2}", eval.perplexity());
+
+    // --- 4. distributed routing: 4 simulated devices, expert shards ---
+    let entry = manifest.config(cfg)?.clone();
+    let router = router_for(&entry, &state.params.data, &engine, &manifest,
+                            true)?;
+    let weights = expert_weights(&entry, &state.params.data)?;
+    let sched = Scheduler {
+        layout: ShardLayout::new(4, c.n_experts),
+        backend: ExpertBackend::Artifact {
+            exe: engine.load(&manifest, cfg, "expert")?,
+            capacity: c.capacity,
+        },
+    };
+    let mut rng = Rng::new(0);
+    let x = TensorF::new(
+        vec![c.batch * c.seq_len, c.d_model],
+        (0..c.batch * c.seq_len * c.d_model).map(|_| rng.normal_f32()).collect(),
+    );
+    let mut nrng = rng.fold_in(1);
+    let dec = router.route(&x, Some(&mut nrng))?;
+    let plan = Dispatcher::plan(std::slice::from_ref(&dec), c.n_experts);
+    let (outs, stats) = sched.execute(&plan, &[&x], &weights)?;
+    println!(
+        "distributed MoE: {} routes over {} experts, busiest shard {} \
+         tokens, output shape {:?}",
+        plan.total_routes(),
+        c.n_experts,
+        stats.busiest_shard_tokens,
+        outs[0].shape
+    );
+    println!("quickstart OK");
+    Ok(())
+}

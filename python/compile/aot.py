@@ -1,0 +1,182 @@
+"""AOT pipeline: lower every artifact the rust runtime needs to HLO text.
+
+Interchange is HLO *text*, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Per config we emit:
+
+  init_<cfg>.hlo.txt     (seed i32)                      -> (params, m, v)
+  step_<cfg>.hlo.txt     (params, m, v, tokens, step)    -> (params, m, v, metrics)
+  eval_<cfg>.hlo.txt     (params, tokens)                -> [nll_sum, count]
+  decode_<cfg>.hlo.txt   (params, cs, hs, token)         -> (logits, cs, hs)
+  gating_<cfg>.hlo.txt   (w_g, w_noise, x, noise)        -> (gates, idx, w, imp, load)
+  expert_<cfg>.hlo.txt   (w_in, w_out, xs)               -> ys
+
+plus ``manifest.json`` describing shapes/dtypes/param layout so rust never
+parses Python.  ``make artifacts`` is incremental: a config is re-lowered
+only when this package is newer than its artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, optim
+from .gating import flat_gating
+
+DECODE_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(fn, *args):
+    """Input/output signature via eval_shape (JSON-ready)."""
+    out = jax.eval_shape(fn, *args)
+    flat_out, _ = jax.tree.flatten(out)
+
+    def enc(x):
+        return {"shape": list(x.shape), "dtype": str(x.dtype)}
+    return ([enc(a) for a in jax.tree.leaves(args)], [enc(o) for o in flat_out])
+
+
+def lower_config(cfg: configs.ModelConfig, out_dir: pathlib.Path,
+                 kinds: set[str]) -> dict:
+    # §Perf (EXPERIMENTS.md): pallas interpret=True lowers to a per-grid
+    # while loop that runs ~40x slower than the identical jnp math on
+    # XLA-CPU (1588ms vs 37ms fwd on moe-256).  The monolithic artifacts
+    # therefore embed the jnp path — pytest asserts it equals the kernel
+    # path bit-for-bit-ish (test_kernel_path_matches_ref_path) — while the
+    # test-* configs and the standalone gating/expert artifacts keep the
+    # real Pallas kernels so the L1 path is exercised through PJRT by the
+    # rust parity tests.  On real TPU hardware the kernels compile to
+    # Mosaic and this switch would flip to always-kernels.
+    use_kernels = cfg.name.startswith("test-")
+    built = model.build(cfg, use_kernels=use_kernels)
+    entry = {"config": cfg.to_json(), "metrics": model.METRIC_NAMES,
+             "param_layout": built.spec.layout_json(),
+             "param_size": built.spec.size,
+             "opt_sizes": list(optim.opt_sizes(cfg, built.spec)),
+             "decode_batch": DECODE_BATCH, "n_lstm": built.n_lstm,
+             "artifacts": {}}
+
+    d, n, k = cfg.d_model, cfg.n_experts, cfg.k
+    tokens = jnp.zeros((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    step = jnp.int32(0)
+    p_shape = jax.ShapeDtypeStruct((built.spec.size,), jnp.float32)
+    m_sz, v_sz = optim.opt_sizes(cfg, built.spec)
+    m_shape = jax.ShapeDtypeStruct((m_sz,), jnp.float32)
+    v_shape = jax.ShapeDtypeStruct((v_sz,), jnp.float32)
+    dh = cfg.lstm_hidden
+    dout = cfg.lstm_proj or cfg.lstm_hidden
+    cs = jax.ShapeDtypeStruct((built.n_lstm, DECODE_BATCH, dh), jnp.float32)
+    hs = jax.ShapeDtypeStruct((built.n_lstm, DECODE_BATCH, dout), jnp.float32)
+    tok1 = jax.ShapeDtypeStruct((DECODE_BATCH,), jnp.int32)
+
+    def gating_fn(w_g, w_noise, x, noise):
+        """Router-side gating for the distributed coordinator."""
+        g = flat_gating(x, w_g, w_noise, noise, k, w_importance=0.0,
+                        w_load=0.0, train=True)
+        from .kernels.ref import topk_vals_idx
+        topw, topi = topk_vals_idx(g.gates, k)
+        return g.gates, topi, topw, g.importance, g.load
+
+    def expert_fn(w_in, w_out, xs):
+        """Single-expert FFN for shard workers (Pallas kernel, n=1)."""
+        from .kernels.expert_ffn import expert_ffn
+        y = expert_ffn(xs[None], w_in[None], w_out[None])
+        return y[0]
+
+    router_b = cfg.batch * cfg.seq_len
+    gating_args = (jax.ShapeDtypeStruct((d, n), jnp.float32),
+                   jax.ShapeDtypeStruct((d, n), jnp.float32),
+                   jax.ShapeDtypeStruct((router_b, d), jnp.float32),
+                   jax.ShapeDtypeStruct((router_b, n), jnp.float32))
+    expert_args = (jax.ShapeDtypeStruct((d, cfg.expert_hidden), jnp.float32),
+                   jax.ShapeDtypeStruct((cfg.expert_hidden, d), jnp.float32),
+                   jax.ShapeDtypeStruct((cfg.capacity, d), jnp.float32))
+
+    jobs = {
+        "init": (built.init, (jnp.int32(0),)),
+        "step": (built.train_step, (p_shape, m_shape, v_shape, tokens, step)),
+        "eval": (built.eval_step, (p_shape, tokens)),
+        "decode": (built.decode_step, (p_shape, cs, hs, tok1)),
+    }
+    if cfg.middle == "moe" and not cfg.hierarchical:
+        jobs["gating"] = (gating_fn, gating_args)
+        jobs["expert"] = (expert_fn, expert_args)
+    elif cfg.middle == "moe":
+        jobs["expert"] = (expert_fn, expert_args)
+
+    for kind, (fn, args) in jobs.items():
+        if kinds and kind not in kinds:
+            continue
+        path = out_dir / f"{kind}_{cfg.name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        ins, outs = _sig(fn, *args)
+        entry["artifacts"][kind] = {"file": path.name, "inputs": ins,
+                                    "outputs": outs}
+        print(f"  {path.name}: {len(text)//1024} KiB, "
+              f"{len(ins)} in / {len(outs)} out", file=sys.stderr)
+    return entry
+
+
+DEFAULT_SET = [
+    "test-tiny", "test-hier",
+    "moe-4", "moe-32", "moe-256", "moe-256-h", "moe-1024-h",
+    "moe-1-wide", "moe-1-deep", "lstm-4x", "lstm-big",
+    "moe-lowbudget", "moe-midbudget", "moe-highbudget",
+    "balance-wi0.0-wl0.0", "balance-wi0.2-wl0.0", "balance-wi0.0-wl0.2",
+    "balance-wi0.1-wl0.1", "balance-wi0.01-wl0.01", "balance-wi1.0-wl1.0",
+    "e2e-100m", "mt-moe", "mt-dense",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_SET),
+                    help="comma-separated config names, or 'all'")
+    ap.add_argument("--kinds", default="", help="subset of artifact kinds")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    names = (list(configs.CONFIGS) if args.configs == "all"
+             else args.configs.split(","))
+    kinds = set(args.kinds.split(",")) if args.kinds else set()
+
+    manifest_path = out / "manifest.json"
+    manifest = {"configs": {}}
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+
+    for name in names:
+        cfg = configs.get(name)
+        print(f"[aot] lowering {name}", file=sys.stderr)
+        manifest["configs"][name] = lower_config(cfg, out, kinds)
+
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] wrote {manifest_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

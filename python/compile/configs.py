@@ -1,0 +1,226 @@
+"""Model / experiment configurations mirroring the paper's model zoo.
+
+Every config here is a scaled-down analogue of a model in Shazeer et al.
+(ICLR 2017).  Scaling rule: d_model 512 -> 64..256, expert hidden 1024 ->
+4x d_model, vocab 793k -> 8k synthetic-topic vocab.  The *relationships*
+between configs (matched ops/timestep across the capacity ladder, the
+dense-baseline ladder, hierarchical branching) are preserved because those
+relationships are what the paper's tables measure.
+
+``ops_per_timestep`` reproduces the paper's accounting: forward-pass
+multiply-adds per token, excluding the embedding and softmax layers
+(Section 5.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 8192
+    d_model: int = 128
+    # --- LSTM stack -------------------------------------------------------
+    lstm_hidden: int = 128          # hidden units per LSTM layer
+    lstm_proj: int = 0              # output projection (Sak et al.); 0 = none
+    n_lstm_extra: int = 0           # 4xLSTM-512 baseline: extra LSTM layers
+    # --- middle layer -----------------------------------------------------
+    # 'moe'   : sparsely-gated MoE (flat if groups==0 else hierarchical)
+    # 'wide'  : MoE-1-Wide baseline (single expert, wider hidden)
+    # 'deep'  : MoE-1-Deep baseline (single expert, 4 hidden layers)
+    # 'lstm'  : 4xLSTM baseline (two extra LSTM layers in the middle)
+    # 'none'  : no middle layer (LSTM-2048-512 style big recurrent model)
+    middle: str = "moe"
+    n_experts: int = 4
+    k: int = 2
+    groups: int = 0                 # hierarchical MoE: primary branching factor
+    expert_hidden: int = 512
+    capacity_factor: float = 2.0
+    # 'gather': index-based dispatch/combine (scatter/gather, what the
+    #           paper's TF implementation did -- cost O(B*k*d));
+    # 'einsum': Mesh-TF one-hot contraction through the Pallas dispatch
+    #           kernels (cost O(B*n*cap*d)) -- kept for ablation.
+    dispatch: str = "gather"
+    # --- regularisation & balancing ---------------------------------------
+    dropout: float = 0.1
+    w_importance: float = 0.1
+    w_load: float = 0.1
+    noisy_gating: bool = True
+    # --- training ---------------------------------------------------------
+    batch: int = 32
+    seq_len: int = 16
+    optimizer: str = "adam"         # 'adam' | 'factored' (Appendix D)
+    learning_rate: float = 2e-3
+    warmup_steps: int = 60
+    # --- misc -------------------------------------------------------------
+    seed: int = 0
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.middle == "moe" and self.groups > 0
+
+    @property
+    def group_size(self) -> int:
+        assert self.hierarchical and self.n_experts % self.groups == 0
+        return self.n_experts // self.groups
+
+    @property
+    def k_effective(self) -> int:
+        """Experts active per token (k1*k2 for hierarchical)."""
+        if self.middle != "moe":
+            return 0
+        return self.k * self.k if self.hierarchical else self.k
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert token capacity for the AOT'd einsum dispatch."""
+        tokens = self.batch * self.seq_len
+        cap = int(self.capacity_factor * tokens * self.k_effective / max(self.n_experts, 1))
+        return max(cap, 4)
+
+    # --- ops accounting (paper Section 5.1: fwd multiply-adds / timestep,
+    #     excluding embedding and softmax) ---------------------------------
+
+    def lstm_ops(self, d_in: int, d_h: int, d_out: int) -> int:
+        ops = 4 * (d_in * d_h + d_h * d_h)
+        if self.lstm_proj:
+            ops += d_h * d_out
+        return ops
+
+    @property
+    def ops_per_timestep(self) -> int:
+        d = self.d_model
+        h = self.lstm_hidden
+        proj = self.lstm_proj or h
+        out = self.lstm_proj if self.lstm_proj else h
+        ops = 2 * self.lstm_ops(d, h, out)  # two LSTM layers
+        ops += self.n_lstm_extra * self.lstm_ops(d, h, out)
+        if self.middle == "moe":
+            gate = d * self.n_experts if not self.hierarchical else d * (
+                self.groups + self.group_size)
+            if self.noisy_gating:
+                gate *= 2  # W_g and W_noise
+            ops += gate
+            ops += self.k_effective * 2 * d * self.expert_hidden
+        elif self.middle == "wide":
+            ops += 2 * d * self.expert_hidden
+        elif self.middle == "deep":
+            ops += 2 * d * self.expert_hidden + 3 * self.expert_hidden ** 2
+        elif self.middle == "lstm":
+            ops += 2 * self.lstm_ops(d, h, out)
+        return ops
+
+    @property
+    def moe_params(self) -> int:
+        """Parameters in the MoE layer (the paper's capacity axis)."""
+        if self.middle != "moe":
+            return 0
+        return self.n_experts * 2 * self.d_model * self.expert_hidden
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ops_per_timestep"] = self.ops_per_timestep
+        d["moe_params"] = self.moe_params
+        d["capacity"] = self.capacity
+        d["k_effective"] = self.k_effective
+        return d
+
+
+def _ladder(name: str, **kw) -> ModelConfig:
+    return ModelConfig(name=name, **kw)
+
+
+# --------------------------------------------------------------------------
+# The model zoo.  Keys are artifact-config names used by `aot.py` and the
+# rust side (manifest.json).  Scaled analogues of Appendix C Table 7.
+# --------------------------------------------------------------------------
+
+D = 64          # scaled d_model for the ladder (paper: 512)
+H = 4 * D       # scaled expert hidden       (paper: 1024)
+VOCAB = 2048
+
+_base = dict(vocab=VOCAB, d_model=D, lstm_hidden=D, expert_hidden=H,
+             batch=32, seq_len=16)
+
+CONFIGS: dict[str, ModelConfig] = {}
+
+
+def _add(cfg: ModelConfig) -> ModelConfig:
+    CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+# tiny config for unit tests / CI
+_add(ModelConfig(name="test-tiny", vocab=64, d_model=16, lstm_hidden=16,
+                 expert_hidden=32, n_experts=4, k=2, batch=4, seq_len=6,
+                 warmup_steps=10))
+_add(ModelConfig(name="test-hier", vocab=64, d_model=16, lstm_hidden=16,
+                 expert_hidden=32, n_experts=16, groups=4, k=2, batch=4,
+                 seq_len=6, warmup_steps=10))
+
+# --- Table 7 ladder (scaled) ---
+_add(_ladder("moe-4", middle="moe", n_experts=4, k=4, **_base))
+_add(_ladder("moe-32", middle="moe", n_experts=32, k=4, **_base))
+_add(_ladder("moe-256", middle="moe", n_experts=256, k=4, **_base))
+_add(_ladder("moe-256-h", middle="moe", n_experts=256, groups=16, k=2, **_base))
+_add(_ladder("moe-1024-h", middle="moe", n_experts=1024, groups=32, k=2,
+             dropout=0.2, **_base))
+_add(_ladder("moe-1-wide", middle="wide", expert_hidden=4 * H,
+             **{k: v for k, v in _base.items() if k != "expert_hidden"}))
+_add(_ladder("moe-1-deep", middle="deep", **_base))
+_add(_ladder("lstm-4x", middle="lstm", **_base))
+_add(_ladder("lstm-big", middle="none", lstm_hidden=4 * D, lstm_proj=D,
+             **{k: v for k, v in _base.items() if k != "lstm_hidden"}))
+
+# --- Table 1 budget ladder (scaled): vary computation at high capacity ---
+_add(ModelConfig(name="moe-lowbudget", vocab=VOCAB, d_model=D, lstm_hidden=D,
+                 expert_hidden=H, n_experts=256, groups=16, k=2,
+                 batch=32, seq_len=16, dropout=0.2))
+_add(ModelConfig(name="moe-midbudget", vocab=VOCAB, d_model=2 * D,
+                 lstm_hidden=2 * D, expert_hidden=2 * H, n_experts=64,
+                 groups=8, k=2, batch=32, seq_len=16, dropout=0.2))
+_add(ModelConfig(name="moe-highbudget", vocab=VOCAB, d_model=2 * D,
+                 lstm_hidden=4 * D, lstm_proj=2 * D, expert_hidden=4 * H,
+                 n_experts=16, groups=4, k=2, batch=32, seq_len=16,
+                 dropout=0.2))
+
+# --- Table 6 ablation base (MoE-256 analogue, losses swept at runtime) ---
+for wi, wl in [(0.0, 0.0), (0.2, 0.0), (0.0, 0.2), (0.1, 0.1),
+               (0.01, 0.01), (1.0, 1.0)]:
+    _add(ModelConfig(name=f"balance-wi{wi}-wl{wl}", vocab=VOCAB, d_model=D,
+                     lstm_hidden=D, expert_hidden=H, n_experts=32, k=4,
+                     w_importance=wi, w_load=wl, batch=32, seq_len=16,
+                     warmup_steps=50, learning_rate=2e-3))
+
+# --- end-to-end example: ~100M-param MoE LM (params dominated by experts:
+#     192 experts x 2*256*1024 = 100.7M + 4.2M embed/softmax + LSTMs) ---
+_add(ModelConfig(name="e2e-100m", vocab=8192, d_model=256, lstm_hidden=256,
+                 expert_hidden=1024, n_experts=192, groups=0, k=4,
+                 batch=16, seq_len=32, optimizer="factored", dropout=0.0,
+                 warmup_steps=100, learning_rate=5e-4))
+
+# --- MT configs (prefix-LM seq2seq; Tables 2-5 analogues).  Scaled so the
+#     lexicon is learnable in a few hundred steps: small shared vocab,
+#     short warmup, higher lr, no dropout (the task is deterministic). ---
+_mt = dict(vocab=256, d_model=64, lstm_hidden=64, batch=64, seq_len=20,
+           dropout=0.0, warmup_steps=60, learning_rate=3e-3)
+_add(ModelConfig(name="mt-moe", expert_hidden=256, n_experts=64, groups=8,
+                 k=2, w_importance=0.01, w_load=0.01, **_mt))
+_add(ModelConfig(name="mt-dense", expert_hidden=256, middle="lstm", **_mt))
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown config '{name}'; known: {sorted(CONFIGS)}")
+
+
+if __name__ == "__main__":
+    print(json.dumps({k: v.to_json() for k, v in CONFIGS.items()}, indent=2))

@@ -1,0 +1,140 @@
+"""L2 gating: noisy top-k (Section 2.1), load/importance losses (Section 4,
+Appendix A), hierarchical gating (Appendix B) and the strictly-balanced
+batchwise gating (Appendix F).
+
+The flat-gating hot path calls the L1 Pallas kernel; the hierarchical
+secondary gating and the smooth load estimator stay in jnp (tiny compute,
+needs norm.cdf).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.gating_kernel import noisy_topk_gating
+
+
+class GatingOut(NamedTuple):
+    gates: jax.Array        # (B, n) dense, k nonzeros per row
+    importance: jax.Array   # (n,)
+    load: jax.Array         # (n,)
+    balance_loss: jax.Array  # scalar: wi*CV^2(imp) + wl*CV^2(load)
+    cv_importance: jax.Array
+    cv_load: jax.Array
+
+
+def _balance(gates, load, w_importance, w_load):
+    importance = jnp.sum(gates, axis=0)
+    cv_imp = ref.cv_squared(importance)
+    cv_load = ref.cv_squared(load)
+    loss = w_importance * cv_imp + w_load * cv_load
+    return importance, cv_imp, cv_load, loss
+
+
+def flat_gating(x, w_g, w_noise, noise, k, *, w_importance, w_load,
+                train: bool, use_kernel: bool = True) -> GatingOut:
+    """Noisy top-k gating over n experts.  x: (B, d)."""
+    n = w_g.shape[-1]
+    wn = w_noise if train else None
+    fn = noisy_topk_gating if use_kernel else (
+        lambda x, wg, wn_, nz, k: ref.noisy_topk_gating_ref(x, wg, wn_, nz, k))
+    if use_kernel:
+        gates, clean, noisy = fn(x, w_g, wn, noise, k=k)
+    else:
+        gates, clean, noisy = fn(x, w_g, wn, noise, k)
+    if train and k < n:
+        load = ref.load_ref(clean, noisy, x, w_noise, k)
+    else:
+        # at eval (no noise) the load estimator degenerates to the hard
+        # assignment count
+        load = jnp.sum((gates > 0).astype(jnp.float32), axis=0)
+    importance, cv_imp, cv_load, loss = _balance(gates, load,
+                                                 w_importance, w_load)
+    if not train:
+        loss = jnp.float32(0.0)
+    return GatingOut(gates, importance, load, loss, cv_imp, cv_load)
+
+
+def hierarchical_gating(x, w_g_pri, w_n_pri, w_g_sec, w_n_sec, noise_pri,
+                        noise_sec, k, *, w_importance, w_load,
+                        train: bool) -> GatingOut:
+    """Two-level gating (Appendix B), flattened to effective gates over
+    n = a*b experts so the downstream dispatch machinery is shared.
+
+    w_g_pri: (d, a); w_g_sec: (d, a, b); noise_sec: (B, a, b).
+    Effective gate for expert (i,j):  G_primary(x)_i * G_i(x)_j   (eq 12).
+    Importance_H is the batch sum of the product gates (eq 13); Load_H is
+    the normalised product of the per-level load estimates (eq 14).
+    """
+    b_sz, d = x.shape
+    a = w_g_pri.shape[-1]
+    b = w_g_sec.shape[-1]
+    # ----- primary level (noisy top-k over groups) -----
+    wnp = w_n_pri if train else None
+    g_pri, clean_p, noisy_p = ref.noisy_topk_gating_ref(
+        x, w_g_pri, wnp, noise_pri, k)
+    # ----- secondary level: gate within every group, densely -----
+    clean_s = jnp.einsum("bd,dag->bag", x, w_g_sec)
+    if train:
+        sigma_s = jax.nn.softplus(jnp.einsum("bd,dag->bag", x, w_n_sec))
+        noisy_s = clean_s + noise_sec * sigma_s
+    else:
+        noisy_s = clean_s
+    top_s = ref.topk_vals(noisy_s, k)[..., k - 1:k]
+    masked = jnp.where(noisy_s >= top_s, noisy_s, -jnp.inf)
+    g_sec = jax.nn.softmax(masked, axis=-1)              # (B, a, b)
+    gates = (g_pri[:, :, None] * g_sec).reshape(b_sz, a * b)
+
+    # ----- loads (eq 14) -----
+    if train and k < a:
+        load_pri = ref.load_ref(clean_p, noisy_p, x, w_n_pri, k)   # (a,)
+    else:
+        load_pri = jnp.sum((g_pri > 0).astype(jnp.float32), axis=0)
+    if train and k < b:
+        # per-group secondary load over the sub-batch X^(i) (dense form:
+        # weight each token's P by the indicator that the group was chosen)
+        sel = (g_pri > 0).astype(jnp.float32)            # (B, a)
+        top_vals = ref.topk_vals(noisy_s, min(k + 1, b))
+        kth_incl = top_vals[..., k - 1:k]
+        kth_excl_in = top_vals[..., k:k + 1]
+        is_in = noisy_s >= kth_incl
+        threshold = jnp.where(is_in, kth_excl_in, kth_incl)
+        sigma_s_l = jax.nn.softplus(jnp.einsum("bd,dag->bag", x, w_n_sec))
+        p = ref.normal_cdf((clean_s - threshold) / (sigma_s_l + ref.EPS))
+        load_sec = jnp.einsum("ba,bag->ag", sel, p)      # (a, b)
+        cnt = jnp.maximum(jnp.sum(sel, axis=0), 1.0)     # |X^(i)|
+    else:
+        sel = (g_pri > 0).astype(jnp.float32)
+        load_sec = jnp.einsum("ba,bag->ag", sel,
+                              (g_sec > 0).astype(jnp.float32))
+        cnt = jnp.maximum(jnp.sum(sel, axis=0), 1.0)
+    load = (load_pri[:, None] * load_sec / cnt[:, None]).reshape(a * b)
+
+    importance, cv_imp, cv_load, loss = _balance(gates, load,
+                                                 w_importance, w_load)
+    if not train:
+        loss = jnp.float32(0.0)
+    return GatingOut(gates, importance, load, loss, cv_imp, cv_load)
+
+
+def batchwise_gating(x, w_g, m, *, train: bool, thresholds=None):
+    """Appendix F strictly-balanced gating.
+
+    Training: softmax gates masked by the batchwise top-m-per-expert mask
+    (eq 16/18), renormalised.  Inference: threshold mask (eq 19).
+    Returns (gates, aux_loss_inputs) where aux contains the scores for the
+    threshold-learning loss (eq 20).
+    """
+    scores = jax.nn.softmax(x @ w_g, axis=-1)
+    if train:
+        mask = ref.batchwise_mask_ref(scores, m)
+    else:
+        assert thresholds is not None
+        mask = ref.threshold_mask_ref(scores, thresholds)
+    num = scores * mask
+    gates = num / (jnp.sum(num, axis=-1, keepdims=True) + ref.EPS)
+    return gates, scores

@@ -1,0 +1,139 @@
+"""Pallas kernels: dispatch / combine einsums for the MoE all-to-all.
+
+The AOT'd (single-artifact) training path uses the Mesh-TensorFlow one-hot
+formulation of the paper's dispatch: a (B, n, capacity) one-hot routing
+tensor turns gather/scatter into two dense contractions that the MXU eats:
+
+    dispatch:  expert_in[n,c,d] = sum_b pos_oh[b,n,c] * x[b,d]
+    combine:   y[b,d]          = sum_{n,c} combine[b,n,c] * expert_out[n,c,d]
+
+Per-expert, dispatch is (c,B) @ (B,d) and combine accumulates
+(B,c) @ (c,d) over experts — both MXU-shaped.  The grid runs over experts;
+for combine the expert axis is the *reduction*, accumulated into the output
+block across sequential grid steps (TPU grids execute in order, so the
+first step initialises and later steps add).
+
+The position/priority computation (cumsum over the batch) stays in jnp in
+L2 — it is O(B*n) elementwise and fuses with the gating ops.
+
+The rust coordinator's distributed path does the same all-to-all with real
+index-based scatter/gather (rust/src/coordinator/dispatcher.rs); equality
+of the two paths is asserted in tests on both sides.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dispatch_kernel(oh_ref, x_ref, o_ref):
+    oh = oh_ref[:, 0, :]                    # (B, c) for this expert
+    x = x_ref[...]                          # (B, d)
+    o_ref[0] = jnp.dot(oh.T, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _dispatch(pos_oh, x, interpret):
+    return _dispatch_fwd_only(pos_oh, x, interpret)
+
+
+def _dispatch_vjp_fwd(pos_oh, x, interpret):
+    return _dispatch_fwd_only(pos_oh, x, interpret), (pos_oh, x)
+
+
+def _dispatch_vjp_bwd(interpret, res, dy):
+    pos_oh, x = res
+    # linear contraction: d pos_oh and d x are the dual einsums
+    dpos = jnp.einsum("ncd,bd->bnc", dy, x)
+    dx = jnp.einsum("bnc,ncd->bd", pos_oh, dy)
+    return dpos, dx
+
+
+_dispatch.defvjp(_dispatch_vjp_fwd, _dispatch_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dispatch(pos_oh, x, *, interpret: bool = True):
+    """pos_oh: (B, n, c) one-hot routing; x: (B, d) -> (n, c, d)."""
+    return _dispatch(pos_oh, x, interpret)
+
+
+def _dispatch_fwd_only(pos_oh, x, interpret):
+    b, n, c = pos_oh.shape
+    d = x.shape[-1]
+    return pl.pallas_call(
+        _dispatch_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((b, 1, c), lambda e: (0, e, 0)),
+            pl.BlockSpec((b, d), lambda e: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda e: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, d), x.dtype),
+        interpret=interpret,
+    )(pos_oh, x)
+
+
+def _combine_kernel(cw_ref, eo_ref, o_ref):
+    e = pl.program_id(0)
+    cw = cw_ref[:, 0, :]                    # (B, c)
+    eo = eo_ref[0]                          # (c, d)
+    part = jnp.dot(cw, eo, preferred_element_type=jnp.float32)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(e != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _combine(combine_w, expert_out, interpret):
+    return _combine_fwd_only(combine_w, expert_out, interpret)
+
+
+def _combine_vjp_fwd(combine_w, expert_out, interpret):
+    return _combine_fwd_only(combine_w, expert_out, interpret), \
+        (combine_w, expert_out)
+
+
+def _combine_vjp_bwd(interpret, res, dy):
+    combine_w, expert_out = res
+    dcw = jnp.einsum("bd,ncd->bnc", dy, expert_out)
+    deo = jnp.einsum("bnc,bd->ncd", combine_w, dy)
+    return dcw, deo
+
+
+_combine.defvjp(_combine_vjp_fwd, _combine_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine(combine_w, expert_out, *, interpret: bool = True):
+    """combine_w: (B, n, c); expert_out: (n, c, d) -> (B, d).
+
+    Differentiable: the cotangent w.r.t. combine_w carries the gate
+    gradient (this is how the gating network learns, paper §2.1).
+    """
+    return _combine(combine_w, expert_out, interpret)
+
+
+def _combine_fwd_only(combine_w, expert_out, interpret):
+    b, n, c = combine_w.shape
+    d = expert_out.shape[-1]
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((b, 1, c), lambda e: (0, e, 0)),
+            pl.BlockSpec((1, c, d), lambda e: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, d), lambda e: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), expert_out.dtype),
+        interpret=interpret,
+    )(combine_w, expert_out)

@@ -1,0 +1,113 @@
+"""Pallas kernel: batched expert feed-forward network (the MoE hot spot).
+
+Each expert is a bias-free ReLU MLP  y = max(x W_in, 0) W_out  (paper
+Appendix C: [d*h] + [h*d] parameters per expert).  The batched form runs
+over the dispatched token tensor (n_experts, capacity, d_model).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+(expert, capacity-block); for each step the token block (block_c, d) and
+both weight matrices of one expert are staged into VMEM by BlockSpec, and
+the two matmuls target the MXU with float32 accumulation
+(``preferred_element_type``).  The hidden activation h lives only in
+registers/VMEM scratch — it is never written back to HBM, which is what
+gives the expert its d_hidden arithmetic intensity (paper §3.2).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; correctness comes from pytest against ``ref.py`` and the
+real-TPU perf story is the VMEM/MXU accounting in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w_in_ref, w_out_ref, o_ref):
+    x = x_ref[0]                     # (block_c, d)
+    w_in = w_in_ref[0]               # (d, h)
+    w_out = w_out_ref[0]             # (h, d)
+    h = jnp.dot(x, w_in, preferred_element_type=jnp.float32)
+    h = jnp.maximum(h, 0.0)
+    o_ref[0] = jnp.dot(h, w_out, preferred_element_type=jnp.float32)
+
+
+def vmem_bytes(block_c: int, d: int, h: int, itemsize: int = 4) -> int:
+    """Per-grid-step VMEM footprint estimate (tokens + weights + out + hid)."""
+    return itemsize * (block_c * d * 2 + d * h * 2 + block_c * h)
+
+
+def pick_block_c(capacity: int, d: int, h: int,
+                 budget_bytes: int = 8 * 2 ** 20) -> int:
+    """Largest capacity block (multiple of 8) fitting the VMEM budget."""
+    block = min(capacity, 512)
+    while block > 8 and vmem_bytes(block, d, h) > budget_bytes:
+        block //= 2
+    return max(8, min(block, capacity))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _expert_ffn(x, w_in, w_out, block_c, interpret):
+    return _expert_ffn_fwd_only(x, w_in, w_out, block_c, interpret)
+
+
+def _expert_ffn_vjp_fwd(x, w_in, w_out, block_c, interpret):
+    y = _expert_ffn_fwd_only(x, w_in, w_out, block_c, interpret)
+    # Residuals are inputs only: the hidden activation h is RECOMPUTED in
+    # the backward pass — the paper's Appendix D memory optimization ("we
+    # do not store the activations of the hidden layers of the experts,
+    # but instead recompute them on the backwards pass").
+    return y, (x, w_in, w_out)
+
+
+def _expert_ffn_vjp_bwd(block_c, interpret, res, dy):
+    x, w_in, w_out = res
+    h = jnp.maximum(jnp.einsum("ecd,edh->ech", x, w_in), 0.0)  # recompute
+    dh = jnp.einsum("ecd,ehd->ech", dy, w_out) * (h > 0)
+    dw_out = jnp.einsum("ech,ecd->ehd", h, dy)
+    dw_in = jnp.einsum("ecd,ech->edh", x, dh)
+    dx = jnp.einsum("ech,edh->ecd", dh, w_in)
+    return dx, dw_in, dw_out
+
+
+_expert_ffn.defvjp(_expert_ffn_vjp_fwd, _expert_ffn_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def expert_ffn(x, w_in, w_out, *, block_c: int | None = None,
+               interpret: bool = True):
+    """x: (n, c, d); w_in: (n, d, h); w_out: (n, h, d) -> (n, c, d).
+
+    Differentiable (custom VJP; hidden activations rematerialised in bwd).
+    """
+    if block_c is None:
+        block_c = pick_block_c(x.shape[1], x.shape[2], w_in.shape[-1])
+    return _expert_ffn(x, w_in, w_out, block_c, interpret)
+
+
+def _expert_ffn_fwd_only(x, w_in, w_out, block_c, interpret):
+    n, c, d = x.shape
+    h = w_in.shape[-1]
+    if c % block_c != 0:
+        # pad capacity up to a block multiple; padded rows are zeros and
+        # produce zeros (bias-free network), sliced off below.
+        pad = block_c - c % block_c
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    cp = x.shape[1]
+    grid = (n, cp // block_c)
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e, i: (e, i, 0)),
+            pl.BlockSpec((1, d, h), lambda e, i: (e, 0, 0)),
+            pl.BlockSpec((1, h, d), lambda e, i: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda e, i: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cp, d), x.dtype),
+        interpret=interpret,
+    )(x, w_in, w_out)
+    return out[:, :c, :]

@@ -1,0 +1,142 @@
+"""Pallas kernel: Noisy Top-K gating (paper eq 3-5).
+
+Computes, for a block of tokens resident in VMEM:
+
+    clean = x @ W_g
+    noisy = clean + noise * softplus(x @ W_noise)
+    gates = softmax(KeepTopK(noisy, k))
+
+Top-k is an iterative k-step max-extraction rather than a sort: k <= 4 in
+every paper configuration, and on TPU a k-pass max over a VMEM-resident
+(block_b, n) tile beats a full sort by a wide margin.  The softmax over the
+kept values uses the numerically-stable max-shift; masked lanes contribute
+exp(-inf) = 0.
+
+Outputs (gates, clean, noisy); the smooth load estimator (eq 8-10) consumes
+clean/noisy downstream in L2 (it needs norm.cdf, which stays in jnp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _gating_kernel(x_ref, wg_ref, wn_ref, noise_ref, g_ref, c_ref, n_ref, *,
+                   k: int, noisy_gating: bool):
+    x = x_ref[...]                                   # (block_b, d)
+    clean = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    if noisy_gating:
+        sigma = jax.nn.softplus(
+            jnp.dot(x, wn_ref[...], preferred_element_type=jnp.float32))
+        noisy = clean + noise_ref[...] * sigma
+    else:
+        noisy = clean
+    # iterative top-k threshold: after k max-extractions `work`'s max is the
+    # (k+1)-th largest, and `thresh` holds the k-th largest.
+    work = noisy
+    thresh = None
+    for _ in range(k):
+        thresh = jnp.max(work, axis=-1, keepdims=True)
+        work = jnp.where(work >= thresh, NEG_INF, work)
+    kept = jnp.where(noisy >= thresh, noisy, NEG_INF)
+    kept = kept - jnp.max(kept, axis=-1, keepdims=True)
+    e = jnp.where(kept > NEG_INF / 2, jnp.exp(kept), 0.0)
+    g_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+    c_ref[...] = clean
+    n_ref[...] = noisy
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _gating(x, w_g, w_noise, noise, k, noisy_gating, block_b, interpret):
+    return _gating_fwd_only(x, w_g, w_noise, noise, k, noisy_gating,
+                            block_b, interpret)
+
+
+def _gating_vjp_fwd(x, w_g, w_noise, noise, k, noisy_gating, block_b,
+                    interpret):
+    out = _gating_fwd_only(x, w_g, w_noise, noise, k, noisy_gating,
+                           block_b, interpret)
+    return out, (x, w_g, w_noise, noise, out[0])
+
+
+def _gating_vjp_bwd(k, noisy_gating, block_b, interpret, res, cotangents):
+    """Gradient through the gating network (paper §2.1: for k > 1 the top-k
+    gate values have nonzero derivatives; the top-k *selection* is treated
+    as locally constant, exactly as tf.top_k does)."""
+    x, w_g, w_noise, noise, gates = res
+    dgates, dclean, dnoisy = cotangents
+    # softmax vjp restricted to the kept set (gates == 0 off-support)
+    s = jnp.sum(dgates * gates, axis=-1, keepdims=True)
+    dnoisy_tot = dnoisy + gates * (dgates - s)
+    dclean_tot = dclean + dnoisy_tot
+    dx = dclean_tot @ w_g.T
+    dwg = x.T @ dclean_tot
+    if noisy_gating:
+        pre = x @ w_noise
+        sig = jax.nn.sigmoid(pre)              # d softplus
+        dsigma = dnoisy_tot * noise
+        dpre = dsigma * sig
+        dx = dx + dpre @ w_noise.T
+        dwn = x.T @ dpre
+        dnz = dnoisy_tot * jax.nn.softplus(pre)
+    else:
+        dwn = jnp.zeros_like(w_noise)
+        dnz = jnp.zeros_like(noise)
+    return dx, dwg, dwn, dnz
+
+
+_gating.defvjp(_gating_vjp_fwd, _gating_vjp_bwd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_b", "interpret"))
+def noisy_topk_gating(x, w_g, w_noise, noise, *, k: int,
+                      block_b: int | None = None, interpret: bool = True):
+    """x: (B, d); w_g/w_noise: (d, n); noise: (B, n) -> (gates, clean, noisy).
+
+    Pass ``w_noise=None`` for plain (non-noisy) top-k gating; ``noise`` is
+    then ignored.  Differentiable (custom VJP).
+    """
+    b, d = x.shape
+    n = w_g.shape[-1]
+    noisy_gating = w_noise is not None
+    if not noisy_gating:
+        w_noise = jnp.zeros_like(w_g)
+        noise = jnp.zeros((b, n), x.dtype)
+    if block_b is None:
+        block_b = min(b, 256)
+    return _gating(x, w_g, w_noise, noise, k, noisy_gating, block_b,
+                   interpret)
+
+
+def _gating_fwd_only(x, w_g, w_noise, noise, k, noisy_gating, block_b,
+                     interpret):
+    b, d = x.shape
+    n = w_g.shape[-1]
+    if b % block_b != 0:
+        pad = block_b - b % block_b
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        noise = jnp.pad(noise, ((0, pad), (0, 0)))
+    bp = x.shape[0]
+    kernel = functools.partial(_gating_kernel, k=k, noisy_gating=noisy_gating)
+    shapes = jax.ShapeDtypeStruct((bp, n), jnp.float32)
+    gates, clean, noisy = pl.pallas_call(
+        kernel,
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block_b, n), lambda i: (i, 0))] * 3,
+        out_shape=[shapes, shapes, shapes],
+        interpret=interpret,
+    )(x, w_g, w_noise, noise)
+    return gates[:b], clean[:b], noisy[:b]

@@ -1,0 +1,67 @@
+"""LSTM substrate (Hochreiter & Schmidhuber 1997; Gers et al. 2000).
+
+Standard LSTM with forget gate and optional output projection
+(Sak et al. 2014) as used by the paper's LSTM-2048-512 baseline.  Written
+against the flat ParamSpec so it lowers into the monolithic HLO artifact.
+Weights are fetched from the flat vector ONCE per sequence (outside the
+scan body) so the backward pass accumulates into a single slice-gradient
+per matrix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec
+
+
+def register_lstm(spec: ParamSpec, name: str, d_in: int, d_h: int,
+                  d_proj: int = 0):
+    spec.add(f"{name}.wx", (d_in, 4 * d_h), "uniform")
+    spec.add(f"{name}.wh", (d_proj or d_h, 4 * d_h), "uniform")
+    spec.add(f"{name}.b", (4 * d_h,), "zeros")
+    if d_proj:
+        spec.add(f"{name}.wp", (d_h, d_proj), "uniform")
+
+
+def fetch(spec: ParamSpec, flat, name: str, d_proj: int = 0):
+    w = (spec.get(flat, f"{name}.wx"), spec.get(flat, f"{name}.wh"),
+         spec.get(flat, f"{name}.b"))
+    if d_proj:
+        return w + (spec.get(flat, f"{name}.wp"),)
+    return w + (None,)
+
+
+def cell(weights, x, c, h):
+    """One step.  x: (B, d_in); c: (B, d_h); h: (B, d_proj or d_h)."""
+    wx, wh, b, wp = weights
+    z = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    # forget-gate bias +1: standard trick to keep memory early in training
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    if wp is not None:
+        h_new = h_new @ wp
+    return c_new, h_new
+
+
+def lstm_scan(spec: ParamSpec, flat, name: str, xs, d_h: int,
+              d_proj: int = 0):
+    """xs: (T, B, d_in) -> outputs (T, B, d_proj or d_h)."""
+    b = xs.shape[1]
+    weights = fetch(spec, flat, name, d_proj)
+    c0 = jnp.zeros((b, d_h), xs.dtype)
+    h0 = jnp.zeros((b, d_proj or d_h), xs.dtype)
+
+    def step(carry, x):
+        c, h = cell(weights, x, carry[0], carry[1])
+        return (c, h), h
+
+    (_, _), ys = jax.lax.scan(step, (c0, h0), xs)
+    return ys
+
+
+def lstm_step(spec: ParamSpec, flat, name: str, x, c, h, d_proj: int = 0):
+    """Single-position step for incremental decoding."""
+    return cell(fetch(spec, flat, name, d_proj), x, c, h)

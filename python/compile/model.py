@@ -1,0 +1,230 @@
+"""L2: the paper's language model (Appendix C.1).
+
+Five layers: embedding -> LSTM -> MoE -> LSTM -> softmax, with dropout on
+every non-softmax layer output followed by a residual add (He et al. 2015).
+The MoE is applied *convolutionally* (§3.1): all B*T positions form one
+large batch for the MoE layer.  The middle layer is swappable to reproduce
+the paper's computationally-matched baselines (MoE-1-Wide, MoE-1-Deep,
+4xLSTM-512, LSTM-2048-512).
+
+``build(cfg)`` returns the pure functions that ``aot.py`` lowers to HLO:
+init / train_step / eval_step / decode_step, all over the flat parameter
+vector (see params.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lstm, moe, optim
+from .configs import ModelConfig
+from .params import ParamSpec
+
+METRIC_NAMES = ["loss", "nll", "balance_loss", "cv_importance", "cv_load",
+                "max_over_mean_load", "dropped_frac", "grad_norm", "lr"]
+
+
+class Built(NamedTuple):
+    spec: ParamSpec
+    init: callable          # (seed i32) -> (params, m, v)
+    train_step: callable    # (params, m, v, tokens, step) -> (p, m, v, metrics)
+    eval_step: callable     # (params, tokens) -> [nll_sum, count]
+    decode_step: callable   # (params, cs, hs, token) -> (logits, cs, hs)
+    forward: callable       # debug/tests: (params, tokens_in, rng, train)
+    n_lstm: int
+
+
+def make_spec(cfg: ModelConfig) -> ParamSpec:
+    spec = ParamSpec()
+    d, h = cfg.d_model, cfg.lstm_hidden
+    spec.add("embed", (cfg.vocab, d), "normal")
+    lstm.register_lstm(spec, "lstm1", d, h, cfg.lstm_proj)
+    if cfg.middle == "moe":
+        moe.register_moe(spec, "moe", d, cfg.expert_hidden, cfg.n_experts,
+                         cfg.groups)
+    elif cfg.middle == "wide":
+        spec.add("wide.w_in", (d, cfg.expert_hidden), "normal")
+        spec.add("wide.w_out", (cfg.expert_hidden, d), "normal")
+    elif cfg.middle == "deep":
+        eh = cfg.expert_hidden
+        dims = [d, eh, eh, eh, eh, d]
+        for i in range(5):
+            spec.add(f"deep.w{i}", (dims[i], dims[i + 1]), "normal")
+    elif cfg.middle == "lstm":
+        lstm.register_lstm(spec, "mid1", d, h, cfg.lstm_proj)
+        lstm.register_lstm(spec, "mid2", d, h, cfg.lstm_proj)
+    elif cfg.middle == "none":
+        pass
+    else:
+        raise ValueError(cfg.middle)
+    lstm.register_lstm(spec, "lstm2", d, h, cfg.lstm_proj)
+    spec.add("softmax.w", (d, cfg.vocab), "normal")
+    spec.add("softmax.b", (cfg.vocab,), "zeros")
+    return spec
+
+
+def middle_lstm_names(cfg: ModelConfig) -> list[str]:
+    names = ["lstm1"]
+    if cfg.middle == "lstm":
+        names += ["mid1", "mid2"]
+    names.append("lstm2")
+    return names
+
+
+def _dropout(x, rate, rng, train):
+    if not train or rate == 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(rng, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+class MiddleOut(NamedTuple):
+    y: jax.Array
+    balance_loss: jax.Array
+    metrics: tuple  # cv_imp, cv_load, max_over_mean, dropped
+
+
+def _middle(spec, flat, cfg, x_flat, rng, train, use_kernels):
+    """x_flat: (T*B, d) — the convolutional MoE batch."""
+    zero = jnp.float32(0.0)
+    if cfg.middle == "moe":
+        out = moe.moe_layer(spec, flat, "moe", x_flat, rng, cfg, train=train,
+                            use_kernels=use_kernels)
+        return MiddleOut(jax.nn.sigmoid(out.y), out.balance_loss,
+                         (out.cv_importance, out.cv_load,
+                          out.max_over_mean_load, out.dropped_frac))
+    if cfg.middle == "wide":
+        hid = jnp.maximum(x_flat @ spec.get(flat, "wide.w_in"), 0.0)
+        y = hid @ spec.get(flat, "wide.w_out")
+        return MiddleOut(jax.nn.sigmoid(y), zero, (zero, zero, zero, zero))
+    if cfg.middle == "deep":
+        y = x_flat
+        for i in range(5):
+            y = y @ spec.get(flat, f"deep.w{i}")
+            if i < 4:
+                y = jnp.maximum(y, 0.0)
+        return MiddleOut(jax.nn.sigmoid(y), zero, (zero, zero, zero, zero))
+    return MiddleOut(x_flat, zero, (zero, zero, zero, zero))
+
+
+def build(cfg: ModelConfig, use_kernels: bool = True) -> Built:
+    spec = make_spec(cfg)
+    d, h = cfg.d_model, cfg.lstm_hidden
+    proj = cfg.lstm_proj
+    n_lstm = 4 if cfg.middle == "lstm" else 2
+
+    # ---------------------------------------------------------- forward --
+
+    def forward(flat, tokens_in, rng, train):
+        """tokens_in: (B, T) i32 -> logits (B, T, vocab) + middle stats."""
+        b, t = tokens_in.shape
+        r_emb, r_l1, r_mid, r_midd, r_l2 = jax.random.split(rng, 5)
+        emb = spec.get(flat, "embed")
+        x = emb[tokens_in]                       # (B, T, d)
+        x = _dropout(x, cfg.dropout, r_emb, train)
+        xs = jnp.transpose(x, (1, 0, 2))         # (T, B, d)
+
+        y1 = lstm.lstm_scan(spec, flat, "lstm1", xs, h, proj)
+        xs = xs + _dropout(y1, cfg.dropout, r_l1, train)
+
+        if cfg.middle == "lstm":
+            ym1 = lstm.lstm_scan(spec, flat, "mid1", xs, h, proj)
+            xs = xs + _dropout(ym1, cfg.dropout, r_mid, train)
+            ym2 = lstm.lstm_scan(spec, flat, "mid2", xs, h, proj)
+            xs = xs + _dropout(ym2, cfg.dropout, r_midd, train)
+            mid = MiddleOut(None, jnp.float32(0.0),
+                            tuple(jnp.float32(0.0) for _ in range(4)))
+        elif cfg.middle == "none":
+            mid = MiddleOut(None, jnp.float32(0.0),
+                            tuple(jnp.float32(0.0) for _ in range(4)))
+        else:
+            flat_x = xs.reshape(t * b, d)        # convolutional batch
+            mid = _middle(spec, flat, cfg, flat_x, r_mid, train, use_kernels)
+            y = _dropout(mid.y.reshape(t, b, d), cfg.dropout, r_midd, train)
+            xs = xs + y
+
+        y2 = lstm.lstm_scan(spec, flat, "lstm2", xs, h, proj)
+        xs = xs + _dropout(y2, cfg.dropout, r_l2, train)
+
+        logits = xs @ spec.get(flat, "softmax.w") + spec.get(flat, "softmax.b")
+        return jnp.transpose(logits, (1, 0, 2)), mid
+
+    def nll(logits, targets):
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return -jnp.mean(picked)
+
+    # ------------------------------------------------------------- init --
+
+    def init(seed):
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), seed)
+        flat = spec.init_flat(key)
+        m_sz, v_sz = optim.opt_sizes(cfg, spec)
+        return flat, jnp.zeros((m_sz,)), jnp.zeros((v_sz,))
+
+    # ------------------------------------------------------- train_step --
+
+    def train_step(flat, m, v, tokens, step):
+        """tokens: (B, T+1) i32; step: i32 scalar."""
+        rng = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 1), step)
+
+        def loss_fn(p):
+            logits, mid = forward(p, tokens[:, :-1], rng, True)
+            nll_v = nll(logits, tokens[:, 1:])
+            return nll_v + mid.balance_loss, (nll_v, mid)
+
+        (loss, (nll_v, mid)), grad = jax.value_and_grad(
+            loss_fn, has_aux=True)(flat)
+        new_flat, m, v = optim.update(cfg, spec, flat, m, v, grad, step)
+        gnorm = jnp.sqrt(jnp.sum(grad * grad))
+        lr = optim.lr_schedule(cfg.learning_rate, cfg.warmup_steps, step)
+        metrics = jnp.stack([loss, nll_v, mid.balance_loss, *mid.metrics,
+                             gnorm, lr])
+        return new_flat, m, v, metrics
+
+    # -------------------------------------------------------- eval_step --
+
+    def eval_step(flat, tokens):
+        rng = jax.random.PRNGKey(0)
+        logits, _ = forward(flat, tokens[:, :-1], rng, False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        picked = jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)
+        count = tokens[:, 1:].size
+        return jnp.stack([-jnp.sum(picked), jnp.float32(count)])
+
+    # ------------------------------------------------------ decode_step --
+
+    def decode_step(flat, cs, hs, token):
+        """Incremental decode.  cs: (L, B, d_h); hs: (L, B, d_out);
+        token: (B,) i32 -> (logits (B, vocab), cs', hs')."""
+        rng = jax.random.PRNGKey(0)
+        names = middle_lstm_names(cfg)
+        emb = spec.get(flat, "embed")
+        x = emb[token]
+        new_c, new_h = [], []
+        li = 0
+        c, hh = lstm.lstm_step(spec, flat, names[li], x, cs[li], hs[li], proj)
+        new_c.append(c); new_h.append(hh)
+        x = x + hh
+        li += 1
+        if cfg.middle == "lstm":
+            for nm in ("mid1", "mid2"):
+                c, hh = lstm.lstm_step(spec, flat, nm, x, cs[li], hs[li], proj)
+                new_c.append(c); new_h.append(hh)
+                x = x + hh
+                li += 1
+        elif cfg.middle != "none":
+            midv = _middle(spec, flat, cfg, x, rng, False, use_kernels)
+            x = x + midv.y
+        c, hh = lstm.lstm_step(spec, flat, names[-1], x, cs[li], hs[li], proj)
+        new_c.append(c); new_h.append(hh)
+        x = x + hh
+        logits = x @ spec.get(flat, "softmax.w") + spec.get(flat, "softmax.b")
+        return logits, jnp.stack(new_c), jnp.stack(new_h)
+
+    return Built(spec, init, train_step, eval_step, decode_step, forward,
+                 n_lstm)

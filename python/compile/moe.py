@@ -1,0 +1,177 @@
+"""The Sparsely-Gated Mixture-of-Experts layer (paper Section 2).
+
+Forward: noisy top-k gating -> capacity dispatch -> batched expert FFN
+(Pallas kernel) -> weighted combine (eq 1).  Dispatch uses the Mesh-TF
+one-hot formulation so the whole layer lowers to dense HLO inside the AOT
+artifact; the rust coordinator implements the *same* routing with real
+scatter/gather for the distributed simulation (equality tested on both
+sides).
+
+Capacity note: the paper's TF implementation used dynamically-shaped
+per-expert batches; XLA requires static shapes, so the AOT path gives each
+expert ``capacity_factor * k * tokens / n`` slots and counts dropped
+routes (reported in metrics; the rust distributed path drops nothing).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gating
+from .kernels.dispatch import combine as combine_kernel
+from .kernels.dispatch import dispatch as dispatch_kernel
+from .kernels.expert_ffn import expert_ffn
+from .params import ParamSpec
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    balance_loss: jax.Array
+    cv_importance: jax.Array
+    cv_load: jax.Array
+    max_over_mean_load: jax.Array
+    dropped_frac: jax.Array
+    gates: jax.Array
+
+
+def register_moe(spec: ParamSpec, name: str, d: int, h: int, n: int,
+                 groups: int = 0):
+    """Gating nets init to zero (Appendix A: equal initial load)."""
+    if groups:
+        b = n // groups
+        spec.add(f"{name}.wg_pri", (d, groups), "zeros")
+        spec.add(f"{name}.wn_pri", (d, groups), "zeros")
+        spec.add(f"{name}.wg_sec", (d, groups, b), "zeros")
+        spec.add(f"{name}.wn_sec", (d, groups, b), "zeros")
+    else:
+        spec.add(f"{name}.wg", (d, n), "zeros")
+        spec.add(f"{name}.wn", (d, n), "zeros")
+    spec.add(f"{name}.w_in", (n, d, h), "normal")
+    spec.add(f"{name}.w_out", (n, h, d), "normal")
+
+
+def _ffn_ref(x, w_in, w_out):
+    from .kernels import ref
+    return ref.expert_ffn_ref(x, w_in, w_out)
+
+
+def gather_dispatch(gates, x, capacity):
+    """Index-based dispatch (§Perf): build the (n, capacity, d) expert
+    input tensor with ONE scatter of token indices plus ONE gather of
+    rows — cost O(B*n + n*cap*d) — instead of the O(B*n*cap*d) one-hot
+    contraction.  This is what the paper's TensorFlow implementation did
+    (gather / unsorted_segment_sum); the einsum path is kept for ablation.
+
+    Returns (expert_in, dropped_frac, aux) where aux carries the
+    per-token slot bookkeeping for `gather_combine`.
+    """
+    b, n = gates.shape
+    d = x.shape[-1]
+    nonzero = (gates > 0).astype(jnp.int32)
+    pos = jnp.cumsum(nonzero, axis=0) - 1                 # (B, n)
+    keep = (nonzero == 1) & (pos < capacity)
+    routes = jnp.sum(nonzero)
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / jnp.maximum(routes, 1)
+    # scatter: src[e, slot] = token row (B = "empty" sentinel -> zero row)
+    slot = jnp.where(keep, pos, capacity)                 # (B, n)
+    src = jnp.full((n, capacity + 1), b, jnp.int32)
+    cols = jnp.broadcast_to(jnp.arange(n)[None, :], (b, n))
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, n)).astype(jnp.int32)
+    src = src.at[cols, slot].set(rows, mode="drop")
+    src = src[:, :capacity]                               # (n, cap)
+    xpad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    expert_in = xpad[src]                                 # (n, cap, d)
+    return expert_in, dropped, (pos, keep)
+
+
+def gather_combine(gates, expert_out, aux, k):
+    """y[b] = sum_j gate_j * expert_out[e_j, slot_j]  over the k selected
+    experts (eq 1), via one (B, k, d) gather — cost O(B*k*d).
+
+    Gate gradients flow through the take_along_axis of the dense gates
+    (the paper §2.1 gradient path); integer indices carry none.  `k` is
+    the static per-token expert count (cfg.k_effective).  Ties in the
+    gate row may put a zero-gate expert into the top-k — harmless, its
+    weight is 0.
+    """
+    from .kernels.ref import topk_vals_idx
+    pos, keep = aux
+    n, capacity, d = expert_out.shape
+    _, idx = topk_vals_idx(gates, k)                      # (B, k) int32
+    topw = jnp.take_along_axis(gates, idx, axis=-1)       # differentiable
+    p = jnp.take_along_axis(pos, idx, axis=-1)            # (B, k)
+    kept = jnp.take_along_axis(keep, idx, axis=-1)
+    flat_idx = jnp.where(kept, idx * capacity + p, n * capacity)
+    eo_pad = jnp.concatenate(
+        [expert_out.reshape(n * capacity, d),
+         jnp.zeros((1, d), expert_out.dtype)], axis=0)
+    picked = eo_pad[flat_idx]                             # (B, k, d)
+    return jnp.sum(topw[..., None] * picked, axis=1)
+
+
+def positions(gates, capacity):
+    """Batch-order slot assignment within each expert queue.
+
+    Returns (pos_oh (B,n,cap) one-hot float, dropped_frac scalar).
+    """
+    nonzero = (gates > 0).astype(jnp.int32)
+    pos = jnp.cumsum(nonzero, axis=0) - 1
+    keep = nonzero * (pos < capacity).astype(jnp.int32)
+    routes = jnp.sum(nonzero)
+    dropped = 1.0 - jnp.sum(keep) / jnp.maximum(routes, 1)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=gates.dtype) \
+        * keep[..., None].astype(gates.dtype)
+    return pos_oh, dropped
+
+
+def moe_layer(spec: ParamSpec, flat, name: str, x, rng, cfg, *,
+              train: bool, use_kernels: bool = True) -> MoEOut:
+    """x: (tokens, d) -- the layer is applied convolutionally (§3.1): the
+    caller flattens (B, T, d) so all timesteps share one big batch."""
+    n, k = cfg.n_experts, cfg.k
+    toks = x.shape[0]
+    if cfg.hierarchical:
+        a, b = cfg.groups, cfg.group_size
+        r1, r2 = jax.random.split(rng)
+        g = gating.hierarchical_gating(
+            x, spec.get(flat, f"{name}.wg_pri"),
+            spec.get(flat, f"{name}.wn_pri"),
+            spec.get(flat, f"{name}.wg_sec"),
+            spec.get(flat, f"{name}.wn_sec"),
+            jax.random.normal(r1, (toks, a)),
+            jax.random.normal(r2, (toks, a, b)),
+            k, w_importance=cfg.w_importance, w_load=cfg.w_load, train=train)
+    else:
+        noise = jax.random.normal(rng, (toks, n))
+        g = gating.flat_gating(
+            x, spec.get(flat, f"{name}.wg"), spec.get(flat, f"{name}.wn"),
+            noise, k, w_importance=cfg.w_importance, w_load=cfg.w_load,
+            train=train, use_kernel=use_kernels)
+
+    capacity = cfg.capacity
+    w_in = spec.get(flat, f"{name}.w_in")
+    w_out = spec.get(flat, f"{name}.w_out")
+    dispatch_mode = getattr(cfg, "dispatch", "gather")
+    if dispatch_mode == "gather":
+        expert_in, dropped, aux = gather_dispatch(g.gates, x, capacity)
+        expert_out = (expert_ffn(expert_in, w_in, w_out) if use_kernels
+                      else _ffn_ref(expert_in, w_in, w_out))
+        y = gather_combine(g.gates, expert_out, aux, cfg.k_effective)
+    else:
+        pos_oh, dropped = positions(g.gates, capacity)
+        if use_kernels:
+            expert_in = dispatch_kernel(pos_oh, x)
+            expert_out = expert_ffn(expert_in, w_in, w_out)
+            y = combine_kernel(pos_oh * g.gates[..., None], expert_out)
+        else:
+            expert_in = jnp.einsum("bnc,bd->ncd", pos_oh, x)
+            expert_out = _ffn_ref(expert_in, w_in, w_out)
+            from .kernels import ref
+            y = ref.combine_ref(expert_out, pos_oh * g.gates[..., None])
+
+    mean_load = jnp.mean(g.load) + 1e-10
+    return MoEOut(y, g.balance_loss, g.cv_importance, g.cv_load,
+                  jnp.max(g.load) / mean_load, dropped, g.gates)

@@ -1,0 +1,112 @@
+"""Optimizers over the flat parameter vector.
+
+- ``adam``: standard Adam (Kingma & Ba 2015), the paper's optimizer.
+- ``factored``: the paper's Appendix-D memory-reduced variant (the
+  Adafactor precursor): beta1 = 0 (no first moment) and the second-moment
+  matrix of every 2-D parameter replaced by the outer product of row/col
+  means divided by the mean of the row vector.  Non-matrix parameters keep
+  a full second moment.
+
+Both are pure functions (flat, m, v, grad, step) -> (flat', m', v') lowered
+into the monolithic train-step artifact, so rust round-trips opaque opt
+buffers.  For ``factored``, v is a *packed* vector: per 2-D parameter the
+row means then the col means; per other parameter the full moment.  The
+packing layout is exported in the manifest.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .params import ParamSpec
+
+B1, B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def lr_schedule(base_lr, warmup, step):
+    """Paper §C.1: linear warmup then proportional to 1/sqrt(step)."""
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    w = float(max(warmup, 1))
+    return base_lr * jnp.minimum(s / w, math.sqrt(w) / jnp.sqrt(s))
+
+
+# --------------------------------------------------------------------- Adam
+
+def adam_sizes(spec: ParamSpec):
+    return spec.size, spec.size
+
+
+def adam_update(flat, m, v, grad, step, lr):
+    m = B1 * m + (1 - B1) * grad
+    v = B2 * v + (1 - B2) * grad * grad
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1 - B1 ** t)
+    vhat = v / (1 - B2 ** t)
+    new = flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new, m, v
+
+
+# ----------------------------------------------------------------- Factored
+
+def factored_layout(spec: ParamSpec):
+    """Packed second-moment layout: list of (name, kind, offset, size)."""
+    out, off = [], 0
+    for name, shape, _ in spec.entries:
+        if len(shape) >= 2:
+            # factor over (prod(leading), last) — 3-D expert weight tensors
+            # (n, d, h) flatten to (n*d, h), Adafactor-style
+            rows, cols = math.prod(shape[:-1]), shape[-1]
+            size = rows + cols
+            out.append((name, "factored", off, size, shape))
+        else:
+            size = math.prod(shape)
+            out.append((name, "full", off, size, shape))
+        off += size
+    return out, off
+
+
+def factored_sizes(spec: ParamSpec):
+    _, total = factored_layout(spec)
+    return 0, total  # no first moment (beta1 = 0)
+
+
+def factored_update(spec: ParamSpec, flat, m, v, grad, step, lr):
+    layout, _ = factored_layout(spec)
+    t = step.astype(jnp.float32) + 1.0
+    new_parts, v_parts = [], []
+    for (name, kind, voff, vsize, shape) in layout:
+        poff, _ = spec.offsets[name]
+        psize = math.prod(shape)
+        rows, cols = math.prod(shape[:-1]), shape[-1]
+        g = jnp.reshape(grad[poff:poff + psize], (rows, cols))
+        p = jnp.reshape(flat[poff:poff + psize], (rows, cols))
+        if kind == "factored":
+            r = v[voff:voff + rows]
+            c = v[voff + rows:voff + rows + cols]
+            g2 = g * g + 1e-30
+            r = B2 * r + (1 - B2) * jnp.mean(g2, axis=1)
+            c = B2 * c + (1 - B2) * jnp.mean(g2, axis=0)
+            vhat = (jnp.outer(r, c) / (jnp.mean(r) + 1e-30)) / (1 - B2 ** t)
+            v_parts.append(jnp.concatenate([r, c]))
+        else:
+            vv = v[voff:voff + vsize]
+            vv = B2 * vv + (1 - B2) * (g * g).reshape(-1)
+            vhat = (vv / (1 - B2 ** t)).reshape(rows, cols)
+            v_parts.append(vv)
+        upd = g / (jnp.sqrt(vhat) + ADAM_EPS)   # beta1 = 0: raw gradient
+        new_parts.append((p - lr * upd).reshape(-1))
+    return jnp.concatenate(new_parts), m, jnp.concatenate(v_parts)
+
+
+def opt_sizes(cfg, spec: ParamSpec):
+    return factored_sizes(spec) if cfg.optimizer == "factored" \
+        else adam_sizes(spec)
+
+
+def update(cfg, spec: ParamSpec, flat, m, v, grad, step):
+    lr = lr_schedule(cfg.learning_rate, cfg.warmup_steps, step)
+    if cfg.optimizer == "factored":
+        return factored_update(spec, flat, m, v, grad, step, lr)
+    return adam_update(flat, m, v, grad, step, lr)

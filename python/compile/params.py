@@ -1,0 +1,70 @@
+"""Flat parameter-vector layout.
+
+All model parameters live in ONE flat f32 vector.  This keeps the
+rust <-> HLO interface to a handful of buffers (params, opt moments,
+tokens), makes buffer donation trivial on the step loop, and lets the
+optimizer update be a single fused elementwise pass.
+
+The layout (name -> offset/shape) is exported to ``artifacts/manifest.json``
+so the rust side can slice expert weights out for the distributed
+coordinator and write checkpoints with named tensors.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec:
+    """Ordered registry of named parameter tensors inside one flat vector."""
+
+    def __init__(self):
+        self.entries: list[tuple[str, tuple[int, ...], str]] = []
+        self.offsets: dict[str, tuple[int, tuple[int, ...]]] = {}
+        self.size = 0
+
+    def add(self, name: str, shape: tuple[int, ...], init: str = "normal"):
+        """init: 'zeros' | 'normal' (fan-in scaled) | 'uniform' (glorot)."""
+        assert name not in self.offsets, f"duplicate param {name}"
+        n = math.prod(shape)
+        self.entries.append((name, shape, init))
+        self.offsets[name] = (self.size, shape)
+        self.size += n
+        return name
+
+    def get(self, flat, name: str):
+        off, shape = self.offsets[name]
+        return jax.lax.dynamic_slice_in_dim(flat, off, math.prod(shape)
+                                            ).reshape(shape)
+
+    def init_flat(self, key):
+        parts = []
+        for name, shape, init in self.entries:
+            key, sub = jax.random.split(key)
+            n = math.prod(shape)
+            if init == "zeros":
+                parts.append(jnp.zeros((n,), jnp.float32))
+            elif init == "normal":
+                fan_in = shape[0] if len(shape) > 1 else shape[0]
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+                parts.append(jax.random.normal(sub, (n,)) * scale)
+            elif init == "uniform":
+                fan_in = shape[-2] if len(shape) > 1 else shape[0]
+                fan_out = shape[-1]
+                lim = math.sqrt(6.0 / (fan_in + fan_out))
+                parts.append(jax.random.uniform(sub, (n,), minval=-lim,
+                                                maxval=lim))
+            else:
+                raise ValueError(init)
+        return jnp.concatenate(parts) if parts else jnp.zeros((0,))
+
+    def layout_json(self) -> list[dict]:
+        return [{"name": n, "shape": list(s), "offset": self.offsets[n][0],
+                 "init": i} for n, s, i in self.entries]
+
+    def matrix_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        return [(n, s) for n, s, _ in self.entries]

@@ -1,0 +1,93 @@
+"""L1 perf model: VMEM footprint + MXU utilisation estimates for the
+Pallas kernels (DESIGN.md §Perf).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+kernel perf story is *structural*: for each config we report, per kernel,
+
+  - the chosen BlockSpec tile shapes,
+  - the per-grid-step VMEM footprint (must fit the ~16 MiB/core budget),
+  - MXU tile utilisation: fraction of the 128x128 systolic array's
+    capacity used by the inner matmuls (dims rounded up to 128 lanes /
+    8 sublanes),
+  - arithmetic intensity (FLOPs per HBM byte), which must exceed the
+    TPU's compute/bandwidth ratio for the kernel to be compute-bound —
+    the §3.2 criterion with VMEM in place of the network.
+
+Run:  python -m compile.perf_model [config ...]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from . import configs
+from .kernels.expert_ffn import pick_block_c, vmem_bytes
+
+MXU = 128          # systolic array dimension
+SUBLANE = 8
+VMEM_BUDGET = 16 * 2 ** 20
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def mxu_utilisation(m: int, k: int, n: int) -> float:
+    """Fraction of MXU capacity used by an (m,k)@(k,n) matmul: real MACs
+    over MACs of the padded (lane/sublane-rounded) computation."""
+    real = m * k * n
+    padded = _round_up(m, SUBLANE) * _round_up(k, MXU) * _round_up(n, MXU)
+    return real / padded
+
+
+def expert_kernel_report(cfg: configs.ModelConfig) -> dict:
+    d, h, cap = cfg.d_model, cfg.expert_hidden, cfg.capacity
+    block_c = pick_block_c(cap, d, h)
+    vmem = vmem_bytes(block_c, d, h)
+    # two matmuls: (block_c,d)@(d,h) and (block_c,h)@(h,d)
+    util = (mxu_utilisation(block_c, d, h) + mxu_utilisation(block_c, h, d)) / 2
+    flops = 2 * 2 * block_c * d * h                   # both matmuls, MAC=2
+    hbm_bytes = 4 * (block_c * d * 2 + d * h * 2)     # tokens io + weights
+    return {
+        "kernel": "expert_ffn",
+        "grid": (cfg.n_experts, max(1, -(-cap // block_c))),
+        "block": (block_c, d, h),
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= VMEM_BUDGET,
+        "mxu_util": util,
+        "arith_intensity": flops / hbm_bytes,
+    }
+
+
+def gating_kernel_report(cfg: configs.ModelConfig) -> dict:
+    d = cfg.d_model
+    n = cfg.n_experts if not cfg.hierarchical else cfg.groups
+    b = min(cfg.batch * cfg.seq_len, 256)
+    vmem = 4 * (b * d + 2 * d * n + 4 * b * n)
+    return {
+        "kernel": "noisy_topk_gating",
+        "block": (b, d, n),
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= VMEM_BUDGET,
+        "mxu_util": mxu_utilisation(b, d, n),
+        "arith_intensity": (2 * 2 * b * d * n) / (4 * (b * d + 2 * d * n + b * n)),
+    }
+
+
+def report(names: list[str]) -> None:
+    print(f"{'config':<18} {'kernel':<18} {'block':<16} {'VMEM':>9} "
+          f"{'fits':>5} {'MXU util':>9} {'FLOP/B':>7}")
+    for name in names:
+        cfg = configs.get(name)
+        if cfg.middle != "moe":
+            continue
+        for r in (expert_kernel_report(cfg), gating_kernel_report(cfg)):
+            print(f"{name:<18} {r['kernel']:<18} "
+                  f"{str(r['block']):<16} {r['vmem_bytes'] / 2**20:>8.2f}M "
+                  f"{'yes' if r['vmem_ok'] else 'NO':>5} "
+                  f"{r['mxu_util']:>9.3f} {r['arith_intensity']:>7.1f}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or [n for n in configs.CONFIGS]
+    report(names)

@@ -1,0 +1,168 @@
+"""L2 gating semantics: the load estimator (Appendix A), balance losses
+(Section 4), hierarchical gating (Appendix B) and strictly-balanced gating
+(Appendix F)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import gating
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.RandomState(seed)
+
+
+# ------------------------------------------------- load estimator (App A)
+
+def test_load_estimator_matches_monte_carlo():
+    """P(x,i) (eq 9) must equal the empirical probability that expert i is
+    selected under a fresh noise draw on component i."""
+    r = rng(0)
+    b, d, n, k = 4, 6, 8, 2
+    x = jnp.asarray(r.randn(b, d), jnp.float32)
+    wg = jnp.asarray(r.randn(d, n) * 0.7, jnp.float32)
+    wn = jnp.asarray(r.randn(d, n) * 0.3, jnp.float32)
+    noise = jnp.asarray(r.randn(b, n), jnp.float32)
+    _, clean, noisy = ref.noisy_topk_gating_ref(x, wg, wn, noise, k)
+    load = np.asarray(ref.load_ref(clean, noisy, x, wn, k))
+
+    # Monte Carlo: for each (x, i), resample noise_i keeping others fixed
+    trials = 4000
+    sigma = np.asarray(jax.nn.softplus(x @ wn))
+    clean_np, noisy_np = np.asarray(clean), np.asarray(noisy)
+    mc = np.zeros(n)
+    rs = rng(1)
+    for t in range(trials):
+        for i in range(n):
+            h = noisy_np.copy()
+            h[:, i] = clean_np[:, i] + rs.randn(b) * sigma[:, i]
+            kth = np.sort(np.delete(h, i, axis=1), axis=1)[:, -k]
+            mc[i] += np.sum(h[:, i] > kth)
+    mc /= trials
+    np.testing.assert_allclose(load, mc, rtol=0.12, atol=0.12)
+
+
+def test_load_degenerate_k_equals_n():
+    r = rng(2)
+    x = jnp.asarray(r.randn(5, 4), jnp.float32)
+    wn = jnp.asarray(r.randn(4, 3), jnp.float32)
+    clean = jnp.asarray(r.randn(5, 3), jnp.float32)
+    load = ref.load_ref(clean, clean, x, wn, 3)
+    np.testing.assert_allclose(load, np.full(3, 5.0))
+
+
+def test_cv_squared():
+    assert float(ref.cv_squared(jnp.array([1.0, 1.0, 1.0]))) < 1e-6
+    assert float(ref.cv_squared(jnp.array([5.0]))) == 0.0
+    x = np.abs(rng(3).randn(16)) + 0.1
+    want = np.var(x) / np.mean(x) ** 2
+    np.testing.assert_allclose(float(ref.cv_squared(jnp.asarray(x))), want,
+                               rtol=1e-4)
+
+
+def test_balance_loss_zero_when_uniform():
+    """Perfectly uniform gates => CV^2 terms vanish."""
+    b, n, d = 8, 4, 4
+    x = jnp.ones((b, d))
+    out = gating.flat_gating(x, jnp.zeros((d, n)), jnp.zeros((d, n)),
+                             jnp.zeros((b, n)), k=n, w_importance=1.0,
+                             w_load=1.0, train=True, use_kernel=False)
+    assert float(out.balance_loss) < 1e-6
+
+
+def test_balance_loss_penalises_collapse():
+    """Gates collapsed onto one expert => large CV^2."""
+    r = rng(4)
+    b, n, d = 16, 8, 4
+    x = jnp.asarray(np.abs(r.randn(b, d)) + 1.0, jnp.float32)
+    wg = jnp.zeros((d, n)).at[:, 0].set(10.0)  # favour expert 0 strongly
+    out = gating.flat_gating(x, wg, jnp.zeros((d, n)),
+                             jnp.zeros((b, n)), k=2, w_importance=1.0,
+                             w_load=0.0, train=True, use_kernel=False)
+    assert float(out.cv_importance) > 1.0
+
+
+# ------------------------------------------------- hierarchical (App B)
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_hierarchical_gates_normalised(seed):
+    r = rng(seed)
+    b, d, a, g, k = 10, 6, 4, 3, 2
+    x = jnp.asarray(r.randn(b, d), jnp.float32)
+    out = gating.hierarchical_gating(
+        x, jnp.asarray(r.randn(d, a), jnp.float32) * 0.3,
+        jnp.asarray(r.randn(d, a), jnp.float32) * 0.3,
+        jnp.asarray(r.randn(d, a, g), jnp.float32) * 0.3,
+        jnp.asarray(r.randn(d, a, g), jnp.float32) * 0.3,
+        jnp.asarray(r.randn(b, a), jnp.float32),
+        jnp.asarray(r.randn(b, a, g), jnp.float32),
+        k, w_importance=0.1, w_load=0.1, train=True)
+    gates = np.asarray(out.gates)
+    # product gates: sum over the flattened a*g experts equals 1 (eq 12
+    # with both levels softmax-normalised over their support)
+    np.testing.assert_allclose(gates.sum(-1), np.ones(b), rtol=1e-5)
+    # exactly k*k active experts per token
+    assert ((gates > 1e-9).sum(-1) == k * k).all()
+    assert out.load.shape == (a * g,)
+    assert float(jnp.min(out.load)) >= 0.0
+
+
+def test_hierarchical_importance_matches_eq13():
+    r = rng(11)
+    b, d, a, g, k = 6, 4, 3, 2, 1
+    x = jnp.asarray(r.randn(b, d), jnp.float32)
+    args = (x, jnp.asarray(r.randn(d, a), jnp.float32),
+            jnp.zeros((d, a), jnp.float32),
+            jnp.asarray(r.randn(d, a, g), jnp.float32),
+            jnp.zeros((d, a, g), jnp.float32),
+            jnp.zeros((b, a), jnp.float32),
+            jnp.zeros((b, a, g), jnp.float32))
+    out = gating.hierarchical_gating(*args, k, w_importance=0.1, w_load=0.1,
+                                     train=True)
+    np.testing.assert_allclose(out.importance,
+                               np.asarray(out.gates).sum(0), rtol=1e-5)
+
+
+# ------------------------------------------- strictly balanced (App F)
+
+def test_batchwise_mask_exact_m_per_expert():
+    r = rng(5)
+    scores = jnp.asarray(r.rand(24, 6), jnp.float32)
+    m = 8
+    mask = ref.batchwise_mask_ref(scores, m)
+    np.testing.assert_array_equal(np.asarray(mask).sum(0), np.full(6, m))
+
+
+def test_batchwise_gating_train_and_infer():
+    r = rng(6)
+    b, d, n, m = 32, 8, 4, 16
+    x = jnp.asarray(r.randn(b, d), jnp.float32)
+    wg = jnp.asarray(r.randn(d, n), jnp.float32)
+    gates, scores = gating.batchwise_gating(x, wg, m, train=True)
+    assert ((np.asarray(gates) > 0).sum(0) == m).all()
+    np.testing.assert_allclose(np.asarray(gates).sum(-1),
+                               np.ones(b), rtol=1e-4)
+    # inference with learned thresholds approximates the batchwise mask
+    t = jnp.quantile(scores, 1 - m / b, axis=0)
+    gi, _ = gating.batchwise_gating(x, wg, m, train=False, thresholds=t)
+    agree = (np.asarray(gi) > 0) == (np.asarray(gates) > 0)
+    assert agree.mean() > 0.9
+
+
+def test_batchwise_threshold_loss_zero_at_optimum():
+    """Eq 20 is zero when the threshold mask reproduces the batchwise mask
+    exactly (thresholds sitting between the m-th and (m+1)-th scores)."""
+    r = rng(7)
+    scores = jnp.asarray(r.rand(16, 3), jnp.float32)
+    m = 4
+    srt = np.sort(np.asarray(scores), axis=0)[::-1]
+    t = jnp.asarray((srt[m - 1] + srt[m]) / 2)
+    loss = ref.batchwise_loss_ref(scores, t, m)
+    np.testing.assert_allclose(float(loss), 0.0, atol=1e-6)
+    # and positive when thresholds are wrong
+    loss2 = ref.batchwise_loss_ref(scores, t + 0.2, m)
+    assert float(loss2) > 0

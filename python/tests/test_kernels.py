@@ -1,0 +1,185 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/k; every test asserts allclose against ref.  This
+is the CORE kernel correctness signal — the AOT artifacts embed exactly
+these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dispatch import combine, dispatch
+from compile.kernels.expert_ffn import expert_ffn, pick_block_c, vmem_bytes
+from compile.kernels.gating_kernel import noisy_topk_gating
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.RandomState(seed)
+
+
+# --------------------------------------------------------------- expert FFN
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 6), c=st.integers(1, 33), d=st.integers(1, 24),
+       h=st.integers(1, 40), seed=st.integers(0, 2 ** 16))
+def test_expert_ffn_matches_ref(n, c, d, h, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.randn(n, c, d), jnp.float32)
+    w_in = jnp.asarray(r.randn(n, d, h) * 0.3, jnp.float32)
+    w_out = jnp.asarray(r.randn(n, h, d) * 0.3, jnp.float32)
+    got = expert_ffn(x, w_in, w_out)
+    want = ref.expert_ffn_ref(x, w_in, w_out)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_c", [8, 16, 64])
+def test_expert_ffn_block_invariance(block_c):
+    r = rng(0)
+    x = jnp.asarray(r.randn(3, 48, 16), jnp.float32)
+    w_in = jnp.asarray(r.randn(3, 16, 32) * 0.2, jnp.float32)
+    w_out = jnp.asarray(r.randn(3, 32, 16) * 0.2, jnp.float32)
+    got = expert_ffn(x, w_in, w_out, block_c=block_c)
+    np.testing.assert_allclose(got, ref.expert_ffn_ref(x, w_in, w_out),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_expert_ffn_grad_matches_ref():
+    r = rng(1)
+    x = jnp.asarray(r.randn(2, 8, 6), jnp.float32)
+    w_in = jnp.asarray(r.randn(2, 6, 10) * 0.3, jnp.float32)
+    w_out = jnp.asarray(r.randn(2, 10, 6) * 0.3, jnp.float32)
+
+    def f_kernel(*a):
+        return jnp.sum(jnp.sin(expert_ffn(*a)))
+
+    def f_ref(*a):
+        return jnp.sum(jnp.sin(ref.expert_ffn_ref(*a)))
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w_in, w_out)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w_in, w_out)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget_picker():
+    # picker must respect the budget and stay a power-of-two-ish block
+    for cap, d, h in [(1024, 512, 1024), (4096, 256, 4096), (64, 64, 64)]:
+        bc = pick_block_c(cap, d, h)
+        assert 8 <= bc <= cap
+        assert vmem_bytes(bc, d, h) <= 8 * 2 ** 20 or bc == 8
+
+
+# ------------------------------------------------------------------- gating
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 40), d=st.integers(1, 16), n=st.integers(2, 32),
+       k=st.integers(1, 4), seed=st.integers(0, 2 ** 16))
+def test_gating_matches_ref(b, d, n, k, seed):
+    k = min(k, n)
+    r = rng(seed)
+    x = jnp.asarray(r.randn(b, d), jnp.float32)
+    wg = jnp.asarray(r.randn(d, n) * 0.4, jnp.float32)
+    wn = jnp.asarray(r.randn(d, n) * 0.4, jnp.float32)
+    noise = jnp.asarray(r.randn(b, n), jnp.float32)
+    g1, c1, n1 = noisy_topk_gating(x, wg, wn, noise, k=k)
+    g2, c2, n2 = ref.noisy_topk_gating_ref(x, wg, wn, noise, k)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(n1, n2, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 16), n=st.integers(2, 16), k=st.integers(1, 4),
+       seed=st.integers(0, 999))
+def test_gating_invariants(b, n, k, seed):
+    """Rows sum to 1 with exactly k nonzeros (paper eq 3-5)."""
+    k = min(k, n)
+    r = rng(seed)
+    x = jnp.asarray(r.randn(b, 8), jnp.float32)
+    wg = jnp.asarray(r.randn(8, n), jnp.float32)
+    noise = jnp.asarray(r.randn(b, n), jnp.float32)
+    g, _, _ = noisy_topk_gating(x, wg, None, noise, k=k)
+    np.testing.assert_allclose(np.sum(g, -1), np.ones(b), rtol=1e-5)
+    assert ((np.asarray(g) > 0).sum(-1) == k).all()
+    assert (np.asarray(g) >= 0).all()
+
+
+def test_gating_nonnoisy_path():
+    r = rng(3)
+    x = jnp.asarray(r.randn(6, 4), jnp.float32)
+    wg = jnp.asarray(r.randn(4, 8), jnp.float32)
+    g1, c1, n1 = noisy_topk_gating(x, wg, None, None, k=2)
+    g2, c2, n2 = ref.noisy_topk_gating_ref(x, wg, None, None, 2)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c1, n1)  # no noise: clean == noisy
+
+
+def test_gating_grad_matches_ref():
+    r = rng(4)
+    x = jnp.asarray(r.randn(10, 6), jnp.float32)
+    wg = jnp.asarray(r.randn(6, 8) * 0.5, jnp.float32)
+    wn = jnp.asarray(r.randn(6, 8) * 0.5, jnp.float32)
+    noise = jnp.asarray(r.randn(10, 8), jnp.float32)
+
+    def loss_k(x, wg, wn):
+        g, c, nz = noisy_topk_gating(x, wg, wn, noise, k=2)
+        return jnp.sum(g * jnp.arange(8.0)) + jnp.sum(jnp.cos(nz))
+
+    def loss_r(x, wg, wn):
+        g, c, nz = ref.noisy_topk_gating_ref(x, wg, wn, noise, 2)
+        return jnp.sum(g * jnp.arange(8.0)) + jnp.sum(jnp.cos(nz))
+
+    g1 = jax.grad(loss_k, argnums=(0, 1, 2))(x, wg, wn)
+    g2 = jax.grad(loss_r, argnums=(0, 1, 2))(x, wg, wn)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------- dispatch/combine
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 32), n=st.integers(1, 8), cap=st.integers(1, 16),
+       d=st.integers(1, 16), seed=st.integers(0, 2 ** 16))
+def test_dispatch_combine_match_ref(b, n, cap, d, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.randn(b, d), jnp.float32)
+    gates = jax.nn.softmax(jnp.asarray(r.randn(b, n), jnp.float32))
+    ein_ref, cw, _ = ref.dispatch_ref(x, gates, cap)
+    pos_oh = (cw > 0).astype(jnp.float32)
+    np.testing.assert_allclose(dispatch(pos_oh, x), ein_ref,
+                               rtol=1e-4, atol=1e-5)
+    eo = jnp.asarray(r.randn(n, cap, d), jnp.float32)
+    np.testing.assert_allclose(combine(cw, eo), ref.combine_ref(eo, cw),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_combine_roundtrip_identity():
+    """With capacity >= routes, combine(dispatch(x)) with gates summing to 1
+    reconstructs sum_i g_i * x for identity experts."""
+    r = rng(7)
+    b, n, d, cap = 12, 4, 8, 12
+    x = jnp.asarray(r.randn(b, d), jnp.float32)
+    gates, _, _ = ref.noisy_topk_gating_ref(
+        x, jnp.asarray(r.randn(d, n), jnp.float32), None, None, 2)
+    ein, cw, dropped = ref.dispatch_ref(x, gates, cap)
+    assert float(dropped) == 0.0
+    y = combine(cw, ein)  # identity experts: expert_out == expert_in
+    np.testing.assert_allclose(y, x, rtol=1e-4, atol=1e-4)
+
+
+def test_combine_grad_flows_to_gates():
+    """The gate gradient (paper §2.1) must flow through combine weights."""
+    r = rng(8)
+    b, n, cap, d = 6, 3, 4, 5
+    cw = jnp.asarray(np.abs(r.randn(b, n, cap)), jnp.float32)
+    eo = jnp.asarray(r.randn(n, cap, d), jnp.float32)
+    g = jax.grad(lambda c: jnp.sum(combine(c, eo) ** 2))(cw)
+    assert np.abs(np.asarray(g)).sum() > 0
+    g_ref = jax.grad(lambda c: jnp.sum(ref.combine_ref(eo, c) ** 2))(cw)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,103 @@
+"""Optimizers: Adam and the Appendix-D factored second-moment variant."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import configs, model, optim
+from compile.params import ParamSpec
+
+
+def small_spec():
+    spec = ParamSpec()
+    spec.add("a", (4, 6), "normal")
+    spec.add("b", (6,), "zeros")
+    spec.add("c", (3, 5), "uniform")
+    return spec
+
+
+def test_lr_schedule_shape():
+    lr = [float(optim.lr_schedule(1.0, 100, jnp.int32(s)))
+          for s in [1, 50, 100, 400, 10000]]
+    assert lr[0] < lr[1] < lr[2]            # warmup rises
+    assert lr[2] > lr[3] > lr[4]            # then decays
+    np.testing.assert_allclose(lr[2], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(lr[3], 0.5, rtol=1e-5)  # sqrt(100/400)
+
+
+def test_adam_matches_manual():
+    r = np.random.RandomState(0)
+    n = 20
+    flat = jnp.asarray(r.randn(n), jnp.float32)
+    g = jnp.asarray(r.randn(n), jnp.float32)
+    m = jnp.zeros(n); v = jnp.zeros(n)
+    new, m2, v2 = optim.adam_update(flat, m, v, g, jnp.int32(0), 0.1)
+    mm = 0.1 * np.asarray(g)                 # (1-b1)*g
+    vv = 0.001 * np.asarray(g) ** 2
+    mhat = mm / (1 - 0.9)
+    vhat = vv / (1 - 0.999)
+    want = np.asarray(flat) - 0.1 * mhat / (np.sqrt(vhat) + optim.ADAM_EPS)
+    np.testing.assert_allclose(new, want, rtol=1e-5, atol=1e-6)
+
+
+def test_factored_layout_sizes():
+    spec = small_spec()
+    layout, total = optim.factored_layout(spec)
+    # a: 4+6, b: 6 full, c: 3+5
+    assert total == 10 + 6 + 8
+    kinds = {name: kind for name, kind, *_ in layout}
+    assert kinds == {"a": "factored", "b": "full", "c": "factored"}
+    m_sz, v_sz = optim.factored_sizes(spec)
+    assert m_sz == 0 and v_sz == total
+
+
+def test_factored_vhat_is_rank_one_approx():
+    """After one update from zero state, vhat for a matrix equals the
+    rank-1 outer-product estimate of g^2 (Appendix D)."""
+    spec = ParamSpec()
+    spec.add("w", (3, 4), "normal")
+    r = np.random.RandomState(1)
+    flat = jnp.asarray(r.randn(12), jnp.float32)
+    g = jnp.asarray(r.randn(12), jnp.float32)
+    _, v_sz = optim.factored_sizes(spec)
+    new, _, v2 = optim.factored_update(spec, flat, jnp.zeros(0),
+                                       jnp.zeros(v_sz), g, jnp.int32(0), 0.1)
+    g2 = np.asarray(g).reshape(3, 4) ** 2 + 1e-30
+    rmean = g2.mean(1) * (1 - optim.B2)
+    cmean = g2.mean(0) * (1 - optim.B2)
+    np.testing.assert_allclose(v2[:3], rmean, rtol=1e-4)
+    np.testing.assert_allclose(v2[3:], cmean, rtol=1e-4)
+    vhat = np.outer(rmean, cmean) / rmean.mean() / (1 - optim.B2)
+    want = np.asarray(flat).reshape(3, 4) - 0.1 * np.asarray(g).reshape(
+        3, 4) / (np.sqrt(vhat) + optim.ADAM_EPS)
+    np.testing.assert_allclose(new.reshape(3, 4), want, rtol=1e-3, atol=1e-5)
+
+
+def test_factored_trains_tiny_model():
+    cfg = dataclasses.replace(configs.get("test-tiny"), optimizer="factored",
+                              name="t-fact")
+    built = model.build(cfg)
+    flat, m, v = built.init(jnp.int32(0))
+    assert m.shape == (0,)
+    toks = jax.random.randint(jax.random.PRNGKey(0),
+                              (cfg.batch, cfg.seq_len + 1), 0, cfg.vocab)
+    step = jax.jit(built.train_step)
+    first = None
+    for i in range(25):
+        flat, m, v, met = step(flat, m, v, toks, jnp.int32(i))
+        if first is None:
+            first = float(met[1])
+        assert np.isfinite(np.asarray(met)).all()
+    assert float(met[1]) < first
+
+
+def test_factored_memory_saving():
+    """The point of Appendix D: second-moment storage is ~sqrt of Adam's
+    for expert-dominated models."""
+    cfg = configs.get("e2e-100m")
+    spec = model.make_spec(cfg)
+    _, v_fact = optim.factored_sizes(spec)
+    _, v_adam = optim.adam_sizes(spec)
+    assert v_fact < v_adam / 10

@@ -1,0 +1,17 @@
+//! Cluster simulator: the distributed-hardware model behind the paper's
+//! efficiency numbers (Tables 1, 7, 8 TFLOPS/GPU columns and the §3
+//! shrinking-batch / network-bandwidth analysis).
+//!
+//! The paper trained on 16–128 Tesla K40s.  We cannot, so the simulator
+//! computes what the paper's §5.1 "Computational Efficiency" section
+//! computes: FLOPs from the model's op counts divided by a *modelled* step
+//! time, where the step time comes from (a) per-device dense compute,
+//! (b) per-expert-shard MoE compute given the REAL dispatch sizes produced
+//! by the rust router, and (c) all-to-all bytes over a finite-bandwidth
+//! interconnect.  The shapes the paper reports (dense baselines ~1.2
+//! TFLOPS/GPU, MoE ~0.7–1.1, degradation at extreme expert counts) emerge
+//! from those three terms.
+
+pub mod perf;
+
+pub use perf::{ClusterSpec, DeviceSpec, StepTiming};

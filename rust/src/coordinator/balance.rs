@@ -1,0 +1,89 @@
+//! Balance telemetry: tracks the paper's §4 / Appendix A statistics over
+//! training — CV(Importance), CV(Load), max/mean load — the exact columns
+//! of Table 6.
+
+use crate::gating::noisy_topk::cv_squared;
+use crate::metrics::{max_over_mean, Running};
+
+#[derive(Clone, Debug)]
+pub struct BalanceMeter {
+    pub n_experts: usize,
+    pub cv_importance: Running,
+    pub cv_load: Running,
+    pub max_over_mean_load: Running,
+    /// cumulative hard-assignment counts (for Table 9 style reporting)
+    pub cumulative_counts: Vec<u64>,
+}
+
+impl BalanceMeter {
+    pub fn new(n_experts: usize) -> Self {
+        BalanceMeter {
+            n_experts,
+            cv_importance: Running::new(),
+            cv_load: Running::new(),
+            max_over_mean_load: Running::new(),
+            cumulative_counts: vec![0; n_experts],
+        }
+    }
+
+    /// Record one step's importance/load vectors (eq 6 / eq 10) and hard
+    /// per-expert token counts.
+    pub fn record(&mut self, importance: &[f32], load: &[f32], counts: &[usize]) {
+        debug_assert_eq!(importance.len(), self.n_experts);
+        // Table 6 reports CV (not CV^2): take sqrt of cv_squared
+        self.cv_importance.push((cv_squared(importance) as f64).sqrt());
+        self.cv_load.push((cv_squared(load) as f64).sqrt());
+        self.max_over_mean_load.push(max_over_mean(load) as f64);
+        for (c, &k) in self.cumulative_counts.iter_mut().zip(counts.iter()) {
+            *c += k as u64;
+        }
+    }
+
+    /// Table 6 row: (CV(Importance), CV(Load), max/mean) averaged over the
+    /// recorded steps.
+    pub fn summary(&self) -> (f64, f64, f64) {
+        (
+            self.cv_importance.mean(),
+            self.cv_load.mean(),
+            self.max_over_mean_load.mean(),
+        )
+    }
+
+    /// Fraction of all routed tokens that went to the busiest expert —
+    /// the "self-reinforcing imbalance" indicator of §4.
+    pub fn busiest_share(&self) -> f64 {
+        let total: u64 = self.cumulative_counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        *self.cumulative_counts.iter().max().unwrap() as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_steps_report_low_cv() {
+        let mut m = BalanceMeter::new(4);
+        for _ in 0..10 {
+            m.record(&[1.0; 4], &[2.0; 4], &[3; 4]);
+        }
+        let (cvi, cvl, mm) = m.summary();
+        assert!(cvi < 1e-4 && cvl < 1e-4);
+        assert!((mm - 1.0).abs() < 1e-4);
+        assert!((m.busiest_share() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collapse_reports_high_cv() {
+        let mut m = BalanceMeter::new(4);
+        m.record(&[10.0, 0.0, 0.0, 0.0], &[20.0, 0.1, 0.1, 0.1], &[50, 0, 0, 0]);
+        let (cvi, cvl, mm) = m.summary();
+        assert!(cvi > 1.0, "cvi {cvi}");
+        assert!(cvl > 1.0, "cvl {cvl}");
+        assert!(mm > 3.0, "mm {mm}");
+        assert_eq!(m.busiest_share(), 1.0);
+    }
+}

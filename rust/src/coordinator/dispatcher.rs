@@ -1,0 +1,215 @@
+//! Dispatcher: the all-to-all at the heart of the paper's §3.1 scheme.
+//!
+//! Takes routing decisions from every data-parallel replica and builds,
+//! for each expert, the combined batch of token vectors routed to it —
+//! the "kbd/n" batch that restores expert efficiency.  After expert
+//! execution it scatters the outputs back and applies the gate-weighted
+//! combine (eq 1).
+//!
+//! Unlike the AOT'd einsum path (static `capacity`, overflow dropped),
+//! this dispatcher is exact: every route is kept and shards process
+//! oversized batches in multiple waves.  The two paths' agreement (up to
+//! drops) is covered in rust/tests/.
+
+use crate::coordinator::router::RoutingDecision;
+use crate::runtime::TensorF;
+
+/// (replica, token-row) source address of a dispatched token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenAddr {
+    pub replica: usize,
+    pub row: usize,
+}
+
+/// Batch bound for one expert: where each token came from and its gate.
+#[derive(Clone, Debug, Default)]
+pub struct ExpertBatch {
+    pub tokens: Vec<TokenAddr>,
+    pub gates: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    pub n_experts: usize,
+    pub per_expert: Vec<ExpertBatch>,
+    /// tokens per replica (for combine allocation)
+    pub replica_rows: Vec<usize>,
+}
+
+impl DispatchPlan {
+    /// Total (token, expert) routes.
+    pub fn total_routes(&self) -> usize {
+        self.per_expert.iter().map(|e| e.tokens.len()).sum()
+    }
+
+    pub fn expert_loads(&self) -> Vec<usize> {
+        self.per_expert.iter().map(|e| e.tokens.len()).collect()
+    }
+
+    /// Bytes moved over the interconnect for this plan (activations in +
+    /// out, f32), the §3.2 quantity.
+    pub fn network_bytes(&self, d_model: usize) -> u64 {
+        (self.total_routes() * d_model * 4 * 2) as u64
+    }
+}
+
+pub struct Dispatcher;
+
+impl Dispatcher {
+    /// Build the all-to-all plan from per-replica routing decisions.
+    /// Tokens keep replica-major, row-major order per expert, which makes
+    /// the plan deterministic (and testable) regardless of thread timing.
+    pub fn plan(decisions: &[RoutingDecision], n_experts: usize) -> DispatchPlan {
+        let mut per_expert = vec![ExpertBatch::default(); n_experts];
+        for (replica, dec) in decisions.iter().enumerate() {
+            for (row, tok) in dec.per_token.iter().enumerate() {
+                for (e, w) in tok.experts.iter().zip(tok.weights.iter()) {
+                    per_expert[*e].tokens.push(TokenAddr { replica, row });
+                    per_expert[*e].gates.push(*w);
+                }
+            }
+        }
+        DispatchPlan {
+            n_experts,
+            per_expert,
+            replica_rows: decisions.iter().map(|d| d.per_token.len()).collect(),
+        }
+    }
+
+    /// Gather the input rows for one expert from the replica activations.
+    /// `xs[replica]` is (rows, d).  Returns (len, d) row-major.
+    pub fn gather(plan: &DispatchPlan, expert: usize, xs: &[&TensorF]) -> TensorF {
+        let d = xs.first().map(|t| t.shape[1]).unwrap_or(0);
+        let batch = &plan.per_expert[expert];
+        let mut data = Vec::with_capacity(batch.tokens.len() * d);
+        for addr in &batch.tokens {
+            data.extend_from_slice(xs[addr.replica].row(addr.row));
+        }
+        TensorF::new(vec![batch.tokens.len(), d], data)
+    }
+
+    /// Scatter-combine expert outputs back to per-replica (rows, d)
+    /// tensors: y[token] = Σ_e gate_e · expert_e(x_token)   (eq 1).
+    pub fn combine(
+        plan: &DispatchPlan,
+        expert_outputs: &[TensorF],
+        d_model: usize,
+    ) -> Vec<TensorF> {
+        let mut out: Vec<TensorF> = plan
+            .replica_rows
+            .iter()
+            .map(|&rows| TensorF::zeros(vec![rows, d_model]))
+            .collect();
+        for (e, batch) in plan.per_expert.iter().enumerate() {
+            let eo = &expert_outputs[e];
+            debug_assert_eq!(eo.shape, vec![batch.tokens.len(), d_model]);
+            for (slot, (addr, gate)) in
+                batch.tokens.iter().zip(batch.gates.iter()).enumerate() {
+                let src = &eo.data[slot * d_model..(slot + 1) * d_model];
+                let dst = &mut out[addr.replica].data
+                    [addr.row * d_model..(addr.row + 1) * d_model];
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d += gate * s;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::noisy_topk::GateVec;
+    use crate::util::prop;
+
+    fn decision(rows: usize, n: usize, k: usize, rng: &mut crate::util::rng::Rng)
+        -> RoutingDecision {
+        let per_token = (0..rows)
+            .map(|_| {
+                let mut experts: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut experts);
+                experts.truncate(k);
+                let mut weights = vec![0f32; k];
+                let mut z = 0f32;
+                for w in weights.iter_mut() {
+                    *w = rng.uniform() as f32 + 0.1;
+                    z += *w;
+                }
+                weights.iter_mut().for_each(|w| *w /= z);
+                GateVec { experts, weights }
+            })
+            .collect();
+        RoutingDecision { per_token, importance: vec![0.0; n], load: vec![0.0; n] }
+    }
+
+    #[test]
+    fn plan_preserves_every_route() {
+        prop::forall("routes preserved", |rng| {
+            let (n, k) = (prop::dim(rng, 2, 12), prop::dim(rng, 1, 2));
+            let replicas = prop::dim(rng, 1, 4);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision(prop::dim(rng, 1, 10), n, k, rng))
+                .collect();
+            let plan = Dispatcher::plan(&decisions, n);
+            let want: usize =
+                decisions.iter().map(|d| d.per_token.len() * k).sum();
+            assert_eq!(plan.total_routes(), want);
+            // every address valid
+            for eb in &plan.per_expert {
+                for a in &eb.tokens {
+                    assert!(a.replica < replicas);
+                    assert!(a.row < decisions[a.replica].per_token.len());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn identity_experts_reconstruct_input() {
+        // with identity experts and gates summing to 1, combine(gather(x))
+        // must equal x exactly
+        prop::forall("identity roundtrip", |rng| {
+            let (d, n, k) = (4, 6, 2);
+            let rows = prop::dim(rng, 1, 8);
+            let dec = decision(rows, n, k, rng);
+            let x = TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0));
+            let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
+            let outs: Vec<TensorF> = (0..n)
+                .map(|e| Dispatcher::gather(&plan, e, &[&x]))
+                .collect();
+            let combined = Dispatcher::combine(&plan, &outs, d);
+            for (a, b) in combined[0].data.iter().zip(x.data.iter()) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn network_bytes_accounting() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let dec = decision(10, 4, 2, &mut rng);
+        let plan = Dispatcher::plan(std::slice::from_ref(&dec), 4);
+        // 10 tokens * k=2 routes * d=8 * 4 bytes * 2 directions
+        assert_eq!(plan.network_bytes(8), 10 * 2 * 8 * 4 * 2);
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_ordered() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let decs: Vec<_> = (0..3).map(|_| decision(4, 5, 2, &mut rng)).collect();
+        let p1 = Dispatcher::plan(&decs, 5);
+        let p2 = Dispatcher::plan(&decs, 5);
+        for (a, b) in p1.per_expert.iter().zip(p2.per_expert.iter()) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+        // replica-major order within each expert queue
+        for eb in &p1.per_expert {
+            for w in eb.tokens.windows(2) {
+                assert!(
+                    (w[0].replica, w[0].row) <= (w[1].replica, w[1].row)
+                );
+            }
+        }
+    }
+}

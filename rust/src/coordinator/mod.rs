@@ -1,0 +1,28 @@
+//! L3 coordinator: the paper's distributed MoE training scheme (§3).
+//!
+//! "Mixing Data Parallelism and Model Parallelism": d devices each hold a
+//! data-parallel replica of the dense layers and gating network, and a
+//! model-parallel shard of the experts.  Each step:
+//!
+//! 1. every replica computes gating for its local batch
+//!    ([`router::Router`], backed by the AOT gating artifact or the pure
+//!    rust mirror);
+//! 2. the [`dispatcher::Dispatcher`] builds the all-to-all plan: tokens
+//!    from all replicas are grouped per expert (the combined kbd/n batch
+//!    of §3.1) and shipped to the shard owning that expert;
+//! 3. expert shards execute the expert-FFN artifact in waves of
+//!    `capacity` tokens ([`scheduler::Scheduler`], one OS thread per
+//!    simulated device — no token is ever dropped, matching the paper's
+//!    dynamically-sized expert batches);
+//! 4. outputs are combined back per token with gate weights (eq 1), and
+//!    [`balance::BalanceMeter`] tracks Importance / Load / CV² telemetry.
+
+pub mod balance;
+pub mod dispatcher;
+pub mod router;
+pub mod scheduler;
+
+pub use balance::BalanceMeter;
+pub use dispatcher::{DispatchPlan, Dispatcher, ExpertBatch};
+pub use router::{Router, RouterBackend};
+pub use scheduler::{Scheduler, ShardLayout};

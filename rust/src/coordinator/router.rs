@@ -1,0 +1,294 @@
+//! Router: computes gating decisions for a replica's token batch.
+//!
+//! Two interchangeable backends:
+//! - [`RouterBackend::Artifact`]: the AOT'd gating artifact (the L1 Pallas
+//!   kernel running under PJRT) — the production path;
+//! - [`RouterBackend::Native`]: the pure-rust mirror (gating::noisy_topk)
+//!   — used for tests, for hierarchical routing, and when no artifact was
+//!   lowered for the config.
+//!
+//! Both produce identical decisions on identical noise (asserted in
+//! rust/tests/parity.rs), which is what lets the distributed simulation
+//! claim numerical equivalence with the monolithic artifact.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::gating::noisy_topk::{
+    compose_hierarchical, importance, load_estimate, noisy_topk, GateVec,
+};
+use crate::runtime::{Executable, Host, TensorF};
+use crate::util::rng::Rng;
+
+pub enum RouterBackend {
+    Artifact(Arc<Executable>),
+    Native,
+}
+
+pub struct Router {
+    pub backend: RouterBackend,
+    pub n_experts: usize,
+    pub k: usize,
+    /// hierarchical: number of primary groups (0 = flat)
+    pub groups: usize,
+    pub d_model: usize,
+    /// gating parameters, row-major (d, n) — sliced from the flat param
+    /// vector by the caller (manifest layout)
+    pub w_g: Vec<f32>,
+    pub w_noise: Option<Vec<f32>>,
+    /// hierarchical secondary gates: (d, groups, group_size) flattened
+    pub w_g_sec: Option<Vec<f32>>,
+    pub w_n_sec: Option<Vec<f32>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RoutingDecision {
+    pub per_token: Vec<GateVec>,
+    pub importance: Vec<f32>,
+    pub load: Vec<f32>,
+}
+
+impl Router {
+    pub fn flat_native(
+        d_model: usize,
+        n_experts: usize,
+        k: usize,
+        w_g: Vec<f32>,
+        w_noise: Option<Vec<f32>>,
+    ) -> Self {
+        Router {
+            backend: RouterBackend::Native,
+            n_experts,
+            k,
+            groups: 0,
+            d_model,
+            w_g,
+            w_noise,
+            w_g_sec: None,
+            w_n_sec: None,
+        }
+    }
+
+    /// Route a batch x (b, d).  `rng` draws the eq-4 noise; None = eval.
+    pub fn route(&self, x: &TensorF, mut rng: Option<&mut Rng>)
+        -> Result<RoutingDecision> {
+        let b = x.shape[0];
+        if x.shape.len() != 2 || x.shape[1] != self.d_model {
+            bail!("router: bad input shape {:?}", x.shape);
+        }
+        if self.groups > 0 {
+            return self.route_hierarchical(x, rng);
+        }
+        match &self.backend {
+            RouterBackend::Native => {
+                let train = rng.is_some();
+                let g = noisy_topk(
+                    &x.data,
+                    b,
+                    self.d_model,
+                    &self.w_g,
+                    if train { self.w_noise.as_deref() } else { None },
+                    self.n_experts,
+                    self.k,
+                    rng.as_deref_mut(),
+                );
+                let imp = importance(&g);
+                let load = load_estimate(
+                    &g,
+                    &x.data,
+                    b,
+                    self.d_model,
+                    if train { self.w_noise.as_deref() } else { None },
+                    self.k,
+                );
+                Ok(RoutingDecision { per_token: g.per_token, importance: imp, load })
+            }
+            RouterBackend::Artifact(exe) => {
+                let n = self.n_experts;
+                // the artifact's batch dimension is static: pad the token
+                // batch up (zero rows) and slice the decisions back down.
+                let art_b = exe.sig.inputs[2].shape[0];
+                if b > art_b {
+                    bail!(
+                        "router artifact batch {art_b} < tokens {b}; split \
+                         the replica batch"
+                    );
+                }
+                let mut xp = x.data.clone();
+                xp.resize(art_b * self.d_model, 0.0);
+                let noise: Vec<f32> = match rng {
+                    Some(r) => {
+                        (0..art_b * n).map(|_| r.normal_f32()).collect()
+                    }
+                    None => vec![0.0; art_b * n],
+                };
+                let wn = self
+                    .w_noise
+                    .clone()
+                    .unwrap_or_else(|| vec![0.0; self.d_model * n]);
+                let outs = exe.run(&[
+                    Host::F32(TensorF::new(vec![self.d_model, n], self.w_g.clone())),
+                    Host::F32(TensorF::new(vec![self.d_model, n], wn)),
+                    Host::F32(TensorF::new(vec![art_b, self.d_model], xp)),
+                    Host::F32(TensorF::new(vec![art_b, n], noise)),
+                ])?;
+                // outputs: gates (B,n), topi (B,k), topw (B,k), imp, load —
+                // imp/load include the padding rows, so recompute from the
+                // sliced decisions (load as hard counts; the smooth eq-10
+                // estimate is only needed for training, which happens in
+                // the monolithic step artifact).
+                let topi = outs[1].as_i32()?;
+                let topw = outs[2].as_f32()?;
+                let mut importance = vec![0f32; n];
+                let mut load = vec![0f32; n];
+                let per_token: Vec<GateVec> = (0..b)
+                    .map(|r| {
+                        let experts: Vec<usize> =
+                            topi.row(r).iter().map(|&i| i as usize).collect();
+                        let weights = topw.row(r).to_vec();
+                        for (e, w) in experts.iter().zip(weights.iter()) {
+                            importance[*e] += w;
+                            load[*e] += 1.0;
+                        }
+                        GateVec { experts, weights }
+                    })
+                    .collect();
+                Ok(RoutingDecision { per_token, importance, load })
+            }
+        }
+    }
+
+    /// Two-level routing (Appendix B): primary picks k groups, secondary
+    /// picks k experts inside each chosen group; gates multiply (eq 12).
+    fn route_hierarchical(&self, x: &TensorF, mut rng: Option<&mut Rng>)
+        -> Result<RoutingDecision> {
+        let (b, d) = (x.shape[0], self.d_model);
+        let a = self.groups;
+        let gs = self.n_experts / a;
+        let (Some(wsec), train) = (self.w_g_sec.as_ref(), rng.is_some()) else {
+            bail!("hierarchical router needs secondary gates");
+        };
+        let wn_pri = if train { self.w_noise.as_deref() } else { None };
+        let primary = noisy_topk(
+            &x.data, b, d, &self.w_g, wn_pri, a, self.k,
+            rng.as_deref_mut(),
+        );
+        // secondary gating per group: w_g_sec is (d, a, gs) row-major;
+        // extract the (d, gs) slice for group gi
+        let mut per_token = Vec::with_capacity(b);
+        let mut imp = vec![0f32; self.n_experts];
+        let mut load = vec![0f32; self.n_experts];
+        for (r, ptok) in primary.per_token.iter().enumerate() {
+            let xrow = &x.data[r * d..(r + 1) * d];
+            let mut secondary = vec![GateVec { experts: vec![], weights: vec![] }; a];
+            for &gi in &ptok.experts {
+                let mut h = vec![0f32; gs];
+                for l in 0..d {
+                    let base = l * a * gs + gi * gs;
+                    let xv = xrow[l];
+                    for j in 0..gs {
+                        h[j] += xv * wsec[base + j];
+                    }
+                }
+                if let (Some(wn), Some(r2)) = (self.w_n_sec.as_ref(), rng.as_deref_mut()) {
+                    for j in 0..gs {
+                        let mut raw = 0f32;
+                        for l in 0..d {
+                            raw += xrow[l] * wn[l * a * gs + gi * gs + j];
+                        }
+                        h[j] += r2.normal_f32() * crate::gating::softplus(raw);
+                    }
+                }
+                secondary[gi] =
+                    crate::gating::noisy_topk::topk_softmax(&h, self.k.min(gs));
+            }
+            let flat = compose_hierarchical(ptok, &secondary, gs);
+            for (e, w) in flat.experts.iter().zip(flat.weights.iter()) {
+                imp[*e] += w;
+                load[*e] += 1.0;
+            }
+            per_token.push(flat);
+        }
+        Ok(RoutingDecision { per_token, importance: imp, load })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn native_flat_routing_shapes() {
+        prop::forall("flat routing", |rng| {
+            let (b, d, n) = (prop::dim(rng, 1, 16), 8, prop::dim(rng, 4, 32));
+            let k = prop::dim(rng, 1, 4.min(n));
+            let router = Router::flat_native(
+                d, n, k,
+                prop::vec_f32(rng, d * n, 0.5),
+                Some(prop::vec_f32(rng, d * n, 0.5)),
+            );
+            let x = TensorF::new(vec![b, d], prop::vec_f32(rng, b * d, 1.0));
+            let mut nrng = rng.fold_in(3);
+            let dec = router.route(&x, Some(&mut nrng)).unwrap();
+            assert_eq!(dec.per_token.len(), b);
+            assert_eq!(dec.importance.len(), n);
+            assert_eq!(dec.load.len(), n);
+            for t in &dec.per_token {
+                assert_eq!(t.experts.len(), k);
+            }
+            // importance mass == b (each row's gates sum to 1)
+            let s: f32 = dec.importance.iter().sum();
+            assert!((s - b as f32).abs() < 1e-3, "importance mass {s}");
+        });
+    }
+
+    #[test]
+    fn eval_routing_is_deterministic() {
+        let d = 4;
+        let router = Router::flat_native(
+            d, 8, 2,
+            (0..d * 8).map(|i| (i as f32 * 0.37).sin()).collect(),
+            Some(vec![0.5; d * 8]),
+        );
+        let x = TensorF::new(vec![3, d], (0..12).map(|i| i as f32 * 0.1).collect());
+        let a = router.route(&x, None).unwrap();
+        let b = router.route(&x, None).unwrap();
+        for (ta, tb) in a.per_token.iter().zip(b.per_token.iter()) {
+            assert_eq!(ta.experts, tb.experts);
+        }
+    }
+
+    #[test]
+    fn hierarchical_routing_selects_k_squared() {
+        let (d, a, gs, k) = (6, 4, 4, 2);
+        let n = a * gs;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let router = Router {
+            backend: RouterBackend::Native,
+            n_experts: n,
+            k,
+            groups: a,
+            d_model: d,
+            w_g: prop::vec_f32(&mut rng, d * a, 0.5),
+            w_noise: Some(prop::vec_f32(&mut rng, d * a, 0.3)),
+            w_g_sec: Some(prop::vec_f32(&mut rng, d * a * gs, 0.5)),
+            w_n_sec: Some(prop::vec_f32(&mut rng, d * a * gs, 0.3)),
+        };
+        let x = TensorF::new(vec![5, d], prop::vec_f32(&mut rng, 5 * d, 1.0));
+        let mut nrng = rng.fold_in(1);
+        let dec = router.route(&x, Some(&mut nrng)).unwrap();
+        for t in &dec.per_token {
+            assert_eq!(t.experts.len(), k * k);
+            let s: f32 = t.weights.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "weights sum {s}");
+            // all selected experts distinct and in range
+            let mut e = t.experts.clone();
+            e.sort();
+            e.dedup();
+            assert_eq!(e.len(), k * k);
+            assert!(*e.last().unwrap() < n);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Batcher: turns a token stream into (batch, seq_len + 1) i32 tensors for
+//! the train-step artifact.
+//!
+//! Layout note (§3.1 "Taking Advantage of Convolutionality"): the MoE
+//! inside the artifact flattens all batch*seq_len positions into one big
+//! expert batch, so the batcher's only job is to keep `batch` independent
+//! continuation streams — each row continues where it left off, giving the
+//! LSTMs coherent context while the MoE sees B*T tokens at once.
+
+use crate::data::synthetic::{TokenStream, TopicCorpus};
+use crate::runtime::TensorI;
+
+pub struct Batcher<'a> {
+    streams: Vec<TokenStream<'a>>,
+    batch: usize,
+    seq_len: usize,
+    /// last token of the previous chunk per row (next chunk's first input)
+    carry: Vec<i32>,
+    pub tokens_served: u64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(corpus: &'a TopicCorpus, batch: usize, seq_len: usize,
+               stream_base: u64) -> Self {
+        let mut streams: Vec<TokenStream<'a>> = (0..batch)
+            .map(|i| corpus.stream(stream_base + i as u64))
+            .collect();
+        let carry = streams.iter_mut().map(|s| s.next_token()).collect();
+        Batcher { streams, batch, seq_len, carry, tokens_served: 0 }
+    }
+
+    /// Next (batch, seq_len+1) chunk.  Column 0 of row r is the carry from
+    /// the previous chunk so targets tile the stream exactly once.
+    pub fn next_batch(&mut self) -> TensorI {
+        let cols = self.seq_len + 1;
+        let mut data = vec![0i32; self.batch * cols];
+        for r in 0..self.batch {
+            data[r * cols] = self.carry[r];
+            for c in 1..cols {
+                data[r * cols + c] = self.streams[r].next_token();
+            }
+            self.carry[r] = data[r * cols + cols - 1];
+        }
+        self.tokens_served += (self.batch * self.seq_len) as u64;
+        TensorI::new(vec![self.batch, cols], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::CorpusSpec;
+
+    #[test]
+    fn batches_have_right_shape_and_continuity() {
+        let corpus = TopicCorpus::new(CorpusSpec {
+            vocab: 128,
+            n_topics: 2,
+            branch: 3,
+            mean_len: 6,
+            seed: 1,
+        });
+        let mut b = Batcher::new(&corpus, 4, 10, 0);
+        let b1 = b.next_batch();
+        let b2 = b.next_batch();
+        assert_eq!(b1.shape, vec![4, 11]);
+        // continuity: first input of chunk 2 == last token of chunk 1
+        for r in 0..4 {
+            assert_eq!(b2.at2(r, 0), b1.at2(r, 10));
+        }
+        assert_eq!(b.tokens_served, 80);
+    }
+
+    #[test]
+    fn rows_are_distinct_streams() {
+        let corpus = TopicCorpus::new(CorpusSpec::default());
+        let mut b = Batcher::new(&corpus, 3, 16, 0);
+        let t = b.next_batch();
+        assert_ne!(t.row(0), t.row(1));
+        assert_ne!(t.row(1), t.row(2));
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let spec = CorpusSpec { vocab: 64, ..Default::default() };
+        let corpus = TopicCorpus::new(spec);
+        let mut b = Batcher::new(&corpus, 2, 32, 5);
+        for _ in 0..10 {
+            let t = b.next_batch();
+            assert!(t.data.iter().all(|&w| w >= 0 && (w as usize) < 64));
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Data substrate: synthetic corpora standing in for the paper's datasets
+//! (see DESIGN.md §Substitutions), a word-level vocabulary, and the
+//! batcher implementing the §3.1 "convolutionality" batching.
+
+pub mod batcher;
+pub mod synthetic;
+pub mod translation;
+pub mod vocab;
+
+pub use batcher::Batcher;
+pub use synthetic::TopicCorpus;
+pub use translation::TranslationTask;
+pub use vocab::Vocab;

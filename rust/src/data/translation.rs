@@ -1,0 +1,163 @@
+//! Synthetic translation task — the WMT'14 / multilingual stand-in
+//! (DESIGN.md §Substitutions).
+//!
+//! A "language pair" is a deterministic lexicon permutation plus local
+//! reorderings: the source sentence comes from the topic corpus; the
+//! target is produced by (a) mapping each word through the pair's
+//! bijective lexicon, (b) swapping adjacent words inside windows of 3
+//! with a pair-specific deterministic pattern.  The task is exactly
+//! learnable, so BLEU differences between models measure *capacity and
+//! routing*, which is what Tables 2–5 compare.  Multiple pairs share one
+//! vocabulary (as wordpieces do) which makes the multilingual experiment
+//! (Table 5) a direct analogue: one model must store all lexicons.
+//!
+//! Sequence format (prefix-LM): `<s> src … <sep> tgt … </s>` — the MoE
+//! seq2seq is the same LSTM stack, conditioned on the source prefix.
+
+use crate::data::synthetic::{TopicCorpus, BOS, EOS, FIRST_WORD};
+use crate::runtime::TensorI;
+use crate::util::rng::Rng;
+
+/// separator between source and target segments
+pub const SEP: i32 = EOS; // reuse </s> as the pivot, GNMT-style
+
+#[derive(Clone, Debug)]
+pub struct TranslationTask {
+    pub pair_id: u64,
+    pub vocab: usize,
+    lexicon: Vec<i32>,
+}
+
+impl TranslationTask {
+    /// Build the deterministic bijective lexicon for a language pair.
+    pub fn new(pair_id: u64, vocab: usize) -> Self {
+        let content = vocab - FIRST_WORD as usize;
+        let mut perm: Vec<i32> =
+            (0..content as i32).map(|i| i + FIRST_WORD).collect();
+        let mut rng = Rng::new(pair_salt(pair_id));
+        rng.shuffle(&mut perm);
+        let mut lexicon = vec![0i32; vocab];
+        lexicon[BOS as usize] = BOS;
+        lexicon[EOS as usize] = EOS;
+        for (i, &t) in perm.iter().enumerate() {
+            lexicon[FIRST_WORD as usize + i] = t;
+        }
+        TranslationTask { pair_id, vocab, lexicon }
+    }
+
+    /// Translate a source segment into the target language.
+    pub fn translate(&self, src: &[i32]) -> Vec<i32> {
+        let mut out: Vec<i32> =
+            src.iter().map(|&w| self.lexicon[w as usize]).collect();
+        // deterministic local reordering: swap positions (3i, 3i+1) when
+        // the pair id's bit pattern says so
+        for i in (0..out.len().saturating_sub(1)).step_by(3) {
+            if (self.pair_id >> (i % 8)) & 1 == 1 {
+                out.swap(i, i + 1);
+            }
+        }
+        out
+    }
+
+    /// One training/eval example: (source, reference-target).
+    pub fn example(&self, corpus: &TopicCorpus, rng: &mut Rng)
+        -> (Vec<i32>, Vec<i32>) {
+        let (_, sent) = corpus.sentence(rng);
+        let src: Vec<i32> =
+            sent[1..sent.len() - 1].to_vec(); // strip BOS/EOS
+        let tgt = self.translate(&src);
+        (src, tgt)
+    }
+
+    /// Pack an example into a fixed (seq_len + 1) prefix-LM row:
+    /// `<s> src <sep> tgt </s> <pad…>` (pad = EOS; loss over padding is a
+    /// constant the comparison shares).  Truncates symmetrically if long.
+    pub fn pack_row(&self, src: &[i32], tgt: &[i32], cols: usize) -> Vec<i32> {
+        let seg = (cols - 3) / 2;
+        let s = &src[..src.len().min(seg)];
+        let t = &tgt[..tgt.len().min(seg)];
+        let mut row = Vec::with_capacity(cols);
+        row.push(BOS);
+        row.extend_from_slice(s);
+        row.push(SEP);
+        row.extend_from_slice(t);
+        row.push(EOS);
+        row.resize(cols, EOS);
+        row
+    }
+
+    /// Batch of packed examples, shape (batch, seq_len + 1).
+    pub fn batch(&self, corpus: &TopicCorpus, rng: &mut Rng, batch: usize,
+                 seq_len: usize) -> TensorI {
+        let cols = seq_len + 1;
+        let mut data = Vec::with_capacity(batch * cols);
+        for _ in 0..batch {
+            let (src, tgt) = self.example(corpus, rng);
+            data.extend(self.pack_row(&src, &tgt, cols));
+        }
+        TensorI::new(vec![batch, cols], data)
+    }
+}
+
+fn pair_salt(pair_id: u64) -> u64 {
+    // "translate" in ascii, xor-folded with the pair id
+    0x7261_6e73_6c61_7465 ^ pair_id.wrapping_mul(0x1000_0000_1b3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::CorpusSpec;
+
+    fn task() -> TranslationTask {
+        TranslationTask::new(3, 256)
+    }
+
+    #[test]
+    fn lexicon_is_bijective_on_content() {
+        let t = task();
+        let mut seen = std::collections::HashSet::new();
+        for w in FIRST_WORD..256 {
+            let m = t.lexicon[w as usize];
+            assert!(m >= FIRST_WORD);
+            assert!(seen.insert(m));
+        }
+    }
+
+    #[test]
+    fn translation_deterministic() {
+        let t = task();
+        let src = vec![5, 9, 12, 40, 7];
+        assert_eq!(t.translate(&src), t.translate(&src));
+    }
+
+    #[test]
+    fn different_pairs_differ() {
+        let a = TranslationTask::new(1, 256);
+        let b = TranslationTask::new(2, 256);
+        let src: Vec<i32> = (2..40).collect();
+        assert_ne!(a.translate(&src), b.translate(&src));
+    }
+
+    #[test]
+    fn pack_row_shape_and_frame() {
+        let t = task();
+        let row = t.pack_row(&[5, 6, 7], &[9, 10, 11], 25);
+        assert_eq!(row.len(), 25);
+        assert_eq!(row[0], BOS);
+        assert_eq!(row[4], SEP);
+        assert_eq!(row[8], EOS);
+    }
+
+    #[test]
+    fn batch_shape() {
+        let corpus = TopicCorpus::new(CorpusSpec {
+            vocab: 256,
+            ..Default::default()
+        });
+        let t = task();
+        let mut rng = Rng::new(0);
+        let b = t.batch(&corpus, &mut rng, 8, 24);
+        assert_eq!(b.shape, vec![8, 25]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Word-level vocabulary: token-id <-> surface-string mapping.
+//!
+//! The synthetic corpora work in token ids; surface forms only matter for
+//! human-readable output (Table 9 expert-specialisation contexts, the
+//! translation demo).  Words get deterministic pronounceable names so the
+//! same id always renders the same across runs.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+    names: Vec<String>,
+    index: HashMap<String, i32>,
+}
+
+const ONSETS: [&str; 16] = [
+    "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z",
+    "ch", "sh",
+];
+const NUCLEI: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ou", "ei"];
+
+fn spell(id: usize) -> String {
+    // base-(16*8) syllables; always at least two syllables so words look
+    // like words
+    let mut n = id;
+    let mut s = String::new();
+    for _ in 0..2 {
+        s.push_str(ONSETS[n % 16]);
+        n /= 16;
+        s.push_str(NUCLEI[n % 8]);
+        n /= 8;
+    }
+    while n > 0 {
+        s.push_str(ONSETS[n % 16]);
+        n /= 16;
+        s.push_str(NUCLEI[n % 8]);
+        n /= 8;
+    }
+    s
+}
+
+impl Vocab {
+    pub fn synthetic(size: usize) -> Self {
+        let mut names = Vec::with_capacity(size);
+        let mut index = HashMap::new();
+        for id in 0..size {
+            let name = match id {
+                0 => "<s>".to_string(),
+                1 => "</s>".to_string(),
+                _ => spell(id - 2),
+            };
+            index.insert(name.clone(), id as i32);
+            names.push(name);
+        }
+        Vocab { size, names, index }
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.names
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    pub fn id(&self, word: &str) -> Option<i32> {
+        self.index.get(word).copied()
+    }
+
+    pub fn detokenize(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip() {
+        let v = Vocab::synthetic(512);
+        for id in 0..512 {
+            let w = v.word(id);
+            assert_eq!(v.id(w), Some(id), "word {w}");
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let v = Vocab::synthetic(2048);
+        let mut set = std::collections::HashSet::new();
+        for id in 0..2048 {
+            assert!(set.insert(v.word(id).to_string()), "dup {}", v.word(id));
+        }
+    }
+
+    #[test]
+    fn specials() {
+        let v = Vocab::synthetic(8);
+        assert_eq!(v.word(0), "<s>");
+        assert_eq!(v.word(1), "</s>");
+        assert_eq!(v.word(99), "<unk>");
+    }
+
+    #[test]
+    fn detokenize_joins() {
+        let v = Vocab::synthetic(8);
+        assert_eq!(v.detokenize(&[0, 1]), "<s> </s>");
+    }
+}

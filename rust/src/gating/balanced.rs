@@ -1,0 +1,187 @@
+//! Strictly-balanced gating (paper Appendix F).
+//!
+//! Training time: `batchwise_mask` keeps, per expert, the top
+//! m = k·|X|/n scores across the batch so every expert receives exactly m
+//! examples (eq 18).  Inference time: per-expert learned thresholds
+//! (eq 19), trained here with the paper's threshold loss (eq 20) via its
+//! (sub)gradient — the loss is piecewise linear in T.
+
+use crate::gating::noisy_topk::GateVec;
+
+/// scores: (b, n) row-major softmax gate scores; keeps top-m per expert.
+/// Returns a boolean mask (b, n).
+pub fn batchwise_mask(scores: &[f32], b: usize, n: usize, m: usize) -> Vec<bool> {
+    assert!(m <= b, "m={m} must be <= batch {b}");
+    let mut mask = vec![false; b * n];
+    let mut col: Vec<(f32, usize)> = Vec::with_capacity(b);
+    for e in 0..n {
+        col.clear();
+        col.extend((0..b).map(|r| (scores[r * n + e], r)));
+        // sort descending by score, stable on row index
+        col.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        for &(_, r) in col.iter().take(m) {
+            mask[r * n + e] = true;
+        }
+    }
+    mask
+}
+
+/// Inference-time mask M_threshold (eq 19).
+pub fn threshold_inference(scores: &[f32], b: usize, n: usize, t: &[f32]) -> Vec<bool> {
+    assert_eq!(t.len(), n);
+    (0..b * n).map(|i| scores[i] > t[i % n]).collect()
+}
+
+/// Renormalised gates under a mask (eq 16).
+pub fn masked_gates(scores: &[f32], mask: &[bool], b: usize, n: usize) -> Vec<GateVec> {
+    (0..b)
+        .map(|r| {
+            let mut experts = Vec::new();
+            let mut weights = Vec::new();
+            let mut z = 0f32;
+            for e in 0..n {
+                if mask[r * n + e] {
+                    experts.push(e);
+                    weights.push(scores[r * n + e]);
+                    z += scores[r * n + e];
+                }
+            }
+            for w in &mut weights {
+                *w /= z.max(1e-10);
+            }
+            GateVec { experts, weights }
+        })
+        .collect()
+}
+
+/// Appendix-F threshold learner.  Maintains per-expert thresholds T and
+/// minimises L_batchwise (eq 20) by gradient descent on its subgradient:
+/// dL/dT_i = Σ_j (M_batchwise − M_threshold)_{j,i}  (the (X_{j,i} − T_i)
+/// factor's sign pattern makes disagreement always push T the right way).
+pub struct BalancedGater {
+    pub n: usize,
+    pub m: usize,
+    pub thresholds: Vec<f32>,
+    pub lr: f32,
+}
+
+impl BalancedGater {
+    pub fn new(n: usize, m: usize, lr: f32) -> Self {
+        BalancedGater { n, m, thresholds: vec![0.5; n], lr }
+    }
+
+    /// Training-time gating: batchwise mask + threshold update.
+    /// Returns (gates, loss eq 20).
+    pub fn train_batch(&mut self, scores: &[f32], b: usize) -> (Vec<GateVec>, f32) {
+        let n = self.n;
+        let mb = batchwise_mask(scores, b, n, self.m);
+        let mt = threshold_inference(scores, b, n, &self.thresholds);
+        let mut loss = 0f32;
+        let mut grad = vec![0f32; n];
+        for r in 0..b {
+            for e in 0..n {
+                let i = r * n + e;
+                let diff = (mt[i] as i32 - mb[i] as i32) as f32;
+                loss += diff * (scores[i] - self.thresholds[e]);
+                grad[e] -= diff; // d/dT of the (x - T) factor, masks frozen
+            }
+        }
+        for e in 0..n {
+            self.thresholds[e] -= self.lr * grad[e];
+        }
+        (masked_gates(scores, &mb, b, n), loss)
+    }
+
+    /// Inference-time gating with the learned thresholds.
+    pub fn infer_batch(&self, scores: &[f32], b: usize) -> Vec<GateVec> {
+        let mt = threshold_inference(scores, b, self.n, &self.thresholds);
+        masked_gates(scores, &mt, b, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn softmax_rows(raw: &mut [f32], b: usize, n: usize) {
+        for r in 0..b {
+            let row = &mut raw[r * n..(r + 1) * n];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let mut z = 0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                z += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= z;
+            }
+        }
+    }
+
+    #[test]
+    fn batchwise_mask_exactly_m_per_expert() {
+        prop::forall("mask column sums", |rng| {
+            let (b, n) = (prop::dim(rng, 4, 24), prop::dim(rng, 2, 8));
+            let m = prop::dim(rng, 1, b);
+            let mut s = prop::vec_f32(rng, b * n, 1.0);
+            softmax_rows(&mut s, b, n);
+            let mask = batchwise_mask(&s, b, n, m);
+            for e in 0..n {
+                let cnt = (0..b).filter(|r| mask[r * n + e]).count();
+                assert_eq!(cnt, m);
+            }
+        });
+    }
+
+    #[test]
+    fn masked_gates_renormalise() {
+        let scores = vec![0.5, 0.3, 0.2, 0.1, 0.6, 0.3];
+        let mask = vec![true, false, true, true, true, false];
+        let gates = masked_gates(&scores, &mask, 2, 3);
+        for g in &gates {
+            assert!((g.weights.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+        assert_eq!(gates[0].experts, vec![0, 2]);
+    }
+
+    #[test]
+    fn threshold_learner_converges_to_batchwise_mask() {
+        // Stationary score distribution: after training, the threshold
+        // mask should agree with the batchwise mask on ~all entries.
+        let (b, n, m) = (32, 4, 8);
+        let mut gater = BalancedGater::new(n, m, 0.002);
+        let mut rng = Rng::new(5);
+        let mut last_agree = 0.0;
+        for it in 0..400 {
+            let mut s = prop::vec_f32(&mut rng, b * n, 1.0);
+            softmax_rows(&mut s, b, n);
+            gater.train_batch(&s, b);
+            if it >= 399 {
+                let mb = batchwise_mask(&s, b, n, m);
+                let mt = threshold_inference(&s, b, n, &gater.thresholds);
+                let agree = mb
+                    .iter()
+                    .zip(mt.iter())
+                    .filter(|(a, b)| a == b)
+                    .count() as f32
+                    / (b * n) as f32;
+                last_agree = agree;
+            }
+        }
+        assert!(last_agree > 0.85, "agreement {last_agree}");
+    }
+
+    #[test]
+    fn inference_uses_thresholds() {
+        let mut g = BalancedGater::new(2, 1, 0.1);
+        g.thresholds = vec![0.4, 0.6];
+        let scores = vec![0.5, 0.5, 0.3, 0.7];
+        let gates = g.infer_batch(&scores, 2);
+        assert_eq!(gates[0].experts, vec![0]); // 0.5 > 0.4, 0.5 < 0.6... no
+        assert_eq!(gates[1].experts, vec![1]);
+    }
+}

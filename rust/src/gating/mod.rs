@@ -1,0 +1,76 @@
+//! Pure-rust mirror of the gating math (paper §2.1, Appendices A & F).
+//!
+//! The L3 coordinator needs gating decisions *outside* the XLA graph to
+//! build its all-to-all dispatch plan, and the tests need an independent
+//! oracle for the L1 kernel semantics.  This module implements:
+//!
+//! - noisy top-k gating (eq 3–5),
+//! - the smooth load estimator P(x,i) / Load(X) (eq 8–10),
+//! - importance / CV² balance statistics (eq 6–7, 11),
+//! - strictly-balanced batchwise gating (Appendix F, eq 16–20),
+//! - two-level hierarchical gate composition (Appendix B, eq 12).
+
+pub mod balanced;
+pub mod noisy_topk;
+
+pub use balanced::{batchwise_mask, threshold_inference, BalancedGater};
+pub use noisy_topk::{
+    cv_squared, importance, load_estimate, noisy_topk, GateVec, Gating,
+};
+
+/// Numerically-stable softplus, matching `jax.nn.softplus`.
+pub fn softplus(x: f32) -> f32 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+/// Standard normal CDF Φ via erf (Abramowitz–Stegun 7.1.26 is not enough
+/// precision for the load test; use the erf series from W. J. Cody).
+pub fn normal_cdf(x: f32) -> f32 {
+    0.5 * (1.0 + erf(x as f64 / std::f64::consts::SQRT_2)) as f32
+}
+
+/// erf with ~1e-7 absolute error (sufficient: paper's load estimator is
+/// compared against Monte-Carlo at ~1e-2).
+pub fn erf(x: f64) -> f64 {
+    // Abramowitz & Stegun 7.1.26 with double-precision constants
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softplus_matches_limits() {
+        assert!((softplus(0.0) - 0.6931472).abs() < 1e-6);
+        assert!((softplus(40.0) - 40.0).abs() < 1e-6);
+        assert!(softplus(-40.0) > 0.0);
+        assert!(softplus(-40.0) < 1e-15);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        for x in [-2.0f32, -0.5, 0.3, 1.7] {
+            let s = normal_cdf(x) + normal_cdf(-x);
+            assert!((s - 1.0).abs() < 1e-5, "x={x} sum={s}");
+        }
+        assert!((normal_cdf(1.96) - 0.975).abs() < 2e-4);
+    }
+}

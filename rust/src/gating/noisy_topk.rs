@@ -1,0 +1,283 @@
+//! Noisy Top-K gating (paper eq 3–5) and the balance statistics
+//! (eq 6–11), over plain slices.  Semantics mirror
+//! `python/compile/kernels/ref.py` exactly; cross-language agreement is
+//! asserted in `rust/tests/parity.rs` through the gating artifact.
+
+use crate::gating::{normal_cdf, softplus};
+use crate::util::rng::Rng;
+
+/// One token's gate vector: the `k` selected experts with weights
+/// summing to 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateVec {
+    pub experts: Vec<usize>,
+    pub weights: Vec<f32>,
+}
+
+/// Full gating output for a batch.
+#[derive(Clone, Debug)]
+pub struct Gating {
+    pub n_experts: usize,
+    pub per_token: Vec<GateVec>,
+    /// clean logits x·W_g, row-major (B, n)
+    pub clean: Vec<f32>,
+    /// noisy logits H(x), row-major (B, n)
+    pub noisy: Vec<f32>,
+}
+
+/// x: (b, d) row-major; w_g, w_noise: (d, n) row-major.  `noise_rng` draws
+/// the StandardNormal() term of eq 4; pass `None` for deterministic
+/// (eval-time) gating.
+pub fn noisy_topk(
+    x: &[f32],
+    b: usize,
+    d: usize,
+    w_g: &[f32],
+    w_noise: Option<&[f32]>,
+    n: usize,
+    k: usize,
+    noise_rng: Option<&mut Rng>,
+) -> Gating {
+    assert_eq!(x.len(), b * d);
+    assert_eq!(w_g.len(), d * n);
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let mut clean = vec![0f32; b * n];
+    matmul(x, w_g, &mut clean, b, d, n);
+    let mut noisy = clean.clone();
+    if let (Some(wn), Some(rng)) = (w_noise, noise_rng) {
+        assert_eq!(wn.len(), d * n);
+        let mut raw = vec![0f32; b * n];
+        matmul(x, wn, &mut raw, b, d, n);
+        for i in 0..b * n {
+            noisy[i] += rng.normal_f32() * softplus(raw[i]);
+        }
+    }
+    let per_token = (0..b)
+        .map(|r| topk_softmax(&noisy[r * n..(r + 1) * n], k))
+        .collect();
+    Gating { n_experts: n, per_token, clean, noisy }
+}
+
+/// softmax(KeepTopK(h, k)) for one row; ties broken by lower index,
+/// matching `jax.lax.top_k`.
+pub fn topk_softmax(h: &[f32], k: usize) -> GateVec {
+    let n = h.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    // stable selection of the k largest
+    idx.sort_by(|&a, &b| {
+        h[b].partial_cmp(&h[a]).unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    let max = idx.iter().map(|&i| h[i]).fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = idx.iter().map(|&i| (h[i] - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    GateVec {
+        experts: idx,
+        weights: exps.into_iter().map(|e| e / z).collect(),
+    }
+}
+
+/// Importance(X) (eq 6): batchwise sum of gate values per expert.
+pub fn importance(g: &Gating) -> Vec<f32> {
+    let mut imp = vec![0f32; g.n_experts];
+    for tok in &g.per_token {
+        for (e, w) in tok.experts.iter().zip(tok.weights.iter()) {
+            imp[*e] += w;
+        }
+    }
+    imp
+}
+
+/// Smooth load estimator Load(X) (eq 8–10).  Needs the noise std
+/// σ = softplus(x·W_noise); callers that ran deterministic gating get the
+/// hard assignment count instead.
+pub fn load_estimate(
+    g: &Gating,
+    x: &[f32],
+    b: usize,
+    d: usize,
+    w_noise: Option<&[f32]>,
+    k: usize,
+) -> Vec<f32> {
+    let n = g.n_experts;
+    let Some(wn) = w_noise else {
+        // deterministic gating: Load = hard counts
+        let mut load = vec![0f32; n];
+        for tok in &g.per_token {
+            for &e in &tok.experts {
+                load[e] += 1.0;
+            }
+        }
+        return load;
+    };
+    if k >= n {
+        return vec![b as f32; n];
+    }
+    let mut sigma_raw = vec![0f32; b * n];
+    matmul(x, wn, &mut sigma_raw, b, d, n);
+    let mut load = vec![0f32; n];
+    for r in 0..b {
+        let noisy = &g.noisy[r * n..(r + 1) * n];
+        let clean = &g.clean[r * n..(r + 1) * n];
+        // k-th and (k+1)-th largest of the noisy row
+        let mut sorted: Vec<f32> = noisy.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let kth = sorted[k - 1];
+        let kth1 = sorted[k];
+        for i in 0..n {
+            let threshold = if noisy[i] >= kth { kth1 } else { kth };
+            let sigma = softplus(sigma_raw[r * n + i]) + 1e-10;
+            load[i] += normal_cdf((clean[i] - threshold) / sigma);
+        }
+    }
+    load
+}
+
+/// CV(v)² (eq 7 / 11); 0 for len <= 1 (matches ref.py).
+pub fn cv_squared(v: &[f32]) -> f32 {
+    if v.len() <= 1 {
+        return 0.0;
+    }
+    let n = v.len() as f32;
+    let mean = v.iter().sum::<f32>() / n;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    var / (mean * mean + 1e-10)
+}
+
+/// Compose two-level hierarchical gates (Appendix B eq 12) into effective
+/// flat gates over a*b experts: gate(i,j) = primary_i * secondary_{i,j}.
+pub fn compose_hierarchical(
+    primary: &GateVec,
+    secondary_per_group: &[GateVec],
+    group_size: usize,
+) -> GateVec {
+    let mut experts = Vec::new();
+    let mut weights = Vec::new();
+    for (gi, gw) in primary.experts.iter().zip(primary.weights.iter()) {
+        let sec = &secondary_per_group[*gi];
+        for (ej, ew) in sec.experts.iter().zip(sec.weights.iter()) {
+            experts.push(gi * group_size + ej);
+            weights.push(gw * ew);
+        }
+    }
+    GateVec { experts, weights }
+}
+
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    // row-major (m,k) x (k,n) -> (m,n); k-inner loop order for locality
+    out.fill(0.0);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn topk_softmax_basics() {
+        let g = topk_softmax(&[1.0, 3.0, 2.0, -1.0], 2);
+        assert_eq!(g.experts, vec![1, 2]);
+        assert!((g.weights.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(g.weights[0] > g.weights[1]);
+    }
+
+    #[test]
+    fn topk_ties_prefer_lower_index() {
+        let g = topk_softmax(&[2.0, 2.0, 2.0], 2);
+        assert_eq!(g.experts, vec![0, 1]);
+    }
+
+    #[test]
+    fn gates_sum_to_one_property() {
+        prop::forall("gates normalized", |rng| {
+            let (b, d) = (prop::dim(rng, 1, 12), prop::dim(rng, 1, 8));
+            let n = prop::dim(rng, 2, 16);
+            let k = prop::dim(rng, 1, n.min(4));
+            let x = prop::vec_f32(rng, b * d, 1.0);
+            let wg = prop::vec_f32(rng, d * n, 0.5);
+            let wn = prop::vec_f32(rng, d * n, 0.5);
+            let mut nrng = rng.fold_in(1);
+            let g = noisy_topk(&x, b, d, &wg, Some(&wn), n, k, Some(&mut nrng));
+            for tok in &g.per_token {
+                assert_eq!(tok.experts.len(), k);
+                let s: f32 = tok.weights.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "sum={s}");
+                // selected experts are distinct
+                let mut e = tok.experts.clone();
+                e.sort();
+                e.dedup();
+                assert_eq!(e.len(), k);
+            }
+        });
+    }
+
+    #[test]
+    fn importance_counts_weights() {
+        let g = Gating {
+            n_experts: 3,
+            per_token: vec![
+                GateVec { experts: vec![0, 2], weights: vec![0.7, 0.3] },
+                GateVec { experts: vec![0, 1], weights: vec![0.5, 0.5] },
+            ],
+            clean: vec![],
+            noisy: vec![],
+        };
+        assert_eq!(importance(&g), vec![1.2, 0.5, 0.3]);
+    }
+
+    #[test]
+    fn load_estimate_sums_to_kb_roughly() {
+        // sum_i Load_i ≈ k * B  (each token selects exactly k experts and
+        // P is a smooth estimate of selection)
+        prop::forall("load mass", |rng| {
+            let (b, d, n, k) = (8, 4, prop::dim(rng, 4, 10), 2);
+            let x = prop::vec_f32(rng, b * d, 1.0);
+            let wg = prop::vec_f32(rng, d * n, 0.6);
+            let wn = prop::vec_f32(rng, d * n, 0.3);
+            let mut nrng = rng.fold_in(9);
+            let g = noisy_topk(&x, b, d, &wg, Some(&wn), n, k, Some(&mut nrng));
+            let load = load_estimate(&g, &x, b, d, Some(&wn), k);
+            let total: f32 = load.iter().sum();
+            let want = (k * b) as f32;
+            assert!(
+                (total - want).abs() < want * 0.5,
+                "total={total} want≈{want}"
+            );
+        });
+    }
+
+    #[test]
+    fn cv_squared_matches_definition() {
+        assert_eq!(cv_squared(&[1.0]), 0.0);
+        assert!(cv_squared(&[2.0, 2.0, 2.0]) < 1e-9);
+        let v = [1.0f32, 3.0];
+        // mean 2, var 1 -> cv^2 = 0.25
+        assert!((cv_squared(&v) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hierarchical_composition_weights_multiply() {
+        let primary = GateVec { experts: vec![1, 0], weights: vec![0.6, 0.4] };
+        let secs = vec![
+            GateVec { experts: vec![0], weights: vec![1.0] },
+            GateVec { experts: vec![2], weights: vec![1.0] },
+        ];
+        let flat = compose_hierarchical(&primary, &secs, 4);
+        assert_eq!(flat.experts, vec![1 * 4 + 2, 0]);
+        assert_eq!(flat.weights, vec![0.6, 0.4]);
+    }
+}

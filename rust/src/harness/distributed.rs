@@ -1,0 +1,253 @@
+//! Distributed MoE demo + efficiency report: exercises the full L3 stack
+//! (router -> dispatcher -> sharded expert execution via the expert
+//! artifact -> combine) on simulated devices, and feeds the REAL dispatch
+//! traffic into the K40 cluster model to regenerate the paper's
+//! TFLOPS/GPU efficiency columns.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::perf::{model_step, ClusterSpec};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::{ExpertBackend, ExpertWeights, Scheduler, ShardLayout};
+use crate::coordinator::{BalanceMeter, Dispatcher};
+use crate::metrics::OpsModel;
+use crate::runtime::{Engine, Manifest, TensorF};
+use crate::util::rng::Rng;
+
+/// Slice per-expert FFN weights out of the flat parameter vector.
+pub fn expert_weights(entry: &crate::runtime::ConfigEntry, flat: &[f32])
+    -> Result<Vec<ExpertWeights>> {
+    let c = &entry.config;
+    let (n, d, h) = (c.n_experts, c.d_model, c.expert_hidden);
+    let w_in_all = entry.slice(flat, "moe.w_in")?;
+    let w_out_all = entry.slice(flat, "moe.w_out")?;
+    Ok((0..n)
+        .map(|e| ExpertWeights {
+            w_in: w_in_all[e * d * h..(e + 1) * d * h].to_vec(),
+            w_out: w_out_all[e * h * d..(e + 1) * h * d].to_vec(),
+            d_model: d,
+            hidden: h,
+        })
+        .collect())
+}
+
+/// Build a router for a config from flat params (flat or hierarchical).
+pub fn router_for(entry: &crate::runtime::ConfigEntry, flat: &[f32],
+                  engine: &Engine, manifest: &Manifest, use_artifact: bool)
+    -> Result<Router> {
+    let c = &entry.config;
+    if c.middle != "moe" {
+        bail!("config '{}' has no MoE layer", c.name);
+    }
+    if c.groups > 0 {
+        Ok(Router {
+            backend: crate::coordinator::router::RouterBackend::Native,
+            n_experts: c.n_experts,
+            k: c.k,
+            groups: c.groups,
+            d_model: c.d_model,
+            w_g: entry.slice(flat, "moe.wg_pri")?.to_vec(),
+            w_noise: Some(entry.slice(flat, "moe.wn_pri")?.to_vec()),
+            w_g_sec: Some(entry.slice(flat, "moe.wg_sec")?.to_vec()),
+            w_n_sec: Some(entry.slice(flat, "moe.wn_sec")?.to_vec()),
+        })
+    } else {
+        let backend = if use_artifact {
+            crate::coordinator::router::RouterBackend::Artifact(
+                engine.load(manifest, &c.name, "gating")?,
+            )
+        } else {
+            crate::coordinator::router::RouterBackend::Native
+        };
+        Ok(Router {
+            backend,
+            n_experts: c.n_experts,
+            k: c.k,
+            groups: 0,
+            d_model: c.d_model,
+            w_g: entry.slice(flat, "moe.wg")?.to_vec(),
+            w_noise: Some(entry.slice(flat, "moe.wn")?.to_vec()),
+            w_g_sec: None,
+            w_n_sec: None,
+        })
+    }
+}
+
+/// Run `steps` synchronous distributed MoE steps over `devices` simulated
+/// devices and print per-step telemetry plus modelled timing.
+pub fn run_distributed_demo(artifacts: &str, cfg: &str, devices: usize,
+                            steps: usize) -> Result<()> {
+    let engine = Engine::new()?;
+    let manifest = Manifest::load(artifacts)?;
+    let entry = manifest.config(cfg)?.clone();
+    let c = entry.config.clone();
+    if c.middle != "moe" {
+        bail!("distributed demo needs a MoE config, got '{}'", c.name);
+    }
+    // fresh params from the init artifact; gating nets start at zero so
+    // we perturb W_g slightly to make routing non-degenerate, as a few
+    // training steps would.
+    let trainer = crate::train::Trainer::new(&engine, &manifest, cfg)?;
+    let mut state = trainer.init(0)?;
+    let mut prng = Rng::new(17);
+    {
+        let p = entry.param(if c.groups > 0 { "moe.wg_pri" } else { "moe.wg" })?;
+        for v in state.params.data[p.offset..p.offset + p.size()].iter_mut() {
+            *v += prng.normal_f32() * 0.3;
+        }
+        if c.groups > 0 {
+            let p = entry.param("moe.wg_sec")?;
+            for v in state.params.data[p.offset..p.offset + p.size()].iter_mut() {
+                *v += prng.normal_f32() * 0.3;
+            }
+        }
+    }
+    let weights = expert_weights(&entry, &state.params.data)?;
+    let use_artifact = entry.artifacts.contains_key("gating");
+    let router = router_for(&entry, &state.params.data, &engine, &manifest,
+                            use_artifact)?;
+    let backend = if entry.artifacts.contains_key("expert") {
+        ExpertBackend::Artifact {
+            exe: engine.load(&manifest, cfg, "expert")?,
+            capacity: c.capacity,
+        }
+    } else {
+        ExpertBackend::Native
+    };
+    let sched = Scheduler { layout: ShardLayout::new(devices, c.n_experts), backend };
+    let mut meter = BalanceMeter::new(c.n_experts);
+    let cluster = ClusterSpec::k40s(devices);
+    let ops = OpsModel::from_config(&c);
+    let tokens_per_replica = c.batch * c.seq_len / devices.max(1);
+
+    println!(
+        "# distributed MoE: {} experts on {} devices, {} replica tokens/step",
+        c.n_experts, devices, tokens_per_replica * devices
+    );
+    let mut rng = Rng::new(3);
+    let mut total_wall = 0.0;
+    for step in 0..steps {
+        // per-replica activations (stand-in for the LSTM output)
+        let xs: Vec<TensorF> = (0..devices)
+            .map(|_| {
+                TensorF::new(
+                    vec![tokens_per_replica, c.d_model],
+                    (0..tokens_per_replica * c.d_model)
+                        .map(|_| rng.normal_f32())
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut nrng = rng.fold_in(step as u64);
+        let decisions: Vec<_> = xs
+            .iter()
+            .map(|x| router.route(x, Some(&mut nrng)))
+            .collect::<Result<_>>()?;
+        let plan = Dispatcher::plan(&decisions, c.n_experts);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let t0 = std::time::Instant::now();
+        let (_outs, stats) = sched.execute(&plan, &refs, &weights)?;
+        let wall = t0.elapsed().as_secs_f64();
+        total_wall += wall;
+        let counts = plan.expert_loads();
+        let dec0 = &decisions[0];
+        meter.record(&merge_vec(&decisions, |d| &d.importance),
+                     &merge_vec(&decisions, |d| &d.load), &counts);
+        let timing = model_step(&c, &cluster, tokens_per_replica, &counts);
+        if step < 3 || step + 1 == steps {
+            println!(
+                "step {:>3}: routes={:<6} busiest_shard={:<5} waves={:<3} \
+                 net={:>8}B  wall={:.3}s  modelled: dense {:.1}ms + moe {:.1}ms \
+                 + a2a {:.1}ms",
+                step,
+                plan.total_routes(),
+                stats.busiest_shard_tokens,
+                stats.waves,
+                stats.network_bytes,
+                wall,
+                timing.dense_time * 1e3,
+                timing.moe_compute_time * 1e3,
+                timing.all_to_all_time * 1e3,
+            );
+        }
+        let _ = dec0;
+    }
+    let (cvi, cvl, mm) = meter.summary();
+    println!(
+        "balance over {steps} steps: CV(imp)={cvi:.3} CV(load)={cvl:.3} \
+         max/mean={mm:.2} busiest_share={:.3}",
+        meter.busiest_share()
+    );
+    println!("wall total {total_wall:.2}s ({:.3}s/step)",
+             total_wall / steps.max(1) as f64);
+    let counts = vec![
+        (c.batch * c.seq_len * c.k_effective) / c.n_experts.max(1);
+        c.n_experts
+    ];
+    let timing = model_step(&c, &cluster, tokens_per_replica, &counts);
+    println!(
+        "modelled TFLOPS/device at balanced load: {:.2}",
+        ops.tflops_per_device((c.batch * c.seq_len) as u64, timing.total(),
+                              devices)
+    );
+    Ok(())
+}
+
+fn merge_vec<'a, F: Fn(&'a crate::coordinator::router::RoutingDecision) -> &'a [f32]>(
+    decisions: &'a [crate::coordinator::router::RoutingDecision],
+    f: F,
+) -> Vec<f32> {
+    let n = f(&decisions[0]).len();
+    let mut out = vec![0f32; n];
+    for d in decisions {
+        for (o, v) in out.iter_mut().zip(f(d).iter()) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// §5.1 computational-efficiency table: modelled TFLOPS/GPU per config on
+/// the simulated K40 cluster, at balanced and at collapsed routing.
+pub fn efficiency_report(artifacts: &str, devices: usize) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let cluster = ClusterSpec::k40s(devices);
+    println!(
+        "# modelled computational efficiency, {} simulated K40s",
+        devices
+    );
+    println!(
+        "{:<18} {:>9} {:>12} {:>14} {:>14}",
+        "config", "ops/ts", "params", "TFLOPS(bal)", "TFLOPS(collapsed)"
+    );
+    for (name, entry) in &manifest.configs {
+        let c = &entry.config;
+        if name.starts_with("test-") || name.starts_with("balance-") {
+            continue;
+        }
+        let tokens = c.batch * c.seq_len;
+        let ops = OpsModel::from_config(c);
+        let (bal, coll) = if c.middle == "moe" {
+            let routed = tokens * c.k_effective;
+            let balanced = vec![routed / c.n_experts.max(1); c.n_experts];
+            let mut collapsed = vec![0usize; c.n_experts];
+            collapsed[0] = routed;
+            (
+                model_step(c, &cluster, tokens / devices, &balanced),
+                model_step(c, &cluster, tokens / devices, &collapsed),
+            )
+        } else {
+            let t = model_step(c, &cluster, tokens / devices, &[]);
+            (t.clone(), t)
+        };
+        println!(
+            "{:<18} {:>9} {:>12} {:>14.2} {:>14.2}",
+            name,
+            c.ops_per_timestep,
+            entry.param_size,
+            ops.tflops_per_device(tokens as u64, bal.total(), devices),
+            ops.tflops_per_device(tokens as u64, coll.total(), devices),
+        );
+    }
+    Ok(())
+}

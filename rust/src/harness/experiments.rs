@@ -1,0 +1,123 @@
+//! Shared experiment driver: train a config on the synthetic corpus,
+//! evaluate held-out perplexity, and collect the efficiency estimates.
+//! Every table/figure harness in [`super::tables`] builds on this.
+
+use anyhow::Result;
+
+use crate::cluster::perf::{model_step, ClusterSpec};
+use crate::data::synthetic::{CorpusSpec, TopicCorpus};
+use crate::data::Batcher;
+use crate::metrics::OpsModel;
+use crate::runtime::{Engine, Manifest};
+use crate::train::{checkpoint, Trainer};
+
+/// Result of one LM training run.
+#[derive(Clone, Debug)]
+pub struct LmRun {
+    pub config: String,
+    pub test_perplexity: f64,
+    pub train_nll_last: f64,
+    pub ops_per_timestep: u64,
+    pub moe_params: u64,
+    pub cv_importance: f64,
+    pub cv_load: f64,
+    pub max_over_mean_load: f64,
+    pub dropped_frac: f64,
+    pub steps: u64,
+    pub wall_secs: f64,
+    /// modelled TFLOPS/device on the simulated K40 cluster
+    pub tflops_per_device: f64,
+    /// metric curve: (step, train nll)
+    pub curve: Vec<(u64, f64)>,
+}
+
+pub struct ExperimentOpts {
+    pub steps: u64,
+    pub eval_batches: usize,
+    pub corpus: CorpusSpec,
+    pub devices: usize,
+    pub log_every: u64,
+    pub checkpoint: Option<std::path::PathBuf>,
+}
+
+impl Default for ExperimentOpts {
+    fn default() -> Self {
+        ExperimentOpts {
+            steps: 200,
+            eval_batches: 20,
+            corpus: CorpusSpec::default(),
+            devices: 16,
+            log_every: 50,
+            checkpoint: None,
+        }
+    }
+}
+
+/// Train `cfg` for `opts.steps` and measure everything the tables need.
+pub fn run_lm_experiment(
+    engine: &Engine,
+    manifest: &Manifest,
+    cfg: &str,
+    opts: &ExperimentOpts,
+) -> Result<LmRun> {
+    let trainer = Trainer::new(engine, manifest, cfg)?;
+    let c = &trainer.entry.config;
+    let mut corpus_spec = opts.corpus.clone();
+    corpus_spec.vocab = c.vocab;
+    let corpus = TopicCorpus::new(corpus_spec);
+    let mut train_batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+    // held-out streams: ids far above any training row
+    let mut test_batcher = Batcher::new(&corpus, c.batch, c.seq_len, 1 << 32);
+
+    let t0 = std::time::Instant::now();
+    let mut state = trainer.init(0)?;
+    let metrics = trainer.run(&mut state, &mut train_batcher, opts.steps,
+                              opts.log_every)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let eval = trainer.evaluate(&state, &mut test_batcher, opts.eval_batches)?;
+
+    if let Some(path) = &opts.checkpoint {
+        checkpoint::save(path, cfg, &state)?;
+    }
+
+    // tail-window averages for balance stats (skip warmup noise)
+    let tail = &metrics[metrics.len().saturating_sub(20)..];
+    let avg = |f: fn(&crate::train::StepMetrics) -> f64| {
+        tail.iter().map(f).sum::<f64>() / tail.len().max(1) as f64
+    };
+
+    // modelled efficiency on the simulated K40 cluster: balanced loads at
+    // the measured dropped fraction
+    let cluster = ClusterSpec::k40s(opts.devices);
+    let tokens = c.batch * c.seq_len;
+    let routed = (tokens * c.k_effective) as f64 * (1.0 - avg(|m| m.dropped_frac));
+    let loads = if c.n_experts > 0 && c.middle == "moe" {
+        let imbalance = avg(|m| m.max_over_mean_load).max(1.0);
+        let mean = routed / c.n_experts as f64;
+        let mut l = vec![mean as usize; c.n_experts];
+        l[0] = (mean * imbalance) as usize; // busiest expert sets the pace
+        l
+    } else {
+        vec![]
+    };
+    let timing = model_step(c, &cluster, tokens / opts.devices.max(1), &loads);
+    let ops = OpsModel::from_config(c);
+    let tflops =
+        ops.tflops_per_device(tokens as u64, timing.total(), opts.devices);
+
+    Ok(LmRun {
+        config: cfg.to_string(),
+        test_perplexity: eval.perplexity(),
+        train_nll_last: avg(|m| m.nll),
+        ops_per_timestep: c.ops_per_timestep,
+        moe_params: c.moe_params,
+        cv_importance: avg(|m| m.cv_importance),
+        cv_load: avg(|m| m.cv_load),
+        max_over_mean_load: avg(|m| m.max_over_mean_load),
+        dropped_frac: avg(|m| m.dropped_frac),
+        steps: opts.steps,
+        wall_secs: wall,
+        tflops_per_device: tflops,
+        curve: metrics.iter().map(|m| (m.step, m.nll)).collect(),
+    })
+}

@@ -1,0 +1,8 @@
+//! Experiment harnesses: one entry point per paper table/figure.
+//! See DESIGN.md's experiment index for the mapping.
+
+pub mod distributed;
+pub mod experiments;
+pub mod tables;
+
+pub use experiments::{run_lm_experiment, LmRun};

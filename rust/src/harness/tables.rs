@@ -1,0 +1,365 @@
+//! One harness per paper table/figure.  Each prints the same rows/series
+//! the paper reports, computed on the synthetic substrate (DESIGN.md
+//! §Substitutions).  Absolute numbers differ from the paper (different
+//! corpus, simulated cluster); the SHAPES — who wins, by what factor,
+//! where curves bend — are the reproduction targets, recorded in
+//! EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use crate::data::synthetic::{CorpusSpec, TopicCorpus};
+use crate::data::translation::TranslationTask;
+use crate::data::Vocab;
+use crate::ngram::KneserNey;
+use crate::runtime::{Engine, Manifest};
+use crate::translate::bleu;
+use crate::util::rng::Rng;
+
+use super::experiments::{run_lm_experiment, ExperimentOpts, LmRun};
+
+fn engine_manifest(artifacts: &str) -> Result<(Engine, Manifest)> {
+    Ok((Engine::new()?, Manifest::load(artifacts)?))
+}
+
+fn cv(x: f64) -> f64 {
+    x.max(0.0).sqrt() // metrics carry CV^2; tables report CV
+}
+
+fn print_lm_header() {
+    println!(
+        "{:<16} {:>10} {:>12} {:>12} {:>8} {:>8} {:>9} {:>8}",
+        "model", "test ppl", "ops/ts", "MoE params", "CV(imp)", "CV(load)",
+        "max/mean", "TFLOPS"
+    );
+}
+
+fn print_lm_row(r: &LmRun) {
+    println!(
+        "{:<16} {:>10.2} {:>12} {:>12} {:>8.3} {:>8.3} {:>9.2} {:>8.2}",
+        r.config,
+        r.test_perplexity,
+        r.ops_per_timestep,
+        r.moe_params,
+        cv(r.cv_importance),
+        cv(r.cv_load),
+        r.max_over_mean_load,
+        r.tflops_per_device
+    );
+}
+
+/// Figure 2-left: test perplexity vs MoE capacity at matched ~ops/timestep.
+/// Figure 2-right: perplexity vs computational budget.
+pub fn fig2(artifacts: &str, steps: u64, side: &str) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    let configs: &[&str] = match side {
+        "right" => &["lstm-4x", "lstm-big", "moe-lowbudget", "moe-midbudget",
+                     "moe-highbudget"],
+        _ => &["moe-4", "moe-32", "moe-256", "moe-256-h", "moe-1024-h"],
+    };
+    println!("# Figure 2-{side}: perplexity vs {}", if side == "right" {
+        "computational budget"
+    } else {
+        "capacity (matched ops/timestep)"
+    });
+    print_lm_header();
+    let opts = ExperimentOpts { steps, ..Default::default() };
+    for cfg in configs {
+        let r = run_lm_experiment(&engine, &manifest, cfg, &opts)?;
+        print_lm_row(&r);
+    }
+    Ok(())
+}
+
+/// Table 1 analogue: high-capacity MoE at three budgets vs dense baseline.
+pub fn table1(artifacts: &str, steps: u64) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    println!("# Table 1: high-capacity MoE models vs best dense baseline");
+    print_lm_header();
+    let opts = ExperimentOpts { steps, ..Default::default() };
+    for cfg in ["lstm-big", "moe-lowbudget", "moe-midbudget", "moe-highbudget"] {
+        let r = run_lm_experiment(&engine, &manifest, cfg, &opts)?;
+        print_lm_row(&r);
+    }
+    Ok(())
+}
+
+/// Table 6: w_importance/w_load ablation on the MoE-32 analogue.
+pub fn table6(artifacts: &str, steps: u64) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    println!("# Table 6: balancing-loss ablation (paper Appendix A)");
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10}",
+        "w_imp/w_load", "test ppl", "CV(imp)", "CV(load)", "max/mean"
+    );
+    let opts = ExperimentOpts { steps, ..Default::default() };
+    for (wi, wl) in [("0.0", "0.0"), ("0.2", "0.0"), ("0.0", "0.2"),
+                     ("0.1", "0.1"), ("0.01", "0.01"), ("1.0", "1.0")] {
+        let cfg = format!("balance-wi{wi}-wl{wl}");
+        let r = run_lm_experiment(&engine, &manifest, &cfg, &opts)?;
+        println!(
+            "{:<22} {:>10.2} {:>10.3} {:>10.3} {:>10.2}",
+            format!("{wi} / {wl}"),
+            r.test_perplexity,
+            cv(r.cv_importance),
+            cv(r.cv_load),
+            r.max_over_mean_load
+        );
+    }
+    Ok(())
+}
+
+/// Table 7: the full model ladder including computationally-matched
+/// baselines and the KN 5-gram.
+pub fn table7(artifacts: &str, steps: u64) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    println!("# Table 7: model ladder on the topic corpus (1B-word analogue)");
+    print_lm_header();
+    // n-gram baseline row first (no neural artifacts involved)
+    let ppl = kneser_ney_row(2048, 400_000, 40_000);
+    println!("{:<16} {:>10.2} {:>12} {:>12}", "kn5", ppl, "~0", 0);
+    let opts = ExperimentOpts { steps, ..Default::default() };
+    for cfg in ["lstm-big", "lstm-4x", "moe-1-wide", "moe-1-deep", "moe-4",
+                "moe-32", "moe-256", "moe-256-h", "moe-1024-h"] {
+        let r = run_lm_experiment(&engine, &manifest, cfg, &opts)?;
+        print_lm_row(&r);
+    }
+    Ok(())
+}
+
+/// Figure 3 / Table 8: the larger-corpus capacity sweep (0.1 vs 1 epoch
+/// analogue: fewer vs more training steps on a wider topic corpus).
+pub fn table8(artifacts: &str, steps: u64) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    println!("# Table 8 / Figure 3: capacity sweep on the 100B-word analogue");
+    println!("(corpus: 4x more topics than the Table 7 corpus)");
+    let corpus = CorpusSpec { n_topics: 128, ..CorpusSpec::default() };
+    println!(
+        "{:<16} {:>10} {:>10} {:>12} {:>8}",
+        "model", "steps", "test ppl", "MoE params", "TFLOPS"
+    );
+    let ppl = kneser_ney_row(2048, 400_000, 40_000);
+    println!("{:<16} {:>10} {:>10.2} {:>12} {:>8}", "kn5", "-", ppl, 0, "-");
+    for cfg in ["lstm-4x", "moe-32", "moe-256", "moe-256-h", "moe-1024-h"] {
+        for mult in [1u64, 4] {
+            let opts = ExperimentOpts {
+                steps: steps * mult,
+                corpus: corpus.clone(),
+                devices: 32,
+                ..Default::default()
+            };
+            let r = run_lm_experiment(&engine, &manifest, cfg, &opts)?;
+            println!(
+                "{:<16} {:>10} {:>10.2} {:>12} {:>8.2}",
+                r.config,
+                r.steps,
+                r.test_perplexity,
+                r.moe_params,
+                r.tflops_per_device
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Tables 2/3/4 analogue: single-pair MT, MoE vs dense at matched ops.
+pub fn mt_single(artifacts: &str, steps: u64) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    println!("# Tables 2-4: synthetic single-pair translation");
+    println!(
+        "{:<12} {:>10} {:>8} {:>12}",
+        "model", "test ppl", "BLEU", "ops/ts"
+    );
+    for cfg in ["mt-dense", "mt-moe"] {
+        let (ppl, b) = mt_run(&engine, &manifest, cfg, 7, steps)?;
+        let ops = manifest.config(cfg)?.config.ops_per_timestep;
+        println!("{:<12} {:>10.2} {:>8.2} {:>12}", cfg, ppl, b, ops);
+    }
+    Ok(())
+}
+
+/// Table 5 analogue: multilingual — one model on 4 language pairs vs
+/// per-pair dense models.
+pub fn mt_multi(artifacts: &str, steps: u64) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    println!("# Table 5: multilingual translation (4 synthetic pairs)");
+    let pairs: Vec<u64> = vec![11, 22, 33, 44];
+    // multilingual MoE: one model over all pairs
+    let (_, multi_bleus) =
+        mt_run_multi(&engine, &manifest, "mt-moe", &pairs, steps)?;
+    let (_, dense_bleus) =
+        mt_run_multi(&engine, &manifest, "mt-dense", &pairs, steps)?;
+    println!(
+        "{:<10} {:>14} {:>14} {:>8}",
+        "pair", "MoE-Multi", "Dense-Multi", "delta"
+    );
+    for (i, p) in pairs.iter().enumerate() {
+        println!(
+            "{:<10} {:>14.2} {:>14.2} {:>8.2}",
+            format!("pair-{p}"),
+            multi_bleus[i],
+            dense_bleus[i],
+            multi_bleus[i] - dense_bleus[i]
+        );
+    }
+    Ok(())
+}
+
+/// Table 9 analogue: expert specialisation — which topics each expert
+/// serves (the synthetic analogue of syntax/semantics contexts).
+pub fn table9(artifacts: &str, steps: u64) -> Result<()> {
+    use crate::coordinator::router::Router;
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    let cfg = "moe-32";
+    let entry = manifest.config(cfg)?.clone();
+    let c = entry.config.clone();
+    println!("# Table 9: expert specialisation on the topic corpus");
+    let opts = ExperimentOpts {
+        steps,
+        checkpoint: Some(std::env::temp_dir().join("moe_table9.ckpt")),
+        ..Default::default()
+    };
+    run_lm_experiment(&engine, &manifest, cfg, &opts)?;
+    let state = crate::train::checkpoint::load(
+        &std::env::temp_dir().join("moe_table9.ckpt"),
+        cfg,
+    )?;
+    // Route embedded tokens through the trained gating net and report the
+    // top words per expert.
+    let wg = entry.slice(&state.params.data, "moe.wg")?.to_vec();
+    let router = Router::flat_native(c.d_model, c.n_experts, c.k, wg, None);
+    let emb = entry.slice(&state.params.data, "embed")?;
+    let vocab = Vocab::synthetic(c.vocab);
+    let x = crate::runtime::TensorF::new(
+        vec![c.vocab, c.d_model],
+        emb.to_vec(),
+    );
+    let dec = router.route(&x, None)?;
+    let mut per_expert: Vec<Vec<(f32, i32)>> = vec![vec![]; c.n_experts];
+    for (word, tok) in dec.per_token.iter().enumerate() {
+        for (e, w) in tok.experts.iter().zip(tok.weights.iter()) {
+            per_expert[*e].push((*w, word as i32));
+        }
+    }
+    for (e, mut words) in per_expert.into_iter().enumerate() {
+        words.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let top: Vec<&str> =
+            words.iter().take(8).map(|(_, w)| vocab.word(*w)).collect();
+        println!("expert {e:>3}: {}", top.join(" "));
+    }
+    Ok(())
+}
+
+/// Figure 4 analogue: perplexity vs tokens processed per capacity.
+pub fn fig4(artifacts: &str, steps: u64) -> Result<()> {
+    let (engine, manifest) = engine_manifest(artifacts)?;
+    println!("# Figure 4: test perplexity vs training tokens");
+    println!("{:<14} {:>12} {:>10}", "model", "tokens", "test ppl");
+    for cfg in ["lstm-4x", "moe-32", "moe-256"] {
+        for frac in [1u64, 4] {
+            let opts = ExperimentOpts {
+                steps: steps * frac / 4,
+                ..Default::default()
+            };
+            let r = run_lm_experiment(&engine, &manifest, cfg, &opts)?;
+            let c = &manifest.config(cfg)?.config;
+            println!(
+                "{:<14} {:>12} {:>10.2}",
+                cfg,
+                r.steps * (c.batch * c.seq_len) as u64,
+                r.test_perplexity
+            );
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ MT --
+
+fn mt_run(engine: &Engine, manifest: &Manifest, cfg: &str, pair: u64,
+          steps: u64) -> Result<(f64, f64)> {
+    let (ppl, bleus) = mt_run_multi(engine, manifest, cfg, &[pair], steps)?;
+    Ok((ppl, bleus[0]))
+}
+
+/// Train a prefix-LM seq2seq on one or more synthetic pairs; returns
+/// (dev perplexity, per-pair BLEU via the decode artifact, greedy beam 4).
+fn mt_run_multi(engine: &Engine, manifest: &Manifest, cfg: &str,
+                pairs: &[u64], steps: u64) -> Result<(f64, Vec<f64>)> {
+    use crate::data::synthetic::EOS;
+    use crate::translate::BeamDecoder;
+    use crate::train::Trainer;
+
+    let trainer = Trainer::new(engine, manifest, cfg)?;
+    let c = trainer.entry.config.clone();
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab: c.vocab,
+        n_topics: 8,
+        branch: 3,
+        mean_len: 7,
+        seed: 100,
+    });
+    let tasks: Vec<TranslationTask> =
+        pairs.iter().map(|&p| TranslationTask::new(p, c.vocab)).collect();
+    let mut state = trainer.init(0)?;
+    let mut rng = Rng::new(42);
+    for step in 0..steps {
+        let task = &tasks[(step as usize) % tasks.len()];
+        let batch = task.batch(&corpus, &mut rng, c.batch, c.seq_len);
+        trainer.step(&mut state, &batch)?;
+    }
+    // dev perplexity over fresh batches from all pairs
+    let mut eval_rng = Rng::new(4242);
+    let dev: Vec<_> = tasks
+        .iter()
+        .map(|t| t.batch(&corpus, &mut eval_rng, c.batch, c.seq_len))
+        .collect();
+    let ppl = trainer.evaluate_tokens(&state, &dev)?.perplexity();
+
+    // BLEU: decode continuations after `<s> src <sep>` and compare
+    let decoder = BeamDecoder::new(
+        engine.load(manifest, cfg, "decode")?,
+        &trainer.entry,
+    );
+    let mut bleus = Vec::new();
+    let seg = (c.seq_len + 1 - 3) / 2;
+    for task in &tasks {
+        let mut pairs_scored = Vec::new();
+        let mut drng = Rng::new(777 ^ task.pair_id);
+        for _ in 0..12 {
+            let (src, tgt) = task.example(&corpus, &mut drng);
+            let src = &src[..src.len().min(seg)];
+            let tgt = &tgt[..tgt.len().min(seg)];
+            let mut prefix = vec![crate::data::synthetic::BOS];
+            prefix.extend_from_slice(src);
+            prefix.push(crate::data::translation::SEP);
+            let hyps = decoder.decode(&state.params, &prefix, 4,
+                                      seg + 2, EOS)?;
+            let mut hyp = hyps
+                .first()
+                .map(|h| h.tokens.clone())
+                .unwrap_or_default();
+            hyp.retain(|&t| t != EOS);
+            let mut reference = tgt.to_vec();
+            reference.retain(|&t| t != EOS);
+            pairs_scored.push((hyp, reference));
+        }
+        bleus.push(bleu(&pairs_scored));
+    }
+    Ok((ppl, bleus))
+}
+
+// --------------------------------------------------------------- ngram --
+
+fn kneser_ney_row(vocab: usize, train_tokens: usize, test_tokens: usize) -> f64 {
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab,
+        ..CorpusSpec::default()
+    });
+    let mut train = vec![0i32; train_tokens];
+    corpus.stream(0).fill(&mut train);
+    let mut test = vec![0i32; test_tokens];
+    corpus.stream(1 << 32).fill(&mut test);
+    let mut kn = KneserNey::new(5, vocab);
+    kn.train(&train);
+    kn.perplexity(&test)
+}

@@ -1,0 +1,26 @@
+//! # moe — Sparsely-Gated Mixture-of-Experts
+//!
+//! A three-layer reproduction of *Outrageously Large Neural Networks: The
+//! Sparsely-Gated Mixture-of-Experts Layer* (Shazeer et al., ICLR 2017):
+//!
+//! - **L1** Pallas kernels + **L2** JAX model live in `python/compile/`
+//!   and are AOT-lowered to HLO text once (`make artifacts`);
+//! - **L3** (this crate) is the coordinator: it loads the artifacts via
+//!   PJRT ([`runtime`]), owns training ([`train`]), the distributed MoE
+//!   simulation ([`coordinator`], [`cluster`]) and every substrate the
+//!   paper's evaluation needs ([`data`], [`ngram`], [`translate`],
+//!   [`metrics`]).
+//!
+//! Python never runs on the training/serving path.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod gating;
+pub mod harness;
+pub mod metrics;
+pub mod ngram;
+pub mod runtime;
+pub mod train;
+pub mod translate;
+pub mod util;

@@ -1,0 +1,171 @@
+//! `repro` — the launcher.
+//!
+//! ```text
+//! repro train --config moe-32 --steps 500 [--checkpoint out.ckpt]
+//! repro eval  --config moe-32 --checkpoint out.ckpt
+//! repro distributed --config moe-32 --devices 8 --steps 20
+//! repro table1|table6|table7|table8|table9|fig2|fig4|mt|mt5  [--steps N]
+//! repro efficiency --devices 16
+//! repro info
+//! ```
+//!
+//! (clap is not in the offline vendored crate set; flags are parsed by the
+//! tiny [`Args`] helper below with the same `--flag value` conventions.)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use moe::harness::experiments::{run_lm_experiment, ExperimentOpts};
+use moe::harness::tables;
+use moe::runtime::{Engine, Manifest};
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument '{a}' (flags are --name value)");
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        self.get(name, &default.to_string())
+            .parse()
+            .with_context(|| format!("--{name} must be an integer"))
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [flags]\n\
+         commands:\n\
+           train        --config NAME --steps N [--checkpoint PATH] [--devices D]\n\
+           eval         --config NAME --checkpoint PATH\n\
+           distributed  --config NAME [--devices D] [--steps N]\n\
+           table1 | table6 | table7 | table8 | table9   [--steps N]\n\
+           fig2 [--side left|right] | fig4              [--steps N]\n\
+           mt | mt5                                     [--steps N]\n\
+           efficiency   [--devices D]\n\
+           info\n\
+         common flags: --artifacts DIR (default: artifacts)"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else { usage() };
+    let args = Args::parse(&argv[1..])?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let steps = args.get_u64("steps", 200)?;
+
+    match cmd.as_str() {
+        "train" => {
+            let cfg = args.get("config", "moe-32");
+            let engine = Engine::new()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let ckpt = args.flags.get("checkpoint").map(std::path::PathBuf::from);
+            let opts = ExperimentOpts {
+                steps,
+                devices: args.get_u64("devices", 16)? as usize,
+                log_every: args.get_u64("log-every", 20)?,
+                checkpoint: ckpt,
+                ..Default::default()
+            };
+            let r = run_lm_experiment(&engine, &manifest, &cfg, &opts)?;
+            println!(
+                "config={} steps={} test_ppl={:.3} ops/ts={} tflops/dev={:.2} \
+                 wall={:.1}s",
+                r.config, r.steps, r.test_perplexity, r.ops_per_timestep,
+                r.tflops_per_device, r.wall_secs
+            );
+        }
+        "eval" => {
+            let cfg = args.get("config", "moe-32");
+            let ckpt = args
+                .flags
+                .get("checkpoint")
+                .context("--checkpoint required")?;
+            let engine = Engine::new()?;
+            let manifest = Manifest::load(&artifacts)?;
+            let trainer = moe::train::Trainer::new(&engine, &manifest, &cfg)?;
+            let state = moe::train::checkpoint::load(
+                std::path::Path::new(ckpt),
+                &cfg,
+            )?;
+            let c = &trainer.entry.config;
+            let corpus = moe::data::synthetic::TopicCorpus::new(
+                moe::data::synthetic::CorpusSpec {
+                    vocab: c.vocab,
+                    ..Default::default()
+                },
+            );
+            let mut b = moe::data::Batcher::new(&corpus, c.batch, c.seq_len,
+                                                1 << 32);
+            let e = trainer.evaluate(&state, &mut b, 50)?;
+            println!("config={cfg} step={} test_ppl={:.3}", state.step,
+                     e.perplexity());
+        }
+        "distributed" => {
+            let cfg = args.get("config", "moe-32");
+            let devices = args.get_u64("devices", 8)? as usize;
+            moe::harness::distributed::run_distributed_demo(
+                &artifacts, &cfg, devices, steps as usize,
+            )?;
+        }
+        "table1" => tables::table1(&artifacts, steps)?,
+        "table6" => tables::table6(&artifacts, steps)?,
+        "table7" => tables::table7(&artifacts, steps)?,
+        "table8" => tables::table8(&artifacts, steps)?,
+        "table9" => tables::table9(&artifacts, steps)?,
+        "fig2" => tables::fig2(&artifacts, steps, &args.get("side", "left"))?,
+        "fig4" => tables::fig4(&artifacts, steps)?,
+        "mt" => tables::mt_single(&artifacts, steps)?,
+        "mt5" => tables::mt_multi(&artifacts, steps)?,
+        "efficiency" => {
+            let devices = args.get_u64("devices", 16)? as usize;
+            moe::harness::distributed::efficiency_report(&artifacts, devices)?;
+        }
+        "info" => {
+            let engine = Engine::new()?;
+            let manifest = Manifest::load(&artifacts)?;
+            println!("platform: {}", engine.platform());
+            println!("configs in manifest:");
+            for (name, e) in &manifest.configs {
+                println!(
+                    "  {:<22} middle={:<5} experts={:<6} params={:<9} \
+                     ops/ts={:<9} artifacts={:?}",
+                    name,
+                    e.config.middle,
+                    e.config.n_experts,
+                    e.param_size,
+                    e.config.ops_per_timestep,
+                    e.artifacts.keys().collect::<Vec<_>>()
+                );
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

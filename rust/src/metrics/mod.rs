@@ -1,0 +1,143 @@
+//! Evaluation metrics and ops accounting.
+//!
+//! Implements the measures the paper's tables report: perplexity,
+//! coefficient-of-variation balance stats (Table 6), BLEU is in
+//! [`crate::translate::bleu`], and the FLOP accounting used for the
+//! ops/timestep and TFLOPS/GPU columns (Tables 1, 7, 8).
+
+use crate::runtime::ModelConfig;
+
+/// Perplexity from summed negative log likelihood.
+pub fn perplexity(nll_sum: f64, tokens: f64) -> f64 {
+    (nll_sum / tokens.max(1.0)).exp()
+}
+
+/// Max-over-mean load (Table 6 rightmost column).
+pub fn max_over_mean(v: &[f32]) -> f32 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mean = v.iter().sum::<f32>() / v.len() as f32;
+    let max = v.iter().cloned().fold(f32::MIN, f32::max);
+    max / (mean + 1e-10)
+}
+
+/// Simple online mean/min/max accumulator for step metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// FLOP accounting in the paper's convention (§5.1): ops/timestep counts
+/// forward multiply-adds excluding embedding and softmax; the training
+/// figure (for TFLOPS/GPU) counts a multiply-add as TWO ops, includes the
+/// backward pass (2x forward) and the softmax layer.
+#[derive(Clone, Copy, Debug)]
+pub struct OpsModel {
+    /// forward MACs per token, excl. embedding & softmax (manifest value)
+    pub fwd_macs_per_token: u64,
+    pub d_model: u64,
+    pub vocab: u64,
+}
+
+impl OpsModel {
+    pub fn from_config(c: &ModelConfig) -> Self {
+        OpsModel {
+            fwd_macs_per_token: c.ops_per_timestep,
+            d_model: c.d_model as u64,
+            vocab: c.vocab as u64,
+        }
+    }
+
+    /// ops/timestep as the paper reports it.
+    pub fn ops_per_timestep(&self) -> u64 {
+        self.fwd_macs_per_token
+    }
+
+    /// Total training FLOPs for `tokens` tokens: fwd + bwd (2x), softmax
+    /// included, MAC = 2 ops.
+    pub fn train_flops(&self, tokens: u64) -> u64 {
+        let softmax_macs = self.d_model * self.vocab;
+        let fwd = self.fwd_macs_per_token + softmax_macs;
+        // fwd + 2x for backward, times 2 ops per MAC
+        fwd * 3 * 2 * tokens
+    }
+
+    /// TFLOPS/device given a measured step time.
+    pub fn tflops_per_device(
+        &self,
+        tokens_per_step: u64,
+        step_secs: f64,
+        devices: usize,
+    ) -> f64 {
+        self.train_flops(tokens_per_step) as f64
+            / step_secs.max(1e-12)
+            / devices.max(1) as f64
+            / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // uniform over V: nll = ln V per token
+        let v: f64 = 64.0;
+        let ppl = perplexity(v.ln() * 100.0, 100.0);
+        assert!((ppl - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_over_mean_balanced_is_one() {
+        assert!((max_over_mean(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-6);
+        assert!(max_over_mean(&[0.0, 4.0]) > 1.9);
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut r = Running::new();
+        for v in [1.0, 2.0, 6.0] {
+            r.push(v);
+        }
+        assert_eq!(r.mean(), 3.0);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 6.0);
+    }
+
+    #[test]
+    fn flop_accounting_scales() {
+        let m = OpsModel { fwd_macs_per_token: 8_000_000, d_model: 512, vocab: 10_000 };
+        assert_eq!(m.ops_per_timestep(), 8_000_000);
+        let f1 = m.train_flops(1);
+        assert_eq!(f1, (8_000_000 + 512 * 10_000) * 6);
+        // tflops: 1M tokens/step in 1s on 4 devices
+        let t = m.tflops_per_device(1_000_000, 1.0, 4);
+        assert!((t - f1 as f64 * 1_000_000.0 / 4.0 / 1e12).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,142 @@
+//! PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Python never runs at this point — the artifacts under `artifacts/` are
+//! the entire model.  HLO *text* is the interchange format (jax >= 0.5
+//! emits protos with 64-bit ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).  Compiled executables are cached per artifact
+//! file, so e.g. every expert shard in the coordinator shares one
+//! `expert_<cfg>` executable.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::manifest::{ArtifactSig, Manifest, TensorSig};
+use crate::runtime::tensor::Host;
+
+pub struct Engine {
+    client: PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub sig: ArtifactSig,
+    pub name: String,
+    pub compile_time: std::time::Duration,
+}
+
+fn shape_matches(sig: &TensorSig, host: &Host) -> bool {
+    sig.shape == host.shape() && sig.dtype == host.dtype()
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by file name).
+    pub fn load(&self, manifest: &Manifest, cfg_name: &str, kind: &str)
+        -> Result<Arc<Executable>> {
+        let entry = manifest.config(cfg_name)?;
+        let sig = entry.artifact(kind)?;
+        if let Some(exe) = self.cache.lock().unwrap().get(&sig.file) {
+            return Ok(exe.clone());
+        }
+        let path = manifest.artifact_path(sig);
+        let exe = Arc::new(self.compile_file(&path, sig.clone())?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(sig.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compile_file(&self, path: &Path, sig: ArtifactSig)
+        -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            sig,
+            compile_time: t0.elapsed(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the output leaves in manifest
+    /// order.  Input shapes/dtypes are validated against the signature so
+    /// a stale artifact fails loudly rather than numerically.
+    pub fn run(&self, inputs: &[Host]) -> Result<Vec<Host>> {
+        if inputs.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (sig, host)) in
+            self.sig.inputs.iter().zip(inputs.iter()).enumerate() {
+            if !shape_matches(sig, host) {
+                bail!(
+                    "{}: input {i} shape/dtype mismatch: artifact wants \
+                     {:?} {:?}, caller passed {:?} {:?}",
+                    self.name, sig.shape, sig.dtype, host.shape(),
+                    host.dtype()
+                );
+            }
+        }
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|h| h.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute pre-built literals (skips signature validation; used on the
+    /// trainer hot loop where literals are reused across steps).
+    pub fn run_literals(&self, literals: &[Literal]) -> Result<Vec<Host>> {
+        let result = self.exe.execute::<Literal>(literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching output tuple")?;
+        // AOT lowers with return_tuple=True: root is always a tuple.
+        let leaves = tuple.to_tuple().context("decomposing output tuple")?;
+        if leaves.len() != self.sig.outputs.len() {
+            bail!(
+                "{}: artifact returned {} outputs, manifest says {}",
+                self.name,
+                leaves.len(),
+                self.sig.outputs.len()
+            );
+        }
+        leaves
+            .iter()
+            .zip(self.sig.outputs.iter())
+            .map(|(lit, sig)| Host::from_literal(lit, sig.dtype))
+            .collect()
+    }
+}

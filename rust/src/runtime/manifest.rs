@@ -1,0 +1,313 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the ONLY channel through which rust learns about model
+//! shapes: parameter layout inside the flat vector, artifact input/output
+//! signatures, ops/timestep accounting and the training hyperparameters
+//! each config was lowered with.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Hyperparameters the config was lowered with (subset rust needs).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub lstm_hidden: usize,
+    pub lstm_proj: usize,
+    pub middle: String,
+    pub n_experts: usize,
+    pub k: usize,
+    pub groups: usize,
+    pub expert_hidden: usize,
+    pub capacity: usize,
+    pub k_effective: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub w_importance: f64,
+    pub w_load: f64,
+    pub ops_per_timestep: u64,
+    pub moe_params: u64,
+    pub optimizer: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub config: ModelConfig,
+    pub metric_names: Vec<String>,
+    pub params: Vec<ParamEntry>,
+    pub param_size: usize,
+    pub opt_sizes: (usize, usize),
+    pub decode_batch: usize,
+    pub n_lstm: usize,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl ConfigEntry {
+    pub fn param(&self, name: &str) -> Result<&ParamEntry> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("no param '{name}' in config"))
+    }
+
+    pub fn artifact(&self, kind: &str) -> Result<&ArtifactSig> {
+        self.artifacts.get(kind).ok_or_else(|| {
+            anyhow!("config '{}' has no '{kind}' artifact", self.config.name)
+        })
+    }
+
+    /// Slice a named parameter tensor out of the flat vector.
+    pub fn slice<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let p = self.param(name)?;
+        if p.offset + p.size() > flat.len() {
+            bail!("param '{name}' out of range of flat vector");
+        }
+        Ok(&flat[p.offset..p.offset + p.size()])
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+fn sig_list(v: &Value) -> Result<Vec<TensorSig>> {
+    v.as_arr()
+        .context("expected array of signatures")?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .field("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?;
+            let dtype = DType::parse(s.field("dtype")?.as_str().context("dtype")?)?;
+            Ok(TensorSig { shape, dtype })
+        })
+        .collect()
+}
+
+fn get_usize(v: &Value, key: &str) -> Result<usize> {
+    v.field(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field '{key}' not a number"))
+}
+
+fn get_f64(v: &Value, key: &str) -> Result<f64> {
+    v.field(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field '{key}' not a number"))
+}
+
+fn get_str(v: &Value, key: &str) -> Result<String> {
+    Ok(v.field(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{key}' not a string"))?
+        .to_string())
+}
+
+fn parse_config(name: &str, v: &Value) -> Result<ConfigEntry> {
+    let c = v.field("config")?;
+    let config = ModelConfig {
+        name: name.to_string(),
+        vocab: get_usize(c, "vocab")?,
+        d_model: get_usize(c, "d_model")?,
+        lstm_hidden: get_usize(c, "lstm_hidden")?,
+        lstm_proj: get_usize(c, "lstm_proj")?,
+        middle: get_str(c, "middle")?,
+        n_experts: get_usize(c, "n_experts")?,
+        k: get_usize(c, "k")?,
+        groups: get_usize(c, "groups")?,
+        expert_hidden: get_usize(c, "expert_hidden")?,
+        capacity: get_usize(c, "capacity")?,
+        k_effective: get_usize(c, "k_effective")?,
+        batch: get_usize(c, "batch")?,
+        seq_len: get_usize(c, "seq_len")?,
+        w_importance: get_f64(c, "w_importance")?,
+        w_load: get_f64(c, "w_load")?,
+        ops_per_timestep: get_f64(c, "ops_per_timestep")? as u64,
+        moe_params: get_f64(c, "moe_params")? as u64,
+        optimizer: get_str(c, "optimizer")?,
+    };
+    let metric_names = v
+        .field("metrics")?
+        .as_arr()
+        .context("metrics")?
+        .iter()
+        .map(|m| Ok(m.as_str().context("metric name")?.to_string()))
+        .collect::<Result<_>>()?;
+    let params = v
+        .field("param_layout")?
+        .as_arr()
+        .context("param_layout")?
+        .iter()
+        .map(|p| {
+            Ok(ParamEntry {
+                name: get_str(p, "name")?,
+                shape: p
+                    .field("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                offset: get_usize(p, "offset")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let opt = v.field("opt_sizes")?.as_arr().context("opt_sizes")?;
+    let artifacts = v
+        .field("artifacts")?
+        .as_obj()
+        .context("artifacts")?
+        .iter()
+        .map(|(k, a)| {
+            Ok((
+                k.clone(),
+                ArtifactSig {
+                    file: get_str(a, "file")?,
+                    inputs: sig_list(a.field("inputs")?)?,
+                    outputs: sig_list(a.field("outputs")?)?,
+                },
+            ))
+        })
+        .collect::<Result<BTreeMap<_, _>>>()?;
+    Ok(ConfigEntry {
+        config,
+        metric_names,
+        params,
+        param_size: get_usize(v, "param_size")?,
+        opt_sizes: (
+            opt[0].as_usize().context("opt m size")?,
+            opt[1].as_usize().context("opt v size")?,
+        ),
+        decode_batch: get_usize(v, "decode_batch")?,
+        n_lstm: get_usize(v, "n_lstm")?,
+        artifacts,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts`"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let configs = root
+            .field("configs")?
+            .as_obj()
+            .context("configs")?
+            .iter()
+            .map(|(name, v)| Ok((name.clone(), parse_config(name, v)?)))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Manifest { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow!(
+                "config '{name}' not in manifest (have: {:?}); re-run `make artifacts`",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, sig: &ArtifactSig) -> PathBuf {
+        self.dir.join(&sig.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "configs": {
+        "t": {
+          "config": {"name":"t","vocab":64,"d_model":16,"lstm_hidden":16,
+            "lstm_proj":0,"middle":"moe","n_experts":4,"k":2,"groups":0,
+            "expert_hidden":32,"capacity":24,"k_effective":2,"batch":4,
+            "seq_len":6,"w_importance":0.1,"w_load":0.1,
+            "ops_per_timestep":10000,"moe_params":4096,"optimizer":"adam"},
+          "metrics": ["loss","nll"],
+          "param_layout": [
+            {"name":"embed","shape":[64,16],"offset":0,"init":"normal"},
+            {"name":"moe.wg","shape":[16,4],"offset":1024,"init":"zeros"}],
+          "param_size": 1088,
+          "opt_sizes": [1088, 1088],
+          "decode_batch": 8,
+          "n_lstm": 2,
+          "artifacts": {
+            "step": {"file":"step_t.hlo.txt",
+              "inputs":[{"shape":[1088],"dtype":"float32"},
+                        {"shape":[4,7],"dtype":"int32"}],
+              "outputs":[{"shape":[9],"dtype":"float32"}]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let root = json::parse(SAMPLE).unwrap();
+        let entry =
+            parse_config("t", root.field("configs").unwrap().field("t").unwrap())
+                .unwrap();
+        assert_eq!(entry.config.vocab, 64);
+        assert_eq!(entry.params.len(), 2);
+        assert_eq!(entry.param("moe.wg").unwrap().offset, 1024);
+        let art = entry.artifact("step").unwrap();
+        assert_eq!(art.inputs[1].dtype, DType::I32);
+        assert_eq!(art.outputs[0].shape, vec![9]);
+        assert!(entry.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn slice_param() {
+        let root = json::parse(SAMPLE).unwrap();
+        let entry =
+            parse_config("t", root.field("configs").unwrap().field("t").unwrap())
+                .unwrap();
+        let flat = vec![0.5f32; 1088];
+        assert_eq!(entry.slice(&flat, "moe.wg").unwrap().len(), 64);
+        let short = vec![0.0f32; 10];
+        assert!(entry.slice(&short, "moe.wg").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime: the PJRT bridge between the rust coordinator and the AOT'd
+//! JAX/Pallas artifacts.
+//!
+//! Flow: `Manifest::load` (shapes + layout) -> `Engine::load` (HLO text ->
+//! compile, cached) -> `Executable::run` (host tensors in, host tensors
+//! out).  See /opt/xla-example/load_hlo for the reference wiring this
+//! module generalises.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Engine, Executable};
+pub use manifest::{ConfigEntry, Manifest, ModelConfig};
+pub use tensor::{DType, Host, Tensor, TensorF, TensorI};

@@ -1,0 +1,183 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+//!
+//! The runtime moves three dtypes across the PJRT boundary: f32 (params,
+//! activations, metrics), i32 (tokens, indices) and nothing else — the AOT
+//! pipeline guarantees it (see manifest "dtype" fields, checked at load).
+
+use anyhow::{bail, Context, Result};
+use xla::{ArrayElement, Literal, NativeType};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn new(shape: Vec<usize>, data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![T::default(); n] }
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major index for a 2-D tensor.
+    pub fn at2(&self, i: usize, j: usize) -> T {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[T] {
+        let cols = self.shape[self.rank() - 1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+}
+
+impl<T: NativeType + ArrayElement + Copy + Default> Tensor<T> {
+    pub fn to_literal(&self) -> Result<Literal> {
+        let lit = Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .context("literal is not an array (tuple leaked through?)")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<T>()?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+/// Dtype tag used by the manifest signature checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported artifact dtype '{other}'"),
+        }
+    }
+}
+
+/// A value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Host {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl Host {
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            Host::F32(t) => t.to_literal(),
+            Host::I32(t) => t.to_literal(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Host::F32(_) => DType::F32,
+            Host::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Host::F32(t) => &t.shape,
+            Host::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF> {
+        match self {
+            Host::F32(t) => Ok(t),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI> {
+        match self {
+            Host::I32(t) => Ok(t),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<TensorF> {
+        match self {
+            Host::F32(t) => Ok(t),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn from_literal(lit: &Literal, dtype: DType) -> Result<Self> {
+        Ok(match dtype {
+            DType::F32 => Host::F32(Tensor::from_literal(lit)?),
+            DType::I32 => Host::I32(Tensor::from_literal(lit)?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = TensorF::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.at2(1, 2), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        TensorF::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

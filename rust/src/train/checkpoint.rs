@@ -1,0 +1,124 @@
+//! Checkpoints: flat param/opt buffers with a small self-describing
+//! header.  Format (little-endian):
+//!
+//! ```text
+//!   magic  "MOECKPT1"            8 bytes
+//!   step   u64
+//!   name   u32 len + utf-8       config name (sanity-checked on load)
+//!   3 sections, each: u64 len + len * f32   (params, m, v)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::TensorF;
+use crate::train::trainer::TrainState;
+
+const MAGIC: &[u8; 8] = b"MOECKPT1";
+
+pub fn save(path: &Path, cfg_name: &str, state: &TrainState) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&state.step.to_le_bytes())?;
+    f.write_all(&(cfg_name.len() as u32).to_le_bytes())?;
+    f.write_all(cfg_name.as_bytes())?;
+    for t in [&state.params, &state.m, &state.v] {
+        f.write_all(&(t.data.len() as u64).to_le_bytes())?;
+        for v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path, expect_cfg: &str) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a moe checkpoint");
+    }
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let step = u64::from_le_bytes(b8);
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let name_len = u32::from_le_bytes(b4) as usize;
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let name = String::from_utf8(name).context("checkpoint name")?;
+    if name != expect_cfg {
+        bail!("checkpoint is for config '{name}', expected '{expect_cfg}'");
+    }
+    let read_section = |f: &mut dyn Read| -> Result<TensorF> {
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let len = u64::from_le_bytes(b8) as usize;
+        let mut bytes = vec![0u8; len * 4];
+        f.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(TensorF::new(vec![len], data))
+    };
+    let params = read_section(&mut f)?;
+    let m = read_section(&mut f)?;
+    let v = read_section(&mut f)?;
+    Ok(TrainState { params, m, v, step })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let state = TrainState {
+            params: TensorF::new(vec![5], vec![1.0, -2.0, 3.5, 0.0, 9.0]),
+            m: TensorF::new(vec![2], vec![0.1, 0.2]),
+            v: TensorF::new(vec![3], vec![7.0, 8.0, 9.0]),
+            step: 42,
+        };
+        save(&path, "cfg-x", &state).unwrap();
+        let back = load(&path, "cfg-x").unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params.data, state.params.data);
+        assert_eq!(back.m.data, state.m.data);
+        assert_eq!(back.v.data, state.v.data);
+    }
+
+    #[test]
+    fn wrong_config_rejected() {
+        let dir = std::env::temp_dir().join("moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        let state = TrainState {
+            params: TensorF::zeros(vec![1]),
+            m: TensorF::zeros(vec![1]),
+            v: TensorF::zeros(vec![1]),
+            step: 0,
+        };
+        save(&path, "cfg-a", &state).unwrap();
+        assert!(load(&path, "cfg-b").is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let dir = std::env::temp_dir().join("moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path, "x").is_err());
+    }
+}

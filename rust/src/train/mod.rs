@@ -1,0 +1,9 @@
+//! Training: the step loop over the AOT'd train-step artifact, evaluation,
+//! and checkpointing.  Python never runs here — the artifact carries the
+//! whole fwd/bwd/update graph and the trainer just round-trips the flat
+//! parameter and optimizer buffers.
+
+pub mod checkpoint;
+pub mod trainer;
+
+pub use trainer::{EvalResult, StepMetrics, TrainState, Trainer};

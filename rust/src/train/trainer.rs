@@ -1,0 +1,197 @@
+//! Trainer: drives `step_<cfg>.hlo.txt` (params, m, v, tokens, step) ->
+//! (params', m', v', metrics) and `eval_<cfg>.hlo.txt`.
+//!
+//! The LR schedule, optimizer, dropout and gating noise all live INSIDE
+//! the artifact (keyed by the step counter input), so the rust loop is
+//! pure data movement: batch in, metrics out.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::Batcher;
+use crate::metrics::perplexity;
+use crate::runtime::{ConfigEntry, Engine, Executable, Host, Manifest, TensorF, TensorI};
+
+/// Decoded metrics vector of one step (names from the manifest).
+#[derive(Clone, Debug)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub loss: f64,
+    pub nll: f64,
+    pub balance_loss: f64,
+    pub cv_importance: f64,
+    pub cv_load: f64,
+    pub max_over_mean_load: f64,
+    pub dropped_frac: f64,
+    pub grad_norm: f64,
+    pub lr: f64,
+    pub step_time: f64,
+}
+
+impl StepMetrics {
+    fn from_vec(step: u64, names: &[String], v: &[f32], dt: f64) -> Self {
+        let get = |n: &str| {
+            names
+                .iter()
+                .position(|x| x == n)
+                .map(|i| v[i] as f64)
+                .unwrap_or(f64::NAN)
+        };
+        StepMetrics {
+            step,
+            loss: get("loss"),
+            nll: get("nll"),
+            balance_loss: get("balance_loss"),
+            cv_importance: get("cv_importance"),
+            cv_load: get("cv_load"),
+            max_over_mean_load: get("max_over_mean_load"),
+            dropped_frac: get("dropped_frac"),
+            grad_norm: get("grad_norm"),
+            lr: get("lr"),
+            step_time: dt,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub nll_sum: f64,
+    pub tokens: f64,
+}
+
+impl EvalResult {
+    pub fn perplexity(&self) -> f64 {
+        perplexity(self.nll_sum, self.tokens)
+    }
+}
+
+/// Model + optimizer state living on the rust side between steps.
+pub struct TrainState {
+    pub params: TensorF,
+    pub m: TensorF,
+    pub v: TensorF,
+    pub step: u64,
+}
+
+pub struct Trainer {
+    pub entry: ConfigEntry,
+    step_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    init_exe: Arc<Executable>,
+    pub tokens_per_step: u64,
+}
+
+impl Trainer {
+    pub fn new(engine: &Engine, manifest: &Manifest, cfg: &str) -> Result<Self> {
+        let entry = manifest.config(cfg)?.clone();
+        Ok(Trainer {
+            step_exe: engine.load(manifest, cfg, "step")?,
+            eval_exe: engine.load(manifest, cfg, "eval")?,
+            init_exe: engine.load(manifest, cfg, "init")?,
+            tokens_per_step: (entry.config.batch * entry.config.seq_len) as u64,
+            entry,
+        })
+    }
+
+    /// Initialize parameters via the init artifact (gating nets start at
+    /// zero per Appendix A).
+    pub fn init(&self, seed: i32) -> Result<TrainState> {
+        let outs = self
+            .init_exe
+            .run(&[Host::I32(TensorI::scalar(seed))])
+            .context("running init artifact")?;
+        let mut it = outs.into_iter();
+        Ok(TrainState {
+            params: it.next().unwrap().into_f32()?,
+            m: it.next().unwrap().into_f32()?,
+            v: it.next().unwrap().into_f32()?,
+            step: 0,
+        })
+    }
+
+    /// One training step; consumes and replaces the state buffers.
+    pub fn step(&self, state: &mut TrainState, tokens: &TensorI)
+        -> Result<StepMetrics> {
+        let t0 = Instant::now();
+        let outs = self.step_exe.run(&[
+            Host::F32(std::mem::replace(&mut state.params, TensorF::zeros(vec![0]))),
+            Host::F32(std::mem::replace(&mut state.m, TensorF::zeros(vec![0]))),
+            Host::F32(std::mem::replace(&mut state.v, TensorF::zeros(vec![0]))),
+            Host::I32(tokens.clone()),
+            Host::I32(TensorI::scalar(state.step as i32)),
+        ])?;
+        let mut it = outs.into_iter();
+        state.params = it.next().unwrap().into_f32()?;
+        state.m = it.next().unwrap().into_f32()?;
+        state.v = it.next().unwrap().into_f32()?;
+        let metrics = it.next().unwrap().into_f32()?;
+        let sm = StepMetrics::from_vec(
+            state.step,
+            &self.entry.metric_names,
+            &metrics.data,
+            t0.elapsed().as_secs_f64(),
+        );
+        state.step += 1;
+        Ok(sm)
+    }
+
+    /// Run `n_batches` of held-out data through the eval artifact.
+    pub fn evaluate(&self, state: &TrainState, batcher: &mut Batcher,
+                    n_batches: usize) -> Result<EvalResult> {
+        let mut total = EvalResult { nll_sum: 0.0, tokens: 0.0 };
+        let params = Host::F32(state.params.clone());
+        for _ in 0..n_batches {
+            let tokens = batcher.next_batch();
+            let outs = self.eval_exe.run(&[params.clone(), Host::I32(tokens)])?;
+            let v = outs[0].as_f32()?;
+            total.nll_sum += v.data[0] as f64;
+            total.tokens += v.data[1] as f64;
+        }
+        Ok(total)
+    }
+
+    /// Evaluate over explicit token tensors (translation path).
+    pub fn evaluate_tokens(&self, state: &TrainState, batches: &[TensorI])
+        -> Result<EvalResult> {
+        let mut total = EvalResult { nll_sum: 0.0, tokens: 0.0 };
+        let params = Host::F32(state.params.clone());
+        for tokens in batches {
+            let outs =
+                self.eval_exe.run(&[params.clone(), Host::I32(tokens.clone())])?;
+            let v = outs[0].as_f32()?;
+            total.nll_sum += v.data[0] as f64;
+            total.tokens += v.data[1] as f64;
+        }
+        Ok(total)
+    }
+
+    /// Train for `steps` steps from the batcher, returning per-step
+    /// metrics; `log_every` prints progress lines.
+    pub fn run(&self, state: &mut TrainState, batcher: &mut Batcher,
+               steps: u64, log_every: u64) -> Result<Vec<StepMetrics>> {
+        let mut out = Vec::with_capacity(steps as usize);
+        for i in 0..steps {
+            let tokens = batcher.next_batch();
+            let m = self.step(state, &tokens)?;
+            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
+                eprintln!(
+                    "[{}] step {:>5} loss {:.4} nll {:.4} ppl {:.1} \
+                     cv_imp {:.3} cv_load {:.3} drop {:.3} ({:.0} tok/s)",
+                    self.entry.config.name,
+                    m.step,
+                    m.loss,
+                    m.nll,
+                    m.nll.exp(),
+                    m.cv_importance,
+                    m.cv_load,
+                    m.dropped_frac,
+                    self.tokens_per_step as f64 / m.step_time
+                );
+            }
+            out.push(m);
+        }
+        Ok(out)
+    }
+}

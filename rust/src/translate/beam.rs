@@ -1,0 +1,205 @@
+//! Beam search over the incremental decode artifact.
+//!
+//! The decode artifact has a fixed batch dimension (`decode_batch` in the
+//! manifest); beam slots ride in that dimension, so a beam of width
+//! w <= decode_batch costs one artifact call per output token, same as
+//! the paper's GNMT-style batched beam.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{ConfigEntry, Executable, Host, TensorF, TensorI};
+
+#[derive(Clone, Debug)]
+pub struct Hypothesis {
+    pub tokens: Vec<i32>,
+    pub log_prob: f64,
+    pub finished: bool,
+}
+
+impl Hypothesis {
+    /// Length-normalised score (GNMT alpha = 0.6 simplified to 1.0/len).
+    pub fn score(&self) -> f64 {
+        self.log_prob / self.tokens.len().max(1) as f64
+    }
+}
+
+pub struct BeamDecoder {
+    exe: Arc<Executable>,
+    pub batch: usize,
+    n_lstm: usize,
+    d_h: usize,
+    d_out: usize,
+    vocab: usize,
+}
+
+struct State {
+    cs: TensorF,
+    hs: TensorF,
+}
+
+impl BeamDecoder {
+    pub fn new(exe: Arc<Executable>, entry: &ConfigEntry) -> Self {
+        let c = &entry.config;
+        BeamDecoder {
+            exe,
+            batch: entry.decode_batch,
+            n_lstm: entry.n_lstm,
+            d_h: c.lstm_hidden,
+            d_out: if c.lstm_proj > 0 { c.lstm_proj } else { c.lstm_hidden },
+            vocab: c.vocab,
+        }
+    }
+
+    fn zero_state(&self) -> State {
+        State {
+            cs: TensorF::zeros(vec![self.n_lstm, self.batch, self.d_h]),
+            hs: TensorF::zeros(vec![self.n_lstm, self.batch, self.d_out]),
+        }
+    }
+
+    /// One artifact call: tokens (batch,) -> (logits (batch, vocab)).
+    fn step(&self, params: &Host, st: &mut State, tokens: &[i32])
+        -> Result<TensorF> {
+        let outs = self.exe.run(&[
+            params.clone(),
+            Host::F32(std::mem::replace(&mut st.cs, TensorF::zeros(vec![0]))),
+            Host::F32(std::mem::replace(&mut st.hs, TensorF::zeros(vec![0]))),
+            Host::I32(TensorI::new(vec![self.batch], tokens.to_vec())),
+        ])?;
+        let mut it = outs.into_iter();
+        let logits = it.next().unwrap().into_f32()?;
+        st.cs = it.next().unwrap().into_f32()?;
+        st.hs = it.next().unwrap().into_f32()?;
+        Ok(logits)
+    }
+
+    /// Permute beam slots of the recurrent state: slot i <- old slot
+    /// `perm[i]`.
+    fn reorder(&self, st: &mut State, perm: &[usize]) {
+        for t in [&mut st.cs, &mut st.hs] {
+            let (l, b) = (t.shape[0], t.shape[1]);
+            let d = t.shape[2];
+            let old = t.data.clone();
+            for layer in 0..l {
+                for (slot, &src) in perm.iter().enumerate() {
+                    let dst_off = (layer * b + slot) * d;
+                    let src_off = (layer * b + src) * d;
+                    t.data[dst_off..dst_off + d]
+                        .copy_from_slice(&old[src_off..src_off + d]);
+                }
+            }
+        }
+    }
+
+    /// Decode continuations of `prefix`, returning up to `beam` finished
+    /// hypotheses (best first).  `eos` terminates a hypothesis.
+    pub fn decode(&self, params: &TensorF, prefix: &[i32], beam: usize,
+                  max_len: usize, eos: i32) -> Result<Vec<Hypothesis>> {
+        if beam == 0 || beam > self.batch {
+            bail!("beam width must be in 1..={}", self.batch);
+        }
+        if prefix.is_empty() {
+            bail!("prefix must be non-empty");
+        }
+        let params = Host::F32(params.clone());
+        let mut st = self.zero_state();
+        // feed the prefix; all slots identical
+        let mut logits = TensorF::zeros(vec![self.batch, self.vocab]);
+        for &tok in prefix {
+            logits = self.step(&params, &mut st, &vec![tok; self.batch])?;
+        }
+        let mut hyps: Vec<Hypothesis> = vec![
+            Hypothesis { tokens: vec![], log_prob: 0.0, finished: false };
+            beam
+        ];
+        let mut first = true;
+        let mut done: Vec<Hypothesis> = Vec::new();
+        for _ in 0..max_len {
+            // expand: candidates (slot, token, score)
+            let mut cands: Vec<(usize, i32, f64)> = Vec::new();
+            let active: Vec<usize> =
+                (0..hyps.len()).filter(|&i| !hyps[i].finished).collect();
+            if active.is_empty() {
+                break;
+            }
+            for &slot in &active {
+                let row = logits.row(slot);
+                let lse = log_sum_exp(row);
+                // on the first expansion only slot 0 is meaningful (all
+                // slots identical) — expanding all would duplicate
+                if first && slot > 0 {
+                    continue;
+                }
+                for (tok, &lg) in row.iter().enumerate() {
+                    cands.push((
+                        slot,
+                        tok as i32,
+                        hyps[slot].log_prob + (lg as f64 - lse),
+                    ));
+                }
+            }
+            first = false;
+            cands.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            cands.truncate(beam);
+            // rebuild beam + state permutation
+            let mut perm = Vec::with_capacity(self.batch);
+            let mut new_hyps = Vec::with_capacity(beam);
+            let mut next_tokens = Vec::with_capacity(self.batch);
+            for &(slot, tok, lp) in &cands {
+                let mut h = hyps[slot].clone();
+                h.tokens.push(tok);
+                h.log_prob = lp;
+                if tok == eos || h.tokens.len() >= max_len {
+                    h.finished = true;
+                    done.push(h.clone());
+                }
+                perm.push(slot);
+                next_tokens.push(tok);
+                new_hyps.push(h);
+            }
+            while perm.len() < self.batch {
+                perm.push(0);
+                next_tokens.push(eos);
+            }
+            self.reorder(&mut st, &perm);
+            hyps = new_hyps;
+            if hyps.iter().all(|h| h.finished) {
+                break;
+            }
+            logits = self.step(&params, &mut st, &next_tokens)?;
+        }
+        for h in hyps {
+            if !h.finished {
+                done.push(h);
+            }
+        }
+        done.sort_by(|a, b| b.score().partial_cmp(&a.score()).unwrap());
+        done.truncate(beam);
+        Ok(done)
+    }
+}
+
+fn log_sum_exp(v: &[f32]) -> f64 {
+    let m = v.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    m + v.iter().map(|&x| ((x as f64) - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_sum_exp_stable() {
+        let v = vec![1000.0f32, 1000.0];
+        let l = log_sum_exp(&v);
+        assert!((l - (1000.0 + 2f64.ln())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hypothesis_score_normalises() {
+        let h = Hypothesis { tokens: vec![1, 2], log_prob: -2.0, finished: true };
+        assert!((h.score() + 1.0).abs() < 1e-9);
+    }
+}

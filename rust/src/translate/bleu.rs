@@ -1,0 +1,100 @@
+//! BLEU (Papineni et al. 2002) with the same conventions as the
+//! `multi-bleu.pl` script the paper reports (§E Metrics): corpus-level,
+//! n-grams up to 4, clipped counts, geometric mean with floor smoothing
+//! off, and the brevity penalty.
+
+use std::collections::HashMap;
+
+fn ngram_counts(tokens: &[i32], n: usize) -> HashMap<&[i32], u64> {
+    let mut m: HashMap<&[i32], u64> = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU over (hypothesis, reference) pairs, in [0, 100].
+pub fn bleu(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    const N: usize = 4;
+    let mut matched = [0u64; N];
+    let mut total = [0u64; N];
+    let mut hyp_len = 0u64;
+    let mut ref_len = 0u64;
+    for (hyp, re) in pairs {
+        hyp_len += hyp.len() as u64;
+        ref_len += re.len() as u64;
+        for n in 1..=N {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(re, n);
+            for (g, c) in &h {
+                let rc = r.get(g).copied().unwrap_or(0);
+                matched[n - 1] += (*c).min(rc);
+            }
+            total[n - 1] += hyp.len().saturating_sub(n - 1) as u64;
+        }
+    }
+    let mut log_p = 0f64;
+    for n in 0..N {
+        if matched[n] == 0 || total[n] == 0 {
+            return 0.0;
+        }
+        log_p += (matched[n] as f64 / total[n] as f64).ln();
+    }
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len.max(1) as f64).exp()
+    };
+    100.0 * bp * (log_p / N as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let pairs = vec![(vec![1, 2, 3, 4, 5], vec![1, 2, 3, 4, 5])];
+        assert!((bleu(&pairs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_0() {
+        let pairs = vec![(vec![1, 2, 3, 4, 5], vec![6, 7, 8, 9, 10])];
+        assert_eq!(bleu(&pairs), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_in_between() {
+        let pairs = vec![(vec![1, 2, 3, 4, 9], vec![1, 2, 3, 4, 5])];
+        let b = bleu(&pairs);
+        assert!(b > 0.0 && b < 100.0, "bleu {b}");
+    }
+
+    #[test]
+    fn brevity_penalty_punishes_short_hypotheses() {
+        // same matched prefix, shorter hypothesis -> lower BLEU
+        let long = vec![(vec![1, 2, 3, 4, 5, 6], vec![1, 2, 3, 4, 5, 6])];
+        let short = vec![(vec![1, 2, 3, 4], vec![1, 2, 3, 4, 5, 6])];
+        assert!(bleu(&short) < bleu(&long));
+    }
+
+    #[test]
+    fn clipping_limits_repeats() {
+        // "the the the ..." style inflation must not score
+        let pairs = vec![(vec![7, 7, 7, 7, 7, 7], vec![7, 1, 2, 3, 4, 5])];
+        assert_eq!(bleu(&pairs), 0.0); // no 2-gram match -> 0 by convention
+    }
+
+    #[test]
+    fn corpus_level_pools_counts() {
+        let a = vec![
+            (vec![1, 2, 3, 4], vec![1, 2, 3, 4]),
+            (vec![9, 9, 9, 9], vec![5, 6, 7, 8]),
+        ];
+        let b = bleu(&a);
+        assert!(b > 0.0 && b < 100.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Translation substrate: beam-search decoding over the AOT decode
+//! artifact and BLEU scoring (multi-bleu.pl semantics), backing the
+//! Table 2–5 analogues.
+
+pub mod beam;
+pub mod bleu;
+
+pub use beam::{BeamDecoder, Hypothesis};
+pub use bleu::bleu;

@@ -1,0 +1,107 @@
+//! Micro benchmark harness (criterion is not in the offline crate set).
+//!
+//! Warms up, then runs timed iterations until a wall-clock budget or an
+//! iteration cap is reached, and reports mean / p50 / p95 plus derived
+//! throughput.  Used by the `benches/*.rs` targets (harness = false).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>8} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        );
+    }
+
+    pub fn report_throughput(&self, unit: &str, per_iter: f64) {
+        let rate = per_iter / self.mean.as_secs_f64();
+        println!(
+            "{:<44} mean {:>12?}  {:>12.1} {unit}/s",
+            self.name, self.mean, rate
+        );
+    }
+}
+
+pub struct Bencher {
+    budget: Duration,
+    max_iters: usize,
+    warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget: Duration::from_secs(3), max_iters: 1000, warmup: 2 }
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration, max_iters: usize, warmup: usize) -> Self {
+        Bencher { budget, max_iters, warmup }
+    }
+
+    pub fn quick() -> Self {
+        Bencher { budget: Duration::from_secs(1), max_iters: 50, warmup: 1 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let p = |q: f64| samples[((n - 1) as f64 * q) as usize];
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            p50: p(0.5),
+            p95: p(0.95),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept for call-site clarity).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::new(Duration::from_millis(50), 20, 1);
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.p95 >= r.p50);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities.
+//!
+//! This repo builds fully offline against a vendored crate set that only
+//! contains `xla` and `anyhow`, so the usual ecosystem crates are
+//! re-implemented here at the scale we need: a JSON parser for the AOT
+//! manifest ([`json`]), a deterministic PRNG with normal sampling
+//! ([`rng`]), a micro benchmark harness ([`bench`]) and a tiny
+//! property-testing helper ([`prop`]).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,62 @@
+//! Tiny property-testing helper (proptest is not in the offline crate
+//! set).  Runs a property over `CASES` randomized inputs derived from a
+//! fixed seed; on failure it reports the case seed so the exact input can
+//! be replayed with `case_rng(seed)`.
+
+use super::rng::Rng;
+
+pub const CASES: u64 = 64;
+
+/// Run `prop` over `CASES` seeded RNGs; panics with the failing seed.
+pub fn forall<F: FnMut(&mut Rng)>(name: &str, mut prop: F) {
+    for case in 0..CASES {
+        let mut rng = case_rng(case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case seed {case}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+pub fn case_rng(case: u64) -> Rng {
+    Rng::new(0xda7a_5eed ^ (case.wrapping_mul(0x9e37_79b9_7f4a_7c15)))
+}
+
+/// Random dimension helpers for property tests.
+pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+pub fn vec_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall("counter", |_| count += 1);
+        assert_eq!(count, CASES);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("fails", |rng| assert!(rng.uniform() < 0.5));
+    }
+
+    #[test]
+    fn dim_bounds() {
+        let mut rng = case_rng(0);
+        for _ in 0..100 {
+            let d = dim(&mut rng, 3, 9);
+            assert!((3..=9).contains(&d));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! End-to-end integration over the runtime + trainer + coordinator.
+//! Requires `make artifacts`.
+
+use moe::data::synthetic::{CorpusSpec, TopicCorpus};
+use moe::data::Batcher;
+use moe::runtime::{Engine, Manifest};
+use moe::train::{checkpoint, Trainer};
+
+fn setup() -> (Engine, Manifest) {
+    let engine = Engine::new().expect("PJRT CPU client");
+    let manifest = Manifest::load("artifacts")
+        .expect("artifacts/manifest.json missing — run `make artifacts`");
+    (engine, manifest)
+}
+
+#[test]
+fn training_reduces_loss_flat_moe() {
+    let (engine, manifest) = setup();
+    let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
+    let c = trainer.entry.config.clone();
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab: c.vocab,
+        n_topics: 4,
+        branch: 3,
+        mean_len: 8,
+        seed: 0,
+    });
+    let mut batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+    let mut state = trainer.init(0).unwrap();
+    let metrics = trainer.run(&mut state, &mut batcher, 80, 0).unwrap();
+    let first10: f64 =
+        metrics[..10].iter().map(|m| m.nll).sum::<f64>() / 10.0;
+    let last10: f64 =
+        metrics[70..].iter().map(|m| m.nll).sum::<f64>() / 10.0;
+    assert!(
+        last10 < first10 - 0.15,
+        "nll should fall: first10={first10:.3} last10={last10:.3}"
+    );
+    // all metrics finite throughout
+    for m in &metrics {
+        assert!(m.loss.is_finite() && m.grad_norm.is_finite());
+    }
+}
+
+#[test]
+fn training_reduces_loss_hierarchical_moe() {
+    let (engine, manifest) = setup();
+    let trainer = Trainer::new(&engine, &manifest, "test-hier").unwrap();
+    let c = trainer.entry.config.clone();
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab: c.vocab,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+    let mut state = trainer.init(0).unwrap();
+    let metrics = trainer.run(&mut state, &mut batcher, 60, 0).unwrap();
+    assert!(metrics.last().unwrap().nll < metrics[0].nll);
+}
+
+#[test]
+fn eval_perplexity_beats_uniform_after_training() {
+    let (engine, manifest) = setup();
+    let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
+    let c = trainer.entry.config.clone();
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab: c.vocab,
+        n_topics: 2,
+        branch: 2,
+        mean_len: 8,
+        seed: 1,
+    });
+    let mut batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+    let mut state = trainer.init(0).unwrap();
+    let untrained = {
+        let mut t = Batcher::new(&corpus, c.batch, c.seq_len, 1 << 32);
+        trainer.evaluate(&state, &mut t, 10).unwrap().perplexity()
+    };
+    trainer.run(&mut state, &mut batcher, 120, 0).unwrap();
+    let mut test = Batcher::new(&corpus, c.batch, c.seq_len, 1 << 32);
+    let ppl = trainer.evaluate(&state, &mut test, 10).unwrap().perplexity();
+    // the test-tiny model is deliberately miniature (d=16), so demand a
+    // clear-but-modest margin over both uniform and the untrained net
+    assert!(
+        ppl < c.vocab as f64 * 0.85,
+        "trained ppl {ppl:.1} should beat uniform {}",
+        c.vocab
+    );
+    assert!(
+        ppl < untrained * 0.85,
+        "trained ppl {ppl:.1} should beat untrained {untrained:.1}"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let (engine, manifest) = setup();
+    let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
+    let c = trainer.entry.config.clone();
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab: c.vocab,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+    let mut state = trainer.init(0).unwrap();
+    trainer.run(&mut state, &mut batcher, 5, 0).unwrap();
+    let path = std::env::temp_dir().join("moe_integ.ckpt");
+    checkpoint::save(&path, "test-tiny", &state).unwrap();
+    let restored = checkpoint::load(&path, "test-tiny").unwrap();
+    assert_eq!(restored.step, state.step);
+    // evals agree exactly
+    let mut b1 = Batcher::new(&corpus, c.batch, c.seq_len, 9);
+    let mut b2 = Batcher::new(&corpus, c.batch, c.seq_len, 9);
+    let e1 = trainer.evaluate(&state, &mut b1, 2).unwrap();
+    let e2 = trainer.evaluate(&restored, &mut b2, 2).unwrap();
+    assert_eq!(e1.nll_sum, e2.nll_sum);
+}
+
+#[test]
+fn balance_losses_keep_experts_utilised() {
+    // after training with w_importance = w_load = 0.1, no expert should be
+    // starved (the §4 failure mode)
+    let (engine, manifest) = setup();
+    let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
+    let c = trainer.entry.config.clone();
+    let corpus = TopicCorpus::new(CorpusSpec {
+        vocab: c.vocab,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(&corpus, c.batch, c.seq_len, 0);
+    let mut state = trainer.init(0).unwrap();
+    let metrics = trainer.run(&mut state, &mut batcher, 60, 0).unwrap();
+    let tail: Vec<_> = metrics[40..].iter().collect();
+    let cv_imp =
+        tail.iter().map(|m| m.cv_importance).sum::<f64>() / tail.len() as f64;
+    let mm = tail.iter().map(|m| m.max_over_mean_load).sum::<f64>()
+        / tail.len() as f64;
+    assert!(cv_imp < 0.5, "CV^2(importance) stayed high: {cv_imp:.3}");
+    assert!(mm < 2.5, "max/mean load stayed high: {mm:.2}");
+}
+
+#[test]
+fn decode_artifact_produces_finite_logits() {
+    use moe::translate::BeamDecoder;
+    let (engine, manifest) = setup();
+    let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
+    let state = trainer.init(0).unwrap();
+    let decoder = BeamDecoder::new(
+        engine.load(&manifest, "test-tiny", "decode").unwrap(),
+        &trainer.entry,
+    );
+    let hyps = decoder
+        .decode(&state.params, &[0, 5, 9], 4, 8, 1)
+        .unwrap();
+    assert!(!hyps.is_empty());
+    for h in &hyps {
+        assert!(h.log_prob.is_finite());
+        assert!(h.tokens.len() <= 8);
+    }
+    // beam returns distinct hypotheses sorted by score
+    for w in hyps.windows(2) {
+        assert!(w[0].score() >= w[1].score());
+    }
+}
+
+#[test]
+fn manifest_covers_every_expected_artifact_kind() {
+    let (_, manifest) = setup();
+    let entry = manifest.config("test-tiny").unwrap();
+    for kind in ["init", "step", "eval", "decode", "gating", "expert"] {
+        assert!(
+            entry.artifacts.contains_key(kind),
+            "missing artifact kind {kind}"
+        );
+    }
+    // hierarchical configs: no flat gating artifact, but expert is there
+    let h = manifest.config("test-hier").unwrap();
+    assert!(!h.artifacts.contains_key("gating"));
+    assert!(h.artifacts.contains_key("expert"));
+}
+
+#[test]
+fn shape_mismatch_fails_loudly() {
+    let (engine, manifest) = setup();
+    let exe = engine.load(&manifest, "test-tiny", "eval").unwrap();
+    let bad = moe::runtime::Host::F32(moe::runtime::TensorF::zeros(vec![3]));
+    let err = exe.run(&[bad.clone(), bad]).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "unexpected error: {err}");
+}

@@ -1,0 +1,253 @@
+//! Cross-language parity: the rust mirrors must agree with the AOT'd
+//! JAX/Pallas artifacts on identical inputs.  This is the proof that the
+//! distributed L3 path (rust gating + dispatch + expert artifacts)
+//! computes the same MoE as the monolithic L2 graph.
+//!
+//! Requires `make artifacts` (uses the test-tiny config).
+
+use moe::coordinator::router::{Router, RouterBackend};
+use moe::coordinator::scheduler::ExpertWeights;
+use moe::runtime::{Engine, Host, Manifest, TensorF};
+use moe::util::rng::Rng;
+
+fn setup() -> (Engine, Manifest) {
+    let engine = Engine::new().expect("PJRT CPU client");
+    let manifest = Manifest::load("artifacts")
+        .expect("artifacts/manifest.json missing — run `make artifacts`");
+    (engine, manifest)
+}
+
+fn perturbed_gates(d: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let wg = (0..d * n).map(|_| rng.normal_f32() * 0.5).collect();
+    let wn = (0..d * n).map(|_| rng.normal_f32() * 0.3).collect();
+    (wg, wn)
+}
+
+#[test]
+fn gating_artifact_matches_rust_mirror_deterministic() {
+    let (engine, manifest) = setup();
+    let entry = manifest.config("test-tiny").unwrap().clone();
+    let c = entry.config.clone();
+    let (wg, wn) = perturbed_gates(c.d_model, c.n_experts, 3);
+
+    let art = Router {
+        backend: RouterBackend::Artifact(
+            engine.load(&manifest, "test-tiny", "gating").unwrap(),
+        ),
+        n_experts: c.n_experts,
+        k: c.k,
+        groups: 0,
+        d_model: c.d_model,
+        w_g: wg.clone(),
+        w_noise: Some(wn.clone()),
+        w_g_sec: None,
+        w_n_sec: None,
+    };
+    let native = Router::flat_native(c.d_model, c.n_experts, c.k, wg,
+                                     Some(wn));
+    let mut rng = Rng::new(11);
+    let b = c.batch * c.seq_len;
+    let x = TensorF::new(
+        vec![b, c.d_model],
+        (0..b * c.d_model).map(|_| rng.normal_f32()).collect(),
+    );
+    // deterministic comparison: no gate noise on either side
+    let da = art.route(&x, None).unwrap();
+    let dn = native.route(&x, None).unwrap();
+    assert_eq!(da.per_token.len(), dn.per_token.len());
+    for (ta, tn) in da.per_token.iter().zip(dn.per_token.iter()) {
+        let mut ea = ta.experts.clone();
+        let mut en = tn.experts.clone();
+        ea.sort();
+        en.sort();
+        assert_eq!(ea, en, "expert selection differs");
+        let mut wa: Vec<(usize, f32)> =
+            ta.experts.iter().cloned().zip(ta.weights.iter().cloned()).collect();
+        let mut wn_: Vec<(usize, f32)> =
+            tn.experts.iter().cloned().zip(tn.weights.iter().cloned()).collect();
+        wa.sort_by_key(|p| p.0);
+        wn_.sort_by_key(|p| p.0);
+        for ((_, a), (_, b)) in wa.iter().zip(wn_.iter()) {
+            assert!((a - b).abs() < 1e-4, "gate weight {a} vs {b}");
+        }
+    }
+    // importance agrees
+    for (a, b) in da.importance.iter().zip(dn.importance.iter()) {
+        assert!((a - b).abs() < 1e-3, "importance {a} vs {b}");
+    }
+}
+
+#[test]
+fn expert_artifact_matches_rust_ffn() {
+    let (engine, manifest) = setup();
+    let entry = manifest.config("test-tiny").unwrap().clone();
+    let c = entry.config.clone();
+    let exe = engine.load(&manifest, "test-tiny", "expert").unwrap();
+    let mut rng = Rng::new(5);
+    let (d, h, cap) = (c.d_model, c.expert_hidden, c.capacity);
+    let w = ExpertWeights {
+        w_in: (0..d * h).map(|_| rng.normal_f32() * 0.3).collect(),
+        w_out: (0..h * d).map(|_| rng.normal_f32() * 0.3).collect(),
+        d_model: d,
+        hidden: h,
+    };
+    let x = TensorF::new(
+        vec![cap, d],
+        (0..cap * d).map(|_| rng.normal_f32()).collect(),
+    );
+    let outs = exe
+        .run(&[
+            Host::F32(TensorF::new(vec![d, h], w.w_in.clone())),
+            Host::F32(TensorF::new(vec![h, d], w.w_out.clone())),
+            Host::F32(x.clone()),
+        ])
+        .unwrap();
+    let y_art = outs[0].as_f32().unwrap();
+    let y_rust = w.forward(&x);
+    assert_eq!(y_art.shape, y_rust.shape);
+    for (a, b) in y_art.data.iter().zip(y_rust.data.iter()) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn distributed_moe_matches_monolithic_semantics() {
+    // route + dispatch + expert artifact + combine == sum_i g_i E_i(x)
+    // computed naively with the rust FFN, on the same deterministic gates.
+    use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
+    use moe::coordinator::Dispatcher;
+
+    let (engine, manifest) = setup();
+    let entry = manifest.config("test-tiny").unwrap().clone();
+    let c = entry.config.clone();
+    let mut rng = Rng::new(21);
+    let (wg, wn) = perturbed_gates(c.d_model, c.n_experts, 8);
+    let router = Router::flat_native(c.d_model, c.n_experts, c.k, wg,
+                                     Some(wn));
+    let weights: Vec<ExpertWeights> = (0..c.n_experts)
+        .map(|_| ExpertWeights {
+            w_in: (0..c.d_model * c.expert_hidden)
+                .map(|_| rng.normal_f32() * 0.3)
+                .collect(),
+            w_out: (0..c.expert_hidden * c.d_model)
+                .map(|_| rng.normal_f32() * 0.3)
+                .collect(),
+            d_model: c.d_model,
+            hidden: c.expert_hidden,
+        })
+        .collect();
+    let rows = 10;
+    let x = TensorF::new(
+        vec![rows, c.d_model],
+        (0..rows * c.d_model).map(|_| rng.normal_f32()).collect(),
+    );
+    let dec = router.route(&x, None).unwrap();
+    let plan = Dispatcher::plan(std::slice::from_ref(&dec), c.n_experts);
+    let sched = Scheduler {
+        layout: ShardLayout::new(2, c.n_experts),
+        backend: ExpertBackend::Artifact {
+            exe: engine.load(&manifest, "test-tiny", "expert").unwrap(),
+            capacity: c.capacity,
+        },
+    };
+    let (outs, _) = sched.execute(&plan, &[&x], &weights).unwrap();
+    for (row, tok) in dec.per_token.iter().enumerate() {
+        let xt = TensorF::new(vec![1, c.d_model], x.row(row).to_vec());
+        let mut want = vec![0f32; c.d_model];
+        for (e, g) in tok.experts.iter().zip(tok.weights.iter()) {
+            for (w, v) in want.iter_mut().zip(weights[*e].forward(&xt).data.iter()) {
+                *w += g * v;
+            }
+        }
+        for (a, b) in outs[0].row(row).iter().zip(want.iter()) {
+            assert!((a - b).abs() < 2e-3, "row {row}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn waves_handle_over_capacity_batches() {
+    // a batch bigger than the artifact capacity must be processed in
+    // multiple waves with identical numerics
+    use moe::coordinator::scheduler::ExpertBackend;
+    let (engine, manifest) = setup();
+    let entry = manifest.config("test-tiny").unwrap().clone();
+    let c = entry.config.clone();
+    let exe = engine.load(&manifest, "test-tiny", "expert").unwrap();
+    let mut rng = Rng::new(2);
+    let (d, h) = (c.d_model, c.expert_hidden);
+    let w = ExpertWeights {
+        w_in: (0..d * h).map(|_| rng.normal_f32() * 0.2).collect(),
+        w_out: (0..h * d).map(|_| rng.normal_f32() * 0.2).collect(),
+        d_model: d,
+        hidden: h,
+    };
+    let len = c.capacity * 2 + 3;
+    let x = TensorF::new(
+        vec![len, d],
+        (0..len * d).map(|_| rng.normal_f32()).collect(),
+    );
+    // wave execution through the scheduler internals: emulate via a
+    // single-expert plan
+    use moe::coordinator::router::RoutingDecision;
+    use moe::coordinator::scheduler::{Scheduler, ShardLayout};
+    use moe::coordinator::Dispatcher;
+    use moe::gating::noisy_topk::GateVec;
+    let dec = RoutingDecision {
+        per_token: (0..len)
+            .map(|_| GateVec { experts: vec![0], weights: vec![1.0] })
+            .collect(),
+        importance: vec![len as f32],
+        load: vec![len as f32],
+    };
+    let plan = Dispatcher::plan(std::slice::from_ref(&dec), 1);
+    let sched = Scheduler {
+        layout: ShardLayout::new(1, 1),
+        backend: ExpertBackend::Artifact { exe, capacity: c.capacity },
+    };
+    let (outs, stats) = sched
+        .execute(&plan, &[&x], std::slice::from_ref(&w))
+        .unwrap();
+    assert_eq!(stats.waves, 3, "expected 3 waves for 2*cap+3 tokens");
+    let want = w.forward(&x);
+    for (a, b) in outs[0].data.iter().zip(want.data.iter()) {
+        assert!((a - b).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn eval_artifact_is_deterministic() {
+    let (engine, manifest) = setup();
+    let trainer =
+        moe::train::Trainer::new(&engine, &manifest, "test-tiny").unwrap();
+    let state = trainer.init(7).unwrap();
+    let c = trainer.entry.config.clone();
+    let corpus = moe::data::synthetic::TopicCorpus::new(
+        moe::data::synthetic::CorpusSpec { vocab: c.vocab, ..Default::default() },
+    );
+    let mut b1 = moe::data::Batcher::new(&corpus, c.batch, c.seq_len, 3);
+    let mut b2 = moe::data::Batcher::new(&corpus, c.batch, c.seq_len, 3);
+    let e1 = trainer.evaluate(&state, &mut b1, 3).unwrap();
+    let e2 = trainer.evaluate(&state, &mut b2, 3).unwrap();
+    assert_eq!(e1.nll_sum, e2.nll_sum);
+    assert_eq!(e1.tokens, e2.tokens);
+}
+
+#[test]
+fn init_is_seed_dependent_but_reproducible() {
+    let (engine, manifest) = setup();
+    let trainer =
+        moe::train::Trainer::new(&engine, &manifest, "test-tiny").unwrap();
+    let a = trainer.init(0).unwrap();
+    let b = trainer.init(0).unwrap();
+    let c = trainer.init(1).unwrap();
+    assert_eq!(a.params.data, b.params.data);
+    assert_ne!(a.params.data, c.params.data);
+    // gating nets start at zero (Appendix A initial-balance requirement)
+    let entry = manifest.config("test-tiny").unwrap();
+    let wg = entry.slice(&a.params.data, "moe.wg").unwrap();
+    assert!(wg.iter().all(|&v| v == 0.0));
+    let wn = entry.slice(&a.params.data, "moe.wn").unwrap();
+    assert!(wn.iter().all(|&v| v == 0.0));
+}
