@@ -4,22 +4,12 @@
 //! counts and device counts.
 
 use moe::coordinator::router::Router;
-use moe::coordinator::scheduler::{ExpertBackend, ExpertWeights, Scheduler, ShardLayout};
+use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
 use moe::coordinator::Dispatcher;
+use moe::harness::workload::{phase_line, SyntheticMoe};
 use moe::runtime::TensorF;
 use moe::util::bench::{black_box, Bencher};
 use moe::util::rng::Rng;
-
-fn weights(n: usize, d: usize, h: usize, rng: &mut Rng) -> Vec<ExpertWeights> {
-    (0..n)
-        .map(|_| ExpertWeights {
-            w_in: (0..d * h).map(|_| rng.normal_f32() * 0.2).collect(),
-            w_out: (0..h * d).map(|_| rng.normal_f32() * 0.2).collect(),
-            d_model: d,
-            hidden: h,
-        })
-        .collect()
-}
 
 fn main() {
     let b = Bencher::default();
@@ -65,28 +55,23 @@ fn main() {
 
     println!("\n== full native MoE step vs devices (n=64, k=4) ==");
     let n = 64;
-    let mut rng = Rng::new(3);
-    let w = weights(n, d, 4 * d, &mut rng);
-    let router = Router::flat_native(
-        d, n, 4,
-        (0..d * n).map(|_| rng.normal_f32() * 0.4).collect(),
-        Some((0..d * n).map(|_| rng.normal_f32() * 0.4).collect()),
-    );
-    let x = TensorF::new(
-        vec![tokens, d],
-        (0..tokens * d).map(|_| rng.normal_f32()).collect(),
-    );
-    let mut nrng = rng.fold_in(9);
-    let dec = router.route(&x, Some(&mut nrng)).unwrap();
-    let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
+    let work = SyntheticMoe::build(3, d, 4 * d, n, 4, 1, tokens).unwrap();
+    let refs = work.refs();
     for devices in [1, 2, 4, 8] {
-        let sched = Scheduler {
-            layout: ShardLayout::new(devices, n),
-            backend: ExpertBackend::Native,
-        };
-        let r = b.run(&format!("moe step, {devices} device(s)"), || {
-            black_box(sched.execute(&plan, &[&x], &w).unwrap());
+        let sched =
+            Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native);
+        sched.execute(&work.plan, &refs, &work.weights).unwrap(); // warm up
+        let r = b.run(&format!("moe step (engine), {devices} device(s)"), || {
+            black_box(sched.execute(&work.plan, &refs, &work.weights).unwrap());
         });
         r.report_throughput("tok", tokens as f64);
+        let r = b.run(&format!("moe step (serial), {devices} device(s)"), || {
+            black_box(
+                sched.execute_serial(&work.plan, &refs, &work.weights).unwrap(),
+            );
+        });
+        r.report_throughput("tok", tokens as f64);
+        let (_, stats) = sched.execute(&work.plan, &refs, &work.weights).unwrap();
+        println!("  phases: {}", phase_line(&stats));
     }
 }

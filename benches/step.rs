@@ -1,18 +1,64 @@
-//! Bench: end-to-end training-step latency per config (the Table 1/7
-//! "Training Time" axis).  Measures the full rust->PJRT->rust round trip
-//! of the AOT'd train step, which is what a paper-scale deployment pays
-//! per step on this substrate.
+//! Bench: end-to-end MoE step latency.
+//!
+//! Section 1 (always runs): the Native-backend step on the persistent
+//! [`ExecutionEngine`] vs the retained serial reference, with the
+//! per-phase gather/compute/combine breakdown from `StepStats` — the
+//! §3.1 shrinking-batch economics measured, not modelled.
+//!
+//! Section 2 (needs `make artifacts`): the full rust->PJRT->rust round
+//! trip of the AOT'd train step (the Table 1/7 "Training Time" axis).
 
+use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
 use moe::data::Batcher;
+use moe::harness::workload::{phase_line, SyntheticMoe};
 use moe::runtime::{Engine, Manifest};
 use moe::train::Trainer;
-use moe::util::bench::Bencher;
+use moe::util::bench::{black_box, Bencher};
 
-fn main() -> anyhow::Result<()> {
-    let engine = Engine::new()?;
-    let manifest = Manifest::load("artifacts")?;
-    let bench = Bencher::quick();
+fn native_engine_section(bench: &Bencher) {
+    let (d, h, n, k, tokens) = (64, 256, 64, 4, 4096);
+    let work = SyntheticMoe::build(7, d, h, n, k, 1, tokens).unwrap();
+    let refs = work.refs();
+
+    println!(
+        "== native MoE step, persistent engine vs serial reference \
+         (n={n}, k={k}, d={d}, {tokens} tokens) =="
+    );
+    for devices in [1, 2, 4, 8] {
+        let sched =
+            Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native);
+        sched.execute(&work.plan, &refs, &work.weights).unwrap(); // warm up
+        let r = bench.run(&format!("engine step, {devices} device(s)"), || {
+            black_box(sched.execute(&work.plan, &refs, &work.weights).unwrap());
+        });
+        r.report_throughput("tok", tokens as f64);
+        let r = bench.run(&format!("serial step, {devices} device(s)"), || {
+            black_box(
+                sched.execute_serial(&work.plan, &refs, &work.weights).unwrap(),
+            );
+        });
+        r.report_throughput("tok", tokens as f64);
+        let (_, stats) = sched.execute(&work.plan, &refs, &work.weights).unwrap();
+        println!("  phases: {}", phase_line(&stats));
+    }
+}
+
+fn artifact_section(bench: &Bencher) -> anyhow::Result<()> {
+    let engine = match Engine::new() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping artifact section: {e}");
+            return Ok(());
+        }
+    };
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping artifact section: {e}");
+            return Ok(());
+        }
+    };
     println!("== train-step latency (AOT artifact, CPU PJRT) ==");
     for cfg in ["moe-4", "moe-32", "moe-256", "moe-256-h", "lstm-4x",
                 "moe-1-wide"] {
@@ -34,6 +80,19 @@ fn main() -> anyhow::Result<()> {
             trainer.step(&mut state, &tokens).unwrap();
         });
         r.report_throughput("tok", tokens_per_step);
+        let m = trainer.step(&mut state, &tokens)?;
+        println!(
+            "  phases: stage-in {:.3}ms  execute {:.3}ms  stage-out {:.3}ms",
+            m.phases.h2d_ns as f64 / 1e6,
+            m.phases.exec_ns as f64 / 1e6,
+            m.phases.d2h_ns as f64 / 1e6,
+        );
     }
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher::quick();
+    native_engine_section(&bench);
+    artifact_section(&bench)
 }

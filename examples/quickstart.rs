@@ -56,13 +56,13 @@ fn main() -> Result<()> {
     let router = router_for(&entry, &state.params.data, &engine, &manifest,
                             true)?;
     let weights = expert_weights(&entry, &state.params.data)?;
-    let sched = Scheduler {
-        layout: ShardLayout::new(4, c.n_experts),
-        backend: ExpertBackend::Artifact {
+    let sched = Scheduler::new(
+        ShardLayout::new(4, c.n_experts),
+        ExpertBackend::Artifact {
             exe: engine.load(&manifest, cfg, "expert")?,
             capacity: c.capacity,
         },
-    };
+    );
     let mut rng = Rng::new(0);
     let x = TensorF::new(
         vec![c.batch * c.seq_len, c.d_model],

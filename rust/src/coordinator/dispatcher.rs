@@ -80,12 +80,52 @@ impl Dispatcher {
     /// `xs[replica]` is (rows, d).  Returns (len, d) row-major.
     pub fn gather(plan: &DispatchPlan, expert: usize, xs: &[&TensorF]) -> TensorF {
         let d = xs.first().map(|t| t.shape[1]).unwrap_or(0);
-        let batch = &plan.per_expert[expert];
-        let mut data = Vec::with_capacity(batch.tokens.len() * d);
-        for addr in &batch.tokens {
-            data.extend_from_slice(xs[addr.replica].row(addr.row));
+        let mut data = Vec::new();
+        let rows = Self::gather_range_into(
+            plan,
+            expert,
+            0..plan.per_expert[expert].tokens.len(),
+            xs,
+            &mut data,
+        );
+        TensorF::new(vec![rows, d], data)
+    }
+
+    /// Gather one expert's full batch into a caller-owned buffer
+    /// (cleared first); returns the number of rows written.
+    pub fn gather_into(
+        plan: &DispatchPlan,
+        expert: usize,
+        xs: &[&TensorF],
+        buf: &mut Vec<f32>,
+    ) -> usize {
+        Self::gather_range_into(
+            plan,
+            expert,
+            0..plan.per_expert[expert].tokens.len(),
+            xs,
+            buf,
+        )
+    }
+
+    /// Gather a contiguous row range (one wave) of an expert's batch
+    /// into a caller-owned buffer.  The engine's wave pipeline uses this
+    /// to stage wave w+1 while wave w computes.
+    pub fn gather_range_into(
+        plan: &DispatchPlan,
+        expert: usize,
+        rows: std::ops::Range<usize>,
+        xs: &[&TensorF],
+        buf: &mut Vec<f32>,
+    ) -> usize {
+        let d = xs.first().map(|t| t.shape[1]).unwrap_or(0);
+        let n_rows = rows.len();
+        buf.clear();
+        buf.reserve(n_rows * d);
+        for addr in &plan.per_expert[expert].tokens[rows] {
+            buf.extend_from_slice(xs[addr.replica].row(addr.row));
         }
-        TensorF::new(vec![batch.tokens.len(), d], data)
+        n_rows
     }
 
     /// Scatter-combine expert outputs back to per-replica (rows, d)
@@ -100,6 +140,20 @@ impl Dispatcher {
             .iter()
             .map(|&rows| TensorF::zeros(vec![rows, d_model]))
             .collect();
+        Self::combine_into(plan, expert_outputs, d_model, &mut out);
+        out
+    }
+
+    /// Combine into caller-owned (and caller-zeroed) per-replica output
+    /// tensors.  Accumulation order is expert-major, so any caller that
+    /// presents complete expert outputs gets bit-identical results
+    /// regardless of how the experts were scheduled.
+    pub fn combine_into(
+        plan: &DispatchPlan,
+        expert_outputs: &[TensorF],
+        d_model: usize,
+        out: &mut [TensorF],
+    ) {
         for (e, batch) in plan.per_expert.iter().enumerate() {
             let eo = &expert_outputs[e];
             debug_assert_eq!(eo.shape, vec![batch.tokens.len(), d_model]);
@@ -113,7 +167,6 @@ impl Dispatcher {
                 }
             }
         }
-        out
     }
 }
 
@@ -181,6 +234,29 @@ mod tests {
             let combined = Dispatcher::combine(&plan, &outs, d);
             for (a, b) in combined[0].data.iter().zip(x.data.iter()) {
                 assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn gather_range_concatenates_to_full_gather() {
+        prop::forall("gather ranges", |rng| {
+            let (d, n, k) = (3, 5, 2);
+            let rows = prop::dim(rng, 1, 12);
+            let dec = decision(rows, n, k, rng);
+            let x = TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0));
+            let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
+            for e in 0..n {
+                let full = Dispatcher::gather(&plan, e, &[&x]);
+                let len = plan.per_expert[e].tokens.len();
+                let cut = if len == 0 { 0 } else { prop::dim(rng, 0, len) };
+                let mut buf = Vec::new();
+                let r1 = Dispatcher::gather_range_into(&plan, e, 0..cut, &[&x], &mut buf);
+                let mut tail = Vec::new();
+                let r2 = Dispatcher::gather_range_into(&plan, e, cut..len, &[&x], &mut tail);
+                buf.extend_from_slice(&tail);
+                assert_eq!(r1 + r2, len);
+                assert_eq!(buf, full.data);
             }
         });
     }

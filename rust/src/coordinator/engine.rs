@@ -1,0 +1,616 @@
+//! Persistent parallel execution engine for the MoE step.
+//!
+//! The seed scheduler spawned fresh OS threads and reallocated every
+//! gather/compute/combine buffer on *every step*, so step latency
+//! measured harness overhead instead of the paper's §3.1–3.2 economics.
+//! This engine keeps one long-lived worker thread per simulated device
+//! shard, fed over channels, with reusable arenas:
+//!
+//! - **gather arenas** — token rows are staged into pooled buffers
+//!   ([`Dispatcher::gather_range_into`]), recycled step after step;
+//! - **compute arenas** — each worker owns a persistent hidden-layer
+//!   scratch buffer, and expert outputs land in pooled buffers;
+//! - **combine arenas** — per-replica outputs adopt pooled allocations
+//!   via [`TensorF::from_buffer`].
+//!
+//! Over-capacity batches run in synchronous *waves*; the engine stages
+//! wave `w+1` while wave `w` computes (Native: on the coordinator thread
+//! against the worker pool; Artifact: a persistent worker prefetches the
+//! next padded chunk while the PJRT call for the current one runs).
+//!
+//! # Safety
+//!
+//! Jobs smuggle borrows of the caller's `plan`, `xs` and `weights` to
+//! the persistent workers as raw pointers (a persistent thread cannot
+//! hold a non-`'static` reference).  The invariants that make this
+//! sound:
+//!
+//! 1. workers dereference job pointers only between receiving the job
+//!    and sending its reply (worker bodies are wrapped in
+//!    `catch_unwind`, so a reply is *always* sent, even on panic);
+//! 2. `execute_*` never returns — including on the error path, via
+//!    [`DrainGuard`] — until every job it sent has been replied to.
+//!
+//! Together these guarantee no worker touches the borrowed step inputs
+//! after `execute_*` returns.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::dispatcher::{DispatchPlan, Dispatcher};
+use crate::coordinator::scheduler::{
+    build_stats, waves_for_loads, ExpertWeights, PhaseNanos, ShardLayout,
+    StepStats,
+};
+use crate::runtime::{Executable, Host, TensorF};
+
+/// One expert-chunk of work bound for a shard worker.
+struct ExpertTask {
+    expert: usize,
+    rows: usize,
+    /// row offset of this chunk inside the expert's full output
+    out_offset: usize,
+    /// gathered (rows, d) input, from the buffer pool
+    input: Vec<f32>,
+    /// output buffer, from the buffer pool; worker fills (rows, d)
+    output: Vec<f32>,
+}
+
+struct ComputeJob {
+    device: usize,
+    /// borrowed `&[ExpertWeights]` — see module safety notes
+    weights: *const [ExpertWeights],
+    tasks: Vec<ExpertTask>,
+    reply: Sender<ComputeReply>,
+}
+
+// SAFETY: the raw pointer is only dereferenced while the coordinating
+// `execute_*` call is blocked waiting for this job's reply.
+unsafe impl Send for ComputeJob {}
+
+struct ComputeReply {
+    device: usize,
+    ok: bool,
+    tasks: Vec<ExpertTask>,
+    compute_ns: u64,
+}
+
+struct GatherJob {
+    /// borrowed `&DispatchPlan` — see module safety notes
+    plan: *const DispatchPlan,
+    /// borrowed replica activations
+    xs: Vec<*const TensorF>,
+    expert: usize,
+    lo: usize,
+    hi: usize,
+    buf: Vec<f32>,
+    reply: Sender<GatherReply>,
+}
+
+// SAFETY: as for ComputeJob.
+unsafe impl Send for GatherJob {}
+
+struct GatherReply {
+    ok: bool,
+    buf: Vec<f32>,
+}
+
+enum Job {
+    Compute(ComputeJob),
+    Gather(GatherJob),
+}
+
+/// Recycled f32 allocations shared by gather inputs, expert outputs and
+/// combine outputs.
+#[derive(Default)]
+struct BufferPool {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl BufferPool {
+    fn take(&mut self) -> Vec<f32> {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        if self.bufs.len() < 256 {
+            self.bufs.push(buf);
+        }
+    }
+}
+
+/// Ensures every job sent in a step is replied to before the step call
+/// can return, so borrowed pointers cannot outlive their referents.
+struct DrainGuard<'a, T> {
+    rx: &'a Receiver<T>,
+    outstanding: usize,
+}
+
+impl<'a, T> DrainGuard<'a, T> {
+    fn new(rx: &'a Receiver<T>) -> Self {
+        DrainGuard { rx, outstanding: 0 }
+    }
+
+    fn sent(&mut self) {
+        self.outstanding += 1;
+    }
+
+    fn recv(&mut self) -> Result<T> {
+        let v = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("execution engine worker channel closed"))?;
+        self.outstanding -= 1;
+        Ok(v)
+    }
+}
+
+impl<'a, T> Drop for DrainGuard<'a, T> {
+    fn drop(&mut self) {
+        while self.outstanding > 0 {
+            if self.rx.recv().is_err() {
+                break;
+            }
+            self.outstanding -= 1;
+        }
+    }
+}
+
+/// Long-lived worker pool executing MoE steps without per-step thread
+/// spawns or per-step allocation.
+pub struct ExecutionEngine {
+    pub layout: ShardLayout,
+    /// optional cap on tokens per expert per wave for the Native path
+    /// (the Artifact path always waves at the artifact capacity)
+    wave_capacity: Option<usize>,
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    pool: BufferPool,
+}
+
+impl ExecutionEngine {
+    /// Spawn one persistent worker per simulated device shard.
+    pub fn start(layout: ShardLayout) -> Self {
+        Self::with_wave_capacity(layout, None)
+    }
+
+    /// Like [`start`](Self::start), but Native expert batches are also
+    /// processed in waves of at most `capacity` tokens (exercises the
+    /// wave pipeline without an artifact; chunking is bit-exact because
+    /// expert rows are independent).
+    pub fn with_wave_capacity(layout: ShardLayout, capacity: Option<usize>) -> Self {
+        let mut txs = Vec::with_capacity(layout.n_devices);
+        let mut handles = Vec::with_capacity(layout.n_devices);
+        for dev in 0..layout.n_devices {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("moe-shard-{dev}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawning shard worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        ExecutionEngine {
+            layout,
+            wave_capacity: capacity,
+            txs,
+            handles,
+            pool: BufferPool::default(),
+        }
+    }
+
+    /// Execute a step with the pure-rust expert forward on the
+    /// persistent shard workers.
+    pub fn execute_native(
+        &mut self,
+        plan: &DispatchPlan,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        let d = xs
+            .first()
+            .map(|t| t.shape[1])
+            .ok_or_else(|| anyhow!("no replica inputs"))?;
+        if plan.n_experts != self.layout.n_experts {
+            bail!(
+                "plan has {} experts but engine layout has {}",
+                plan.n_experts,
+                self.layout.n_experts
+            );
+        }
+        let loads = plan.expert_loads();
+        let cap = self.wave_capacity.unwrap_or(usize::MAX).max(1);
+        let n_waves = waves_for_loads(&loads, self.wave_capacity);
+        let mut phases = PhaseNanos::default();
+        let mut shard_compute = vec![0u64; self.layout.n_devices];
+
+        // full per-expert output arenas
+        let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(loads.len());
+        for &l in &loads {
+            let mut buf = self.pool.take();
+            buf.resize(l * d, 0.0);
+            expert_out.push(buf);
+        }
+
+        let (reply_tx, reply_rx) = channel::<ComputeReply>();
+        let mut guard = DrainGuard::new(&reply_rx);
+        let mut panicked = false;
+
+        // stage wave 0, then overlap: stage wave w+1 while wave w computes
+        let (mut next_tasks, g_ns) = self.stage_wave(plan, xs, 0, cap, d);
+        phases.gather += g_ns;
+        let t_compute = Instant::now();
+        for w in 0..n_waves {
+            let wave_tasks = std::mem::take(&mut next_tasks);
+            let mut sent = 0usize;
+            for (dev, tasks) in wave_tasks.into_iter().enumerate() {
+                if tasks.is_empty() {
+                    continue;
+                }
+                let job = ComputeJob {
+                    device: dev,
+                    weights,
+                    tasks,
+                    reply: reply_tx.clone(),
+                };
+                // workers only exit when the engine is dropped, so this
+                // cannot fail while `self` is alive
+                self.txs[dev]
+                    .send(Job::Compute(job))
+                    .map_err(|_| anyhow!("shard worker {dev} unavailable"))?;
+                guard.sent();
+                sent += 1;
+            }
+            if w + 1 < n_waves {
+                // overlapped with wave w's compute — its time is part of
+                // the compute wall, not the gather phase (see PhaseNanos)
+                let (tasks, _overlapped_ns) =
+                    self.stage_wave(plan, xs, w + 1, cap, d);
+                next_tasks = tasks;
+            }
+            for _ in 0..sent {
+                let r = guard.recv()?;
+                shard_compute[r.device] += r.compute_ns;
+                for t in r.tasks {
+                    if r.ok {
+                        expert_out[t.expert]
+                            [t.out_offset * d..(t.out_offset + t.rows) * d]
+                            .copy_from_slice(&t.output[..t.rows * d]);
+                    }
+                    self.pool.put(t.input);
+                    self.pool.put(t.output);
+                }
+                panicked |= !r.ok;
+            }
+        }
+        let compute_wall = t_compute.elapsed().as_nanos() as u64;
+        phases.compute = compute_wall;
+        if panicked {
+            bail!("expert shard panicked during step");
+        }
+
+        let (outs, combine_ns) = self.combine(plan, expert_out, &loads, d);
+        phases.combine = combine_ns;
+        let stats = build_stats(
+            &self.layout,
+            plan,
+            d,
+            n_waves,
+            phases,
+            shard_compute,
+            compute_wall,
+        );
+        Ok((outs, stats))
+    }
+
+    /// Execute a step through the AOT expert artifact.  The PJRT
+    /// executable is not `Send`, so chunks run on this thread; a
+    /// persistent worker gathers chunk `i+1` while chunk `i`'s PJRT call
+    /// is in flight (the §3.1 wave pipeline).  Chunks are visited in
+    /// expert order — `ShardLayout::owner` is monotone, so this is also
+    /// device order and combine accumulation matches the serial path.
+    pub fn execute_artifact(
+        &mut self,
+        plan: &DispatchPlan,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+        exe: &Executable,
+        capacity: usize,
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        let d = xs
+            .first()
+            .map(|t| t.shape[1])
+            .ok_or_else(|| anyhow!("no replica inputs"))?;
+        if plan.n_experts != self.layout.n_experts {
+            bail!(
+                "plan has {} experts but engine layout has {}",
+                plan.n_experts,
+                self.layout.n_experts
+            );
+        }
+        let cap = capacity.max(1);
+        let loads = plan.expert_loads();
+        let n_waves = waves_for_loads(&loads, Some(cap));
+        let mut phases = PhaseNanos::default();
+        let mut shard_compute = vec![0u64; self.layout.n_devices];
+
+        let mut chunks = Vec::new();
+        for (e, &load) in loads.iter().enumerate() {
+            let mut lo = 0;
+            while lo < load {
+                let hi = (lo + cap).min(load);
+                chunks.push((e, lo, hi));
+                lo = hi;
+            }
+        }
+
+        let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(loads.len());
+        for &l in &loads {
+            let mut buf = self.pool.take();
+            buf.resize(l * d, 0.0);
+            expert_out.push(buf);
+        }
+
+        let (reply_tx, reply_rx) = channel::<GatherReply>();
+        let mut guard = DrainGuard::new(&reply_rx);
+        let gather_tx = &self.txs[0];
+
+        let mut err: Option<anyhow::Error> = None;
+        if let Some(first) = chunks.first() {
+            let buf = self.pool.take();
+            match send_gather(gather_tx, &reply_tx, plan, xs, *first, buf) {
+                Ok(()) => guard.sent(),
+                Err(e) => err = Some(e),
+            }
+        }
+        let mut cur_expert = usize::MAX;
+        // reusable 3-slot input array: [w_in, w_out, chunk]; the weight
+        // hosts are built once per expert (not per chunk) and the chunk
+        // slot is swapped in and out so its arena returns to the pool
+        let empty_host = || Host::F32(TensorF::zeros(vec![0]));
+        let mut inputs: Vec<Host> = Vec::with_capacity(3);
+        let mut i = 0usize;
+        while err.is_none() && i < chunks.len() {
+            let (e, lo, hi) = chunks[i];
+            // time blocked on the prefetch worker = the staging cost the
+            // pipeline failed to hide; fully-overlapped gathers cost ~0
+            let t_wait = Instant::now();
+            let g = match guard.recv() {
+                Ok(g) => g,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            };
+            phases.gather += t_wait.elapsed().as_nanos() as u64;
+            if !g.ok {
+                self.pool.put(g.buf);
+                err = Some(anyhow!("gather worker panicked"));
+                break;
+            }
+            // prefetch the next chunk while this one computes
+            if let Some(next) = chunks.get(i + 1) {
+                let buf = self.pool.take();
+                match send_gather(gather_tx, &reply_tx, plan, xs, *next, buf) {
+                    Ok(()) => guard.sent(),
+                    Err(e) => {
+                        err = Some(e);
+                        break;
+                    }
+                }
+            }
+            let w = &weights[e];
+            if e != cur_expert {
+                cur_expert = e;
+                inputs.clear();
+                inputs.push(Host::F32(TensorF::new(
+                    vec![w.d_model, w.hidden],
+                    w.w_in.clone(),
+                )));
+                inputs.push(Host::F32(TensorF::new(
+                    vec![w.hidden, w.d_model],
+                    w.w_out.clone(),
+                )));
+                inputs.push(empty_host());
+            }
+            let rows = hi - lo;
+            let t1 = Instant::now();
+            let mut chunk = self.pool.take();
+            chunk.resize(cap * d, 0.0);
+            chunk[..rows * d].copy_from_slice(&g.buf[..rows * d]);
+            self.pool.put(g.buf);
+            inputs[2] = Host::F32(TensorF::new(vec![cap, d], chunk));
+            match exe.run(&inputs).and_then(|ys| {
+                ys.into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("expert artifact returned no output"))?
+                    .into_f32()
+            }) {
+                Ok(y) => {
+                    expert_out[e][lo * d..hi * d]
+                        .copy_from_slice(&y.data[..rows * d]);
+                    self.pool.put(y.into_buffer());
+                    shard_compute[self.layout.owner(e)] +=
+                        t1.elapsed().as_nanos() as u64;
+                }
+                Err(e) => err = Some(e),
+            }
+            // recover the chunk arena for the next wave
+            if let Host::F32(t) = std::mem::replace(&mut inputs[2], empty_host()) {
+                self.pool.put(t.into_buffer());
+            }
+            i += 1;
+        }
+        drop(guard); // drain any in-flight gather before touching errors
+        if let Some(e) = err {
+            return Err(e);
+        }
+        // chunks execute serialized on this thread, so the expert-compute
+        // critical path is the sum of per-shard busy time, and a shard's
+        // idle is the time it spends waiting on the other shards' chunks
+        // (the §3.1 synchronous wait) — gather/combine excluded
+        let compute_serialized: u64 = shard_compute.iter().sum();
+        phases.compute = compute_serialized;
+
+        let (outs, combine_ns) = self.combine(plan, expert_out, &loads, d);
+        phases.combine = combine_ns;
+        let stats = build_stats(
+            &self.layout,
+            plan,
+            d,
+            n_waves,
+            phases,
+            shard_compute,
+            compute_serialized,
+        );
+        Ok((outs, stats))
+    }
+
+    /// Stage one wave: gather each expert's `[w*cap, (w+1)*cap)` row
+    /// chunk into pooled buffers, grouped by owning device.
+    fn stage_wave(
+        &mut self,
+        plan: &DispatchPlan,
+        xs: &[&TensorF],
+        wave: usize,
+        cap: usize,
+        d: usize,
+    ) -> (Vec<Vec<ExpertTask>>, u64) {
+        let t0 = Instant::now();
+        let mut tasks: Vec<Vec<ExpertTask>> =
+            (0..self.layout.n_devices).map(|_| Vec::new()).collect();
+        for e in 0..plan.n_experts {
+            let load = plan.per_expert[e].tokens.len();
+            let lo = wave.saturating_mul(cap);
+            if lo >= load {
+                continue;
+            }
+            let hi = lo.saturating_add(cap).min(load);
+            let mut input = self.pool.take();
+            Dispatcher::gather_range_into(plan, e, lo..hi, xs, &mut input);
+            let mut output = self.pool.take();
+            output.resize((hi - lo) * d, 0.0);
+            tasks[self.layout.owner(e)].push(ExpertTask {
+                expert: e,
+                rows: hi - lo,
+                out_offset: lo,
+                input,
+                output,
+            });
+        }
+        (tasks, t0.elapsed().as_nanos() as u64)
+    }
+
+    /// Gate-weighted combine (eq 1) into pooled output storage; returns
+    /// (per-replica outputs, combine wall ns).
+    fn combine(
+        &mut self,
+        plan: &DispatchPlan,
+        expert_out: Vec<Vec<f32>>,
+        loads: &[usize],
+        d: usize,
+    ) -> (Vec<TensorF>, u64) {
+        let t0 = Instant::now();
+        let expert_tensors: Vec<TensorF> = expert_out
+            .into_iter()
+            .enumerate()
+            .map(|(e, buf)| TensorF::new(vec![loads[e], d], buf))
+            .collect();
+        let mut outs = Vec::with_capacity(plan.replica_rows.len());
+        for &rows in &plan.replica_rows {
+            outs.push(TensorF::from_buffer(vec![rows, d], self.pool.take()));
+        }
+        Dispatcher::combine_into(plan, &expert_tensors, d, &mut outs);
+        for t in expert_tensors {
+            self.pool.put(t.into_buffer());
+        }
+        (outs, t0.elapsed().as_nanos() as u64)
+    }
+}
+
+impl Drop for ExecutionEngine {
+    fn drop(&mut self) {
+        // closing the channels ends the worker loops
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn send_gather(
+    tx: &Sender<Job>,
+    reply: &Sender<GatherReply>,
+    plan: &DispatchPlan,
+    xs: &[&TensorF],
+    (expert, lo, hi): (usize, usize, usize),
+    buf: Vec<f32>,
+) -> Result<()> {
+    let job = GatherJob {
+        plan,
+        xs: xs.iter().map(|t| *t as *const TensorF).collect(),
+        expert,
+        lo,
+        hi,
+        buf,
+        reply: reply.clone(),
+    };
+    tx.send(Job::Gather(job))
+        .map_err(|_| anyhow!("gather worker unavailable"))
+}
+
+/// Persistent shard worker: waits for jobs, computes into its arena,
+/// always replies (even on panic — see module safety notes).
+fn worker_loop(rx: Receiver<Job>) {
+    // persistent hidden-layer scratch arena, reused across steps
+    let mut scratch: Vec<f32> = Vec::new();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Compute(mut j) => {
+                let t0 = Instant::now();
+                let ok = catch_unwind(AssertUnwindSafe(|| {
+                    // SAFETY: the coordinator blocks until our reply
+                    let weights: &[ExpertWeights] = unsafe { &*j.weights };
+                    for t in j.tasks.iter_mut() {
+                        let w = &weights[t.expert];
+                        w.forward_into(
+                            &t.input[..t.rows * w.d_model],
+                            t.rows,
+                            &mut scratch,
+                            &mut t.output,
+                        );
+                    }
+                }))
+                .is_ok();
+                let _ = j.reply.send(ComputeReply {
+                    device: j.device,
+                    ok,
+                    tasks: j.tasks,
+                    compute_ns: t0.elapsed().as_nanos() as u64,
+                });
+            }
+            Job::Gather(mut j) => {
+                let ok = catch_unwind(AssertUnwindSafe(|| {
+                    // SAFETY: the coordinator blocks until our reply
+                    let plan: &DispatchPlan = unsafe { &*j.plan };
+                    let xs: Vec<&TensorF> =
+                        j.xs.iter().map(|&p| unsafe { &*p }).collect();
+                    Dispatcher::gather_range_into(
+                        plan,
+                        j.expert,
+                        j.lo..j.hi,
+                        &xs,
+                        &mut j.buf,
+                    );
+                }))
+                .is_ok();
+                let _ = j.reply.send(GatherReply { ok, buf: j.buf });
+            }
+        }
+    }
+}

@@ -10,19 +10,22 @@
 //! 2. the [`dispatcher::Dispatcher`] builds the all-to-all plan: tokens
 //!    from all replicas are grouped per expert (the combined kbd/n batch
 //!    of §3.1) and shipped to the shard owning that expert;
-//! 3. expert shards execute the expert-FFN artifact in waves of
-//!    `capacity` tokens ([`scheduler::Scheduler`], one OS thread per
-//!    simulated device — no token is ever dropped, matching the paper's
-//!    dynamically-sized expert batches);
+//! 3. expert shards execute in waves of `capacity` tokens on the
+//!    persistent [`engine::ExecutionEngine`] — long-lived worker threads
+//!    with reusable arenas, staged through [`scheduler::Scheduler`]; no
+//!    token is ever dropped, matching the paper's dynamically-sized
+//!    expert batches, and wave w+1 is gathered while wave w computes;
 //! 4. outputs are combined back per token with gate weights (eq 1), and
 //!    [`balance::BalanceMeter`] tracks Importance / Load / CV² telemetry.
 
 pub mod balance;
 pub mod dispatcher;
+pub mod engine;
 pub mod router;
 pub mod scheduler;
 
 pub use balance::BalanceMeter;
 pub use dispatcher::{DispatchPlan, Dispatcher, ExpertBatch};
+pub use engine::ExecutionEngine;
 pub use router::{Router, RouterBackend};
-pub use scheduler::{Scheduler, ShardLayout};
+pub use scheduler::{PhaseNanos, Scheduler, ShardLayout, StepStats};

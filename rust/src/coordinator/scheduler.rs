@@ -1,19 +1,28 @@
-//! Scheduler: synchronous execution of a dispatched MoE step across
-//! simulated devices.
+//! Scheduler: execution of a dispatched MoE step across simulated
+//! devices.
 //!
 //! Each simulated device owns a contiguous slice of experts (the §3.1
-//! model-parallel shard) and runs on its own OS thread.  Expert batches
-//! longer than the artifact's static `capacity` are processed in waves —
-//! tokens are never dropped, mirroring the paper's dynamically-sized
-//! expert batches.  The step barrier is the thread join: like the paper's
-//! synchronous training, the step takes as long as the busiest shard,
-//! which is what the load-balancing losses exist to minimise.
+//! model-parallel shard).  Expert batches longer than the wave capacity
+//! are processed in waves — tokens are never dropped, mirroring the
+//! paper's dynamically-sized expert batches.  The step barrier is
+//! synchronous: the step takes as long as the busiest shard, which is
+//! what the load-balancing losses exist to minimise, and the per-phase
+//! timings in [`StepStats`] make that wait directly observable.
+//!
+//! Two execution paths share the same math:
+//! - [`Scheduler::execute`] — the hot path, delegating to a lazily
+//!   started persistent [`ExecutionEngine`](crate::coordinator::engine::ExecutionEngine)
+//!   (long-lived worker threads, reusable arenas, pipelined waves);
+//! - [`Scheduler::execute_serial`] — the retained single-threaded
+//!   reference, kept as the oracle for `rust/tests/engine_parity.rs`.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::dispatcher::{DispatchPlan, Dispatcher};
+use crate::coordinator::engine::ExecutionEngine;
 use crate::runtime::{Executable, Host, TensorF};
 
 /// Which device owns which experts.
@@ -26,6 +35,7 @@ pub struct ShardLayout {
 impl ShardLayout {
     pub fn new(n_devices: usize, n_experts: usize) -> Self {
         assert!(n_devices >= 1);
+        assert!(n_experts >= 1);
         ShardLayout { n_devices, n_experts }
     }
 
@@ -53,15 +63,35 @@ pub struct ExpertWeights {
 impl ExpertWeights {
     /// Reference CPU forward (used by the Native backend and tests).
     pub fn forward(&self, x: &TensorF) -> TensorF {
-        let (b, d, h) = (x.shape[0], self.d_model, self.hidden);
-        let mut hid = vec![0f32; b * h];
-        crate::gating::noisy_topk::matmul(&x.data, &self.w_in, &mut hid, b, d, h);
-        for v in hid.iter_mut() {
+        let b = x.shape[0];
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        self.forward_into(&x.data, b, &mut scratch, &mut out);
+        TensorF::new(vec![b, self.d_model], out)
+    }
+
+    /// Arena variant of [`forward`](Self::forward): `relu(x·w_in)·w_out`
+    /// written into caller-owned buffers, so the persistent workers
+    /// allocate nothing on the step hot path.  Rows are independent, so
+    /// computing a batch in row-chunks is bit-identical to one pass.
+    pub fn forward_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        scratch: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        let (d, h) = (self.d_model, self.hidden);
+        debug_assert_eq!(x.len(), rows * d);
+        scratch.clear();
+        scratch.resize(rows * h, 0.0);
+        crate::gating::noisy_topk::matmul(x, &self.w_in, scratch, rows, d, h);
+        for v in scratch.iter_mut() {
             *v = v.max(0.0);
         }
-        let mut out = vec![0f32; b * d];
-        crate::gating::noisy_topk::matmul(&hid, &self.w_out, &mut out, b, h, d);
-        TensorF::new(vec![b, d], out)
+        out.clear();
+        out.resize(rows * d, 0.0);
+        crate::gating::noisy_topk::matmul(scratch, &self.w_out, out, rows, h, d);
     }
 }
 
@@ -72,22 +102,113 @@ pub enum ExpertBackend {
     Native,
 }
 
-pub struct Scheduler {
-    pub layout: ShardLayout,
-    pub backend: ExpertBackend,
+/// Wall-clock nanoseconds per step phase.  Phases are disjoint slices
+/// of the step wall: `gather` counts only staging on the critical path
+/// — staging the engine overlaps with expert execution (waves ≥ 1 of
+/// the pipelined paths) is deliberately *hidden inside* `compute`,
+/// which is exactly the §3.2 overhead being engineered away.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseNanos {
+    /// critical-path staging of token rows into per-expert batches
+    /// (all-to-all "send")
+    pub gather: u64,
+    /// expert execution: first dispatch to last shard done (includes
+    /// any staging pipelined underneath it)
+    pub compute: u64,
+    /// gate-weighted scatter back to replicas (all-to-all "receive", eq 1)
+    pub combine: u64,
+}
+
+impl PhaseNanos {
+    pub fn total(&self) -> u64 {
+        self.gather + self.compute + self.combine
+    }
 }
 
 /// Telemetry for one executed step.
 #[derive(Clone, Debug, Default)]
 pub struct StepStats {
     pub expert_loads: Vec<usize>,
+    /// synchronous waves needed: max over experts of ceil(load/capacity)
+    /// (1 for the un-chunked Native path whenever any token routed)
     pub waves: usize,
     pub network_bytes: u64,
     pub busiest_shard_tokens: usize,
+    /// per-phase wall-clock breakdown of this step
+    pub phases: PhaseNanos,
+    /// busy nanoseconds per shard inside the compute phase
+    pub shard_compute_ns: Vec<u64>,
+    /// idle nanoseconds per shard: compute-phase wall minus busy — the
+    /// §3.1 synchronous wait on the busiest shard
+    pub shard_idle_ns: Vec<u64>,
+}
+
+/// Waves needed for the given loads at `capacity` tokens per wave:
+/// max over experts of ceil(load / capacity).
+pub(crate) fn waves_for_loads(loads: &[usize], capacity: Option<usize>) -> usize {
+    let cap = capacity.unwrap_or(usize::MAX).max(1);
+    loads
+        .iter()
+        .map(|&l| if l == 0 { 0 } else { 1 + (l - 1) / cap })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Assemble [`StepStats`] from a finished step's raw measurements.
+pub(crate) fn build_stats(
+    layout: &ShardLayout,
+    plan: &DispatchPlan,
+    d_model: usize,
+    waves: usize,
+    phases: PhaseNanos,
+    shard_compute_ns: Vec<u64>,
+    compute_wall_ns: u64,
+) -> StepStats {
+    let loads = plan.expert_loads();
+    let mut shard_tokens = vec![0usize; layout.n_devices];
+    for (e, &l) in loads.iter().enumerate() {
+        shard_tokens[layout.owner(e)] += l;
+    }
+    let shard_idle_ns = shard_compute_ns
+        .iter()
+        .map(|&busy| compute_wall_ns.saturating_sub(busy))
+        .collect();
+    StepStats {
+        busiest_shard_tokens: shard_tokens.iter().copied().max().unwrap_or(0),
+        expert_loads: loads,
+        waves,
+        network_bytes: plan.network_bytes(d_model),
+        phases,
+        shard_compute_ns,
+        shard_idle_ns,
+    }
+}
+
+pub struct Scheduler {
+    // private: the engine below is keyed to this layout/backend pair,
+    // so they must not change after the first step
+    layout: ShardLayout,
+    backend: ExpertBackend,
+    /// Persistent execution engine, started on first use and reused for
+    /// every subsequent step (no per-step thread spawn).
+    engine: Mutex<Option<ExecutionEngine>>,
 }
 
 impl Scheduler {
-    /// Execute the expert computation for a dispatch plan.
+    pub fn new(layout: ShardLayout, backend: ExpertBackend) -> Self {
+        Scheduler { layout, backend, engine: Mutex::new(None) }
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    pub fn backend(&self) -> &ExpertBackend {
+        &self.backend
+    }
+
+    /// Execute the expert computation for a dispatch plan on the
+    /// persistent engine.
     ///
     /// `xs[replica]`: (rows, d) activations per replica.
     /// `weights[e]`: weights of expert e.
@@ -98,108 +219,102 @@ impl Scheduler {
         xs: &[&TensorF],
         weights: &[ExpertWeights],
     ) -> Result<(Vec<TensorF>, StepStats)> {
+        // a poisoned lock means a previous step panicked mid-execute; the
+        // engine itself is safe to reuse (its drain guards restore the
+        // worker protocol on unwind), so recover instead of re-panicking
+        let mut guard = self
+            .engine
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner());
+        let engine = guard
+            .get_or_insert_with(|| ExecutionEngine::start(self.layout.clone()));
+        match &self.backend {
+            ExpertBackend::Native => engine.execute_native(plan, xs, weights),
+            // The PJRT executable is not Send (the xla crate wraps the
+            // client in an Rc), so artifact waves run from this thread;
+            // the engine's persistent workers overlap next-wave gathers
+            // with the in-flight PJRT call.
+            ExpertBackend::Artifact { exe, capacity } => {
+                engine.execute_artifact(plan, xs, weights, exe, *capacity)
+            }
+        }
+    }
+
+    /// Retained single-threaded reference path: gather, run each expert
+    /// in index order, combine.  This is the oracle the differential
+    /// tests compare the persistent engine against; it allocates per
+    /// step and overlaps nothing on purpose.
+    pub fn execute_serial(
+        &self,
+        plan: &DispatchPlan,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+    ) -> Result<(Vec<TensorF>, StepStats)> {
         let d_model = xs
             .first()
             .map(|t| t.shape[1])
             .ok_or_else(|| anyhow!("no replica inputs"))?;
         let n = plan.n_experts;
-        let mut expert_inputs: Vec<TensorF> = (0..n)
-            .map(|e| Dispatcher::gather(plan, e, xs))
-            .collect();
+        let mut phases = PhaseNanos::default();
+        let mut shard_compute = vec![0u64; self.layout.n_devices];
+        let mut waves_max = 0usize;
 
-        // group expert inputs by owning device
-        let mut per_device: Vec<Vec<(usize, TensorF)>> =
-            (0..self.layout.n_devices).map(|_| Vec::new()).collect();
-        for (e, t) in expert_inputs.drain(..).enumerate() {
-            per_device[self.layout.owner(e)].push((e, t));
+        let mut expert_outputs = Vec::with_capacity(n);
+        for e in 0..n {
+            let t0 = Instant::now();
+            let x = Dispatcher::gather(plan, e, xs);
+            phases.gather += t0.elapsed().as_nanos() as u64;
+            let t1 = Instant::now();
+            let (y, waves) = run_expert(&self.backend, &weights[e], &x)?;
+            shard_compute[self.layout.owner(e)] += t1.elapsed().as_nanos() as u64;
+            waves_max = waves_max.max(waves);
+            expert_outputs.push(y);
         }
-        let mut outputs: Vec<Option<TensorF>> = vec![None; n];
-        let mut waves_total = 0usize;
-        match &self.backend {
-            // The PJRT executable is not Send (the xla crate wraps the
-            // client in an Rc), so artifact-backed shards execute
-            // sequentially from the coordinator thread — the PJRT CPU
-            // client is itself a thread pool, so expert GEMMs still use
-            // all cores.  The per-device decomposition is preserved for
-            // the timing model.
-            ExpertBackend::Artifact { .. } => {
-                for batch in per_device {
-                    for (e, x) in batch {
-                        let (y, w) =
-                            run_expert(&self.backend, &weights[e], &x)?;
-                        waves_total += w;
-                        outputs[e] = Some(y);
-                    }
-                }
-            }
-            // Native shards genuinely run one OS thread per device.
-            ExpertBackend::Native => {
-                std::thread::scope(|scope| -> Result<()> {
-                    let mut handles = Vec::new();
-                    for batch in per_device {
-                        let weights = &weights;
-                        handles.push(scope.spawn(move || {
-                            let mut outs = Vec::new();
-                            for (e, x) in batch {
-                                outs.push((e, weights[e].forward(&x)));
-                            }
-                            outs
-                        }));
-                    }
-                    for h in handles {
-                        let outs = h
-                            .join()
-                            .map_err(|_| anyhow!("expert shard panicked"))?;
-                        for (e, y) in outs {
-                            waves_total += 1;
-                            outputs[e] = Some(y);
-                        }
-                    }
-                    Ok(())
-                })?;
-            }
-        }
+        // experts run serialized here, so the compute critical path is
+        // the sum of per-shard busy time and a shard's idle is its wait
+        // on the other shards — gather/combine excluded, matching the
+        // engine's artifact-path accounting
+        let compute_serialized: u64 = shard_compute.iter().sum();
+        phases.compute = compute_serialized;
 
-        let expert_outputs: Vec<TensorF> = outputs
-            .into_iter()
-            .enumerate()
-            .map(|(e, o)| o.ok_or_else(|| anyhow!("expert {e} missing output")))
-            .collect::<Result<_>>()?;
+        let t2 = Instant::now();
         let combined = Dispatcher::combine(plan, &expert_outputs, d_model);
+        phases.combine = t2.elapsed().as_nanos() as u64;
 
-        let loads = plan.expert_loads();
-        let mut shard_tokens = vec![0usize; self.layout.n_devices];
-        for (e, &l) in loads.iter().enumerate() {
-            shard_tokens[self.layout.owner(e)] += l;
-        }
-        let stats = StepStats {
-            busiest_shard_tokens: shard_tokens.iter().copied().max().unwrap_or(0),
-            expert_loads: loads,
-            waves: waves_total,
-            network_bytes: plan.network_bytes(d_model),
-        };
+        let stats = build_stats(
+            &self.layout,
+            plan,
+            d_model,
+            waves_max,
+            phases,
+            shard_compute,
+            compute_serialized,
+        );
         Ok((combined, stats))
     }
 }
 
 /// Run one expert over its (len, d) batch; returns (output, waves used).
-fn run_expert(
+pub(crate) fn run_expert(
     backend: &ExpertBackend,
     w: &ExpertWeights,
     x: &TensorF,
 ) -> Result<(TensorF, usize)> {
     let (len, d) = (x.shape[0], x.shape[1]);
+    if len == 0 {
+        return Ok((TensorF::zeros(vec![0, d]), 0));
+    }
     match backend {
         ExpertBackend::Native => Ok((w.forward(x), 1)),
         ExpertBackend::Artifact { exe, capacity } => {
-            let cap = *capacity;
+            let cap = (*capacity).max(1);
             let h = w.hidden;
             let w_in = Host::F32(TensorF::new(vec![d, h], w.w_in.clone()));
             let w_out = Host::F32(TensorF::new(vec![h, d], w.w_out.clone()));
             let mut out = Vec::with_capacity(len * d);
             let mut waves = 0usize;
             let mut start = 0usize;
-            while start < len || (len == 0 && waves == 0) {
+            while start < len {
                 let take = cap.min(len - start);
                 let mut chunk = vec![0f32; cap * d];
                 chunk[..take * d]
@@ -213,12 +328,6 @@ fn run_expert(
                 out.extend_from_slice(&y.data[..take * d]);
                 start += take;
                 waves += 1;
-                if len == 0 {
-                    break;
-                }
-            }
-            if len == 0 {
-                return Ok((TensorF::zeros(vec![0, d]), 0));
             }
             Ok((TensorF::new(vec![len, d], out), waves))
         }
@@ -235,7 +344,8 @@ mod tests {
     fn shard_layout_partitions_all_experts() {
         prop::forall("layout partition", |rng| {
             let devices = prop::dim(rng, 1, 8);
-            let experts = prop::dim(rng, devices, 64);
+            // deliberately allows the degenerate devices > experts case
+            let experts = prop::dim(rng, 1, 64);
             let layout = ShardLayout::new(devices, experts);
             let mut covered = vec![false; experts];
             for d in 0..devices {
@@ -290,10 +400,10 @@ mod tests {
         let refs: Vec<&TensorF> = xs.iter().collect();
 
         for devices in [1, 2, 4] {
-            let sched = Scheduler {
-                layout: ShardLayout::new(devices, n),
-                backend: ExpertBackend::Native,
-            };
+            let sched = Scheduler::new(
+                ShardLayout::new(devices, n),
+                ExpertBackend::Native,
+            );
             let (outs, stats) = sched.execute(&plan, &refs, &weights).unwrap();
             // reference: per token, sum gate * expert(x)
             for (ri, x) in xs.iter().enumerate() {
@@ -312,6 +422,37 @@ mod tests {
                 }
             }
             assert_eq!(stats.expert_loads.iter().sum::<usize>(), 3 * rows * k);
+            assert_eq!(stats.shard_compute_ns.len(), devices);
+            assert_eq!(stats.shard_idle_ns.len(), devices);
+        }
+    }
+
+    #[test]
+    fn repeated_steps_reuse_the_engine() {
+        // the persistent engine must give identical answers across many
+        // steps through one Scheduler (arenas fully reset between steps)
+        let (d, h, n, k, rows) = (5, 7, 6, 2, 9);
+        let mut rng = Rng::new(12);
+        let weights = mk_weights(n, d, h, &mut rng);
+        let router = Router::flat_native(
+            d, n, k,
+            prop::vec_f32(&mut rng, d * n, 0.5),
+            Some(prop::vec_f32(&mut rng, d * n, 0.3)),
+        );
+        let sched = Scheduler::new(ShardLayout::new(3, n), ExpertBackend::Native);
+        for step in 0..5 {
+            let x = TensorF::new(
+                vec![rows, d],
+                prop::vec_f32(&mut rng, rows * d, 1.0),
+            );
+            let mut nrng = rng.fold_in(100 + step);
+            let dec = router.route(&x, Some(&mut nrng)).unwrap();
+            let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
+            let (fast, _) = sched.execute(&plan, &[&x], &weights).unwrap();
+            let (slow, _) = sched.execute_serial(&plan, &[&x], &weights).unwrap();
+            for (a, b) in fast[0].data.iter().zip(slow[0].data.iter()) {
+                assert!((a - b).abs() <= 1e-5, "step {step}: {a} vs {b}");
+            }
         }
     }
 
@@ -334,13 +475,11 @@ mod tests {
         };
         let x = TensorF::new(vec![5, d], prop::vec_f32(&mut rng, 5 * d, 1.0));
         let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
-        let sched = Scheduler {
-            layout: ShardLayout::new(2, n),
-            backend: ExpertBackend::Native,
-        };
+        let sched = Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
         let (outs, stats) = sched.execute(&plan, &[&x], &weights).unwrap();
         assert_eq!(outs[0].shape, vec![5, d]);
         assert_eq!(stats.expert_loads, vec![5, 0, 0, 0]);
         assert_eq!(stats.busiest_shard_tokens, 5);
+        assert_eq!(stats.waves, 1);
     }
 }

@@ -164,19 +164,44 @@ pub fn compose_hierarchical(
     GateVec { experts, weights }
 }
 
+/// Cache-blocked row-major (m,k) x (k,n) -> (m,n).
+///
+/// Blocks over k and n so each `KB x JB` panel of `b` stays in L1/L2
+/// while `m` rows stream through it, with a 4-wide unrolled inner loop.
+/// For any fixed output element the reduction still runs over `l` in
+/// increasing order (k-blocks are visited in order and addition is
+/// commutative across the j-unroll), so results are bit-identical to the
+/// naive triple loop — the engine differential tests rely on this.
 pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    // row-major (m,k) x (k,n) -> (m,n); k-inner loop order for locality
+    const KB: usize = 64;
+    const JB: usize = 256;
     out.fill(0.0);
-    for i in 0..m {
-        for l in 0..k {
-            let av = a[i * k + l];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[l * n..(l + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
+    for kb in (0..k).step_by(KB) {
+        let k_end = (kb + KB).min(k);
+        for jb in (0..n).step_by(JB) {
+            let j_end = (jb + JB).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n + jb..i * n + j_end];
+                for (l, &av) in arow[kb..k_end].iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(kb + l) * n + jb..(kb + l) * n + j_end];
+                    let chunks = orow.len() & !3;
+                    let mut j = 0;
+                    while j < chunks {
+                        orow[j] += av * brow[j];
+                        orow[j + 1] += av * brow[j + 1];
+                        orow[j + 2] += av * brow[j + 2];
+                        orow[j + 3] += av * brow[j + 3];
+                        j += 4;
+                    }
+                    while j < orow.len() {
+                        orow[j] += av * brow[j];
+                        j += 1;
+                    }
+                }
             }
         }
     }
@@ -257,6 +282,31 @@ mod tests {
                 (total - want).abs() < want * 0.5,
                 "total={total} want≈{want}"
             );
+        });
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_reference() {
+        prop::forall("blocked matmul", |rng| {
+            let m = prop::dim(rng, 1, 9);
+            // spans the KB=64 / JB=256 block edges
+            let k = prop::dim(rng, 1, 70);
+            let n = prop::dim(rng, 1, 300);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut fast = vec![0f32; m * n];
+            matmul(&a, &b, &mut fast, m, k, n);
+            let mut naive = vec![0f32; m * n];
+            for i in 0..m {
+                for l in 0..k {
+                    for j in 0..n {
+                        naive[i * n + j] += a[i * k + l] * b[l * n + j];
+                    }
+                }
+            }
+            for (f, v) in fast.iter().zip(naive.iter()) {
+                assert_eq!(f, v, "blocked matmul must be bit-exact");
+            }
         });
     }
 

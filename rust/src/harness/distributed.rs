@@ -114,7 +114,7 @@ pub fn run_distributed_demo(artifacts: &str, cfg: &str, devices: usize,
     } else {
         ExpertBackend::Native
     };
-    let sched = Scheduler { layout: ShardLayout::new(devices, c.n_experts), backend };
+    let sched = Scheduler::new(ShardLayout::new(devices, c.n_experts), backend);
     let mut meter = BalanceMeter::new(c.n_experts);
     let cluster = ClusterSpec::k40s(devices);
     let ops = OpsModel::from_config(&c);
@@ -155,16 +155,23 @@ pub fn run_distributed_demo(artifacts: &str, cfg: &str, devices: usize,
                      &merge_vec(&decisions, |d| &d.load), &counts);
         let timing = model_step(&c, &cluster, tokens_per_replica, &counts);
         if step < 3 || step + 1 == steps {
+            let idle_max =
+                stats.shard_idle_ns.iter().copied().max().unwrap_or(0);
             println!(
                 "step {:>3}: routes={:<6} busiest_shard={:<5} waves={:<3} \
-                 net={:>8}B  wall={:.3}s  modelled: dense {:.1}ms + moe {:.1}ms \
-                 + a2a {:.1}ms",
+                 net={:>8}B  wall={:.3}s  measured: gather {:.2}ms + compute \
+                 {:.2}ms + combine {:.2}ms (max shard idle {:.2}ms)  \
+                 modelled: dense {:.1}ms + moe {:.1}ms + a2a {:.1}ms",
                 step,
                 plan.total_routes(),
                 stats.busiest_shard_tokens,
                 stats.waves,
                 stats.network_bytes,
                 wall,
+                stats.phases.gather as f64 / 1e6,
+                stats.phases.compute as f64 / 1e6,
+                stats.phases.combine as f64 / 1e6,
+                idle_max as f64 / 1e6,
                 timing.dense_time * 1e3,
                 timing.moe_compute_time * 1e3,
                 timing.all_to_all_time * 1e3,
@@ -207,10 +214,60 @@ fn merge_vec<'a, F: Fn(&'a crate::coordinator::router::RoutingDecision) -> &'a [
     out
 }
 
+/// Measured §3.1 economics on the persistent execution engine: runs a
+/// synthetic Native-backend MoE step (no artifacts needed) and reports
+/// the per-phase breakdown plus the busiest-shard wait, next to the
+/// retained serial reference path.
+pub fn measured_engine_report(devices: usize, tokens: usize) -> Result<()> {
+    let devices = devices.max(1);
+    let (d, h, n, k) = (64, 256, 64.max(devices), 4);
+    let rows = (tokens / devices).max(1);
+    let work = crate::harness::workload::SyntheticMoe::build(
+        41, d, h, n, k, devices, rows,
+    )?;
+    let refs = work.refs();
+    let sched = Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native);
+    println!(
+        "# measured engine step: {} experts (k={k}) on {} simulated \
+         devices, {} tokens",
+        n,
+        devices,
+        work.tokens()
+    );
+    sched.execute(&work.plan, &refs, &work.weights)?; // warm the engine + arenas
+    for (name, serial) in [("persistent engine", false), ("serial reference", true)] {
+        let t0 = std::time::Instant::now();
+        let (_outs, stats) = if serial {
+            sched.execute_serial(&work.plan, &refs, &work.weights)?
+        } else {
+            sched.execute(&work.plan, &refs, &work.weights)?
+        };
+        println!(
+            "{:<18} wall {:>8.3}ms  {}",
+            name,
+            t0.elapsed().as_secs_f64() * 1e3,
+            crate::harness::workload::phase_line(&stats),
+        );
+    }
+    Ok(())
+}
+
 /// §5.1 computational-efficiency table: modelled TFLOPS/GPU per config on
-/// the simulated K40 cluster, at balanced and at collapsed routing.
-pub fn efficiency_report(artifacts: &str, devices: usize) -> Result<()> {
-    let manifest = Manifest::load(artifacts)?;
+/// the simulated K40 cluster, at balanced and at collapsed routing,
+/// preceded by the measured engine breakdown (which needs no artifacts).
+pub fn efficiency_report(artifacts: &str, devices: usize, tokens: usize)
+    -> Result<()> {
+    measured_engine_report(devices, tokens)?;
+    let manifest = match Manifest::load(artifacts) {
+        Ok(m) => m,
+        Err(e) => {
+            println!(
+                "(skipping modelled table: {e}; the measured section above \
+                 is artifact-free)"
+            );
+            return Ok(());
+        }
+    };
     let cluster = ClusterSpec::k40s(devices);
     println!(
         "# modelled computational efficiency, {} simulated K40s",

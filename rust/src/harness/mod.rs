@@ -4,5 +4,7 @@
 pub mod distributed;
 pub mod experiments;
 pub mod tables;
+pub mod workload;
 
 pub use experiments::{run_lm_experiment, LmRun};
+pub use workload::SyntheticMoe;

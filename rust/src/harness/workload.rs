@@ -1,0 +1,118 @@
+//! Synthetic Native-backend MoE workloads, shared by the measured
+//! efficiency report and the bench targets so the expert/router/plan
+//! construction lives in exactly one place.
+
+use anyhow::Result;
+
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::{ExpertWeights, StepStats};
+use crate::coordinator::{DispatchPlan, Dispatcher};
+use crate::runtime::TensorF;
+use crate::util::rng::Rng;
+
+/// A fully routed synthetic MoE step: expert weights, gating router,
+/// per-replica activations and the resulting dispatch plan.
+pub struct SyntheticMoe {
+    pub d_model: usize,
+    pub hidden: usize,
+    pub n_experts: usize,
+    pub k: usize,
+    pub weights: Vec<ExpertWeights>,
+    pub router: Router,
+    pub xs: Vec<TensorF>,
+    pub plan: DispatchPlan,
+}
+
+impl SyntheticMoe {
+    /// Build `replicas` activations of `rows` tokens each, noisy-top-k
+    /// routed over `n` experts, from a deterministic seed.
+    pub fn build(
+        seed: u64,
+        d: usize,
+        h: usize,
+        n: usize,
+        k: usize,
+        replicas: usize,
+        rows: usize,
+    ) -> Result<Self> {
+        let mut rng = Rng::new(seed);
+        let weights = (0..n)
+            .map(|_| ExpertWeights {
+                w_in: (0..d * h).map(|_| rng.normal_f32() * 0.2).collect(),
+                w_out: (0..h * d).map(|_| rng.normal_f32() * 0.2).collect(),
+                d_model: d,
+                hidden: h,
+            })
+            .collect();
+        let router = Router::flat_native(
+            d,
+            n,
+            k,
+            (0..d * n).map(|_| rng.normal_f32() * 0.4).collect(),
+            Some((0..d * n).map(|_| rng.normal_f32() * 0.4).collect()),
+        );
+        let xs: Vec<TensorF> = (0..replicas)
+            .map(|_| {
+                TensorF::new(
+                    vec![rows, d],
+                    (0..rows * d).map(|_| rng.normal_f32()).collect(),
+                )
+            })
+            .collect();
+        let mut nrng = rng.fold_in(1);
+        let decisions: Vec<_> = xs
+            .iter()
+            .map(|x| router.route(x, Some(&mut nrng)))
+            .collect::<Result<_>>()?;
+        let plan = Dispatcher::plan(&decisions, n);
+        Ok(SyntheticMoe {
+            d_model: d,
+            hidden: h,
+            n_experts: n,
+            k,
+            weights,
+            router,
+            xs,
+            plan,
+        })
+    }
+
+    /// Borrowed replica activations in `Scheduler::execute` form.
+    pub fn refs(&self) -> Vec<&TensorF> {
+        self.xs.iter().collect()
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.xs.iter().map(|x| x.shape[0]).sum()
+    }
+}
+
+/// One-line rendering of a step's per-phase breakdown (shared by the
+/// benches and the efficiency report).
+pub fn phase_line(stats: &StepStats) -> String {
+    format!(
+        "gather {:.3}ms  compute {:.3}ms  combine {:.3}ms  waves={}  \
+         busiest_shard={} tok  max shard idle {:.3}ms",
+        stats.phases.gather as f64 / 1e6,
+        stats.phases.compute as f64 / 1e6,
+        stats.phases.combine as f64 / 1e6,
+        stats.waves,
+        stats.busiest_shard_tokens,
+        stats.shard_idle_ns.iter().copied().max().unwrap_or(0) as f64 / 1e6,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_consistent_workload() {
+        let w = SyntheticMoe::build(3, 8, 16, 6, 2, 2, 10).unwrap();
+        assert_eq!(w.weights.len(), 6);
+        assert_eq!(w.xs.len(), 2);
+        assert_eq!(w.tokens(), 20);
+        assert_eq!(w.plan.total_routes(), 20 * 2);
+        assert_eq!(w.refs().len(), 2);
+    }
+}

@@ -66,7 +66,7 @@ fn usage() -> ! {
            table1 | table6 | table7 | table8 | table9   [--steps N]\n\
            fig2 [--side left|right] | fig4              [--steps N]\n\
            mt | mt5                                     [--steps N]\n\
-           efficiency   [--devices D]\n\
+           efficiency   [--devices D] [--tokens N]\n\
            info\n\
          common flags: --artifacts DIR (default: artifacts)"
     );
@@ -145,7 +145,10 @@ fn main() -> Result<()> {
         "mt5" => tables::mt_multi(&artifacts, steps)?,
         "efficiency" => {
             let devices = args.get_u64("devices", 16)? as usize;
-            moe::harness::distributed::efficiency_report(&artifacts, devices)?;
+            let tokens = args.get_u64("tokens", 8192)? as usize;
+            moe::harness::distributed::efficiency_report(
+                &artifacts, devices, tokens,
+            )?;
         }
         "info" => {
             let engine = Engine::new()?;

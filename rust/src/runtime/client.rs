@@ -85,11 +85,26 @@ impl Engine {
     }
 }
 
+/// Wall-clock breakdown of one artifact execution: host-to-literal
+/// staging, device execution, output decode.  The PJRT analogue of the
+/// coordinator's gather/compute/combine phase split.
+#[derive(Clone, Debug, Default)]
+pub struct ExecPhases {
+    pub h2d_ns: u64,
+    pub exec_ns: u64,
+    pub d2h_ns: u64,
+}
+
 impl Executable {
     /// Execute with host tensors; returns the output leaves in manifest
     /// order.  Input shapes/dtypes are validated against the signature so
     /// a stale artifact fails loudly rather than numerically.
     pub fn run(&self, inputs: &[Host]) -> Result<Vec<Host>> {
+        self.run_phased(inputs).map(|(outs, _)| outs)
+    }
+
+    /// [`run`](Self::run) with a per-phase timing breakdown.
+    pub fn run_phased(&self, inputs: &[Host]) -> Result<(Vec<Host>, ExecPhases)> {
         if inputs.len() != self.sig.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -109,17 +124,32 @@ impl Executable {
                 );
             }
         }
+        let mut phases = ExecPhases::default();
+        let t0 = Instant::now();
         let literals: Vec<Literal> = inputs
             .iter()
             .map(|h| h.to_literal())
             .collect::<Result<_>>()?;
-        self.run_literals(&literals)
+        phases.h2d_ns = t0.elapsed().as_nanos() as u64;
+        let outs = self.run_literals_phased(&literals, &mut phases)?;
+        Ok((outs, phases))
     }
 
     /// Execute pre-built literals (skips signature validation; used on the
     /// trainer hot loop where literals are reused across steps).
     pub fn run_literals(&self, literals: &[Literal]) -> Result<Vec<Host>> {
+        self.run_literals_phased(literals, &mut ExecPhases::default())
+    }
+
+    fn run_literals_phased(
+        &self,
+        literals: &[Literal],
+        phases: &mut ExecPhases,
+    ) -> Result<Vec<Host>> {
+        let t0 = Instant::now();
         let result = self.exe.execute::<Literal>(literals)?;
+        phases.exec_ns = t0.elapsed().as_nanos() as u64;
+        let t1 = Instant::now();
         let tuple = result[0][0]
             .to_literal_sync()
             .context("fetching output tuple")?;
@@ -133,10 +163,12 @@ impl Executable {
                 self.sig.outputs.len()
             );
         }
-        leaves
+        let outs: Result<Vec<Host>> = leaves
             .iter()
             .zip(self.sig.outputs.iter())
             .map(|(lit, sig)| Host::from_literal(lit, sig.dtype))
-            .collect()
+            .collect();
+        phases.d2h_ns = t1.elapsed().as_nanos() as u64;
+        outs
     }
 }

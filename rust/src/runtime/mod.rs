@@ -10,6 +10,6 @@ pub mod client;
 pub mod manifest;
 pub mod tensor;
 
-pub use client::{Engine, Executable};
+pub use client::{Engine, ExecPhases, Executable};
 pub use manifest::{ConfigEntry, Manifest, ModelConfig};
 pub use tensor::{DType, Host, Tensor, TensorF, TensorI};

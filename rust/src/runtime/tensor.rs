@@ -58,6 +58,26 @@ impl<T: Copy + Default> Tensor<T> {
         let cols = self.shape[self.rank() - 1];
         &self.data[i * cols..(i + 1) * cols]
     }
+
+    // -- borrowed-buffer API -------------------------------------------
+    //
+    // The execution engine reuses gather/compute/combine storage across
+    // steps; these constructors let a tensor adopt (and later release) a
+    // caller-owned allocation instead of allocating per step.
+
+    /// Build a zero-filled tensor on top of a recycled buffer, reusing
+    /// its allocation (the buffer is cleared first).
+    pub fn from_buffer(shape: Vec<usize>, mut buf: Vec<T>) -> Self {
+        let n = shape.iter().product();
+        buf.clear();
+        buf.resize(n, T::default());
+        Tensor { shape, data: buf }
+    }
+
+    /// Consume the tensor, releasing its backing buffer for reuse.
+    pub fn into_buffer(self) -> Vec<T> {
+        self.data
+    }
 }
 
 impl<T: NativeType + ArrayElement + Copy + Default> Tensor<T> {
@@ -172,6 +192,17 @@ mod tests {
     #[should_panic]
     fn tensor_shape_mismatch_panics() {
         TensorF::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn buffer_reuse_roundtrip() {
+        let t = TensorF::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let buf = t.into_buffer();
+        let cap = buf.capacity();
+        let t2 = TensorF::from_buffer(vec![1, 4], buf);
+        assert_eq!(t2.shape, vec![1, 4]);
+        assert_eq!(t2.data, vec![0.0; 4]);
+        assert!(t2.data.capacity() >= cap.min(4));
     }
 
     #[test]

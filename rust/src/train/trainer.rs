@@ -12,7 +12,10 @@ use anyhow::{Context, Result};
 
 use crate::data::Batcher;
 use crate::metrics::perplexity;
-use crate::runtime::{ConfigEntry, Engine, Executable, Host, Manifest, TensorF, TensorI};
+use crate::runtime::{
+    ConfigEntry, Engine, ExecPhases, Executable, Host, Manifest, TensorF,
+    TensorI,
+};
 
 /// Decoded metrics vector of one step (names from the manifest).
 #[derive(Clone, Debug)]
@@ -28,10 +31,14 @@ pub struct StepMetrics {
     pub grad_norm: f64,
     pub lr: f64,
     pub step_time: f64,
+    /// stage-in / execute / stage-out breakdown of the step artifact
+    /// call, mirroring the coordinator's gather/compute/combine split
+    pub phases: ExecPhases,
 }
 
 impl StepMetrics {
-    fn from_vec(step: u64, names: &[String], v: &[f32], dt: f64) -> Self {
+    fn from_vec(step: u64, names: &[String], v: &[f32], dt: f64,
+                phases: ExecPhases) -> Self {
         let get = |n: &str| {
             names
                 .iter()
@@ -51,6 +58,7 @@ impl StepMetrics {
             grad_norm: get("grad_norm"),
             lr: get("lr"),
             step_time: dt,
+            phases,
         }
     }
 }
@@ -115,7 +123,7 @@ impl Trainer {
     pub fn step(&self, state: &mut TrainState, tokens: &TensorI)
         -> Result<StepMetrics> {
         let t0 = Instant::now();
-        let outs = self.step_exe.run(&[
+        let (outs, phases) = self.step_exe.run_phased(&[
             Host::F32(std::mem::replace(&mut state.params, TensorF::zeros(vec![0]))),
             Host::F32(std::mem::replace(&mut state.m, TensorF::zeros(vec![0]))),
             Host::F32(std::mem::replace(&mut state.v, TensorF::zeros(vec![0]))),
@@ -132,6 +140,7 @@ impl Trainer {
             &self.entry.metric_names,
             &metrics.data,
             t0.elapsed().as_secs_f64(),
+            phases,
         );
         state.step += 1;
         Ok(sm)

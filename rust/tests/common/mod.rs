@@ -1,0 +1,25 @@
+//! Shared setup for the artifact-dependent test suites.
+
+use moe::runtime::{Engine, Manifest};
+
+/// Artifact-dependent tests skip (with a note) instead of panicking
+/// when the PJRT engine or `artifacts/manifest.json` is absent, so
+/// `cargo test -q` passes on a bare checkout.  Run `make artifacts`
+/// with the real xla toolchain to activate them.
+pub fn setup_artifacts(suite: &str) -> Option<(Engine, Manifest)> {
+    let engine = match Engine::new() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP {suite} test (PJRT engine unavailable): {e}");
+            return None;
+        }
+    };
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP {suite} test (run `make artifacts`): {e}");
+            return None;
+        }
+    };
+    Some((engine, manifest))
+}

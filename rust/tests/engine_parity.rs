@@ -1,0 +1,309 @@
+//! Differential proof that the persistent [`ExecutionEngine`] computes
+//! exactly the same MoE step as the retained serial reference path.
+//!
+//! None of these tests need artifacts: the Native backend exercises the
+//! whole engine — persistent workers, arena reuse, wave chunking and the
+//! gather/compute/combine pipeline — against pure-rust oracles, across
+//! `util::prop::forall` randomized cases (replica counts, shard counts,
+//! k, degenerate layouts, over-capacity waves).
+
+use moe::coordinator::engine::ExecutionEngine;
+use moe::coordinator::router::Router;
+use moe::coordinator::scheduler::{
+    ExpertBackend, ExpertWeights, Scheduler, ShardLayout,
+};
+use moe::coordinator::{DispatchPlan, Dispatcher};
+use moe::runtime::TensorF;
+use moe::util::prop;
+use moe::util::rng::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn mk_weights(n: usize, d: usize, h: usize, rng: &mut Rng) -> Vec<ExpertWeights> {
+    (0..n)
+        .map(|_| ExpertWeights {
+            w_in: prop::vec_f32(rng, d * h, 0.3),
+            w_out: prop::vec_f32(rng, h * d, 0.3),
+            d_model: d,
+            hidden: h,
+        })
+        .collect()
+}
+
+/// Random replicas + routing decisions + plan for one case.
+fn mk_case(
+    rng: &mut Rng,
+    d: usize,
+    n: usize,
+    k: usize,
+    replicas: usize,
+) -> (Vec<TensorF>, DispatchPlan) {
+    let router = Router::flat_native(
+        d, n, k,
+        prop::vec_f32(rng, d * n, 0.5),
+        Some(prop::vec_f32(rng, d * n, 0.3)),
+    );
+    let xs: Vec<TensorF> = (0..replicas)
+        .map(|_| {
+            let rows = prop::dim(rng, 1, 12);
+            TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0))
+        })
+        .collect();
+    let mut nrng = rng.fold_in(17);
+    let decisions: Vec<_> = xs
+        .iter()
+        .map(|x| router.route(x, Some(&mut nrng)).unwrap())
+        .collect();
+    let plan = Dispatcher::plan(&decisions, n);
+    (xs, plan)
+}
+
+#[test]
+fn engine_matches_serial_reference_on_random_workloads() {
+    prop::forall("engine == serial", |rng| {
+        let d = prop::dim(rng, 2, 10);
+        let h = prop::dim(rng, 2, 14);
+        let n = prop::dim(rng, 1, 20);
+        let k = prop::dim(rng, 1, n.min(4));
+        let replicas = prop::dim(rng, 1, 4);
+        // deliberately includes devices > experts
+        let devices = prop::dim(rng, 1, n + 3);
+        let weights = mk_weights(n, d, h, rng);
+        let (xs, plan) = mk_case(rng, d, n, k, replicas);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+
+        let layout = ShardLayout::new(devices, n);
+        let sched = Scheduler::new(layout.clone(), ExpertBackend::Native);
+        let (want, ref_stats) =
+            sched.execute_serial(&plan, &refs, &weights).unwrap();
+        let (got, stats) = sched.execute(&plan, &refs, &weights).unwrap();
+
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.shape, w.shape);
+            for (a, b) in g.data.iter().zip(w.data.iter()) {
+                assert!((a - b).abs() <= TOL, "engine {a} vs serial {b}");
+            }
+        }
+        assert_eq!(stats.expert_loads, ref_stats.expert_loads);
+        assert_eq!(stats.network_bytes, ref_stats.network_bytes);
+        assert_eq!(stats.busiest_shard_tokens, ref_stats.busiest_shard_tokens);
+    });
+}
+
+#[test]
+fn over_capacity_waves_match_unchunked_execution() {
+    // a wave capacity smaller than the heaviest expert batch forces
+    // multi-wave pipelined execution; the math must not change
+    prop::forall("waves exact", |rng| {
+        let (d, h) = (6, 8);
+        let n = prop::dim(rng, 1, 8);
+        let k = prop::dim(rng, 1, n.min(3));
+        let devices = prop::dim(rng, 1, 6);
+        let weights = mk_weights(n, d, h, rng);
+        let (xs, plan) = mk_case(rng, d, n, k, 2);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let layout = ShardLayout::new(devices, n);
+
+        let mut unchunked = ExecutionEngine::start(layout.clone());
+        let (want, base_stats) =
+            unchunked.execute_native(&plan, &refs, &weights).unwrap();
+
+        let max_load =
+            plan.expert_loads().into_iter().max().unwrap_or(0).max(1);
+        let cap = prop::dim(rng, 1, max_load);
+        let mut chunked =
+            ExecutionEngine::with_wave_capacity(layout, Some(cap));
+        let (got, stats) =
+            chunked.execute_native(&plan, &refs, &weights).unwrap();
+
+        for (g, w) in got.iter().zip(want.iter()) {
+            for (a, b) in g.data.iter().zip(w.data.iter()) {
+                assert!((a - b).abs() <= TOL, "cap={cap}: {a} vs {b}");
+            }
+        }
+        let want_waves = plan
+            .expert_loads()
+            .iter()
+            .map(|&l| if l == 0 { 0 } else { 1 + (l - 1) / cap })
+            .max()
+            .unwrap_or(0);
+        assert_eq!(stats.waves, want_waves, "cap={cap}");
+        if plan.total_routes() > 0 {
+            assert!(base_stats.waves == 1);
+            assert!(stats.waves >= 1);
+        }
+    });
+}
+
+#[test]
+fn combine_is_linear_in_gate_weights() {
+    // y[token] = Σ_e g_e · E_e(x): scaling every gate by α must scale
+    // the combined output by α, and combine must be additive over
+    // expert outputs (eq 1 linearity)
+    prop::forall("combine linearity", |rng| {
+        let (d, n, k) = (5, 6, 2);
+        let (xs, plan) = mk_case(rng, d, n, k, 2);
+        let _ = &xs;
+        let outs_a: Vec<TensorF> = (0..n)
+            .map(|e| {
+                let rows = plan.per_expert[e].tokens.len();
+                TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0))
+            })
+            .collect();
+        let outs_b: Vec<TensorF> = (0..n)
+            .map(|e| {
+                let rows = plan.per_expert[e].tokens.len();
+                TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0))
+            })
+            .collect();
+
+        // α-scaled gates
+        let alpha = 0.5f32 + rng.uniform() as f32;
+        let mut scaled = plan.clone();
+        for batch in scaled.per_expert.iter_mut() {
+            for g in batch.gates.iter_mut() {
+                *g *= alpha;
+            }
+        }
+        let base = Dispatcher::combine(&plan, &outs_a, d);
+        let scaled_out = Dispatcher::combine(&scaled, &outs_a, d);
+        for (b, s) in base.iter().zip(scaled_out.iter()) {
+            for (x, y) in b.data.iter().zip(s.data.iter()) {
+                assert!((alpha * x - y).abs() <= TOL * alpha.max(1.0),
+                        "{} vs {}", alpha * x, y);
+            }
+        }
+
+        // additivity over expert outputs
+        let sum_outs: Vec<TensorF> = outs_a
+            .iter()
+            .zip(outs_b.iter())
+            .map(|(a, b)| {
+                TensorF::new(
+                    a.shape.clone(),
+                    a.data.iter().zip(b.data.iter()).map(|(x, y)| x + y).collect(),
+                )
+            })
+            .collect();
+        let ya = Dispatcher::combine(&plan, &outs_a, d);
+        let yb = Dispatcher::combine(&plan, &outs_b, d);
+        let ysum = Dispatcher::combine(&plan, &sum_outs, d);
+        for ((a, b), s) in ya.iter().zip(yb.iter()).zip(ysum.iter()) {
+            for ((x, y), z) in
+                a.data.iter().zip(b.data.iter()).zip(s.data.iter()) {
+                assert!((x + y - z).abs() <= 1e-4, "{} vs {z}", x + y);
+            }
+        }
+    });
+}
+
+#[test]
+fn shard_layout_properties() {
+    // every expert has exactly one owner, owner(e) < n_devices, and
+    // experts_of partitions 0..n_experts — including devices > experts
+    prop::forall("shard layout", |rng| {
+        let devices = prop::dim(rng, 1, 12);
+        let experts = prop::dim(rng, 1, 48);
+        let layout = ShardLayout::new(devices, experts);
+        let mut owners = vec![usize::MAX; experts];
+        for e in 0..experts {
+            let o = layout.owner(e);
+            assert!(o < devices, "owner({e}) = {o} >= {devices}");
+            owners[e] = o;
+        }
+        let mut covered = vec![0usize; experts];
+        for dev in 0..devices {
+            for e in layout.experts_of(dev) {
+                assert!(e < experts);
+                assert_eq!(owners[e], dev);
+                covered[e] += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "not a partition: {covered:?}");
+    });
+}
+
+#[test]
+fn shard_layout_degenerate_more_devices_than_experts() {
+    let layout = ShardLayout::new(8, 3);
+    let mut total = 0;
+    for dev in 0..8 {
+        total += layout.experts_of(dev).len();
+    }
+    assert_eq!(total, 3, "all experts assigned despite idle devices");
+    for e in 0..3 {
+        assert!(layout.owner(e) < 8);
+    }
+}
+
+#[test]
+fn native_step_smoke_stats_invariants() {
+    // one tiny Native-backend step through the public Scheduler path;
+    // asserts the StepStats contract end to end
+    let (d, h, n, k, devices) = (16, 32, 8, 2, 3);
+    let mut rng = Rng::new(33);
+    let weights = mk_weights(n, d, h, &mut rng);
+    let router = Router::flat_native(
+        d, n, k,
+        prop::vec_f32(&mut rng, d * n, 0.5),
+        Some(prop::vec_f32(&mut rng, d * n, 0.3)),
+    );
+    let rows = 256;
+    let x = TensorF::new(vec![rows, d], prop::vec_f32(&mut rng, rows * d, 1.0));
+    let mut nrng = rng.fold_in(2);
+    let dec = router.route(&x, Some(&mut nrng)).unwrap();
+    let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
+    let sched = Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native);
+    let (outs, stats) = sched.execute(&plan, &[&x], &weights).unwrap();
+
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape, vec![rows, d]);
+    assert!(stats.waves >= 1, "waves = {}", stats.waves);
+    assert_eq!(stats.network_bytes, plan.network_bytes(d));
+    assert_eq!(
+        stats.expert_loads.iter().sum::<usize>(),
+        plan.total_routes(),
+        "loads must sum to total routes"
+    );
+    assert_eq!(stats.expert_loads, plan.expert_loads());
+    assert_eq!(stats.shard_compute_ns.len(), devices);
+    assert_eq!(stats.shard_idle_ns.len(), devices);
+    assert!(
+        stats.phases.total() > 0,
+        "per-phase timings must be populated: {:?}",
+        stats.phases
+    );
+    assert!(
+        stats.busiest_shard_tokens
+            <= stats.expert_loads.iter().sum::<usize>()
+    );
+    // every shard's idle is bounded by the compute-phase wall
+    for (busy, idle) in
+        stats.shard_compute_ns.iter().zip(stats.shard_idle_ns.iter()) {
+        assert!(busy + idle >= stats.phases.compute || *idle == 0);
+    }
+}
+
+#[test]
+fn engine_is_reusable_across_many_steps_and_shapes() {
+    // one engine, many plans of different shapes: arenas must never leak
+    // state between steps
+    let (d, h, n) = (4, 6, 5);
+    let mut rng = Rng::new(9);
+    let weights = mk_weights(n, d, h, &mut rng);
+    let layout = ShardLayout::new(2, n);
+    let mut engine = ExecutionEngine::with_wave_capacity(layout.clone(), Some(3));
+    let sched = Scheduler::new(layout, ExpertBackend::Native);
+    for step in 0..8 {
+        let (xs, plan) = mk_case(&mut rng, d, n, 1 + step % 3, 1 + step % 2);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let (want, _) = sched.execute_serial(&plan, &refs, &weights).unwrap();
+        let (got, _) = engine.execute_native(&plan, &refs, &weights).unwrap();
+        for (g, w) in got.iter().zip(want.iter()) {
+            for (a, b) in g.data.iter().zip(w.data.iter()) {
+                assert!((a - b).abs() <= TOL, "step {step}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,21 +1,20 @@
 //! End-to-end integration over the runtime + trainer + coordinator.
 //! Requires `make artifacts`.
 
+mod common;
+
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
 use moe::data::Batcher;
 use moe::runtime::{Engine, Manifest};
 use moe::train::{checkpoint, Trainer};
 
-fn setup() -> (Engine, Manifest) {
-    let engine = Engine::new().expect("PJRT CPU client");
-    let manifest = Manifest::load("artifacts")
-        .expect("artifacts/manifest.json missing — run `make artifacts`");
-    (engine, manifest)
+fn setup() -> Option<(Engine, Manifest)> {
+    common::setup_artifacts("integration")
 }
 
 #[test]
 fn training_reduces_loss_flat_moe() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
     let c = trainer.entry.config.clone();
     let corpus = TopicCorpus::new(CorpusSpec {
@@ -44,7 +43,7 @@ fn training_reduces_loss_flat_moe() {
 
 #[test]
 fn training_reduces_loss_hierarchical_moe() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer = Trainer::new(&engine, &manifest, "test-hier").unwrap();
     let c = trainer.entry.config.clone();
     let corpus = TopicCorpus::new(CorpusSpec {
@@ -59,7 +58,7 @@ fn training_reduces_loss_hierarchical_moe() {
 
 #[test]
 fn eval_perplexity_beats_uniform_after_training() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
     let c = trainer.entry.config.clone();
     let corpus = TopicCorpus::new(CorpusSpec {
@@ -93,7 +92,7 @@ fn eval_perplexity_beats_uniform_after_training() {
 
 #[test]
 fn checkpoint_roundtrip_through_trainer() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
     let c = trainer.entry.config.clone();
     let corpus = TopicCorpus::new(CorpusSpec {
@@ -119,7 +118,7 @@ fn checkpoint_roundtrip_through_trainer() {
 fn balance_losses_keep_experts_utilised() {
     // after training with w_importance = w_load = 0.1, no expert should be
     // starved (the §4 failure mode)
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
     let c = trainer.entry.config.clone();
     let corpus = TopicCorpus::new(CorpusSpec {
@@ -141,7 +140,7 @@ fn balance_losses_keep_experts_utilised() {
 #[test]
 fn decode_artifact_produces_finite_logits() {
     use moe::translate::BeamDecoder;
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer = Trainer::new(&engine, &manifest, "test-tiny").unwrap();
     let state = trainer.init(0).unwrap();
     let decoder = BeamDecoder::new(
@@ -164,7 +163,7 @@ fn decode_artifact_produces_finite_logits() {
 
 #[test]
 fn manifest_covers_every_expected_artifact_kind() {
-    let (_, manifest) = setup();
+    let Some((_, manifest)) = setup() else { return };
     let entry = manifest.config("test-tiny").unwrap();
     for kind in ["init", "step", "eval", "decode", "gating", "expert"] {
         assert!(
@@ -180,7 +179,7 @@ fn manifest_covers_every_expected_artifact_kind() {
 
 #[test]
 fn shape_mismatch_fails_loudly() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let exe = engine.load(&manifest, "test-tiny", "eval").unwrap();
     let bad = moe::runtime::Host::F32(moe::runtime::TensorF::zeros(vec![3]));
     let err = exe.run(&[bad.clone(), bad]).unwrap_err().to_string();

@@ -5,16 +5,15 @@
 //!
 //! Requires `make artifacts` (uses the test-tiny config).
 
+mod common;
+
 use moe::coordinator::router::{Router, RouterBackend};
 use moe::coordinator::scheduler::ExpertWeights;
 use moe::runtime::{Engine, Host, Manifest, TensorF};
 use moe::util::rng::Rng;
 
-fn setup() -> (Engine, Manifest) {
-    let engine = Engine::new().expect("PJRT CPU client");
-    let manifest = Manifest::load("artifacts")
-        .expect("artifacts/manifest.json missing — run `make artifacts`");
-    (engine, manifest)
+fn setup() -> Option<(Engine, Manifest)> {
+    common::setup_artifacts("parity")
 }
 
 fn perturbed_gates(d: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
@@ -26,7 +25,7 @@ fn perturbed_gates(d: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
 
 #[test]
 fn gating_artifact_matches_rust_mirror_deterministic() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let entry = manifest.config("test-tiny").unwrap().clone();
     let c = entry.config.clone();
     let (wg, wn) = perturbed_gates(c.d_model, c.n_experts, 3);
@@ -80,7 +79,7 @@ fn gating_artifact_matches_rust_mirror_deterministic() {
 
 #[test]
 fn expert_artifact_matches_rust_ffn() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let entry = manifest.config("test-tiny").unwrap().clone();
     let c = entry.config.clone();
     let exe = engine.load(&manifest, "test-tiny", "expert").unwrap();
@@ -118,7 +117,7 @@ fn distributed_moe_matches_monolithic_semantics() {
     use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
     use moe::coordinator::Dispatcher;
 
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let entry = manifest.config("test-tiny").unwrap().clone();
     let c = entry.config.clone();
     let mut rng = Rng::new(21);
@@ -144,13 +143,13 @@ fn distributed_moe_matches_monolithic_semantics() {
     );
     let dec = router.route(&x, None).unwrap();
     let plan = Dispatcher::plan(std::slice::from_ref(&dec), c.n_experts);
-    let sched = Scheduler {
-        layout: ShardLayout::new(2, c.n_experts),
-        backend: ExpertBackend::Artifact {
+    let sched = Scheduler::new(
+        ShardLayout::new(2, c.n_experts),
+        ExpertBackend::Artifact {
             exe: engine.load(&manifest, "test-tiny", "expert").unwrap(),
             capacity: c.capacity,
         },
-    };
+    );
     let (outs, _) = sched.execute(&plan, &[&x], &weights).unwrap();
     for (row, tok) in dec.per_token.iter().enumerate() {
         let xt = TensorF::new(vec![1, c.d_model], x.row(row).to_vec());
@@ -171,7 +170,7 @@ fn waves_handle_over_capacity_batches() {
     // a batch bigger than the artifact capacity must be processed in
     // multiple waves with identical numerics
     use moe::coordinator::scheduler::ExpertBackend;
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let entry = manifest.config("test-tiny").unwrap().clone();
     let c = entry.config.clone();
     let exe = engine.load(&manifest, "test-tiny", "expert").unwrap();
@@ -202,10 +201,10 @@ fn waves_handle_over_capacity_batches() {
         load: vec![len as f32],
     };
     let plan = Dispatcher::plan(std::slice::from_ref(&dec), 1);
-    let sched = Scheduler {
-        layout: ShardLayout::new(1, 1),
-        backend: ExpertBackend::Artifact { exe, capacity: c.capacity },
-    };
+    let sched = Scheduler::new(
+        ShardLayout::new(1, 1),
+        ExpertBackend::Artifact { exe, capacity: c.capacity },
+    );
     let (outs, stats) = sched
         .execute(&plan, &[&x], std::slice::from_ref(&w))
         .unwrap();
@@ -218,7 +217,7 @@ fn waves_handle_over_capacity_batches() {
 
 #[test]
 fn eval_artifact_is_deterministic() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer =
         moe::train::Trainer::new(&engine, &manifest, "test-tiny").unwrap();
     let state = trainer.init(7).unwrap();
@@ -236,7 +235,7 @@ fn eval_artifact_is_deterministic() {
 
 #[test]
 fn init_is_seed_dependent_but_reproducible() {
-    let (engine, manifest) = setup();
+    let Some((engine, manifest)) = setup() else { return };
     let trainer =
         moe::train::Trainer::new(&engine, &manifest, "test-tiny").unwrap();
     let a = trainer.init(0).unwrap();

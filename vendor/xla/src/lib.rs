@@ -1,0 +1,225 @@
+//! Vendored stub of the `xla` (PJRT) bindings.
+//!
+//! The real crate links libxla_extension, which is not in this container.
+//! This stub keeps the exact API surface `runtime/` compiles against:
+//!
+//! - [`Literal`] is FUNCTIONAL (host tensors round-trip through it, so
+//!   `runtime::tensor` conversions are fully testable);
+//! - [`PjRtClient::cpu`] returns an error, so `Engine::new()` fails
+//!   cleanly and every artifact-backed path reports "PJRT unavailable"
+//!   instead of crashing.  Native (pure-rust) paths never touch this.
+//!
+//! Swapping in the real bindings is a Cargo.toml change only.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: this build vendors an xla stub (no \
+         libxla_extension in the container); artifact-backed paths need \
+         the real PJRT toolchain"
+    ))
+}
+
+/// Marker trait mirroring `xla::ArrayElement`.
+pub trait ArrayElement {}
+impl ArrayElement for f32 {}
+impl ArrayElement for i32 {}
+
+/// Element types a [`Literal`] can hold, mirroring `xla::NativeType`.
+pub trait NativeType: Sized + Copy {
+    fn store(data: Vec<Self>) -> Elems;
+    fn load(elems: &Elems) -> Option<&[Self]>;
+}
+
+#[derive(Debug, Clone)]
+pub enum Elems {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Elems {
+    fn len(&self) -> usize {
+        match self {
+            Elems::F32(v) => v.len(),
+            Elems::I32(v) => v.len(),
+            Elems::Tuple(v) => v.len(),
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn store(data: Vec<f32>) -> Elems {
+        Elems::F32(data)
+    }
+    fn load(elems: &Elems) -> Option<&[f32]> {
+        match elems {
+            Elems::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(data: Vec<i32>) -> Elems {
+        Elems::I32(data)
+    }
+    fn load(elems: &Elems) -> Option<&[i32]> {
+        match elems {
+            Elems::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side array value.  Functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    elems: Elems,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            elems: T::store(data.to_vec()),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.elems.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), elems: self.elems.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.elems {
+            Elems::Tuple(_) => Err(Error("literal is a tuple".to_string())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.elems)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.elems {
+            Elems::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module.  The stub cannot parse HLO text.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HLO text parsing ({path})")))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("unavailable"), "{err}");
+    }
+}
