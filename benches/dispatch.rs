@@ -1,20 +1,27 @@
 //! Bench: router + dispatcher + combine throughput (the L3 hot path).
 //! Backs the §3.1 shrinking-batch analysis and the Table 7/8 efficiency
 //! columns: reports tokens/s through the all-to-all at several expert
-//! counts and device counts.
+//! counts and device counts, for both the serially-composed step and
+//! the streamed routing→dispatch pipeline.
+//!
+//! Results are also written to `BENCH_dispatch.json` (ns/op, tok/s) so
+//! the perf trajectory is tracked across PRs.  Set `BENCH_SMOKE=1` for
+//! a single-iteration CI smoke run.
 
 use moe::coordinator::router::Router;
 use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
 use moe::coordinator::Dispatcher;
 use moe::harness::workload::{phase_line, SyntheticMoe};
 use moe::runtime::TensorF;
-use moe::util::bench::{black_box, Bencher};
+use moe::util::bench::{black_box, BenchReport, Bencher};
 use moe::util::rng::Rng;
 
 fn main() {
-    let b = Bencher::default();
+    let b = Bencher::from_env();
+    let mut report = BenchReport::new("dispatch");
     let d = 64;
     let tokens = 4096;
+    let tput = Some(("tok", tokens as f64));
     println!("== dispatch/combine throughput (d_model={d}, {tokens} tokens) ==");
     for n in [8, 64, 512] {
         let k = 4.min(n);
@@ -36,12 +43,14 @@ fn main() {
             black_box(router.route(&x, Some(&mut nrng)).unwrap());
         });
         r.report_throughput("tok", tokens as f64);
+        report.push(&r, tput, &[]);
 
         let decisions = vec![dec];
         let r = b.run(&format!("plan n={n}"), || {
             black_box(Dispatcher::plan(&decisions, n));
         });
         r.report_throughput("tok", tokens as f64);
+        report.push(&r, tput, &[]);
 
         let plan = Dispatcher::plan(&decisions, n);
         let r = b.run(&format!("gather+combine n={n}"), || {
@@ -51,27 +60,42 @@ fn main() {
             black_box(Dispatcher::combine(&plan, &outs, d));
         });
         r.report_throughput("tok", tokens as f64);
+        report.push(&r, tput, &[]);
     }
 
     println!("\n== full native MoE step vs devices (n=64, k=4) ==");
     let n = 64;
     let work = SyntheticMoe::build(3, d, 4 * d, n, 4, 1, tokens).unwrap();
-    let refs = work.refs();
     for devices in [1, 2, 4, 8] {
         let sched =
             Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native);
-        sched.execute(&work.plan, &refs, &work.weights).unwrap(); // warm up
-        let r = b.run(&format!("moe step (engine), {devices} device(s)"), || {
-            black_box(sched.execute(&work.plan, &refs, &work.weights).unwrap());
-        });
+        work.run_streamed(&sched, None).unwrap(); // warm up
+        let r = b.run(
+            &format!("moe step (streamed), {devices} device(s)"),
+            || {
+                black_box(work.run_streamed(&sched, None).unwrap());
+            },
+        );
         r.report_throughput("tok", tokens as f64);
+        report.push(&r, tput, &[]);
+        let r = b.run(
+            &format!("moe step (engine, serial route), {devices} device(s)"),
+            || {
+                black_box(work.run_unpipelined(&sched, None).unwrap());
+            },
+        );
+        r.report_throughput("tok", tokens as f64);
+        report.push(&r, tput, &[]);
+        // full step too (route + plan + execute_serial), comparable with
+        // the two rows above
         let r = b.run(&format!("moe step (serial), {devices} device(s)"), || {
-            black_box(
-                sched.execute_serial(&work.plan, &refs, &work.weights).unwrap(),
-            );
+            black_box(work.run_serial_reference(&sched, None).unwrap());
         });
         r.report_throughput("tok", tokens as f64);
-        let (_, stats) = sched.execute(&work.plan, &refs, &work.weights).unwrap();
-        println!("  phases: {}", phase_line(&stats));
+        report.push(&r, tput, &[]);
+        let s = work.run_streamed(&sched, None).unwrap();
+        println!("  streamed phases: {}", phase_line(&s.stats));
     }
+    report.write("BENCH_dispatch.json").unwrap();
+    println!("wrote BENCH_dispatch.json");
 }

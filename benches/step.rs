@@ -1,46 +1,99 @@
 //! Bench: end-to-end MoE step latency.
 //!
-//! Section 1 (always runs): the Native-backend step on the persistent
-//! [`ExecutionEngine`] vs the retained serial reference, with the
-//! per-phase gather/compute/combine breakdown from `StepStats` — the
-//! §3.1 shrinking-batch economics measured, not modelled.
+//! Section 1 (always runs): the *full* Native-backend step — routing,
+//! dispatch and expert execution — three ways at n=64, k=4:
+//!
+//! - **streamed**: the routing→dispatch pipeline on the persistent
+//!   [`ExecutionEngine`] with adaptive wave capacity (row-blocked
+//!   parallel gating, incremental plan, waves dispatched as routes
+//!   land);
+//! - **engine + serial route**: the PR-1 shape — route and plan built
+//!   serially on the coordinator, then the engine executes;
+//! - **serial reference**: the retained single-threaded oracle.
+//!
+//! Results (ns/op, tok/s, per-phase breakdown) are also written to
+//! `BENCH_step.json` so the perf trajectory is tracked across PRs.
+//! Set `BENCH_SMOKE=1` for a single-iteration CI smoke run.
 //!
 //! Section 2 (needs `make artifacts`): the full rust->PJRT->rust round
 //! trip of the AOT'd train step (the Table 1/7 "Training Time" axis).
 
-use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
+use moe::coordinator::scheduler::{
+    AdaptiveWave, ExpertBackend, Scheduler, ShardLayout, StepStats,
+    WavePolicy,
+};
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
 use moe::data::Batcher;
 use moe::harness::workload::{phase_line, SyntheticMoe};
 use moe::runtime::{Engine, Manifest};
 use moe::train::Trainer;
-use moe::util::bench::{black_box, Bencher};
+use moe::util::bench::{black_box, BenchReport, Bencher};
 
-fn native_engine_section(bench: &Bencher) {
+fn phase_extras(stats: &StepStats) -> Vec<(&'static str, f64)> {
+    vec![
+        ("route_ns", stats.phases.route as f64),
+        ("gather_ns", stats.phases.gather as f64),
+        ("compute_ns", stats.phases.compute as f64),
+        ("combine_ns", stats.phases.combine as f64),
+        ("waves", stats.waves as f64),
+        (
+            "max_shard_idle_ns",
+            stats.shard_idle_ns.iter().copied().max().unwrap_or(0) as f64,
+        ),
+    ]
+}
+
+fn native_engine_section(bench: &Bencher, report: &mut BenchReport) {
     let (d, h, n, k, tokens) = (64, 256, 64, 4, 4096);
     let work = SyntheticMoe::build(7, d, h, n, k, 1, tokens).unwrap();
-    let refs = work.refs();
+    let tput = Some(("tok", tokens as f64));
 
     println!(
-        "== native MoE step, persistent engine vs serial reference \
-         (n={n}, k={k}, d={d}, {tokens} tokens) =="
+        "== native MoE full step: streamed pipeline vs engine + serial \
+         route vs serial reference (n={n}, k={k}, d={d}, {tokens} tokens) =="
     );
     for devices in [1, 2, 4, 8] {
-        let sched =
-            Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native);
-        sched.execute(&work.plan, &refs, &work.weights).unwrap(); // warm up
-        let r = bench.run(&format!("engine step, {devices} device(s)"), || {
-            black_box(sched.execute(&work.plan, &refs, &work.weights).unwrap());
+        // streamed pipeline with adaptive wave capacity
+        let streamed = Scheduler::with_policy(
+            ShardLayout::new(devices, n),
+            ExpertBackend::Native,
+            WavePolicy::Adaptive(AdaptiveWave::new()),
+        );
+        // the PR-1 shape: unchunked engine, route serial on coordinator
+        let unpipelined = Scheduler::new(
+            ShardLayout::new(devices, n),
+            ExpertBackend::Native,
+        );
+        work.run_streamed(&streamed, None).unwrap(); // warm + adapt
+        work.run_unpipelined(&unpipelined, None).unwrap(); // warm
+
+        let r = bench.run(&format!("streamed step, {devices} device(s)"), || {
+            black_box(work.run_streamed(&streamed, None).unwrap());
         });
         r.report_throughput("tok", tokens as f64);
+        let s = work.run_streamed(&streamed, None).unwrap();
+        report.push(&r, tput, &phase_extras(&s.stats));
+
+        let r = bench.run(
+            &format!("engine step + serial route, {devices} device(s)"),
+            || {
+                black_box(work.run_unpipelined(&unpipelined, None).unwrap());
+            },
+        );
+        r.report_throughput("tok", tokens as f64);
+        let (_, u_stats) = work.run_unpipelined(&unpipelined, None).unwrap();
+        report.push(&r, tput, &phase_extras(&u_stats));
+
+        // full step too (route + plan + execute_serial), so all three
+        // rows measure the same work
         let r = bench.run(&format!("serial step, {devices} device(s)"), || {
-            black_box(
-                sched.execute_serial(&work.plan, &refs, &work.weights).unwrap(),
-            );
+            black_box(work.run_serial_reference(&unpipelined, None).unwrap());
         });
         r.report_throughput("tok", tokens as f64);
-        let (_, stats) = sched.execute(&work.plan, &refs, &work.weights).unwrap();
-        println!("  phases: {}", phase_line(&stats));
+        report.push(&r, tput, &[]);
+
+        println!("  streamed phases:    {}", phase_line(&s.stats));
+        println!("  unpipelined phases: {}", phase_line(&u_stats));
     }
 }
 
@@ -92,7 +145,10 @@ fn artifact_section(bench: &Bencher) -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let bench = Bencher::quick();
-    native_engine_section(&bench);
+    let bench = Bencher::from_env_quick();
+    let mut report = BenchReport::new("step");
+    native_engine_section(&bench, &mut report);
+    report.write("BENCH_step.json")?;
+    println!("wrote BENCH_step.json");
     artifact_section(&bench)
 }

@@ -53,9 +53,97 @@ impl DispatchPlan {
     }
 }
 
+/// Incrementally built [`DispatchPlan`]: gate vectors are appended in
+/// (replica, row) order — replica by replica, any number of row blocks
+/// per replica — and per-expert rows become immutable the moment they
+/// are appended.  That immutable-prefix property is what lets the
+/// streaming pipeline gather and dispatch an expert's wave to its shard
+/// *before* routing of the remaining tokens has finished: rows
+/// `[0, len)` of an expert's batch never change once pushed, only grow.
+///
+/// `finish()` yields exactly the plan [`Dispatcher::plan`] builds from
+/// the same decisions (asserted by tests): same token order, gates and
+/// `replica_rows`.
+pub struct PlanBuilder {
+    plan: DispatchPlan,
+    /// rows appended so far for the replica currently being routed
+    cur_rows: usize,
+}
+
+impl PlanBuilder {
+    pub fn new(n_experts: usize) -> Self {
+        PlanBuilder {
+            plan: DispatchPlan {
+                n_experts,
+                per_expert: vec![ExpertBatch::default(); n_experts],
+                replica_rows: Vec::new(),
+            },
+            cur_rows: 0,
+        }
+    }
+
+    /// Append the next routed rows of the current replica; row indices
+    /// are assigned consecutively from the rows already pushed.
+    pub fn push_rows(&mut self, gates: &[crate::gating::noisy_topk::GateVec]) {
+        let replica = self.plan.replica_rows.len();
+        for tok in gates {
+            let row = self.cur_rows;
+            for (e, w) in tok.experts.iter().zip(tok.weights.iter()) {
+                self.plan.per_expert[*e].tokens.push(TokenAddr { replica, row });
+                self.plan.per_expert[*e].gates.push(*w);
+            }
+            self.cur_rows += 1;
+        }
+    }
+
+    /// Close out the current replica (recording its row count) and start
+    /// appending the next one.
+    pub fn finish_replica(&mut self) {
+        self.plan.replica_rows.push(self.cur_rows);
+        self.cur_rows = 0;
+    }
+
+    /// Rows appended so far for `expert` (the immutable prefix of its
+    /// final batch).
+    pub fn expert_len(&self, expert: usize) -> usize {
+        self.plan.per_expert[expert].tokens.len()
+    }
+
+    /// The plan under construction.  `per_expert` rows `[0, expert_len)`
+    /// are final; `replica_rows` only covers finished replicas.  Safe
+    /// for [`Dispatcher::gather_range_into`] over already-appended rows.
+    pub fn plan(&self) -> &DispatchPlan {
+        &self.plan
+    }
+
+    /// Finalize.  Every replica must have been closed with
+    /// [`finish_replica`](Self::finish_replica).
+    pub fn finish(self) -> DispatchPlan {
+        debug_assert_eq!(self.cur_rows, 0, "unfinished replica");
+        self.plan
+    }
+}
+
 pub struct Dispatcher;
 
 impl Dispatcher {
+    /// Serially route every replica in order and build the batch plan —
+    /// the pre-streaming composition, shared by the scheduler's artifact
+    /// fallback, the workload harness and the benches so the
+    /// route→plan reference semantics live in exactly one place.
+    pub fn route_and_plan(
+        router: &crate::coordinator::router::Router,
+        xs: &[&crate::runtime::TensorF],
+        mut rng: Option<&mut crate::util::rng::Rng>,
+    ) -> anyhow::Result<(Vec<RoutingDecision>, DispatchPlan)> {
+        let decisions = xs
+            .iter()
+            .map(|x| router.route(x, rng.as_deref_mut()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let plan = Self::plan(&decisions, router.n_experts);
+        Ok((decisions, plan))
+    }
+
     /// Build the all-to-all plan from per-replica routing decisions.
     /// Tokens keep replica-major, row-major order per expert, which makes
     /// the plan deterministic (and testable) regardless of thread timing.
@@ -257,6 +345,49 @@ mod tests {
                 buf.extend_from_slice(&tail);
                 assert_eq!(r1 + r2, len);
                 assert_eq!(buf, full.data);
+            }
+        });
+    }
+
+    #[test]
+    fn incremental_builder_matches_batch_plan() {
+        // a PlanBuilder fed the same decisions in randomized row blocks
+        // must produce exactly Dispatcher::plan: token order, gates and
+        // replica_rows (satellite contract for the streaming pipeline)
+        prop::forall("builder == plan", |rng| {
+            let (n, k) = (prop::dim(rng, 2, 12), prop::dim(rng, 1, 3));
+            let replicas = prop::dim(rng, 1, 4);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision(prop::dim(rng, 1, 10), n, k, rng))
+                .collect();
+            let want = Dispatcher::plan(&decisions, n);
+
+            let mut builder = PlanBuilder::new(n);
+            for dec in &decisions {
+                let rows = dec.per_token.len();
+                let mut lo = 0;
+                while lo < rows {
+                    let hi = (lo + 1 + rng.below(4)).min(rows);
+                    builder.push_rows(&dec.per_token[lo..hi]);
+                    lo = hi;
+                }
+                builder.finish_replica();
+                // prefix immutability mid-build: rows appended so far
+                // already equal the final plan's prefix
+                for e in 0..n {
+                    let len = builder.expert_len(e);
+                    assert_eq!(
+                        builder.plan().per_expert[e].tokens[..len],
+                        want.per_expert[e].tokens[..len]
+                    );
+                }
+            }
+            let got = builder.finish();
+            assert_eq!(got.n_experts, want.n_experts);
+            assert_eq!(got.replica_rows, want.replica_rows);
+            for (g, w) in got.per_expert.iter().zip(want.per_expert.iter()) {
+                assert_eq!(g.tokens, w.tokens);
+                assert_eq!(g.gates, w.gates);
             }
         });
     }

@@ -18,18 +18,44 @@
 //! against the worker pool; Artifact: a persistent worker prefetches the
 //! next padded chunk while the PJRT call for the current one runs).
 //!
+//! # Streaming pipeline
+//!
+//! [`ExecutionEngine::execute_streaming`] goes further: instead of
+//! receiving a finished [`DispatchPlan`], it runs the *whole* step —
+//! gating, dispatch and expert execution — as a pipeline over the same
+//! worker pool.  Row blocks of each replica are gated in parallel on the
+//! workers ([`Router::route_rows`], fed pre-drawn eq-4 noise so results
+//! are bit-identical to serial routing); as routed blocks stream back in
+//! row order they are appended to an incremental
+//! [`PlanBuilder`], whose per-expert batches have an immutable prefix —
+//! so each expert's wave is gathered and dispatched to its shard the
+//! moment enough of its rows are final.  Replica r+1 therefore routes
+//! while replica r's experts compute, and the first expert wave starts
+//! before the last token is gated: step latency approaches
+//! max(route, execute) instead of route + dispatch + execute.
+//!
+//! The Native wave size is governed by a
+//! [`WavePolicy`] — either a fixed capacity or
+//! [`AdaptiveWave`](crate::coordinator::scheduler::AdaptiveWave), which
+//! derives the next step's capacity from the previous step's measured
+//! busiest-shard idle.
+//!
 //! # Safety
 //!
-//! Jobs smuggle borrows of the caller's `plan`, `xs` and `weights` to
-//! the persistent workers as raw pointers (a persistent thread cannot
-//! hold a non-`'static` reference).  The invariants that make this
-//! sound:
+//! Jobs smuggle borrows of the caller's `plan`, `xs`, `weights`,
+//! `router` and pre-drawn noise to the persistent workers as raw
+//! pointers (a persistent thread cannot hold a non-`'static`
+//! reference).  The invariants that make this sound:
 //!
 //! 1. workers dereference job pointers only between receiving the job
 //!    and sending its reply (worker bodies are wrapped in
 //!    `catch_unwind`, so a reply is *always* sent, even on panic);
 //! 2. `execute_*` never returns — including on the error path, via
-//!    [`DrainGuard`] — until every job it sent has been replied to.
+//!    [`DrainGuard`] — until every job it sent has been replied to;
+//! 3. route jobs only ever run `Router::route_rows`, which is pure
+//!    Native math over the router's weight slices — the (non-`Send`)
+//!    artifact handle is never touched off-thread, and
+//!    `execute_streaming` rejects artifact-backed flat routers up front.
 //!
 //! Together these guarantee no worker touches the borrowed step inputs
 //! after `execute_*` returns.
@@ -41,12 +67,24 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::dispatcher::{DispatchPlan, Dispatcher};
+use crate::coordinator::dispatcher::{DispatchPlan, Dispatcher, PlanBuilder};
+use crate::coordinator::router::{
+    RouteBlock, RouteNoise, Router, RouterBackend, RoutingDecision,
+};
 use crate::coordinator::scheduler::{
     build_stats, waves_for_loads, ExpertWeights, PhaseNanos, ShardLayout,
-    StepStats,
+    StepStats, WavePolicy,
 };
+use crate::gating::noisy_topk::GateVec;
 use crate::runtime::{Executable, Host, TensorF};
+use crate::util::rng::Rng;
+
+/// Streaming wave size used when the policy says "unchunked"
+/// (`WavePolicy::Fixed(None)`): the streaming path must chunk to
+/// overlap dispatch with routing at all, so it falls back to this.
+/// Chunking is bit-exact (expert rows are independent), so the value
+/// only affects pipelining granularity, never results.
+const STREAM_DEFAULT_CAP: usize = 128;
 
 /// One expert-chunk of work bound for a shard worker.
 struct ExpertTask {
@@ -99,9 +137,36 @@ struct GatherReply {
     buf: Vec<f32>,
 }
 
+/// One row block of a replica batch bound for the gate stage.
+struct RouteJob {
+    /// borrowed `&Router` — see module safety notes; workers only call
+    /// the pure-math `route_rows`, never a (non-`Send`) artifact handle
+    router: *const Router,
+    /// borrowed replica activations (rows, d)
+    x: *const TensorF,
+    /// borrowed pre-drawn eq-4 noise; `None` = deterministic eval
+    noise: Option<*const RouteNoise>,
+    /// block index, for in-order reassembly on the coordinator
+    block: usize,
+    lo: usize,
+    hi: usize,
+    reply: Sender<RouteReply>,
+}
+
+// SAFETY: as for ComputeJob.
+unsafe impl Send for RouteJob {}
+
+struct RouteReply {
+    block: usize,
+    /// the routed block, or the underlying error message (worker panic
+    /// or `route_rows` error) so the coordinator can surface the cause
+    result: std::result::Result<RouteBlock, String>,
+}
+
 enum Job {
     Compute(ComputeJob),
     Gather(GatherJob),
+    Route(RouteJob),
 }
 
 /// Recycled f32 allocations shared by gather inputs, expert outputs and
@@ -148,6 +213,18 @@ impl<'a, T> DrainGuard<'a, T> {
         self.outstanding -= 1;
         Ok(v)
     }
+
+    /// Non-blocking receive, so the coordinator can recycle finished
+    /// waves opportunistically while another pipeline stage runs.
+    fn try_recv(&mut self) -> Option<T> {
+        match self.rx.try_recv() {
+            Ok(v) => {
+                self.outstanding -= 1;
+                Some(v)
+            }
+            Err(_) => None,
+        }
+    }
 }
 
 impl<'a, T> Drop for DrainGuard<'a, T> {
@@ -161,13 +238,23 @@ impl<'a, T> Drop for DrainGuard<'a, T> {
     }
 }
 
+/// A fully streamed MoE step: per-replica outputs plus the routing
+/// decisions the pipeline produced along the way (their importance/load
+/// feed the balance losses) and the step telemetry.
+pub struct StreamedStep {
+    pub outs: Vec<TensorF>,
+    pub decisions: Vec<RoutingDecision>,
+    pub stats: StepStats,
+}
+
 /// Long-lived worker pool executing MoE steps without per-step thread
 /// spawns or per-step allocation.
 pub struct ExecutionEngine {
     pub layout: ShardLayout,
-    /// optional cap on tokens per expert per wave for the Native path
-    /// (the Artifact path always waves at the artifact capacity)
-    wave_capacity: Option<usize>,
+    /// Native wave-capacity policy (the Artifact path always waves at
+    /// the artifact capacity); adaptive policies are updated from every
+    /// finished step's stats
+    policy: WavePolicy,
     txs: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     pool: BufferPool,
@@ -176,7 +263,7 @@ pub struct ExecutionEngine {
 impl ExecutionEngine {
     /// Spawn one persistent worker per simulated device shard.
     pub fn start(layout: ShardLayout) -> Self {
-        Self::with_wave_capacity(layout, None)
+        Self::with_policy(layout, WavePolicy::Fixed(None))
     }
 
     /// Like [`start`](Self::start), but Native expert batches are also
@@ -184,6 +271,12 @@ impl ExecutionEngine {
     /// wave pipeline without an artifact; chunking is bit-exact because
     /// expert rows are independent).
     pub fn with_wave_capacity(layout: ShardLayout, capacity: Option<usize>) -> Self {
+        Self::with_policy(layout, WavePolicy::Fixed(capacity))
+    }
+
+    /// Like [`start`](Self::start) with an explicit wave-capacity
+    /// policy (fixed or adaptive).
+    pub fn with_policy(layout: ShardLayout, policy: WavePolicy) -> Self {
         let mut txs = Vec::with_capacity(layout.n_devices);
         let mut handles = Vec::with_capacity(layout.n_devices);
         for dev in 0..layout.n_devices {
@@ -197,11 +290,16 @@ impl ExecutionEngine {
         }
         ExecutionEngine {
             layout,
-            wave_capacity: capacity,
+            policy,
             txs,
             handles,
             pool: BufferPool::default(),
         }
+    }
+
+    /// The wave capacity the next Native step will use.
+    pub fn wave_capacity(&self) -> Option<usize> {
+        self.policy.capacity()
     }
 
     /// Execute a step with the pure-rust expert forward on the
@@ -224,8 +322,9 @@ impl ExecutionEngine {
             );
         }
         let loads = plan.expert_loads();
-        let cap = self.wave_capacity.unwrap_or(usize::MAX).max(1);
-        let n_waves = waves_for_loads(&loads, self.wave_capacity);
+        let cap_opt = self.policy.capacity();
+        let cap = cap_opt.unwrap_or(usize::MAX).max(1);
+        let n_waves = waves_for_loads(&loads, cap_opt);
         let mut phases = PhaseNanos::default();
         let mut shard_compute = vec![0u64; self.layout.n_devices];
 
@@ -305,6 +404,7 @@ impl ExecutionEngine {
             shard_compute,
             compute_wall,
         );
+        self.policy.observe(&stats);
         Ok((outs, stats))
     }
 
@@ -471,6 +571,366 @@ impl ExecutionEngine {
         Ok((outs, stats))
     }
 
+    /// Execute one *full* MoE step — gating, dispatch and expert
+    /// execution — as a streaming pipeline over the persistent worker
+    /// pool (module docs, "Streaming pipeline").  Requires a
+    /// Native-math router (flat Native backend or hierarchical); the
+    /// expert forward is always the Native one.
+    ///
+    /// Differential contract (proven in `rust/tests/engine_parity.rs`):
+    /// identical to routing every replica serially with the same rng,
+    /// building `Dispatcher::plan`, and running `execute_serial` — gate
+    /// vectors bit-identical, outputs within f32 tolerance.
+    pub fn execute_streaming(
+        &mut self,
+        router: &Router,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+        mut rng: Option<&mut Rng>,
+    ) -> Result<StreamedStep> {
+        let d = match xs.first() {
+            Some(t) if t.shape.len() == 2 => t.shape[1],
+            Some(t) => bail!("replica input shape {:?} (want (rows, d))", t.shape),
+            None => bail!("no replica inputs"),
+        };
+        if router.n_experts != self.layout.n_experts {
+            bail!(
+                "router has {} experts but engine layout has {}",
+                router.n_experts,
+                self.layout.n_experts
+            );
+        }
+        if router.groups == 0
+            && !matches!(router.backend, RouterBackend::Native) {
+            bail!(
+                "execute_streaming needs a Native-math router \
+                 (artifact-backed flat gating routes on the coordinator)"
+            );
+        }
+        for x in xs {
+            if x.shape.len() != 2 || x.shape[1] != d {
+                bail!("replica input shape {:?} (want (rows, {d}))", x.shape);
+            }
+        }
+        let n = self.layout.n_experts;
+        let n_dev = self.layout.n_devices;
+        let cap = self
+            .policy
+            .capacity()
+            .unwrap_or(STREAM_DEFAULT_CAP)
+            .max(1);
+        let mut phases = PhaseNanos::default();
+        let mut shard_compute = vec![0u64; n_dev];
+
+        // Declared before the guards below: drop order (reverse of
+        // declaration) then drains every in-flight job before any
+        // borrowed noise buffer is freed — see module safety notes.
+        let mut noises: Vec<Option<RouteNoise>> = Vec::with_capacity(xs.len());
+        let mut builder = PlanBuilder::new(n);
+        let mut decisions: Vec<RoutingDecision> = Vec::with_capacity(xs.len());
+        // rows already gathered + dispatched per expert (≤ its final load)
+        let mut emitted = vec![0usize; n];
+        // experts touched since the last wave-emission check, so the
+        // dispatch scan is O(routes) per step instead of
+        // O(blocks × n_experts)
+        let mut dirty = vec![false; n];
+        let mut touched: Vec<usize> = Vec::new();
+        let mut expert_out: Vec<Vec<f32>> =
+            (0..n).map(|_| self.pool.take()).collect();
+
+        let (c_tx, c_rx) = channel::<ComputeReply>();
+        let (r_tx, r_rx) = channel::<RouteReply>();
+        let mut c_guard = DrainGuard::new(&c_rx);
+        let mut r_guard = DrainGuard::new(&r_rx);
+
+        let mut compute_panic = false;
+        let mut route_err: Option<String> = None;
+        let mut first_dispatch: Option<Instant> = None;
+        // coordinator route-waits and gather-staging that land *after*
+        // the first compute dispatch — subtracted from the compute
+        // window so the phases stay (approximately) disjoint and the
+        // adaptive controller sees load imbalance, not routing stalls
+        let mut coord_in_window = 0u64;
+
+        for x in xs.iter() {
+            let b = x.shape[0];
+            // the noise draw is serial and cheap; drawing replica by
+            // replica in order keeps the rng stream identical to the
+            // serial route path
+            let t0 = Instant::now();
+            noises.push(router.draw_noise(b, rng.as_deref_mut()));
+            phases.route += t0.elapsed().as_nanos() as u64;
+            // SAFETY: valid until every route job of this replica has
+            // replied — `noises` is not pushed to again before that
+            let noise_ptr = noises
+                .last()
+                .and_then(|ns| ns.as_ref().map(|ns| ns as *const RouteNoise));
+
+            // gate stage: fan the replica's rows out over the pool
+            let block_rows = (b / (4 * n_dev.max(1))).clamp(32, 256);
+            let n_blocks = if b == 0 { 0 } else { 1 + (b - 1) / block_rows };
+            for blk in 0..n_blocks {
+                let job = RouteJob {
+                    router,
+                    x: *x as *const TensorF,
+                    noise: noise_ptr,
+                    block: blk,
+                    lo: blk * block_rows,
+                    hi: ((blk + 1) * block_rows).min(b),
+                    reply: r_tx.clone(),
+                };
+                self.txs[blk % n_dev]
+                    .send(Job::Route(job))
+                    .map_err(|_| anyhow!("route worker unavailable"))?;
+                r_guard.sent();
+            }
+
+            // dispatch stage: reassemble blocks in row order and ship
+            // every expert wave whose rows are final
+            let mut pending: Vec<Option<RouteBlock>> =
+                (0..n_blocks).map(|_| None).collect();
+            let mut next_append = 0usize;
+            let mut per_token: Vec<GateVec> = Vec::with_capacity(b);
+            let mut imp = vec![0f32; n];
+            let mut load = vec![0f32; n];
+            for _ in 0..n_blocks {
+                // recycle finished waves while the gate stage runs
+                while let Some(r) = c_guard.try_recv() {
+                    self.absorb_compute_reply(
+                        r,
+                        &mut expert_out,
+                        &mut shard_compute,
+                        d,
+                        &mut compute_panic,
+                    );
+                }
+                // time blocked on the gate stage = the routing cost the
+                // pipeline failed to hide under expert compute
+                let t_wait = Instant::now();
+                let reply = r_guard.recv()?;
+                let waited = t_wait.elapsed().as_nanos() as u64;
+                phases.route += waited;
+                if first_dispatch.is_some() {
+                    coord_in_window += waited;
+                }
+                match reply.result {
+                    Ok(blk) => pending[reply.block] = Some(blk),
+                    Err(e) => {
+                        route_err.get_or_insert(e);
+                    }
+                }
+                if route_err.is_some() {
+                    continue; // keep draining this replica's blocks
+                }
+                while next_append < n_blocks {
+                    let Some(blk) = pending[next_append].take() else {
+                        break;
+                    };
+                    for (a, v) in imp.iter_mut().zip(blk.importance.iter()) {
+                        *a += v;
+                    }
+                    for (a, v) in load.iter_mut().zip(blk.load.iter()) {
+                        *a += v;
+                    }
+                    for tok in &blk.per_token {
+                        for &e in &tok.experts {
+                            if !dirty[e] {
+                                dirty[e] = true;
+                                touched.push(e);
+                            }
+                        }
+                    }
+                    builder.push_rows(&blk.per_token);
+                    per_token.extend(blk.per_token);
+                    next_append += 1;
+                }
+                let t_g = Instant::now();
+                for &e in &touched {
+                    dirty[e] = false;
+                    while builder.expert_len(e) - emitted[e] >= cap {
+                        let lo = emitted[e];
+                        if first_dispatch.is_none() {
+                            first_dispatch = Some(Instant::now());
+                        }
+                        self.send_streamed_chunk(
+                            builder.plan(),
+                            xs,
+                            weights,
+                            e,
+                            lo,
+                            lo + cap,
+                            d,
+                            &c_tx,
+                        )?;
+                        c_guard.sent();
+                        emitted[e] = lo + cap;
+                    }
+                }
+                touched.clear();
+                let staged = t_g.elapsed().as_nanos() as u64;
+                phases.gather += staged;
+                if first_dispatch.is_some() {
+                    coord_in_window += staged;
+                }
+            }
+            if route_err.is_some() {
+                break;
+            }
+            builder.finish_replica();
+            decisions.push(RoutingDecision {
+                per_token,
+                importance: imp,
+                load,
+            });
+        }
+
+        if route_err.is_none() {
+            // flush the sub-capacity tails now that every row is final
+            let t_g = Instant::now();
+            for e in 0..n {
+                let len = builder.expert_len(e);
+                let mut lo = emitted[e];
+                while lo < len {
+                    let hi = (lo + cap).min(len);
+                    if first_dispatch.is_none() {
+                        first_dispatch = Some(Instant::now());
+                    }
+                    self.send_streamed_chunk(
+                        builder.plan(),
+                        xs,
+                        weights,
+                        e,
+                        lo,
+                        hi,
+                        d,
+                        &c_tx,
+                    )?;
+                    c_guard.sent();
+                    lo = hi;
+                }
+                emitted[e] = len;
+            }
+            let staged = t_g.elapsed().as_nanos() as u64;
+            phases.gather += staged;
+            if first_dispatch.is_some() {
+                coord_in_window += staged;
+            }
+        }
+
+        while c_guard.outstanding > 0 {
+            let r = c_guard.recv()?;
+            self.absorb_compute_reply(
+                r,
+                &mut expert_out,
+                &mut shard_compute,
+                d,
+                &mut compute_panic,
+            );
+        }
+        if let Some(e) = route_err {
+            bail!("streamed step gate stage failed: {e}");
+        }
+        if compute_panic {
+            bail!("expert shard panicked during step");
+        }
+        // the dispatch→drain window minus the coordinator route/gather
+        // time that landed inside it, keeping the reported phases
+        // (approximately) disjoint; busy/idle are judged against the
+        // same window, so a route-bound step does not read as shard
+        // imbalance — which would make the adaptive controller shrink
+        // waves (adding chunk overhead) on exactly the steps that
+        // cannot benefit
+        phases.compute = first_dispatch
+            .map(|t| t.elapsed().as_nanos() as u64)
+            .unwrap_or(0)
+            .saturating_sub(coord_in_window);
+        let compute_wall = phases.compute;
+
+        let plan = builder.finish();
+        let loads = plan.expert_loads();
+        // normalize arenas (experts that never dispatched stay empty)
+        for (e, buf) in expert_out.iter_mut().enumerate() {
+            buf.resize(loads[e] * d, 0.0);
+        }
+        let n_waves = waves_for_loads(&loads, Some(cap));
+        let (outs, combine_ns) = self.combine(&plan, expert_out, &loads, d);
+        phases.combine = combine_ns;
+        let stats = build_stats(
+            &self.layout,
+            &plan,
+            d,
+            n_waves,
+            phases,
+            shard_compute,
+            compute_wall,
+        );
+        self.policy.observe(&stats);
+        Ok(StreamedStep { outs, decisions, stats })
+    }
+
+    /// Gather rows `[lo, hi)` of expert `e` from the builder plan's
+    /// immutable prefix into pooled buffers and dispatch them to the
+    /// owning shard worker.
+    #[allow(clippy::too_many_arguments)]
+    fn send_streamed_chunk(
+        &mut self,
+        plan: &DispatchPlan,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+        e: usize,
+        lo: usize,
+        hi: usize,
+        d: usize,
+        reply: &Sender<ComputeReply>,
+    ) -> Result<()> {
+        let mut input = self.pool.take();
+        Dispatcher::gather_range_into(plan, e, lo..hi, xs, &mut input);
+        let mut output = self.pool.take();
+        output.resize((hi - lo) * d, 0.0);
+        let dev = self.layout.owner(e);
+        let job = ComputeJob {
+            device: dev,
+            weights,
+            tasks: vec![ExpertTask {
+                expert: e,
+                rows: hi - lo,
+                out_offset: lo,
+                input,
+                output,
+            }],
+            reply: reply.clone(),
+        };
+        self.txs[dev]
+            .send(Job::Compute(job))
+            .map_err(|_| anyhow!("shard worker {dev} unavailable"))
+    }
+
+    /// Fold one finished compute wave into the per-expert output arenas
+    /// and recycle its buffers.
+    fn absorb_compute_reply(
+        &mut self,
+        r: ComputeReply,
+        expert_out: &mut [Vec<f32>],
+        shard_compute: &mut [u64],
+        d: usize,
+        panicked: &mut bool,
+    ) {
+        shard_compute[r.device] += r.compute_ns;
+        for t in r.tasks {
+            if r.ok {
+                let need = (t.out_offset + t.rows) * d;
+                if expert_out[t.expert].len() < need {
+                    expert_out[t.expert].resize(need, 0.0);
+                }
+                expert_out[t.expert][t.out_offset * d..need]
+                    .copy_from_slice(&t.output[..t.rows * d]);
+            }
+            self.pool.put(t.input);
+            self.pool.put(t.output);
+        }
+        *panicked |= !r.ok;
+    }
+
     /// Stage one wave: gather each expert's `[w*cap, (w+1)*cap)` row
     /// chunk into pooled buffers, grouped by owning device.
     fn stage_wave(
@@ -593,6 +1053,23 @@ fn worker_loop(rx: Receiver<Job>) {
                     tasks: j.tasks,
                     compute_ns: t0.elapsed().as_nanos() as u64,
                 });
+            }
+            Job::Route(j) => {
+                let result = match catch_unwind(AssertUnwindSafe(|| {
+                    // SAFETY: the coordinator blocks until our reply;
+                    // route_rows is pure Native math (never touches a
+                    // non-Send artifact handle — see module safety notes)
+                    let router: &Router = unsafe { &*j.router };
+                    let x: &TensorF = unsafe { &*j.x };
+                    let noise: Option<&RouteNoise> =
+                        j.noise.map(|p| unsafe { &*p });
+                    router.route_rows(x, j.lo, j.hi, noise)
+                })) {
+                    Ok(Ok(blk)) => Ok(blk),
+                    Ok(Err(e)) => Err(e.to_string()),
+                    Err(_) => Err("route worker panicked".to_string()),
+                };
+                let _ = j.reply.send(RouteReply { block: j.block, result });
             }
             Job::Gather(mut j) => {
                 let ok = catch_unwind(AssertUnwindSafe(|| {

@@ -17,6 +17,18 @@
 //!    expert batches, and wave w+1 is gathered while wave w computes;
 //! 4. outputs are combined back per token with gate weights (eq 1), and
 //!    [`balance::BalanceMeter`] tracks Importance / Load / CV² telemetry.
+//!
+//! Stages 1–3 need not run back-to-back: the *streaming* step
+//! ([`scheduler::Scheduler::execute_streamed`] /
+//! [`engine::ExecutionEngine::execute_streaming`]) pipelines them on
+//! the engine's worker pool — row blocks are gated in parallel
+//! ([`router::Router::route_rows`]), routed blocks feed an incremental
+//! [`dispatcher::PlanBuilder`], and each expert wave is dispatched as
+//! soon as its rows are final, so replica r+1 routes while replica r's
+//! experts compute.  The Native wave size comes from a
+//! [`scheduler::WavePolicy`]: fixed, or
+//! [`scheduler::AdaptiveWave`]-controlled from the previous step's
+//! measured busiest-shard idle.
 
 pub mod balance;
 pub mod dispatcher;
@@ -25,7 +37,9 @@ pub mod router;
 pub mod scheduler;
 
 pub use balance::BalanceMeter;
-pub use dispatcher::{DispatchPlan, Dispatcher, ExpertBatch};
-pub use engine::ExecutionEngine;
-pub use router::{Router, RouterBackend};
-pub use scheduler::{PhaseNanos, Scheduler, ShardLayout, StepStats};
+pub use dispatcher::{DispatchPlan, Dispatcher, ExpertBatch, PlanBuilder};
+pub use engine::{ExecutionEngine, StreamedStep};
+pub use router::{RouteBlock, RouteNoise, Router, RouterBackend};
+pub use scheduler::{
+    AdaptiveWave, PhaseNanos, Scheduler, ShardLayout, StepStats, WavePolicy,
+};

@@ -10,13 +10,26 @@
 //! Both produce identical decisions on identical noise (asserted in
 //! rust/tests/parity.rs), which is what lets the distributed simulation
 //! claim numerical equivalence with the monolithic artifact.
+//!
+//! # Row-blocked routing (the streaming gate stage)
+//!
+//! The Native math is exposed in two grains: [`Router::route`] gates a
+//! whole batch, and [`Router::route_rows`] gates one row block of it.
+//! Because every eq-4 noise draw is pre-drawn serially by
+//! [`Router::draw_noise`], disjoint row blocks can be routed on
+//! different worker threads and still produce gate vectors bit-identical
+//! to the serial whole-batch call — this is what lets the
+//! [`ExecutionEngine`](crate::coordinator::engine::ExecutionEngine)
+//! overlap gating with expert compute instead of serializing
+//! route → dispatch → execute on the coordinator.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::gating::noisy_topk::{
-    compose_hierarchical, importance, load_estimate, noisy_topk, GateVec,
+    compose_hierarchical, importance, load_estimate, noisy_topk_block,
+    GateVec,
 };
 use crate::runtime::{Executable, Host, TensorF};
 use crate::util::rng::Rng;
@@ -49,6 +62,31 @@ pub struct RoutingDecision {
     pub load: Vec<f32>,
 }
 
+/// Every eq-4 normal one routing of a `b`-row batch will consume, drawn
+/// up front in the exact order the serial path draws them.  Pre-drawing
+/// is what lets disjoint row blocks route concurrently (each consumes
+/// its own slice) while staying bit-identical to [`Router::route`].
+pub struct RouteNoise {
+    /// primary-gate normals, row-major (b, n) for flat routers and
+    /// (b, groups) for hierarchical; empty without noise weights
+    primary: Vec<f32>,
+    /// hierarchical secondary normals, (b, k, group_size) consumed in
+    /// primary-selection order; empty for flat routers or without
+    /// secondary noise weights
+    secondary: Vec<f32>,
+}
+
+/// One routed row block: per-row gate vectors plus partial balance sums
+/// over just these rows — the unit of work the streaming pipeline moves
+/// from the gate stage to the dispatch stage.
+pub struct RouteBlock {
+    pub per_token: Vec<GateVec>,
+    /// eq-6 importance summed over just these rows
+    pub importance: Vec<f32>,
+    /// eq-8–10 smooth load (hard counts at eval) over just these rows
+    pub load: Vec<f32>,
+}
+
 impl Router {
     pub fn flat_native(
         d_model: usize,
@@ -77,33 +115,18 @@ impl Router {
         if x.shape.len() != 2 || x.shape[1] != self.d_model {
             bail!("router: bad input shape {:?}", x.shape);
         }
-        if self.groups > 0 {
-            return self.route_hierarchical(x, rng);
+        // hierarchical routing is Native math regardless of backend
+        if self.groups > 0 || matches!(self.backend, RouterBackend::Native) {
+            let noise = self.draw_noise(b, rng.as_deref_mut());
+            let blk = self.route_rows(x, 0, b, noise.as_ref())?;
+            return Ok(RoutingDecision {
+                per_token: blk.per_token,
+                importance: blk.importance,
+                load: blk.load,
+            });
         }
         match &self.backend {
-            RouterBackend::Native => {
-                let train = rng.is_some();
-                let g = noisy_topk(
-                    &x.data,
-                    b,
-                    self.d_model,
-                    &self.w_g,
-                    if train { self.w_noise.as_deref() } else { None },
-                    self.n_experts,
-                    self.k,
-                    rng.as_deref_mut(),
-                );
-                let imp = importance(&g);
-                let load = load_estimate(
-                    &g,
-                    &x.data,
-                    b,
-                    self.d_model,
-                    if train { self.w_noise.as_deref() } else { None },
-                    self.k,
-                );
-                Ok(RoutingDecision { per_token: g.per_token, importance: imp, load })
-            }
+            RouterBackend::Native => unreachable!("handled above"),
             RouterBackend::Artifact(exe) => {
                 let n = self.n_experts;
                 // the artifact's batch dimension is static: pad the token
@@ -159,30 +182,109 @@ impl Router {
         }
     }
 
-    /// Two-level routing (Appendix B): primary picks k groups, secondary
-    /// picks k experts inside each chosen group; gates multiply (eq 12).
-    fn route_hierarchical(&self, x: &TensorF, mut rng: Option<&mut Rng>)
-        -> Result<RoutingDecision> {
+    /// Draw every eq-4 normal one routing of a `b`-row batch will
+    /// consume, in the exact order the serial path draws them.  `None`
+    /// (eval) means deterministic routing.
+    pub fn draw_noise(&self, b: usize, rng: Option<&mut Rng>)
+        -> Option<RouteNoise> {
+        let rng = rng?;
+        let n_pri = if self.groups > 0 { self.groups } else { self.n_experts };
+        let primary: Vec<f32> = if self.w_noise.is_some() {
+            (0..b * n_pri).map(|_| rng.normal_f32()).collect()
+        } else {
+            Vec::new()
+        };
+        let secondary: Vec<f32> = if self.groups > 0 && self.w_n_sec.is_some() {
+            let gs = self.n_experts / self.groups;
+            (0..b * self.k * gs).map(|_| rng.normal_f32()).collect()
+        } else {
+            Vec::new()
+        };
+        Some(RouteNoise { primary, secondary })
+    }
+
+    /// Route rows `[lo, hi)` of `x` with the Native math (flat or
+    /// hierarchical).  `noise` must come from
+    /// [`draw_noise`](Self::draw_noise) over the same batch; `None` =
+    /// eval.  Appending blocks in row order reproduces
+    /// [`route`](Self::route) exactly: gate vectors are bit-identical,
+    /// importance/load sums equal up to f32 reassociation across blocks.
+    pub fn route_rows(&self, x: &TensorF, lo: usize, hi: usize,
+                      noise: Option<&RouteNoise>) -> Result<RouteBlock> {
         let (b, d) = (x.shape[0], self.d_model);
-        let a = self.groups;
+        if x.shape.len() != 2 || x.shape[1] != d {
+            bail!("router: bad input shape {:?}", x.shape);
+        }
+        if lo > hi || hi > b {
+            bail!("route_rows: bad row range {lo}..{hi} of {b}");
+        }
+        if self.groups > 0 {
+            return self.route_rows_hierarchical(x, lo, hi, noise);
+        }
+        let n = self.n_experts;
+        let train = noise.is_some();
+        let wn = if train { self.w_noise.as_deref() } else { None };
+        let normals = noise.and_then(|ns| {
+            (!ns.primary.is_empty()).then(|| &ns.primary[lo * n..hi * n])
+        });
+        let g = noisy_topk_block(
+            &x.data[lo * d..hi * d],
+            hi - lo,
+            d,
+            &self.w_g,
+            wn,
+            n,
+            self.k,
+            normals,
+        );
+        let imp = importance(&g);
+        let load = load_estimate(&g, self.k);
+        Ok(RouteBlock { per_token: g.per_token, importance: imp, load })
+    }
+
+    /// Two-level routing (Appendix B) for one row block: primary picks k
+    /// groups, secondary picks k experts inside each chosen group; gates
+    /// multiply (eq 12).
+    fn route_rows_hierarchical(&self, x: &TensorF, lo: usize, hi: usize,
+                               noise: Option<&RouteNoise>)
+        -> Result<RouteBlock> {
+        let (d, a) = (self.d_model, self.groups);
         let gs = self.n_experts / a;
-        let (Some(wsec), train) = (self.w_g_sec.as_ref(), rng.is_some()) else {
+        let Some(wsec) = self.w_g_sec.as_ref() else {
             bail!("hierarchical router needs secondary gates");
         };
+        let train = noise.is_some();
         let wn_pri = if train { self.w_noise.as_deref() } else { None };
-        let primary = noisy_topk(
-            &x.data, b, d, &self.w_g, wn_pri, a, self.k,
-            rng.as_deref_mut(),
+        let pri_normals = noise.and_then(|ns| {
+            (!ns.primary.is_empty()).then(|| &ns.primary[lo * a..hi * a])
+        });
+        let primary = noisy_topk_block(
+            &x.data[lo * d..hi * d],
+            hi - lo,
+            d,
+            &self.w_g,
+            wn_pri,
+            a,
+            self.k,
+            pri_normals,
         );
         // secondary gating per group: w_g_sec is (d, a, gs) row-major;
         // extract the (d, gs) slice for group gi
-        let mut per_token = Vec::with_capacity(b);
+        let mut per_token = Vec::with_capacity(hi - lo);
         let mut imp = vec![0f32; self.n_experts];
         let mut load = vec![0f32; self.n_experts];
-        for (r, ptok) in primary.per_token.iter().enumerate() {
+        for (r_off, ptok) in primary.per_token.iter().enumerate() {
+            let r = lo + r_off;
             let xrow = &x.data[r * d..(r + 1) * d];
             let mut secondary = vec![GateVec { experts: vec![], weights: vec![] }; a];
-            for &gi in &ptok.experts {
+            // this row's pre-drawn secondary normals, consumed in
+            // primary-selection order exactly as the serial path drew them
+            let sec_normals = noise.and_then(|ns| {
+                (!ns.secondary.is_empty()).then(|| {
+                    &ns.secondary[r * self.k * gs..(r + 1) * self.k * gs]
+                })
+            });
+            for (si, &gi) in ptok.experts.iter().enumerate() {
                 let mut h = vec![0f32; gs];
                 for l in 0..d {
                     let base = l * a * gs + gi * gs;
@@ -191,13 +293,14 @@ impl Router {
                         h[j] += xv * wsec[base + j];
                     }
                 }
-                if let (Some(wn), Some(r2)) = (self.w_n_sec.as_ref(), rng.as_deref_mut()) {
+                if let (Some(wn), Some(eps)) =
+                    (self.w_n_sec.as_ref(), sec_normals) {
                     for j in 0..gs {
                         let mut raw = 0f32;
                         for l in 0..d {
                             raw += xrow[l] * wn[l * a * gs + gi * gs + j];
                         }
-                        h[j] += r2.normal_f32() * crate::gating::softplus(raw);
+                        h[j] += eps[si * gs + j] * crate::gating::softplus(raw);
                     }
                 }
                 secondary[gi] =
@@ -210,7 +313,7 @@ impl Router {
             }
             per_token.push(flat);
         }
-        Ok(RoutingDecision { per_token, importance: imp, load })
+        Ok(RouteBlock { per_token, importance: imp, load })
     }
 }
 
@@ -241,6 +344,84 @@ mod tests {
             // importance mass == b (each row's gates sum to 1)
             let s: f32 = dec.importance.iter().sum();
             assert!((s - b as f32).abs() < 1e-3, "importance mass {s}");
+        });
+    }
+
+    #[test]
+    fn row_blocked_routing_matches_whole_batch() {
+        // routing a batch as random row blocks with pre-drawn noise must
+        // give bit-identical gate vectors and (up to f32 reassociation)
+        // the same importance/load as the serial whole-batch route
+        prop::forall("route_rows == route", |rng| {
+            let (b, d) = (prop::dim(rng, 1, 14), 6);
+            let hierarchical = rng.below(2) == 1;
+            let router = if hierarchical {
+                let (a, gs) = (prop::dim(rng, 2, 4), prop::dim(rng, 2, 4));
+                Router {
+                    backend: RouterBackend::Native,
+                    n_experts: a * gs,
+                    k: prop::dim(rng, 1, 2),
+                    groups: a,
+                    d_model: d,
+                    w_g: prop::vec_f32(rng, d * a, 0.5),
+                    w_noise: Some(prop::vec_f32(rng, d * a, 0.3)),
+                    w_g_sec: Some(prop::vec_f32(rng, d * a * gs, 0.5)),
+                    w_n_sec: Some(prop::vec_f32(rng, d * a * gs, 0.3)),
+                }
+            } else {
+                let n = prop::dim(rng, 2, 12);
+                Router::flat_native(
+                    d,
+                    n,
+                    prop::dim(rng, 1, n.min(3)),
+                    prop::vec_f32(rng, d * n, 0.5),
+                    Some(prop::vec_f32(rng, d * n, 0.3)),
+                )
+            };
+            let x = TensorF::new(vec![b, d], prop::vec_f32(rng, b * d, 1.0));
+            let train = rng.below(2) == 1;
+            let seed_rng = rng.fold_in(5);
+
+            let mut rng_a = seed_rng.clone();
+            let whole = router
+                .route(&x, if train { Some(&mut rng_a) } else { None })
+                .unwrap();
+
+            let mut rng_b = seed_rng.clone();
+            let noise = router.draw_noise(
+                b,
+                if train { Some(&mut rng_b) } else { None },
+            );
+            let n = router.n_experts;
+            let mut per_token = Vec::new();
+            let mut imp = vec![0f32; n];
+            let mut load = vec![0f32; n];
+            let mut lo = 0;
+            while lo < b {
+                let hi = (lo + 1 + rng.below(4)).min(b);
+                let blk =
+                    router.route_rows(&x, lo, hi, noise.as_ref()).unwrap();
+                for (acc, v) in imp.iter_mut().zip(blk.importance.iter()) {
+                    *acc += v;
+                }
+                for (acc, v) in load.iter_mut().zip(blk.load.iter()) {
+                    *acc += v;
+                }
+                per_token.extend(blk.per_token);
+                lo = hi;
+            }
+
+            assert_eq!(per_token.len(), whole.per_token.len());
+            for (a, b) in per_token.iter().zip(whole.per_token.iter()) {
+                assert_eq!(a.experts, b.experts, "gate selection differs");
+                assert_eq!(a.weights, b.weights, "gate weights differ");
+            }
+            for (a, b) in imp.iter().zip(whole.importance.iter()) {
+                assert!((a - b).abs() < 1e-4, "importance {a} vs {b}");
+            }
+            for (a, b) in load.iter().zip(whole.load.iter()) {
+                assert!((a - b).abs() < 1e-3, "load {a} vs {b}");
+            }
         });
     }
 

@@ -9,10 +9,14 @@
 //! what the load-balancing losses exist to minimise, and the per-phase
 //! timings in [`StepStats`] make that wait directly observable.
 //!
-//! Two execution paths share the same math:
-//! - [`Scheduler::execute`] — the hot path, delegating to a lazily
-//!   started persistent [`ExecutionEngine`](crate::coordinator::engine::ExecutionEngine)
-//!   (long-lived worker threads, reusable arenas, pipelined waves);
+//! Three execution paths share the same math:
+//! - [`Scheduler::execute_streamed`] — the hot path for full steps:
+//!   gating, dispatch and expert execution pipelined on the persistent
+//!   [`ExecutionEngine`](crate::coordinator::engine::ExecutionEngine),
+//!   with [`WavePolicy`]-controlled (optionally adaptive) wave sizes;
+//! - [`Scheduler::execute`] — executes a pre-built [`DispatchPlan`] on
+//!   the same engine (long-lived worker threads, reusable arenas,
+//!   pipelined waves);
 //! - [`Scheduler::execute_serial`] — the retained single-threaded
 //!   reference, kept as the oracle for `rust/tests/engine_parity.rs`.
 
@@ -22,7 +26,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::dispatcher::{DispatchPlan, Dispatcher};
-use crate::coordinator::engine::ExecutionEngine;
+use crate::coordinator::engine::{ExecutionEngine, StreamedStep};
+use crate::coordinator::router::{Router, RouterBackend};
 use crate::runtime::{Executable, Host, TensorF};
 
 /// Which device owns which experts.
@@ -106,9 +111,16 @@ pub enum ExpertBackend {
 /// of the step wall: `gather` counts only staging on the critical path
 /// — staging the engine overlaps with expert execution (waves ≥ 1 of
 /// the pipelined paths) is deliberately *hidden inside* `compute`,
-/// which is exactly the §3.2 overhead being engineered away.
+/// which is exactly the §3.2 overhead being engineered away.  The same
+/// convention governs `route` on the streaming path: it counts only
+/// coordinator time spent drawing noise or *blocked* waiting on the
+/// gate stage, so fully-overlapped routing costs ~0 here.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseNanos {
+    /// critical-path gating cost (streaming path: noise draws + time
+    /// blocked on route workers; 0 when routing happened outside the
+    /// engine, e.g. the serial route→dispatch→execute composition)
+    pub route: u64,
     /// critical-path staging of token rows into per-expert batches
     /// (all-to-all "send")
     pub gather: u64,
@@ -121,7 +133,128 @@ pub struct PhaseNanos {
 
 impl PhaseNanos {
     pub fn total(&self) -> u64 {
-        self.gather + self.compute + self.combine
+        self.route + self.gather + self.compute + self.combine
+    }
+}
+
+/// How the Native paths pick their per-wave token capacity.
+#[derive(Clone, Debug)]
+pub enum WavePolicy {
+    /// a fixed cap (`None` = unchunked: one wave per expert batch)
+    Fixed(Option<usize>),
+    /// pick each step's cap from the previous step's measured
+    /// busiest-shard idle
+    Adaptive(AdaptiveWave),
+}
+
+impl WavePolicy {
+    /// Capacity to use for the next step.
+    pub fn capacity(&self) -> Option<usize> {
+        match self {
+            WavePolicy::Fixed(c) => *c,
+            WavePolicy::Adaptive(a) => Some(a.capacity()),
+        }
+    }
+
+    /// Feed a finished step's stats back into an adaptive controller.
+    pub fn observe(&mut self, stats: &StepStats) {
+        if let WavePolicy::Adaptive(a) = self {
+            a.observe(stats);
+        }
+    }
+}
+
+/// Adaptive wave capacity: instead of a fixed artifact-style constant,
+/// the Native wave size for step *s+1* is derived from step *s*'s
+/// measured busiest-shard idle ([`StepStats::shard_idle_ns`]).  A large
+/// idle fraction means the step is serialized behind one overloaded
+/// shard — smaller waves interleave its queue with the others' and give
+/// the pipeline earlier dispatch opportunities; a negligible idle
+/// fraction means the waves only add per-chunk overhead, so the cap
+/// grows back.  Multiplicative moves with clamping keep the controller
+/// stable under noisy timings.
+#[derive(Clone, Debug)]
+pub struct AdaptiveWave {
+    cap: usize,
+    min: usize,
+    max: usize,
+    /// grow the cap below this idle fraction of the compute wall
+    lo_frac: f64,
+    /// shrink the cap above this idle fraction
+    hi_frac: f64,
+}
+
+impl Default for AdaptiveWave {
+    fn default() -> Self {
+        AdaptiveWave {
+            cap: 256,
+            min: 16,
+            max: 8192,
+            lo_frac: 0.05,
+            hi_frac: 0.25,
+        }
+    }
+}
+
+impl AdaptiveWave {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Like [`new`](Self::new) but starting from (and clamped to)
+    /// explicit bounds.
+    pub fn with_bounds(start: usize, min: usize, max: usize) -> Self {
+        let min = min.max(1);
+        let max = max.max(min);
+        AdaptiveWave {
+            cap: start.clamp(min, max),
+            min,
+            max,
+            ..Self::default()
+        }
+    }
+
+    /// The wave capacity the next step should use.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Observe a finished step: shrink the cap when the busiest-shard
+    /// idle dominates the compute wall, grow it back when idle is
+    /// negligible.
+    ///
+    /// Idle is judged only over shards that actually computed this
+    /// step: a shard that owns no experts (devices > n_experts) or
+    /// received no tokens is idle for the whole wall *no matter the
+    /// wave size* — counting it would pin the capacity at `min`
+    /// forever in exactly those configurations.
+    pub fn observe(&mut self, stats: &StepStats) {
+        // reconstruct the window the idles were measured against
+        // (busy + idle = that window for every shard, by construction),
+        // which is exact regardless of how a path derived its compute
+        // phase from the raw walls
+        let wall = stats
+            .shard_compute_ns
+            .iter()
+            .zip(stats.shard_idle_ns.iter())
+            .map(|(busy, idle)| busy + idle)
+            .max()
+            .unwrap_or(stats.phases.compute)
+            .max(1);
+        let idle = stats
+            .shard_compute_ns
+            .iter()
+            .zip(stats.shard_idle_ns.iter())
+            .filter(|(busy, _)| **busy > 0)
+            .map(|(_, idle)| *idle)
+            .max()
+            .unwrap_or(0);
+        let frac = idle as f64 / wall as f64;
+        if frac > self.hi_frac {
+            self.cap = (self.cap / 2).max(self.min);
+        } else if frac < self.lo_frac {
+            self.cap = (self.cap * 2).min(self.max);
+        }
     }
 }
 
@@ -189,6 +322,8 @@ pub struct Scheduler {
     // so they must not change after the first step
     layout: ShardLayout,
     backend: ExpertBackend,
+    /// wave-capacity policy handed to the engine when it starts
+    policy: WavePolicy,
     /// Persistent execution engine, started on first use and reused for
     /// every subsequent step (no per-step thread spawn).
     engine: Mutex<Option<ExecutionEngine>>,
@@ -196,7 +331,17 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(layout: ShardLayout, backend: ExpertBackend) -> Self {
-        Scheduler { layout, backend, engine: Mutex::new(None) }
+        Self::with_policy(layout, backend, WavePolicy::Fixed(None))
+    }
+
+    /// Like [`new`](Self::new) with an explicit Native wave-capacity
+    /// policy (fixed cap or [`AdaptiveWave`]).
+    pub fn with_policy(
+        layout: ShardLayout,
+        backend: ExpertBackend,
+        policy: WavePolicy,
+    ) -> Self {
+        Scheduler { layout, backend, policy, engine: Mutex::new(None) }
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -226,8 +371,12 @@ impl Scheduler {
             .engine
             .lock()
             .unwrap_or_else(|poison| poison.into_inner());
-        let engine = guard
-            .get_or_insert_with(|| ExecutionEngine::start(self.layout.clone()));
+        let engine = guard.get_or_insert_with(|| {
+            ExecutionEngine::with_policy(
+                self.layout.clone(),
+                self.policy.clone(),
+            )
+        });
         match &self.backend {
             ExpertBackend::Native => engine.execute_native(plan, xs, weights),
             // The PJRT executable is not Send (the xla crate wraps the
@@ -238,6 +387,54 @@ impl Scheduler {
                 engine.execute_artifact(plan, xs, weights, exe, *capacity)
             }
         }
+    }
+
+    /// Execute one *full* MoE step — gating, dispatch and expert
+    /// execution — as a streaming pipeline on the persistent engine
+    /// (see [`ExecutionEngine::execute_streaming`]): replica r+1 routes
+    /// while replica r's experts compute, and the first expert wave is
+    /// dispatched before the last token is gated.
+    ///
+    /// Requires Native expert and router backends; artifact-backed
+    /// configurations fall back to the serially-composed
+    /// route → plan → execute step (with the route wall recorded in
+    /// `stats.phases.route`), so callers can use this entry point
+    /// unconditionally.
+    pub fn execute_streamed(
+        &self,
+        router: &Router,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+        mut rng: Option<&mut crate::util::rng::Rng>,
+    ) -> Result<StreamedStep> {
+        let mut guard = self
+            .engine
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner());
+        let engine = guard.get_or_insert_with(|| {
+            ExecutionEngine::with_policy(
+                self.layout.clone(),
+                self.policy.clone(),
+            )
+        });
+        let native_router = router.groups > 0
+            || matches!(router.backend, RouterBackend::Native);
+        if native_router && matches!(self.backend, ExpertBackend::Native) {
+            return engine.execute_streaming(router, xs, weights, rng);
+        }
+        // serial fallback: route on the coordinator, then execute
+        let t0 = Instant::now();
+        let (decisions, plan) =
+            Dispatcher::route_and_plan(router, xs, rng.as_deref_mut())?;
+        let route_ns = t0.elapsed().as_nanos() as u64;
+        let (outs, mut stats) = match &self.backend {
+            ExpertBackend::Native => engine.execute_native(&plan, xs, weights)?,
+            ExpertBackend::Artifact { exe, capacity } => {
+                engine.execute_artifact(&plan, xs, weights, exe, *capacity)?
+            }
+        };
+        stats.phases.route = route_ns;
+        Ok(StreamedStep { outs, decisions, stats })
     }
 
     /// Retained single-threaded reference path: gather, run each expert

@@ -23,6 +23,10 @@ pub struct Gating {
     pub clean: Vec<f32>,
     /// noisy logits H(x), row-major (B, n)
     pub noisy: Vec<f32>,
+    /// softplus *input* x·W_noise, row-major (B, n), kept so the load
+    /// estimator reuses it instead of recomputing the matmul; `None`
+    /// when gating ran without noise weights.
+    pub sigma_raw: Option<Vec<f32>>,
 }
 
 /// x: (b, d) row-major; w_g, w_noise: (d, n) row-major.  `noise_rng` draws
@@ -38,37 +42,108 @@ pub fn noisy_topk(
     k: usize,
     noise_rng: Option<&mut Rng>,
 ) -> Gating {
-    assert_eq!(x.len(), b * d);
-    assert_eq!(w_g.len(), d * n);
-    assert!(k >= 1 && k <= n, "k={k} n={n}");
-    let mut clean = vec![0f32; b * n];
-    matmul(x, w_g, &mut clean, b, d, n);
-    let mut noisy = clean.clone();
-    if let (Some(wn), Some(rng)) = (w_noise, noise_rng) {
-        assert_eq!(wn.len(), d * n);
-        let mut raw = vec![0f32; b * n];
-        matmul(x, wn, &mut raw, b, d, n);
-        for i in 0..b * n {
-            noisy[i] += rng.normal_f32() * softplus(raw[i]);
+    // draw the eq-4 normals up front, in the row-major order the
+    // pre-streaming code used, so decisions are unchanged and row-blocked
+    // callers can hand each block its slice of the same sequence
+    let normals: Option<Vec<f32>> = match (w_noise, noise_rng) {
+        (Some(_), Some(rng)) => {
+            Some((0..b * n).map(|_| rng.normal_f32()).collect())
         }
-    }
-    let per_token = (0..b)
-        .map(|r| topk_softmax(&noisy[r * n..(r + 1) * n], k))
-        .collect();
-    Gating { n_experts: n, per_token, clean, noisy }
+        _ => None,
+    };
+    noisy_topk_block(x, b, d, w_g, w_noise, n, k, normals.as_deref())
 }
 
-/// softmax(KeepTopK(h, k)) for one row; ties broken by lower index,
-/// matching `jax.lax.top_k`.
-pub fn topk_softmax(h: &[f32], k: usize) -> GateVec {
-    let n = h.len();
-    let mut idx: Vec<usize> = (0..n).collect();
-    // stable selection of the k largest
-    idx.sort_by(|&a, &b| {
-        h[b].partial_cmp(&h[a]).unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
+/// Core of [`noisy_topk`] over a row block, with pre-drawn eq-4 normals
+/// (`normals[r*n + i]` perturbs logit `i` of block row `r`).  The
+/// streaming pipeline routes disjoint row blocks of one batch on
+/// different workers; feeding each block its slice of one serially-drawn
+/// normal sequence makes the result bit-identical to gating the whole
+/// batch at once.
+pub fn noisy_topk_block(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    w_g: &[f32],
+    w_noise: Option<&[f32]>,
+    n: usize,
+    k: usize,
+    normals: Option<&[f32]>,
+) -> Gating {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(w_g.len(), d * n);
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let mut clean = vec![0f32; rows * n];
+    matmul(x, w_g, &mut clean, rows, d, n);
+    let mut noisy = clean.clone();
+    let sigma_raw = w_noise.map(|wn| {
+        assert_eq!(wn.len(), d * n);
+        let mut raw = vec![0f32; rows * n];
+        matmul(x, wn, &mut raw, rows, d, n);
+        raw
     });
+    if let (Some(raw), Some(eps)) = (&sigma_raw, normals) {
+        assert_eq!(eps.len(), rows * n);
+        for i in 0..rows * n {
+            noisy[i] += eps[i] * softplus(raw[i]);
+        }
+    }
+    let per_token = (0..rows)
+        .map(|r| topk_softmax(&noisy[r * n..(r + 1) * n], k))
+        .collect();
+    Gating { n_experts: n, per_token, clean, noisy, sigma_raw }
+}
+
+/// The rank order the original full sort used: descending value, ties
+/// broken by lower index (matching `jax.lax.top_k`).  A strict total
+/// order for non-NaN inputs.
+fn rank(h: &[f32], a: usize, b: usize) -> std::cmp::Ordering {
+    h[b].partial_cmp(&h[a])
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.cmp(&b))
+}
+
+/// Indices of the `k` highest-ranked entries of `h`, in rank order,
+/// without sorting the other n-k: an insertion scan for small k, a
+/// select-nth partition plus a k-element sort otherwise — O(n + k log k)
+/// instead of the old O(n log n) full sort.  Bit-identical to
+/// `sort_by(rank); truncate(k)` because `rank` is a strict total order
+/// (asserted against [`topk_softmax_via_sort`] by a property test).
+fn select_topk(h: &[f32], k: usize) -> Vec<usize> {
+    use std::cmp::Ordering;
+    let n = h.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_unstable_by(|&a, &b| rank(h, a, b));
+        return idx;
+    }
+    if k <= 8 {
+        // `best` holds the current top indices in rank order
+        let mut best: Vec<usize> = Vec::with_capacity(k + 1);
+        for i in 0..n {
+            if best.len() == k && rank(h, i, best[k - 1]) != Ordering::Less {
+                continue;
+            }
+            let mut p = best.len();
+            while p > 0 && rank(h, i, best[p - 1]) == Ordering::Less {
+                p -= 1;
+            }
+            best.insert(p, i);
+            best.truncate(k);
+        }
+        return best;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| rank(h, a, b));
     idx.truncate(k);
+    idx.sort_unstable_by(|&a, &b| rank(h, a, b));
+    idx
+}
+
+fn softmax_over(h: &[f32], idx: Vec<usize>) -> GateVec {
     let max = idx.iter().map(|&i| h[i]).fold(f32::NEG_INFINITY, f32::max);
     let exps: Vec<f32> = idx.iter().map(|&i| (h[i] - max).exp()).collect();
     let z: f32 = exps.iter().sum();
@@ -76,6 +151,25 @@ pub fn topk_softmax(h: &[f32], k: usize) -> GateVec {
         experts: idx,
         weights: exps.into_iter().map(|e| e / z).collect(),
     }
+}
+
+/// softmax(KeepTopK(h, k)) for one row; ties broken by lower index,
+/// matching `jax.lax.top_k`.  Selection is O(n) partial selection, not a
+/// full sort — see [`select_topk`].
+pub fn topk_softmax(h: &[f32], k: usize) -> GateVec {
+    softmax_over(h, select_topk(h, k))
+}
+
+/// The pre-streaming implementation — top-k via a full O(n log n) sort —
+/// retained verbatim as the oracle for the partial-selection property
+/// test (`topk_partial_selection_matches_sort`).
+pub fn topk_softmax_via_sort(h: &[f32], k: usize) -> GateVec {
+    let n = h.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    // stable selection of the k largest
+    idx.sort_by(|&a, &b| rank(h, a, b));
+    idx.truncate(k);
+    softmax_over(h, idx)
 }
 
 /// Importance(X) (eq 6): batchwise sum of gate values per expert.
@@ -89,19 +183,18 @@ pub fn importance(g: &Gating) -> Vec<f32> {
     imp
 }
 
-/// Smooth load estimator Load(X) (eq 8–10).  Needs the noise std
-/// σ = softplus(x·W_noise); callers that ran deterministic gating get the
-/// hard assignment count instead.
-pub fn load_estimate(
-    g: &Gating,
-    x: &[f32],
-    b: usize,
-    d: usize,
-    w_noise: Option<&[f32]>,
-    k: usize,
-) -> Vec<f32> {
+/// Smooth load estimator Load(X) (eq 8–10), reusing the softplus input
+/// x·W_noise that [`noisy_topk`] already computed ([`Gating::sigma_raw`])
+/// — the estimator no longer re-runs that matmul, halving gating FLOPs
+/// when the load loss is on.  Gatings produced without noise weights
+/// (deterministic eval) get the hard assignment count instead.  Row
+/// contributions accumulate in row order, so summing disjoint row
+/// blocks' results reproduces the whole-batch value up to f32
+/// reassociation.
+pub fn load_estimate(g: &Gating, k: usize) -> Vec<f32> {
     let n = g.n_experts;
-    let Some(wn) = w_noise else {
+    let b = g.per_token.len();
+    let Some(sigma_raw) = &g.sigma_raw else {
         // deterministic gating: Load = hard counts
         let mut load = vec![0f32; n];
         for tok in &g.per_token {
@@ -114,17 +207,21 @@ pub fn load_estimate(
     if k >= n {
         return vec![b as f32; n];
     }
-    let mut sigma_raw = vec![0f32; b * n];
-    matmul(x, wn, &mut sigma_raw, b, d, n);
     let mut load = vec![0f32; n];
+    let mut row: Vec<f32> = Vec::with_capacity(n);
     for r in 0..b {
         let noisy = &g.noisy[r * n..(r + 1) * n];
         let clean = &g.clean[r * n..(r + 1) * n];
-        // k-th and (k+1)-th largest of the noisy row
-        let mut sorted: Vec<f32> = noisy.to_vec();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
-        let kth = sorted[k - 1];
-        let kth1 = sorted[k];
+        // k-th and (k+1)-th largest of the noisy row by partial
+        // selection: after select-nth under the descending order, slot k
+        // holds the (k+1)-th largest and the slots before it the k
+        // larger values (so their min is the k-th largest) — the same
+        // order statistics the old full sort produced
+        row.clear();
+        row.extend_from_slice(noisy);
+        row.select_nth_unstable_by(k, |a, b| b.partial_cmp(a).unwrap());
+        let kth1 = row[k];
+        let kth = row[..k].iter().copied().fold(f32::INFINITY, f32::min);
         for i in 0..n {
             let threshold = if noisy[i] >= kth { kth1 } else { kth };
             let sigma = softplus(sigma_raw[r * n + i]) + 1e-10;
@@ -227,6 +324,27 @@ mod tests {
     }
 
     #[test]
+    fn topk_partial_selection_matches_sort() {
+        // the O(n) selection must be bit-identical to the retained full
+        // sort, across randomized rows including exact ties and all
+        // three selection branches (k >= n, insertion, select-nth)
+        prop::forall("topk == sort", |rng| {
+            let n = prop::dim(rng, 1, 40);
+            let k = prop::dim(rng, 1, n);
+            // quantized values force frequent exact ties
+            let ties: Vec<f32> =
+                (0..n).map(|_| rng.below(6) as f32 * 0.5 - 1.0).collect();
+            let smooth = prop::vec_f32(rng, n, 1.0);
+            for h in [&ties, &smooth] {
+                let fast = topk_softmax(h, k);
+                let slow = topk_softmax_via_sort(h, k);
+                assert_eq!(fast.experts, slow.experts, "k={k} h={h:?}");
+                assert_eq!(fast.weights, slow.weights, "k={k} h={h:?}");
+            }
+        });
+    }
+
+    #[test]
     fn gates_sum_to_one_property() {
         prop::forall("gates normalized", |rng| {
             let (b, d) = (prop::dim(rng, 1, 12), prop::dim(rng, 1, 8));
@@ -260,6 +378,7 @@ mod tests {
             ],
             clean: vec![],
             noisy: vec![],
+            sigma_raw: None,
         };
         assert_eq!(importance(&g), vec![1.2, 0.5, 0.3]);
     }
@@ -275,7 +394,7 @@ mod tests {
             let wn = prop::vec_f32(rng, d * n, 0.3);
             let mut nrng = rng.fold_in(9);
             let g = noisy_topk(&x, b, d, &wg, Some(&wn), n, k, Some(&mut nrng));
-            let load = load_estimate(&g, &x, b, d, Some(&wn), k);
+            let load = load_estimate(&g, k);
             let total: f32 = load.iter().sum();
             let want = (k * b) as f32;
             assert!(

@@ -4,8 +4,9 @@
 
 use anyhow::Result;
 
+use crate::coordinator::engine::StreamedStep;
 use crate::coordinator::router::Router;
-use crate::coordinator::scheduler::{ExpertWeights, StepStats};
+use crate::coordinator::scheduler::{ExpertWeights, Scheduler, StepStats};
 use crate::coordinator::{DispatchPlan, Dispatcher};
 use crate::runtime::TensorF;
 use crate::util::rng::Rng;
@@ -85,14 +86,79 @@ impl SyntheticMoe {
     pub fn tokens(&self) -> usize {
         self.xs.iter().map(|x| x.shape[0]).sum()
     }
+
+    /// One PR-1-shaped step: route every replica serially on the
+    /// caller's thread, build the plan, then execute on the persistent
+    /// engine — route, dispatch and execute composed back-to-back.  The
+    /// route+plan wall lands in `stats.phases.route` so the result is
+    /// directly comparable with [`run_streamed`](Self::run_streamed).
+    pub fn run_unpipelined(
+        &self,
+        sched: &Scheduler,
+        rng: Option<&mut Rng>,
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        self.run_composed(rng, |plan, refs, weights| {
+            sched.execute(plan, refs, weights)
+        })
+    }
+
+    /// The serially-composed step on the single-threaded reference path
+    /// (route → plan → [`Scheduler::execute_serial`]), with the route
+    /// wall stamped into `stats.phases.route` — the full-step oracle
+    /// row for reports and benches.
+    pub fn run_serial_reference(
+        &self,
+        sched: &Scheduler,
+        rng: Option<&mut Rng>,
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        self.run_composed(rng, |plan, refs, weights| {
+            sched.execute_serial(plan, refs, weights)
+        })
+    }
+
+    /// Shared route→plan→execute composition: time the serial routing,
+    /// run `exec`, stamp the route wall into `stats.phases.route`.
+    fn run_composed<F>(
+        &self,
+        rng: Option<&mut Rng>,
+        exec: F,
+    ) -> Result<(Vec<TensorF>, StepStats)>
+    where
+        F: FnOnce(
+            &DispatchPlan,
+            &[&TensorF],
+            &[ExpertWeights],
+        ) -> Result<(Vec<TensorF>, StepStats)>,
+    {
+        let refs = self.refs();
+        let t0 = std::time::Instant::now();
+        let (_decisions, plan) =
+            Dispatcher::route_and_plan(&self.router, &refs, rng)?;
+        let route_ns = t0.elapsed().as_nanos() as u64;
+        let (outs, mut stats) = exec(&plan, &refs, &self.weights)?;
+        stats.phases.route = route_ns;
+        Ok((outs, stats))
+    }
+
+    /// The same full step as a streaming routing→dispatch pipeline on
+    /// the engine ([`Scheduler::execute_streamed`]).
+    pub fn run_streamed(
+        &self,
+        sched: &Scheduler,
+        rng: Option<&mut Rng>,
+    ) -> Result<StreamedStep> {
+        let refs = self.refs();
+        sched.execute_streamed(&self.router, &refs, &self.weights, rng)
+    }
 }
 
 /// One-line rendering of a step's per-phase breakdown (shared by the
 /// benches and the efficiency report).
 pub fn phase_line(stats: &StepStats) -> String {
     format!(
-        "gather {:.3}ms  compute {:.3}ms  combine {:.3}ms  waves={}  \
-         busiest_shard={} tok  max shard idle {:.3}ms",
+        "route {:.3}ms  gather {:.3}ms  compute {:.3}ms  combine {:.3}ms  \
+         waves={}  busiest_shard={} tok  max shard idle {:.3}ms",
+        stats.phases.route as f64 / 1e6,
         stats.phases.gather as f64 / 1e6,
         stats.phases.compute as f64 / 1e6,
         stats.phases.combine as f64 / 1e6,
@@ -114,5 +180,29 @@ mod tests {
         assert_eq!(w.tokens(), 20);
         assert_eq!(w.plan.total_routes(), 20 * 2);
         assert_eq!(w.refs().len(), 2);
+    }
+
+    #[test]
+    fn streamed_helper_matches_unpipelined() {
+        use crate::coordinator::scheduler::ExpertBackend;
+        use crate::coordinator::ShardLayout;
+
+        let w = SyntheticMoe::build(5, 8, 16, 6, 2, 2, 12).unwrap();
+        let sched =
+            Scheduler::new(ShardLayout::new(2, 6), ExpertBackend::Native);
+        let mut r1 = Rng::new(99);
+        let (outs, stats) = w.run_unpipelined(&sched, Some(&mut r1)).unwrap();
+        let mut r2 = Rng::new(99);
+        let s = w.run_streamed(&sched, Some(&mut r2)).unwrap();
+        assert_eq!(outs.len(), s.outs.len());
+        for (a, b) in outs.iter().zip(s.outs.iter()) {
+            assert_eq!(a.shape, b.shape);
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() <= 1e-5, "{x} vs {y}");
+            }
+        }
+        assert_eq!(s.decisions.len(), 2);
+        assert_eq!(s.stats.expert_loads, stats.expert_loads);
+        assert!(stats.phases.route > 0, "unpipelined route wall recorded");
     }
 }

@@ -21,12 +21,26 @@
 //! pooled gather/compute/combine arenas so the hot path neither spawns
 //! threads nor allocates per step.  Over-capacity expert batches are
 //! processed in synchronous waves, and wave *w+1* is gathered while wave
-//! *w* computes.  [`coordinator::Scheduler::execute_serial`] retains the
+//! *w* computes.
+//!
+//! The full step — gating included — runs as a **streaming
+//! routing→dispatch pipeline** on the same pool
+//! ([`coordinator::Scheduler::execute_streamed`]): row blocks are gated
+//! in parallel with pre-drawn eq-4 noise, routed blocks feed an
+//! incremental [`coordinator::PlanBuilder`], and each expert wave is
+//! dispatched the moment its rows are final, so replica r+1 routes
+//! while replica r's experts compute.  The Native wave size comes from
+//! a [`coordinator::WavePolicy`] — fixed, or adapted each step from the
+//! previous step's measured busiest-shard idle
+//! ([`coordinator::AdaptiveWave`]).
+//!
+//! [`coordinator::Scheduler::execute_serial`] retains the
 //! single-threaded reference path; `rust/tests/engine_parity.rs` proves
-//! the two agree on randomized workloads, and
-//! [`coordinator::StepStats`] reports the per-phase (gather / compute /
-//! combine) and per-shard busy/idle breakdown that makes the §3.1
-//! busiest-shard wait directly observable.
+//! the engine and the streamed pipeline agree with it on randomized
+//! workloads, and [`coordinator::StepStats`] reports the per-phase
+//! (route / gather / compute / combine) and per-shard busy/idle
+//! breakdown that makes the §3.1 busiest-shard wait directly
+//! observable.
 //!
 //! The `xla` dependency is a vendored API-compatible stub by default
 //! (see `vendor/xla`); artifact-backed paths report "PJRT unavailable"

@@ -56,13 +56,39 @@ impl Bencher {
         Bencher { budget: Duration::from_secs(1), max_iters: 50, warmup: 1 }
     }
 
+    /// One un-warmed iteration per case — the CI smoke job uses this to
+    /// assert the benches run and emit well-formed JSON without
+    /// spending minutes measuring.
+    fn smoke() -> Self {
+        Bencher { budget: Duration::ZERO, max_iters: 1, warmup: 0 }
+    }
+
+    fn smoke_requested() -> bool {
+        std::env::var_os("BENCH_SMOKE").is_some()
+    }
+
+    /// [`smoke`](Self::smoke) when the `BENCH_SMOKE` env var is set,
+    /// default timing otherwise.
+    pub fn from_env() -> Self {
+        if Self::smoke_requested() { Self::smoke() } else { Bencher::default() }
+    }
+
+    /// Like [`from_env`](Self::from_env) but with [`quick`](Self::quick)
+    /// timing when `BENCH_SMOKE` is unset.
+    pub fn from_env_quick() -> Self {
+        if Self::smoke_requested() { Self::smoke() } else { Bencher::quick() }
+    }
+
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
         for _ in 0..self.warmup {
             f();
         }
         let mut samples = Vec::new();
         let start = Instant::now();
-        while start.elapsed() < self.budget && samples.len() < self.max_iters {
+        // always at least one sample, so a zero budget means "run once"
+        while samples.is_empty()
+            || (start.elapsed() < self.budget && samples.len() < self.max_iters)
+        {
             let t = Instant::now();
             f();
             samples.push(t.elapsed());
@@ -87,6 +113,97 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable bench output: accumulates [`BenchResult`]s and
+/// writes a `BENCH_<name>.json` document (ns/op, throughput, arbitrary
+/// per-phase extras) so the perf trajectory is tracked across PRs.  The
+/// rendering is exactly the dialect [`crate::util::json`] parses —
+/// round-trip asserted in tests.
+pub struct BenchReport {
+    bench: String,
+    /// pre-rendered JSON objects, one per recorded result
+    results: Vec<String>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        BenchReport { bench: bench.to_string(), results: Vec::new() }
+    }
+
+    /// Record one result, with optional throughput (`unit`, items per
+    /// iteration) and extra numeric fields (e.g. per-phase ns).
+    pub fn push(
+        &mut self,
+        r: &BenchResult,
+        throughput: Option<(&str, f64)>,
+        extra: &[(&str, f64)],
+    ) {
+        let mut obj = format!(
+            "{{\"name\": {}, \"iters\": {}, \"mean_ns\": {}, \
+             \"p50_ns\": {}, \"p95_ns\": {}",
+            json_str(&r.name),
+            r.iters,
+            r.mean.as_nanos(),
+            r.p50.as_nanos(),
+            r.p95.as_nanos()
+        );
+        if let Some((unit, per_iter)) = throughput {
+            let rate = per_iter / r.mean_secs();
+            obj.push_str(&format!(
+                ", \"unit\": {}, \"per_sec\": {}",
+                json_str(unit),
+                json_num(rate)
+            ));
+        }
+        for (key, v) in extra {
+            obj.push_str(&format!(", {}: {}", json_str(key), json_num(*v)));
+        }
+        obj.push('}');
+        self.results.push(obj);
+    }
+
+    /// Render the full JSON document.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\"bench\": {}, \"results\": [{}]}}\n",
+            json_str(&self.bench),
+            self.results.join(", ")
+        )
+    }
+
+    /// Write to `path` (conventionally `BENCH_<name>.json` in the repo
+    /// root, committed so the trajectory is diffable across PRs).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
+/// RFC 8259 string escaping (bench names are ASCII, but stay correct).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite JSON number (NaN/inf have no JSON encoding; emit 0 instead).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +220,40 @@ mod tests {
         assert!(r.iters >= 1);
         assert!(r.mean > Duration::ZERO);
         assert!(r.p95 >= r.p50);
+    }
+
+    #[test]
+    fn zero_budget_runs_exactly_once() {
+        let b = Bencher::new(Duration::ZERO, 1, 0);
+        let mut n = 0;
+        let r = b.run("once", || n += 1);
+        assert_eq!(n, 1);
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn report_renders_parseable_json() {
+        let b = Bencher::new(Duration::from_millis(10), 3, 0);
+        let r = b.run("spin \"quoted\"", || {
+            black_box(1 + 1);
+        });
+        let mut rep = BenchReport::new("step");
+        rep.push(&r, Some(("tok", 4096.0)), &[("compute_ns", 123.0)]);
+        rep.push(&r, None, &[]);
+        let doc = crate::util::json::parse(&rep.render()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("step"));
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str(),
+            Some("spin \"quoted\"")
+        );
+        assert!(results[0].get("per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            results[0].get("compute_ns").unwrap().as_f64(),
+            Some(123.0)
+        );
+        assert!(results[1].get("iters").unwrap().as_usize().unwrap() >= 1);
+        assert!(results[1].get("per_sec").is_none());
     }
 }

@@ -8,9 +8,10 @@
 //! k, degenerate layouts, over-capacity waves).
 
 use moe::coordinator::engine::ExecutionEngine;
-use moe::coordinator::router::Router;
+use moe::coordinator::router::{Router, RouterBackend};
 use moe::coordinator::scheduler::{
-    ExpertBackend, ExpertWeights, Scheduler, ShardLayout,
+    AdaptiveWave, ExpertBackend, ExpertWeights, PhaseNanos, Scheduler,
+    ShardLayout, StepStats, WavePolicy,
 };
 use moe::coordinator::{DispatchPlan, Dispatcher};
 use moe::runtime::TensorF;
@@ -282,6 +283,286 @@ fn native_step_smoke_stats_invariants() {
     for (busy, idle) in
         stats.shard_compute_ns.iter().zip(stats.shard_idle_ns.iter()) {
         assert!(busy + idle >= stats.phases.compute || *idle == 0);
+    }
+}
+
+/// Serial oracle for the streamed pipeline: route every replica in
+/// order with `rng`, build the batch plan, execute on the retained
+/// single-threaded reference.
+fn serial_oracle(
+    router: &Router,
+    xs: &[TensorF],
+    weights: &[ExpertWeights],
+    layout: &ShardLayout,
+    mut rng: Option<&mut Rng>,
+) -> (Vec<TensorF>, Vec<moe::coordinator::router::RoutingDecision>, DispatchPlan) {
+    let refs: Vec<&TensorF> = xs.iter().collect();
+    let decisions: Vec<_> = xs
+        .iter()
+        .map(|x| router.route(x, rng.as_deref_mut()).unwrap())
+        .collect();
+    let plan = Dispatcher::plan(&decisions, router.n_experts);
+    let sched = Scheduler::new(layout.clone(), ExpertBackend::Native);
+    let (want, _) = sched.execute_serial(&plan, &refs, weights).unwrap();
+    (want, decisions, plan)
+}
+
+/// Assert a streamed step equals the serial oracle: outputs within TOL,
+/// gate decisions bit-identical, balance sums within reassociation
+/// tolerance.
+fn assert_streamed_matches(
+    s: &moe::coordinator::engine::StreamedStep,
+    want: &[TensorF],
+    decisions: &[moe::coordinator::router::RoutingDecision],
+    plan: &DispatchPlan,
+) {
+    assert_eq!(s.outs.len(), want.len());
+    for (g, w) in s.outs.iter().zip(want.iter()) {
+        assert_eq!(g.shape, w.shape);
+        for (a, b) in g.data.iter().zip(w.data.iter()) {
+            assert!((a - b).abs() <= TOL, "streamed {a} vs serial {b}");
+        }
+    }
+    assert_eq!(s.decisions.len(), decisions.len());
+    for (sd, wd) in s.decisions.iter().zip(decisions.iter()) {
+        assert_eq!(sd.per_token.len(), wd.per_token.len());
+        for (a, b) in sd.per_token.iter().zip(wd.per_token.iter()) {
+            assert_eq!(a.experts, b.experts, "gate selection differs");
+            assert_eq!(a.weights, b.weights, "gate weights differ");
+        }
+        for (a, b) in sd.importance.iter().zip(wd.importance.iter()) {
+            assert!((a - b).abs() < 1e-4, "importance {a} vs {b}");
+        }
+        for (a, b) in sd.load.iter().zip(wd.load.iter()) {
+            assert!((a - b).abs() < 1e-3, "load {a} vs {b}");
+        }
+    }
+    assert_eq!(s.stats.expert_loads, plan.expert_loads());
+    assert_eq!(s.stats.network_bytes, plan.network_bytes(want[0].shape[1]));
+}
+
+#[test]
+fn streamed_pipeline_matches_serial_reference() {
+    // the tentpole differential: the full streamed step (row-blocked
+    // parallel gating -> incremental plan -> waves dispatched as routes
+    // land) equals serial route -> plan -> execute, across randomized
+    // b/n/k/shard/replica shapes and wave policies
+    prop::forall("streamed == serial", |rng| {
+        let d = prop::dim(rng, 2, 10);
+        let h = prop::dim(rng, 2, 14);
+        let n = prop::dim(rng, 1, 20);
+        let k = prop::dim(rng, 1, n.min(4));
+        let replicas = prop::dim(rng, 1, 4);
+        // deliberately includes devices > experts
+        let devices = prop::dim(rng, 1, n + 3);
+        let weights = mk_weights(n, d, h, rng);
+        let router = Router::flat_native(
+            d, n, k,
+            prop::vec_f32(rng, d * n, 0.5),
+            Some(prop::vec_f32(rng, d * n, 0.3)),
+        );
+        let xs: Vec<TensorF> = (0..replicas)
+            .map(|_| {
+                let rows = prop::dim(rng, 1, 12);
+                TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0))
+            })
+            .collect();
+        let layout = ShardLayout::new(devices, n);
+
+        let seed = rng.fold_in(23);
+        let mut r1 = seed.clone();
+        let (want, decisions, plan) =
+            serial_oracle(&router, &xs, &weights, &layout, Some(&mut r1));
+
+        // random wave policy: unchunked, forced multi-wave, or adaptive
+        let policy = match rng.below(3) {
+            0 => WavePolicy::Fixed(None),
+            1 => {
+                let max_load =
+                    plan.expert_loads().into_iter().max().unwrap_or(0).max(1);
+                WavePolicy::Fixed(Some(prop::dim(rng, 1, max_load)))
+            }
+            _ => WavePolicy::Adaptive(AdaptiveWave::with_bounds(
+                prop::dim(rng, 1, 16),
+                1,
+                64,
+            )),
+        };
+        let mut engine = ExecutionEngine::with_policy(layout, policy);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let mut r2 = seed.clone();
+        let s = engine
+            .execute_streaming(&router, &refs, &weights, Some(&mut r2))
+            .unwrap();
+        assert_streamed_matches(&s, &want, &decisions, &plan);
+    });
+}
+
+#[test]
+fn streamed_pipeline_matches_serial_on_hierarchical_gating() {
+    prop::forall("streamed hier == serial", |rng| {
+        let d = prop::dim(rng, 2, 8);
+        let h = prop::dim(rng, 2, 10);
+        let (a, gs) = (prop::dim(rng, 2, 4), prop::dim(rng, 2, 5));
+        let n = a * gs;
+        let k = prop::dim(rng, 1, 2);
+        let devices = prop::dim(rng, 1, 6);
+        let replicas = prop::dim(rng, 1, 3);
+        let weights = mk_weights(n, d, h, rng);
+        let router = Router {
+            backend: RouterBackend::Native,
+            n_experts: n,
+            k,
+            groups: a,
+            d_model: d,
+            w_g: prop::vec_f32(rng, d * a, 0.5),
+            w_noise: Some(prop::vec_f32(rng, d * a, 0.3)),
+            w_g_sec: Some(prop::vec_f32(rng, d * a * gs, 0.5)),
+            w_n_sec: Some(prop::vec_f32(rng, d * a * gs, 0.3)),
+        };
+        let xs: Vec<TensorF> = (0..replicas)
+            .map(|_| {
+                let rows = prop::dim(rng, 1, 10);
+                TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0))
+            })
+            .collect();
+        let layout = ShardLayout::new(devices, n);
+
+        let seed = rng.fold_in(29);
+        let mut r1 = seed.clone();
+        let (want, decisions, plan) =
+            serial_oracle(&router, &xs, &weights, &layout, Some(&mut r1));
+
+        let cap = prop::dim(rng, 1, 8);
+        let mut engine = ExecutionEngine::with_wave_capacity(
+            layout,
+            Some(cap),
+        );
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let mut r2 = seed.clone();
+        let s = engine
+            .execute_streaming(&router, &refs, &weights, Some(&mut r2))
+            .unwrap();
+        assert_streamed_matches(&s, &want, &decisions, &plan);
+    });
+}
+
+#[test]
+fn streamed_degenerate_all_tokens_one_expert() {
+    // every token routed to expert 0 with a tiny wave capacity: the
+    // worst-case layout for the pipeline (nothing to overlap until the
+    // flush) still must be exact, and must chunk into ceil(load/cap)
+    // waves
+    let (d, h, n) = (5, 7, 6);
+    let mut rng = Rng::new(21);
+    let weights = mk_weights(n, d, h, &mut rng);
+    // column 0 strongly positive, the rest strongly negative; with
+    // all-positive activations expert 0 always wins top-1
+    let mut w_g = vec![0f32; d * n];
+    for l in 0..d {
+        for e in 0..n {
+            w_g[l * n + e] = if e == 0 { 10.0 } else { -10.0 };
+        }
+    }
+    let router = Router::flat_native(d, n, 1, w_g, None);
+    let xs: Vec<TensorF> = (0..2)
+        .map(|_| {
+            TensorF::new(
+                vec![9, d],
+                (0..9 * d).map(|_| rng.normal_f32().abs() + 0.1).collect(),
+            )
+        })
+        .collect();
+    let layout = ShardLayout::new(3, n);
+    let (want, decisions, plan) =
+        serial_oracle(&router, &xs, &weights, &layout, None);
+    assert_eq!(plan.expert_loads(), vec![18, 0, 0, 0, 0, 0]);
+
+    let mut engine =
+        ExecutionEngine::with_wave_capacity(layout, Some(4));
+    let refs: Vec<&TensorF> = xs.iter().collect();
+    let s = engine
+        .execute_streaming(&router, &refs, &weights, None)
+        .unwrap();
+    assert_streamed_matches(&s, &want, &decisions, &plan);
+    assert_eq!(s.stats.waves, 5, "ceil(18/4) waves");
+}
+
+#[test]
+fn adaptive_wave_controller_reacts_to_idle() {
+    // both shards busy: shard 0 waits `idle` ns on shard 1
+    let mk = |compute: u64, idle: u64| StepStats {
+        phases: PhaseNanos { compute, ..PhaseNanos::default() },
+        shard_compute_ns: vec![compute - idle, compute],
+        shard_idle_ns: vec![idle, 0],
+        ..StepStats::default()
+    };
+    let mut a = AdaptiveWave::with_bounds(64, 16, 256);
+    a.observe(&mk(1000, 500)); // 50% idle -> halve
+    assert_eq!(a.capacity(), 32);
+    a.observe(&mk(1000, 500));
+    assert_eq!(a.capacity(), 16);
+    a.observe(&mk(1000, 500)); // clamped at min
+    assert_eq!(a.capacity(), 16);
+    a.observe(&mk(1000, 0)); // idle-free -> grow back
+    assert_eq!(a.capacity(), 32);
+    a.observe(&mk(1000, 100)); // 10% idle -> hold
+    assert_eq!(a.capacity(), 32);
+    for _ in 0..10 {
+        a.observe(&mk(1000, 0));
+    }
+    assert_eq!(a.capacity(), 256, "clamped at max");
+
+    // a structurally idle shard (no experts / no tokens this step) is
+    // idle at every wave size and must not drag the capacity down
+    let structural = StepStats {
+        phases: PhaseNanos { compute: 1000, ..PhaseNanos::default() },
+        shard_compute_ns: vec![1000, 0],
+        shard_idle_ns: vec![0, 1000],
+        ..StepStats::default()
+    };
+    let mut b = AdaptiveWave::with_bounds(64, 16, 256);
+    b.observe(&structural);
+    assert_eq!(b.capacity(), 128, "structural idle must not shrink cap");
+}
+
+#[test]
+fn adaptive_engine_stays_exact_across_steps() {
+    // the adaptive controller must only ever change *performance*: many
+    // consecutive streamed steps, each checked against the serial
+    // oracle while the capacity moves
+    let (d, h, n) = (6, 8, 6);
+    let mut rng = Rng::new(31);
+    let weights = mk_weights(n, d, h, &mut rng);
+    let layout = ShardLayout::new(2, n);
+    let router = Router::flat_native(
+        d, n, 2,
+        prop::vec_f32(&mut rng, d * n, 0.5),
+        Some(prop::vec_f32(&mut rng, d * n, 0.3)),
+    );
+    let mut engine = ExecutionEngine::with_policy(
+        layout.clone(),
+        WavePolicy::Adaptive(AdaptiveWave::with_bounds(4, 1, 64)),
+    );
+    for step in 0..6 {
+        let rows = 3 + step;
+        let x = TensorF::new(
+            vec![rows, d],
+            prop::vec_f32(&mut rng, rows * d, 1.0),
+        );
+        let xs = vec![x];
+        let seed = rng.fold_in(50 + step as u64);
+        let mut r1 = seed.clone();
+        let (want, decisions, plan) =
+            serial_oracle(&router, &xs, &weights, &layout, Some(&mut r1));
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let mut r2 = seed.clone();
+        let s = engine
+            .execute_streaming(&router, &refs, &weights, Some(&mut r2))
+            .unwrap();
+        let cap = engine.wave_capacity().expect("adaptive cap is concrete");
+        assert!((1..=64).contains(&cap), "cap {cap} within bounds");
+        assert_streamed_matches(&s, &want, &decisions, &plan);
     }
 }
 
