@@ -11,7 +11,9 @@
 //!   serially on the coordinator, then the engine executes;
 //! - **serial reference**: the retained single-threaded oracle.
 //!
-//! Results (ns/op, tok/s, per-phase breakdown) are also written to
+//! Results (ns/op, tok/s, per-phase breakdown including `overlap_ns`
+//! and `combine_overlap_ratio` — the combine work the dependency-driven
+//! executor hid under expert compute) are also written to
 //! `BENCH_step.json` so the perf trajectory is tracked across PRs.
 //! Set `BENCH_SMOKE=1` for a single-iteration CI smoke run.
 //!
@@ -35,6 +37,8 @@ fn phase_extras(stats: &StepStats) -> Vec<(&'static str, f64)> {
         ("gather_ns", stats.phases.gather as f64),
         ("compute_ns", stats.phases.compute as f64),
         ("combine_ns", stats.phases.combine as f64),
+        ("overlap_ns", stats.phases.overlap_ns as f64),
+        ("combine_overlap_ratio", stats.combine_overlap_ratio()),
         ("waves", stats.waves as f64),
         (
             "max_shard_idle_ns",
@@ -90,7 +94,8 @@ fn native_engine_section(bench: &Bencher, report: &mut BenchReport) {
             black_box(work.run_serial_reference(&unpipelined, None).unwrap());
         });
         r.report_throughput("tok", tokens as f64);
-        report.push(&r, tput, &[]);
+        let (_, s_stats) = work.run_serial_reference(&unpipelined, None).unwrap();
+        report.push(&r, tput, &phase_extras(&s_stats));
 
         println!("  streamed phases:    {}", phase_line(&s.stats));
         println!("  unpipelined phases: {}", phase_line(&u_stats));

@@ -1,6 +1,8 @@
 //! Quickstart: load the AOT artifacts, run a few training steps of a
-//! small MoE language model, evaluate perplexity, and route a batch
-//! through the distributed coordinator.
+//! small MoE language model, evaluate perplexity, and run a batch
+//! through the streamed dependency-driven step executor
+//! (`Scheduler::execute_streamed`), printing the per-phase ns
+//! breakdown including the combine-overlap metric.
 //!
 //! ```bash
 //! make artifacts                       # once: lower the JAX/Pallas model
@@ -8,7 +10,6 @@
 //! ```
 
 use anyhow::Result;
-use moe::coordinator::Dispatcher;
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
 use moe::data::Batcher;
 use moe::harness::distributed::{expert_weights, router_for};
@@ -51,34 +52,48 @@ fn main() -> Result<()> {
     let eval = trainer.evaluate(&state, &mut test, 10)?;
     println!("test perplexity: {:.2}", eval.perplexity());
 
-    // --- 4. distributed routing: 4 simulated devices, expert shards ---
+    // --- 4. distributed MoE: the streamed step executor on 4 simulated
+    //        devices (Native router + experts so routing, dispatch,
+    //        expert compute and per-replica combine all pipeline) ---
     let entry = manifest.config(cfg)?.clone();
     let router = router_for(&entry, &state.params.data, &engine, &manifest,
-                            true)?;
+                            false)?;
     let weights = expert_weights(&entry, &state.params.data)?;
     let sched = Scheduler::new(
         ShardLayout::new(4, c.n_experts),
-        ExpertBackend::Artifact {
-            exe: engine.load(&manifest, cfg, "expert")?,
-            capacity: c.capacity,
-        },
+        ExpertBackend::Native,
     );
     let mut rng = Rng::new(0);
-    let x = TensorF::new(
-        vec![c.batch * c.seq_len, c.d_model],
-        (0..c.batch * c.seq_len * c.d_model).map(|_| rng.normal_f32()).collect(),
-    );
+    let xs: Vec<TensorF> = (0..2)
+        .map(|_| {
+            TensorF::new(
+                vec![c.batch * c.seq_len, c.d_model],
+                (0..c.batch * c.seq_len * c.d_model)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<&TensorF> = xs.iter().collect();
     let mut nrng = rng.fold_in(1);
-    let dec = router.route(&x, Some(&mut nrng))?;
-    let plan = Dispatcher::plan(std::slice::from_ref(&dec), c.n_experts);
-    let (outs, stats) = sched.execute(&plan, &[&x], &weights)?;
+    let s = sched.execute_streamed(&router, &refs, &weights, Some(&mut nrng))?;
     println!(
-        "distributed MoE: {} routes over {} experts, busiest shard {} \
-         tokens, output shape {:?}",
-        plan.total_routes(),
+        "streamed MoE: {} routes over {} experts, busiest shard {} tokens, \
+         output shape {:?}",
+        s.plan.total_routes(),
         c.n_experts,
-        stats.busiest_shard_tokens,
-        outs[0].shape
+        s.stats.busiest_shard_tokens,
+        s.outs[0].shape
+    );
+    println!(
+        "  phases: route {}ns  gather {}ns  compute {}ns  combine {}ns \
+         (+{}ns hidden under compute, overlap {:.0}%)",
+        s.stats.phases.route,
+        s.stats.phases.gather,
+        s.stats.phases.compute,
+        s.stats.phases.combine,
+        s.stats.phases.overlap_ns,
+        s.stats.combine_overlap_ratio() * 100.0,
     );
     println!("quickstart OK");
     Ok(())

@@ -196,6 +196,33 @@ impl Dispatcher {
         )
     }
 
+    /// Split rows `[rows.start, rows.end)` of one expert's batch into
+    /// maximal per-replica runs — the combine partition of one drained
+    /// expert chunk.  Tokens are replica-major within every expert
+    /// batch ([`Dispatcher::plan`] order, preserved by [`PlanBuilder`]),
+    /// so each replica's rows form exactly one contiguous run; the
+    /// dependency-driven executor uses these runs as the "messages" of
+    /// the async all-to-all, delivering each to its replica's combine
+    /// queue the moment the chunk drains.
+    pub fn replica_runs(
+        plan: &DispatchPlan,
+        expert: usize,
+        rows: std::ops::Range<usize>,
+    ) -> Vec<(usize, std::ops::Range<usize>)> {
+        let toks = &plan.per_expert[expert].tokens[rows.clone()];
+        let mut runs = Vec::new();
+        let mut i = 0;
+        while i < toks.len() {
+            let replica = toks[i].replica;
+            let start = i;
+            while i < toks.len() && toks[i].replica == replica {
+                i += 1;
+            }
+            runs.push((replica, rows.start + start..rows.start + i));
+        }
+        runs
+    }
+
     /// Gather a contiguous row range (one wave) of an expert's batch
     /// into a caller-owned buffer.  The engine's wave pipeline uses this
     /// to stage wave w+1 while wave w computes.
@@ -390,6 +417,161 @@ mod tests {
                 assert_eq!(g.gates, w.gates);
             }
         });
+    }
+
+    /// Like `decision` but each token may route the *same* expert more
+    /// than once (duplicate top-k indices — possible for callers that
+    /// feed unnormalized gate vectors), which the builder and the
+    /// combine partition must both tolerate.
+    fn decision_with_duplicates(
+        rows: usize,
+        n: usize,
+        k: usize,
+        rng: &mut crate::util::rng::Rng,
+    ) -> RoutingDecision {
+        let per_token = (0..rows)
+            .map(|_| {
+                let experts: Vec<usize> =
+                    (0..k).map(|_| rng.below(n)).collect();
+                let weights = vec![1.0 / k as f32; k];
+                GateVec { experts, weights }
+            })
+            .collect();
+        RoutingDecision {
+            per_token,
+            importance: vec![0.0; n],
+            load: vec![0.0; n],
+        }
+    }
+
+    #[test]
+    fn replica_runs_partition_expert_batches() {
+        // per-replica combine partition: the runs of any row range must
+        // concatenate back to the range, be replica-major, and name each
+        // replica at most once (tokens are replica-major per expert)
+        prop::forall("replica runs", |rng| {
+            let (n, k) = (prop::dim(rng, 2, 8), prop::dim(rng, 1, 3));
+            let replicas = prop::dim(rng, 1, 5);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision(prop::dim(rng, 1, 8), n, k, rng))
+                .collect();
+            let plan = Dispatcher::plan(&decisions, n);
+            for e in 0..n {
+                let len = plan.per_expert[e].tokens.len();
+                let lo = if len == 0 { 0 } else { prop::dim(rng, 0, len) };
+                let hi = if lo == len { len } else { prop::dim(rng, lo, len) };
+                let runs = Dispatcher::replica_runs(&plan, e, lo..hi);
+                let mut cursor = lo;
+                let mut last_replica = None;
+                for (r, range) in &runs {
+                    assert_eq!(range.start, cursor, "runs must be contiguous");
+                    assert!(range.end > range.start, "empty run");
+                    cursor = range.end;
+                    if let Some(prev) = last_replica {
+                        assert!(*r > prev, "replica-major run order");
+                    }
+                    last_replica = Some(*r);
+                    for addr in &plan.per_expert[e].tokens[range.clone()] {
+                        assert_eq!(addr.replica, *r);
+                    }
+                }
+                assert_eq!(cursor, hi, "runs must cover the range");
+            }
+        });
+    }
+
+    #[test]
+    fn dispatched_prefixes_stay_immutable_with_duplicate_topk() {
+        // satellite contract: once a wave [0, len) has been dispatched,
+        // those rows never change — even when tokens route the same
+        // expert twice via duplicate top-k indices
+        prop::forall("prefix immutable (duplicates)", |rng| {
+            let (n, k) = (prop::dim(rng, 2, 6), prop::dim(rng, 2, 4));
+            let replicas = prop::dim(rng, 1, 3);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision_with_duplicates(prop::dim(rng, 1, 8), n, k, rng))
+                .collect();
+            let want = Dispatcher::plan(&decisions, n);
+
+            let mut builder = PlanBuilder::new(n);
+            // snapshots[e] = (len, tokens, gates) at simulated dispatch
+            type Snapshot = (usize, Vec<TokenAddr>, Vec<f32>);
+            let mut snapshots: Vec<Option<Snapshot>> = vec![None; n];
+            for dec in &decisions {
+                let rows = dec.per_token.len();
+                let mut lo = 0;
+                while lo < rows {
+                    let hi = (lo + 1 + rng.below(3)).min(rows);
+                    builder.push_rows(&dec.per_token[lo..hi]);
+                    lo = hi;
+                    // simulate dispatching a wave of a random expert:
+                    // snapshot its current prefix
+                    let e = rng.below(n);
+                    let len = builder.expert_len(e);
+                    let b = &builder.plan().per_expert[e];
+                    snapshots[e] = Some((
+                        len,
+                        b.tokens[..len].to_vec(),
+                        b.gates[..len].to_vec(),
+                    ));
+                    // every earlier snapshot still bit-equal to the
+                    // prefix it was taken from
+                    for (se, snap) in snapshots.iter().enumerate() {
+                        let Some((slen, stoks, sgates)) = snap else {
+                            continue;
+                        };
+                        let cur = &builder.plan().per_expert[se];
+                        assert_eq!(&cur.tokens[..*slen], &stoks[..]);
+                        assert_eq!(&cur.gates[..*slen], &sgates[..]);
+                    }
+                }
+                builder.finish_replica();
+            }
+            let got = builder.finish();
+            assert_eq!(got.replica_rows, want.replica_rows);
+            for (g, w) in got.per_expert.iter().zip(want.per_expert.iter()) {
+                assert_eq!(g.tokens, w.tokens);
+                assert_eq!(g.gates, w.gates);
+            }
+        });
+    }
+
+    #[test]
+    fn builder_prefixes_on_all_tokens_one_expert() {
+        // degenerate layout: every route lands on expert 0; the prefix
+        // is the whole (growing) batch and must match the batch plan at
+        // every block boundary
+        let n = 5;
+        let rows = 13;
+        let gv = GateVec { experts: vec![0, 0], weights: vec![0.5, 0.5] };
+        let decisions = vec![RoutingDecision {
+            per_token: vec![gv; rows],
+            importance: vec![0.0; n],
+            load: vec![0.0; n],
+        }];
+        let want = Dispatcher::plan(&decisions, n);
+        assert_eq!(want.per_expert[0].tokens.len(), 2 * rows);
+
+        let mut builder = PlanBuilder::new(n);
+        let mut lo = 0;
+        while lo < rows {
+            let hi = (lo + 4).min(rows);
+            builder.push_rows(&decisions[0].per_token[lo..hi]);
+            let len = builder.expert_len(0);
+            assert_eq!(len, 2 * hi, "two routes per appended row");
+            assert_eq!(
+                builder.plan().per_expert[0].tokens[..len],
+                want.per_expert[0].tokens[..len]
+            );
+            for e in 1..n {
+                assert_eq!(builder.expert_len(e), 0);
+            }
+            lo = hi;
+        }
+        builder.finish_replica();
+        let got = builder.finish();
+        assert_eq!(got.per_expert[0].tokens, want.per_expert[0].tokens);
+        assert_eq!(got.per_expert[0].gates, want.per_expert[0].gates);
     }
 
     #[test]

@@ -13,10 +13,29 @@
 //! - **combine arenas** — per-replica outputs adopt pooled allocations
 //!   via [`TensorF::from_buffer`].
 //!
-//! Over-capacity batches run in synchronous *waves*; the engine stages
-//! wave `w+1` while wave `w` computes (Native: on the coordinator thread
-//! against the worker pool; Artifact: a persistent worker prefetches the
-//! next padded chunk while the PJRT call for the current one runs).
+//! Over-capacity batches run in *waves*; the engine stages wave `w+1`
+//! while wave `w` computes (Native: on the coordinator thread against
+//! the worker pool; Artifact: a persistent worker prefetches the next
+//! padded chunk while the PJRT call for the current one runs).
+//!
+//! # Dependency-driven combine (async all-to-all)
+//!
+//! The step does **not** end in a global combine barrier.  Each replica
+//! carries an explicit completion record ([`ReplicaTracker`]): how many
+//! dispatched expert chunks still owe it rows.  When a chunk drains,
+//! its output is split along [`Dispatcher::replica_runs`] into
+//! per-replica [`CombineSegment`] messages — the "recv" side of the
+//! async all-to-all, with destination rows and gates copied out of the
+//! plan's immutable prefix so the message borrows nothing — and the
+//! moment a replica's last owed chunk arrives, its gate-weighted
+//! combine (eq 1) is emitted as a [`Job::Combine`] onto the worker
+//! pool.  Replica 0's combine therefore runs while later replicas are
+//! still routing and computing; only the post-compute combine *tail*
+//! lands on the critical path ([`PhaseNanos::combine`]), and the hidden
+//! worker-side combine time is reported as [`PhaseNanos::overlap_ns`].
+//! Segment lists are sorted expert-major before emission, so every
+//! token accumulates its k contributions in exactly the serial
+//! reference order (bit-stable regardless of chunk completion timing).
 //!
 //! # Streaming pipeline
 //!
@@ -62,6 +81,7 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -163,10 +183,104 @@ struct RouteReply {
     result: std::result::Result<RouteBlock, String>,
 }
 
+/// One combine "message" of the async all-to-all: the computed rows of
+/// one expert chunk that belong to a single replica, together with
+/// their destination rows and gate weights (copied from the plan's
+/// immutable prefix when the chunk drained, so the message borrows
+/// nothing from the step).
+struct CombineSegment {
+    expert: usize,
+    /// first expert-batch row held in `data` (the chunk's base offset)
+    chunk_lo: usize,
+    /// first expert-batch row covered by this segment (≥ `chunk_lo`)
+    lo: usize,
+    /// destination token rows within the replica, one per segment row
+    rows: Vec<usize>,
+    /// gate weights aligned with `rows`
+    gates: Vec<f32>,
+    /// the chunk's computed (rows, d) output, shared with the other
+    /// replicas the chunk straddles
+    data: Arc<Vec<f32>>,
+}
+
+/// Gate-weighted combine of one replica, dispatched to a worker the
+/// moment the replica's last owed expert chunk drained.
+struct CombineJob {
+    replica: usize,
+    /// replica row count (output is (rows, d), zeroed by the worker)
+    rows: usize,
+    d: usize,
+    /// sorted expert-major so per-token accumulation order matches the
+    /// serial reference exactly
+    segments: Vec<CombineSegment>,
+    /// pooled output buffer
+    out: Vec<f32>,
+    reply: Sender<CombineReply>,
+}
+
+struct CombineReply {
+    replica: usize,
+    ok: bool,
+    combine_ns: u64,
+    /// worker-side completion stamp, comparable with the coordinator's
+    /// record of when the last expert wave drained
+    finished_at: Instant,
+    out: Vec<f32>,
+    /// returned so chunk buffers can be recycled once unshared
+    segments: Vec<CombineSegment>,
+}
+
+/// Completion record for one replica: the executor's dependency unit.
+struct ReplicaTracker {
+    /// dispatched expert chunks that still owe this replica rows
+    outstanding: usize,
+    /// routing finished *and* every routed row dispatched, so
+    /// `outstanding` can only decrease from here
+    sealed: bool,
+    /// replica row count (combine output shape)
+    rows: usize,
+    /// combine messages received so far (the all-to-all recv queue)
+    inbox: Vec<CombineSegment>,
+    /// combine job emitted (terminal state)
+    emitted: bool,
+}
+
+impl ReplicaTracker {
+    fn new(rows: usize, sealed: bool) -> Self {
+        ReplicaTracker {
+            outstanding: 0,
+            sealed,
+            rows,
+            inbox: Vec::new(),
+            emitted: false,
+        }
+    }
+
+    fn ready(&self) -> bool {
+        self.sealed && self.outstanding == 0 && !self.emitted
+    }
+}
+
+/// Record the replicas chunk `[lo, hi)` of `expert` owes rows to, so
+/// their combine jobs wait for it.  Must run before the chunk's reply
+/// can be processed (i.e. before or at dispatch).
+fn register_chunk(
+    plan: &DispatchPlan,
+    trackers: &mut [ReplicaTracker],
+    expert: usize,
+    lo: usize,
+    hi: usize,
+) {
+    for (replica, _) in Dispatcher::replica_runs(plan, expert, lo..hi) {
+        trackers[replica].outstanding += 1;
+    }
+}
+
 enum Job {
     Compute(ComputeJob),
     Gather(GatherJob),
     Route(RouteJob),
+    Combine(CombineJob),
 }
 
 /// Recycled f32 allocations shared by gather inputs, expert outputs and
@@ -227,7 +341,7 @@ impl<'a, T> DrainGuard<'a, T> {
     }
 }
 
-impl<'a, T> Drop for DrainGuard<'a, T> {
+impl<T> Drop for DrainGuard<'_, T> {
     fn drop(&mut self) {
         while self.outstanding > 0 {
             if self.rx.recv().is_err() {
@@ -240,10 +354,12 @@ impl<'a, T> Drop for DrainGuard<'a, T> {
 
 /// A fully streamed MoE step: per-replica outputs plus the routing
 /// decisions the pipeline produced along the way (their importance/load
-/// feed the balance losses) and the step telemetry.
+/// feed the balance losses), the finished dispatch plan (the trainer's
+/// backward pass re-walks it), and the step telemetry.
 pub struct StreamedStep {
     pub outs: Vec<TensorF>,
     pub decisions: Vec<RoutingDecision>,
+    pub plan: DispatchPlan,
     pub stats: StepStats,
 }
 
@@ -303,7 +419,11 @@ impl ExecutionEngine {
     }
 
     /// Execute a step with the pure-rust expert forward on the
-    /// persistent shard workers.
+    /// persistent shard workers.  Combine is dependency-driven (module
+    /// docs): every replica's gate-weighted combine is emitted as a
+    /// worker-pool job the moment its last expert wave drains, so
+    /// multi-wave steps combine early replicas while later waves still
+    /// compute.
     pub fn execute_native(
         &mut self,
         plan: &DispatchPlan,
@@ -328,22 +448,50 @@ impl ExecutionEngine {
         let mut phases = PhaseNanos::default();
         let mut shard_compute = vec![0u64; self.layout.n_devices];
 
-        // full per-expert output arenas
-        let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(loads.len());
-        for &l in &loads {
-            let mut buf = self.pool.take();
-            buf.resize(l * d, 0.0);
-            expert_out.push(buf);
+        // completion records: the plan is complete up front here, so
+        // every replica starts sealed with its full owed-chunk count
+        let mut trackers: Vec<ReplicaTracker> = plan
+            .replica_rows
+            .iter()
+            .map(|&rows| ReplicaTracker::new(rows, true))
+            .collect();
+        for (e, &load) in loads.iter().enumerate() {
+            let mut lo = 0;
+            while lo < load {
+                let hi = lo.saturating_add(cap).min(load);
+                register_chunk(plan, &mut trackers, e, lo, hi);
+                lo = hi;
+            }
         }
 
         let (reply_tx, reply_rx) = channel::<ComputeReply>();
+        let (k_tx, k_rx) = channel::<CombineReply>();
         let mut guard = DrainGuard::new(&reply_rx);
+        let mut k_guard = DrainGuard::new(&k_rx);
         let mut panicked = false;
+        let mut combine_panic = false;
+        let mut outs_raw: Vec<Option<Vec<f32>>> =
+            (0..trackers.len()).map(|_| None).collect();
+        let mut combine_work_ns = 0u64;
+        let mut combine_stamps: Vec<Instant> = Vec::new();
+
+        // replicas owed no chunks (no routed tokens) combine immediately
+        let ready_now: Vec<usize> = trackers
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.ready())
+            .map(|(r, _)| r)
+            .collect();
+        for r in ready_now {
+            self.emit_combine(&mut trackers, r, d, &k_tx)?;
+            k_guard.sent();
+        }
 
         // stage wave 0, then overlap: stage wave w+1 while wave w computes
         let (mut next_tasks, g_ns) = self.stage_wave(plan, xs, 0, cap, d);
         phases.gather += g_ns;
         let t_compute = Instant::now();
+        let mut last_compute_done = t_compute;
         for w in 0..n_waves {
             let wave_tasks = std::mem::take(&mut next_tasks);
             let mut sent = 0usize;
@@ -374,17 +522,27 @@ impl ExecutionEngine {
             }
             for _ in 0..sent {
                 let r = guard.recv()?;
-                shard_compute[r.device] += r.compute_ns;
-                for t in r.tasks {
-                    if r.ok {
-                        expert_out[t.expert]
-                            [t.out_offset * d..(t.out_offset + t.rows) * d]
-                            .copy_from_slice(&t.output[..t.rows * d]);
-                    }
-                    self.pool.put(t.input);
-                    self.pool.put(t.output);
+                last_compute_done = Instant::now();
+                self.absorb_compute_reply(
+                    r,
+                    plan,
+                    &mut trackers,
+                    &mut shard_compute,
+                    d,
+                    &k_tx,
+                    &mut k_guard,
+                    &mut panicked,
+                )?;
+                // recycle finished combines while later waves compute
+                while let Some(kr) = k_guard.try_recv() {
+                    self.absorb_combine_reply(
+                        kr,
+                        &mut outs_raw,
+                        &mut combine_work_ns,
+                        &mut combine_stamps,
+                        &mut combine_panic,
+                    );
                 }
-                panicked |= !r.ok;
             }
         }
         let compute_wall = t_compute.elapsed().as_nanos() as u64;
@@ -393,9 +551,26 @@ impl ExecutionEngine {
             bail!("expert shard panicked during step");
         }
 
-        let (outs, combine_ns) = self.combine(plan, expert_out, &loads, d);
-        phases.combine = combine_ns;
-        let stats = build_stats(
+        // the only combine left on the critical path is the tail that
+        // outlived the last expert wave
+        let t_tail = Instant::now();
+        while k_guard.outstanding > 0 {
+            let kr = k_guard.recv()?;
+            self.absorb_combine_reply(
+                kr,
+                &mut outs_raw,
+                &mut combine_work_ns,
+                &mut combine_stamps,
+                &mut combine_panic,
+            );
+        }
+        phases.combine = t_tail.elapsed().as_nanos() as u64;
+        phases.overlap_ns = combine_work_ns.saturating_sub(phases.combine);
+        if combine_panic {
+            bail!("combine worker panicked during step");
+        }
+        let outs = collect_outs(outs_raw, &plan.replica_rows, d)?;
+        let mut stats = build_stats(
             &self.layout,
             plan,
             d,
@@ -404,6 +579,10 @@ impl ExecutionEngine {
             shard_compute,
             compute_wall,
         );
+        stats.combines_overlapped = combine_stamps
+            .iter()
+            .filter(|t| **t <= last_compute_done)
+            .count();
         self.policy.observe(&stats);
         Ok((outs, stats))
     }
@@ -635,24 +814,35 @@ impl ExecutionEngine {
         // O(blocks × n_experts)
         let mut dirty = vec![false; n];
         let mut touched: Vec<usize> = Vec::new();
-        let mut expert_out: Vec<Vec<f32>> =
-            (0..n).map(|_| self.pool.take()).collect();
+        // per-replica completion records; a replica seals once routed
+        // *and* fully dispatched, and combines once its last owed chunk
+        // drains — usually while later replicas still route/compute
+        let mut trackers: Vec<ReplicaTracker> =
+            xs.iter().map(|x| ReplicaTracker::new(x.shape[0], false)).collect();
+        let mut outs_raw: Vec<Option<Vec<f32>>> =
+            (0..xs.len()).map(|_| None).collect();
+        let mut combine_work_ns = 0u64;
+        let mut combine_stamps: Vec<Instant> = Vec::new();
 
         let (c_tx, c_rx) = channel::<ComputeReply>();
         let (r_tx, r_rx) = channel::<RouteReply>();
+        let (k_tx, k_rx) = channel::<CombineReply>();
         let mut c_guard = DrainGuard::new(&c_rx);
         let mut r_guard = DrainGuard::new(&r_rx);
+        let mut k_guard = DrainGuard::new(&k_rx);
 
         let mut compute_panic = false;
+        let mut combine_panic = false;
         let mut route_err: Option<String> = None;
         let mut first_dispatch: Option<Instant> = None;
+        let mut last_compute_done = Instant::now();
         // coordinator route-waits and gather-staging that land *after*
         // the first compute dispatch — subtracted from the compute
         // window so the phases stay (approximately) disjoint and the
         // adaptive controller sees load imbalance, not routing stalls
         let mut coord_in_window = 0u64;
 
-        for x in xs.iter() {
+        for (ri, x) in xs.iter().enumerate() {
             let b = x.shape[0];
             // the noise draw is serial and cheap; drawing replica by
             // replica in order keeps the rng stream identical to the
@@ -694,14 +884,29 @@ impl ExecutionEngine {
             let mut imp = vec![0f32; n];
             let mut load = vec![0f32; n];
             for _ in 0..n_blocks {
-                // recycle finished waves while the gate stage runs
+                // recycle finished waves while the gate stage runs;
+                // every drained chunk may complete a replica and send
+                // its combine out onto the pool
                 while let Some(r) = c_guard.try_recv() {
+                    last_compute_done = Instant::now();
                     self.absorb_compute_reply(
                         r,
-                        &mut expert_out,
+                        builder.plan(),
+                        &mut trackers,
                         &mut shard_compute,
                         d,
+                        &k_tx,
+                        &mut k_guard,
                         &mut compute_panic,
+                    )?;
+                }
+                while let Some(kr) = k_guard.try_recv() {
+                    self.absorb_combine_reply(
+                        kr,
+                        &mut outs_raw,
+                        &mut combine_work_ns,
+                        &mut combine_stamps,
+                        &mut combine_panic,
                     );
                 }
                 // time blocked on the gate stage = the routing cost the
@@ -754,6 +959,7 @@ impl ExecutionEngine {
                         }
                         self.send_streamed_chunk(
                             builder.plan(),
+                            &mut trackers,
                             xs,
                             weights,
                             e,
@@ -776,16 +982,9 @@ impl ExecutionEngine {
             if route_err.is_some() {
                 break;
             }
-            builder.finish_replica();
-            decisions.push(RoutingDecision {
-                per_token,
-                importance: imp,
-                load,
-            });
-        }
-
-        if route_err.is_none() {
-            // flush the sub-capacity tails now that every row is final
+            // flush the sub-capacity tails of everything routed so far:
+            // replica `ri` is now fully dispatched, so its completion
+            // record only waits on chunks already in flight
             let t_g = Instant::now();
             for e in 0..n {
                 let len = builder.expert_len(e);
@@ -797,6 +996,7 @@ impl ExecutionEngine {
                     }
                     self.send_streamed_chunk(
                         builder.plan(),
+                        &mut trackers,
                         xs,
                         weights,
                         e,
@@ -815,17 +1015,32 @@ impl ExecutionEngine {
             if first_dispatch.is_some() {
                 coord_in_window += staged;
             }
+            builder.finish_replica();
+            decisions.push(RoutingDecision {
+                per_token,
+                importance: imp,
+                load,
+            });
+            trackers[ri].sealed = true;
+            if trackers[ri].ready() {
+                self.emit_combine(&mut trackers, ri, d, &k_tx)?;
+                k_guard.sent();
+            }
         }
 
         while c_guard.outstanding > 0 {
             let r = c_guard.recv()?;
+            last_compute_done = Instant::now();
             self.absorb_compute_reply(
                 r,
-                &mut expert_out,
+                builder.plan(),
+                &mut trackers,
                 &mut shard_compute,
                 d,
+                &k_tx,
+                &mut k_guard,
                 &mut compute_panic,
-            );
+            )?;
         }
         if let Some(e) = route_err {
             bail!("streamed step gate stage failed: {e}");
@@ -848,14 +1063,27 @@ impl ExecutionEngine {
 
         let plan = builder.finish();
         let loads = plan.expert_loads();
-        // normalize arenas (experts that never dispatched stay empty)
-        for (e, buf) in expert_out.iter_mut().enumerate() {
-            buf.resize(loads[e] * d, 0.0);
+        // every replica combine is already in flight (or done); the tail
+        // left here is the only combine on the critical path
+        let t_tail = Instant::now();
+        while k_guard.outstanding > 0 {
+            let kr = k_guard.recv()?;
+            self.absorb_combine_reply(
+                kr,
+                &mut outs_raw,
+                &mut combine_work_ns,
+                &mut combine_stamps,
+                &mut combine_panic,
+            );
         }
+        phases.combine = t_tail.elapsed().as_nanos() as u64;
+        phases.overlap_ns = combine_work_ns.saturating_sub(phases.combine);
+        if combine_panic {
+            bail!("combine worker panicked during step");
+        }
+        let outs = collect_outs(outs_raw, &plan.replica_rows, d)?;
         let n_waves = waves_for_loads(&loads, Some(cap));
-        let (outs, combine_ns) = self.combine(&plan, expert_out, &loads, d);
-        phases.combine = combine_ns;
-        let stats = build_stats(
+        let mut stats = build_stats(
             &self.layout,
             &plan,
             d,
@@ -864,17 +1092,23 @@ impl ExecutionEngine {
             shard_compute,
             compute_wall,
         );
+        stats.combines_overlapped = combine_stamps
+            .iter()
+            .filter(|t| **t <= last_compute_done)
+            .count();
         self.policy.observe(&stats);
-        Ok(StreamedStep { outs, decisions, stats })
+        Ok(StreamedStep { outs, decisions, plan, stats })
     }
 
     /// Gather rows `[lo, hi)` of expert `e` from the builder plan's
-    /// immutable prefix into pooled buffers and dispatch them to the
-    /// owning shard worker.
+    /// immutable prefix into pooled buffers, record the chunk on the
+    /// completion records of the replicas it serves, and dispatch it to
+    /// the owning shard worker.
     #[allow(clippy::too_many_arguments)]
     fn send_streamed_chunk(
         &mut self,
         plan: &DispatchPlan,
+        trackers: &mut [ReplicaTracker],
         xs: &[&TensorF],
         weights: &[ExpertWeights],
         e: usize,
@@ -883,6 +1117,7 @@ impl ExecutionEngine {
         d: usize,
         reply: &Sender<ComputeReply>,
     ) -> Result<()> {
+        register_chunk(plan, trackers, e, lo, hi);
         let mut input = self.pool.take();
         Dispatcher::gather_range_into(plan, e, lo..hi, xs, &mut input);
         let mut output = self.pool.take();
@@ -905,30 +1140,144 @@ impl ExecutionEngine {
             .map_err(|_| anyhow!("shard worker {dev} unavailable"))
     }
 
-    /// Fold one finished compute wave into the per-expert output arenas
-    /// and recycle its buffers.
+    /// Fold one finished compute reply into the executor state: credit
+    /// the shard, recycle input buffers, and deliver each task's output
+    /// chunk to the combine queues of the replicas it serves.
+    #[allow(clippy::too_many_arguments)]
     fn absorb_compute_reply(
         &mut self,
-        r: ComputeReply,
-        expert_out: &mut [Vec<f32>],
+        reply: ComputeReply,
+        plan: &DispatchPlan,
+        trackers: &mut [ReplicaTracker],
         shard_compute: &mut [u64],
         d: usize,
+        k_tx: &Sender<CombineReply>,
+        k_guard: &mut DrainGuard<'_, CombineReply>,
+        panicked: &mut bool,
+    ) -> Result<()> {
+        shard_compute[reply.device] += reply.compute_ns;
+        *panicked |= !reply.ok;
+        for t in reply.tasks {
+            self.pool.put(t.input);
+            if reply.ok {
+                self.deliver_chunk(
+                    plan,
+                    trackers,
+                    t.expert,
+                    t.out_offset,
+                    t.rows,
+                    t.output,
+                    d,
+                    k_tx,
+                    k_guard,
+                )?;
+            } else {
+                // garbage output of a panicked worker: recycle, leave
+                // the owed counts standing (the step bails after drain)
+                self.pool.put(t.output);
+            }
+        }
+        Ok(())
+    }
+
+    /// Deliver one drained expert chunk to the combine recv queues:
+    /// split it along [`Dispatcher::replica_runs`] into per-replica
+    /// segments (copying destination rows and gates out of the plan's
+    /// immutable prefix), and emit the combine job of every replica
+    /// whose last owed chunk this was.
+    #[allow(clippy::too_many_arguments)]
+    fn deliver_chunk(
+        &mut self,
+        plan: &DispatchPlan,
+        trackers: &mut [ReplicaTracker],
+        expert: usize,
+        chunk_lo: usize,
+        rows: usize,
+        output: Vec<f32>,
+        d: usize,
+        k_tx: &Sender<CombineReply>,
+        k_guard: &mut DrainGuard<'_, CombineReply>,
+    ) -> Result<()> {
+        let data = Arc::new(output);
+        let batch = &plan.per_expert[expert];
+        for (replica, run) in
+            Dispatcher::replica_runs(plan, expert, chunk_lo..chunk_lo + rows)
+        {
+            trackers[replica].inbox.push(CombineSegment {
+                expert,
+                chunk_lo,
+                lo: run.start,
+                rows: batch.tokens[run.clone()].iter().map(|a| a.row).collect(),
+                gates: batch.gates[run].to_vec(),
+                data: data.clone(),
+            });
+            trackers[replica].outstanding -= 1;
+            if trackers[replica].ready() {
+                self.emit_combine(trackers, replica, d, k_tx)?;
+                k_guard.sent();
+            }
+        }
+        Ok(())
+    }
+
+    /// Emit replica `r`'s gate-weighted combine as a worker-pool job.
+    /// The inbox is sorted expert-major (then by batch row) first, so
+    /// each token accumulates its contributions in exactly the serial
+    /// reference order regardless of chunk completion timing.
+    fn emit_combine(
+        &mut self,
+        trackers: &mut [ReplicaTracker],
+        r: usize,
+        d: usize,
+        k_tx: &Sender<CombineReply>,
+    ) -> Result<()> {
+        let tracker = &mut trackers[r];
+        debug_assert!(!tracker.emitted, "replica {r} combined twice");
+        tracker.emitted = true;
+        let rows = tracker.rows;
+        let mut segments = std::mem::take(&mut tracker.inbox);
+        segments.sort_by_key(|s| (s.expert, s.lo));
+        let out = self.pool.take();
+        let dev = r % self.layout.n_devices;
+        self.txs[dev]
+            .send(Job::Combine(CombineJob {
+                replica: r,
+                rows,
+                d,
+                segments,
+                out,
+                reply: k_tx.clone(),
+            }))
+            .map_err(|_| anyhow!("combine worker {dev} unavailable"))
+    }
+
+    /// Drain one combine reply: recycle chunk buffers that are no
+    /// longer shared and park the finished replica output.
+    fn absorb_combine_reply(
+        &mut self,
+        reply: CombineReply,
+        outs_raw: &mut [Option<Vec<f32>>],
+        combine_work_ns: &mut u64,
+        combine_stamps: &mut Vec<Instant>,
         panicked: &mut bool,
     ) {
-        shard_compute[r.device] += r.compute_ns;
-        for t in r.tasks {
-            if r.ok {
-                let need = (t.out_offset + t.rows) * d;
-                if expert_out[t.expert].len() < need {
-                    expert_out[t.expert].resize(need, 0.0);
-                }
-                expert_out[t.expert][t.out_offset * d..need]
-                    .copy_from_slice(&t.output[..t.rows * d]);
+        let CombineReply {
+            replica,
+            ok,
+            combine_ns,
+            finished_at,
+            out,
+            segments,
+        } = reply;
+        *combine_work_ns += combine_ns;
+        combine_stamps.push(finished_at);
+        for seg in segments {
+            if let Ok(buf) = Arc::try_unwrap(seg.data) {
+                self.pool.put(buf);
             }
-            self.pool.put(t.input);
-            self.pool.put(t.output);
         }
-        *panicked |= !r.ok;
+        *panicked |= !ok;
+        outs_raw[replica] = Some(out);
     }
 
     /// Stage one wave: gather each expert's `[w*cap, (w+1)*cap)` row
@@ -966,8 +1315,13 @@ impl ExecutionEngine {
         (tasks, t0.elapsed().as_nanos() as u64)
     }
 
-    /// Gate-weighted combine (eq 1) into pooled output storage; returns
-    /// (per-replica outputs, combine wall ns).
+    /// Terminal gate-weighted combine (eq 1) into pooled output
+    /// storage; returns (per-replica outputs, combine wall ns).  Only
+    /// the artifact path still combines this way — its chunks execute
+    /// serialized on the coordinator (the PJRT handle is not `Send`),
+    /// so there is no compute to hide the combine under.  The Native
+    /// paths use the dependency-driven per-replica combine jobs
+    /// instead (module docs).
     fn combine(
         &mut self,
         plan: &DispatchPlan,
@@ -1001,6 +1355,25 @@ impl Drop for ExecutionEngine {
             let _ = h.join();
         }
     }
+}
+
+/// Assemble the per-replica outputs once every combine job has replied.
+fn collect_outs(
+    outs_raw: Vec<Option<Vec<f32>>>,
+    replica_rows: &[usize],
+    d: usize,
+) -> Result<Vec<TensorF>> {
+    outs_raw
+        .into_iter()
+        .zip(replica_rows.iter())
+        .enumerate()
+        .map(|(r, (buf, &rows))| {
+            let buf = buf.ok_or_else(|| {
+                anyhow!("replica {r} combine never completed")
+            })?;
+            Ok(TensorF::from_buffer(vec![rows, d], buf))
+        })
+        .collect()
 }
 
 fn send_gather(
@@ -1087,6 +1460,40 @@ fn worker_loop(rx: Receiver<Job>) {
                 }))
                 .is_ok();
                 let _ = j.reply.send(GatherReply { ok, buf: j.buf });
+            }
+            Job::Combine(mut j) => {
+                // gate-weighted combine (eq 1) of one replica; segments
+                // arrive pre-sorted expert-major, all data owned/Arc'd,
+                // so this touches nothing borrowed from the step
+                let t0 = Instant::now();
+                let ok = catch_unwind(AssertUnwindSafe(|| {
+                    let d = j.d;
+                    j.out.clear();
+                    j.out.resize(j.rows * d, 0.0);
+                    for seg in &j.segments {
+                        let base = seg.lo - seg.chunk_lo;
+                        for (i, (&row, &gate)) in
+                            seg.rows.iter().zip(seg.gates.iter()).enumerate()
+                        {
+                            let src = &seg.data
+                                [(base + i) * d..(base + i + 1) * d];
+                            let dst =
+                                &mut j.out[row * d..(row + 1) * d];
+                            for (o, s) in dst.iter_mut().zip(src.iter()) {
+                                *o += gate * s;
+                            }
+                        }
+                    }
+                }))
+                .is_ok();
+                let _ = j.reply.send(CombineReply {
+                    replica: j.replica,
+                    ok,
+                    combine_ns: t0.elapsed().as_nanos() as u64,
+                    finished_at: Instant::now(),
+                    out: j.out,
+                    segments: j.segments,
+                });
             }
         }
     }

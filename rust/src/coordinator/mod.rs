@@ -18,17 +18,43 @@
 //! 4. outputs are combined back per token with gate weights (eq 1), and
 //!    [`balance::BalanceMeter`] tracks Importance / Load / CV² telemetry.
 //!
-//! Stages 1–3 need not run back-to-back: the *streaming* step
-//! ([`scheduler::Scheduler::execute_streamed`] /
-//! [`engine::ExecutionEngine::execute_streaming`]) pipelines them on
-//! the engine's worker pool — row blocks are gated in parallel
+//! # Dependency-driven step executor
+//!
+//! These stages are *not* synchronized by global barriers.  The engine
+//! is a dependency-driven executor built from three pieces:
+//!
+//! - **Completion records.**  Every replica carries an explicit record
+//!   of how many dispatched expert chunks still owe it rows, derived
+//!   from the [`dispatcher::PlanBuilder`] prefixes (streaming) or the
+//!   finished plan (pre-routed steps).
+//! - **Combine as a task.**  The moment a replica's last owed chunk
+//!   drains, its gate-weighted combine (eq 1) is emitted as a job onto
+//!   the same worker pool — replica 0 combines while later replicas are
+//!   still routing and computing.  Only the post-compute combine tail
+//!   is critical-path ([`scheduler::PhaseNanos::combine`]); the hidden
+//!   part is reported as [`scheduler::PhaseNanos::overlap_ns`] and as
+//!   [`scheduler::StepStats::combine_overlap_ratio`].
+//! - **Async all-to-all.**  The cross-replica exchange is modelled as
+//!   per-shard send/recv queues: chunk dispatches are the sends, and
+//!   each drained chunk is split along
+//!   [`dispatcher::Dispatcher::replica_runs`] into per-replica combine
+//!   messages (destination rows + gates copied from the plan's
+//!   immutable prefix), queued on the owing replica's inbox.  There is
+//!   no coordinator-side terminal combine walk on the Native paths.
+//!
+//! The *streaming* step ([`scheduler::Scheduler::execute_streamed`] /
+//! [`engine::ExecutionEngine::execute_streaming`]) runs gating on the
+//! pool too: row blocks are gated in parallel
 //! ([`router::Router::route_rows`]), routed blocks feed an incremental
 //! [`dispatcher::PlanBuilder`], and each expert wave is dispatched as
-//! soon as its rows are final, so replica r+1 routes while replica r's
-//! experts compute.  The Native wave size comes from a
-//! [`scheduler::WavePolicy`]: fixed, or
+//! soon as its rows are final — so replica r+1 routes while replica r's
+//! experts compute *and* replica r−1's combine drains.  The Native wave
+//! size comes from a [`scheduler::WavePolicy`]: fixed, or
 //! [`scheduler::AdaptiveWave`]-controlled from the previous step's
-//! measured busiest-shard idle.
+//! measured busiest-shard idle.  [`engine::StreamedStep`] carries the
+//! outputs, gate decisions, finished plan and telemetry;
+//! [`train::Trainer::step_streamed`](crate::train::Trainer::step_streamed)
+//! drives training on it without any artifacts.
 
 pub mod balance;
 pub mod dispatcher;

@@ -4,10 +4,13 @@
 //! Each simulated device owns a contiguous slice of experts (the §3.1
 //! model-parallel shard).  Expert batches longer than the wave capacity
 //! are processed in waves — tokens are never dropped, mirroring the
-//! paper's dynamically-sized expert batches.  The step barrier is
-//! synchronous: the step takes as long as the busiest shard, which is
-//! what the load-balancing losses exist to minimise, and the per-phase
-//! timings in [`StepStats`] make that wait directly observable.
+//! paper's dynamically-sized expert batches.  Expert compute still
+//! bounds the step (the busiest shard's wall, which the load-balancing
+//! losses exist to minimise), but the step no longer ends in a global
+//! combine barrier: the engine tracks per-replica completion and
+//! combines each replica the moment its last expert wave drains, so
+//! only the combine *tail* lands on the critical path
+//! ([`PhaseNanos::combine`] vs the hidden [`PhaseNanos::overlap_ns`]).
 //!
 //! Three execution paths share the same math:
 //! - [`Scheduler::execute_streamed`] — the hot path for full steps:
@@ -114,7 +117,10 @@ pub enum ExpertBackend {
 /// which is exactly the §3.2 overhead being engineered away.  The same
 /// convention governs `route` on the streaming path: it counts only
 /// coordinator time spent drawing noise or *blocked* waiting on the
-/// gate stage, so fully-overlapped routing costs ~0 here.
+/// gate stage, so fully-overlapped routing costs ~0 here.  `combine`
+/// follows suit under the dependency-driven executor: it is the
+/// post-compute combine *tail* only, while `overlap_ns` records the
+/// combine work that ran hidden under expert compute.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseNanos {
     /// critical-path gating cost (streaming path: noise draws + time
@@ -127,11 +133,18 @@ pub struct PhaseNanos {
     /// expert execution: first dispatch to last shard done (includes
     /// any staging pipelined underneath it)
     pub compute: u64,
-    /// gate-weighted scatter back to replicas (all-to-all "receive", eq 1)
+    /// gate-weighted scatter back to replicas (all-to-all "receive",
+    /// eq 1): only the tail left after the last expert wave drained
     pub combine: u64,
+    /// combine worker-nanoseconds hidden under expert compute by the
+    /// per-replica completion-tracked combine jobs — *not* part of
+    /// [`total`](Self::total), which sums critical-path time only
+    pub overlap_ns: u64,
 }
 
 impl PhaseNanos {
+    /// Critical-path step time; excludes `overlap_ns` by construction
+    /// (overlapped combine work costs no wall time).
     pub fn total(&self) -> u64 {
         self.route + self.gather + self.compute + self.combine
     }
@@ -274,6 +287,24 @@ pub struct StepStats {
     /// idle nanoseconds per shard: compute-phase wall minus busy — the
     /// §3.1 synchronous wait on the busiest shard
     pub shard_idle_ns: Vec<u64>,
+    /// replica combine jobs that finished before the step's last expert
+    /// wave drained — the structural witness that the dependency-driven
+    /// executor overlapped the all-to-all "receive" with compute
+    pub combines_overlapped: usize,
+}
+
+impl StepStats {
+    /// Fraction of total combine work the executor hid under expert
+    /// compute: `overlap_ns / (overlap_ns + combine)`.  0 when no
+    /// combine work was measured at all.
+    pub fn combine_overlap_ratio(&self) -> f64 {
+        let total = self.phases.overlap_ns + self.phases.combine;
+        if total == 0 {
+            0.0
+        } else {
+            self.phases.overlap_ns as f64 / total as f64
+        }
+    }
 }
 
 /// Waves needed for the given loads at `capacity` tokens per wave:
@@ -314,6 +345,8 @@ pub(crate) fn build_stats(
         phases,
         shard_compute_ns,
         shard_idle_ns,
+        // set by the engine paths that track per-replica completion
+        combines_overlapped: 0,
     }
 }
 
@@ -434,7 +467,7 @@ impl Scheduler {
             }
         };
         stats.phases.route = route_ns;
-        Ok(StreamedStep { outs, decisions, stats })
+        Ok(StreamedStep { outs, decisions, plan, stats })
     }
 
     /// Retained single-threaded reference path: gather, run each expert

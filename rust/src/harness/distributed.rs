@@ -1,15 +1,17 @@
 //! Distributed MoE demo + efficiency report: exercises the full L3 stack
-//! (router -> dispatcher -> sharded expert execution via the expert
-//! artifact -> combine) on simulated devices, and feeds the REAL dispatch
-//! traffic into the K40 cluster model to regenerate the paper's
-//! TFLOPS/GPU efficiency columns.
+//! on simulated devices through the streamed dependency-driven step
+//! executor (`Scheduler::execute_streamed`: routing, dispatch, expert
+//! compute and per-replica combine pipelined on the engine), and feeds
+//! the REAL dispatch traffic into the K40 cluster model to regenerate
+//! the paper's TFLOPS/GPU efficiency columns.  Per-step telemetry
+//! includes the per-phase ns breakdown and the combine-overlap ratio.
 
 use anyhow::{bail, Result};
 
 use crate::cluster::perf::{model_step, ClusterSpec};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{ExpertBackend, ExpertWeights, Scheduler, ShardLayout};
-use crate::coordinator::{BalanceMeter, Dispatcher};
+use crate::coordinator::BalanceMeter;
 use crate::metrics::OpsModel;
 use crate::runtime::{Engine, Manifest, TensorF};
 use crate::util::rng::Rng;
@@ -121,7 +123,8 @@ pub fn run_distributed_demo(artifacts: &str, cfg: &str, devices: usize,
     let tokens_per_replica = c.batch * c.seq_len / devices.max(1);
 
     println!(
-        "# distributed MoE: {} experts on {} devices, {} replica tokens/step",
+        "# distributed MoE: {} experts on {} devices, {} replica tokens/step \
+         (streamed step executor)",
         c.n_experts, devices, tokens_per_replica * devices
     );
     let mut rng = Rng::new(3);
@@ -139,45 +142,46 @@ pub fn run_distributed_demo(artifacts: &str, cfg: &str, devices: usize,
             })
             .collect();
         let mut nrng = rng.fold_in(step as u64);
-        let decisions: Vec<_> = xs
-            .iter()
-            .map(|x| router.route(x, Some(&mut nrng)))
-            .collect::<Result<_>>()?;
-        let plan = Dispatcher::plan(&decisions, c.n_experts);
         let refs: Vec<&TensorF> = xs.iter().collect();
+        // the streamed step executor: routing, dispatch, expert compute
+        // and per-replica combine all pipelined on the engine (artifact
+        // routers/backends fall back to the serially-composed step)
         let t0 = std::time::Instant::now();
-        let (_outs, stats) = sched.execute(&plan, &refs, &weights)?;
+        let s = sched.execute_streamed(&router, &refs, &weights, Some(&mut nrng))?;
         let wall = t0.elapsed().as_secs_f64();
         total_wall += wall;
-        let counts = plan.expert_loads();
-        let dec0 = &decisions[0];
-        meter.record(&merge_vec(&decisions, |d| &d.importance),
-                     &merge_vec(&decisions, |d| &d.load), &counts);
+        let stats = &s.stats;
+        let counts = stats.expert_loads.clone();
+        meter.record(&merge_vec(&s.decisions, |d| &d.importance),
+                     &merge_vec(&s.decisions, |d| &d.load), &counts);
         let timing = model_step(&c, &cluster, tokens_per_replica, &counts);
         if step < 3 || step + 1 == steps {
             let idle_max =
                 stats.shard_idle_ns.iter().copied().max().unwrap_or(0);
             println!(
                 "step {:>3}: routes={:<6} busiest_shard={:<5} waves={:<3} \
-                 net={:>8}B  wall={:.3}s  measured: gather {:.2}ms + compute \
-                 {:.2}ms + combine {:.2}ms (max shard idle {:.2}ms)  \
+                 net={:>8}B  wall={:.3}s  measured: route {:.2}ms + gather \
+                 {:.2}ms + compute {:.2}ms + combine {:.2}ms (+{:.2}ms \
+                 hidden, overlap {:.0}%, max shard idle {:.2}ms)  \
                  modelled: dense {:.1}ms + moe {:.1}ms + a2a {:.1}ms",
                 step,
-                plan.total_routes(),
+                s.plan.total_routes(),
                 stats.busiest_shard_tokens,
                 stats.waves,
                 stats.network_bytes,
                 wall,
+                stats.phases.route as f64 / 1e6,
                 stats.phases.gather as f64 / 1e6,
                 stats.phases.compute as f64 / 1e6,
                 stats.phases.combine as f64 / 1e6,
+                stats.phases.overlap_ns as f64 / 1e6,
+                stats.combine_overlap_ratio() * 100.0,
                 idle_max as f64 / 1e6,
                 timing.dense_time * 1e3,
                 timing.moe_compute_time * 1e3,
                 timing.all_to_all_time * 1e3,
             );
         }
-        let _ = dec0;
     }
     let (cvi, cvl, mm) = meter.summary();
     println!(

@@ -153,15 +153,20 @@ impl SyntheticMoe {
 }
 
 /// One-line rendering of a step's per-phase breakdown (shared by the
-/// benches and the efficiency report).
+/// benches and the efficiency report).  `combine` is the critical-path
+/// tail; the parenthesised hidden time is combine work the executor
+/// ran under expert compute (`overlap` = fraction of combine hidden).
 pub fn phase_line(stats: &StepStats) -> String {
     format!(
-        "route {:.3}ms  gather {:.3}ms  compute {:.3}ms  combine {:.3}ms  \
-         waves={}  busiest_shard={} tok  max shard idle {:.3}ms",
+        "route {:.3}ms  gather {:.3}ms  compute {:.3}ms  combine {:.3}ms \
+         (+{:.3}ms hidden, overlap {:.0}%)  waves={}  busiest_shard={} tok  \
+         max shard idle {:.3}ms",
         stats.phases.route as f64 / 1e6,
         stats.phases.gather as f64 / 1e6,
         stats.phases.compute as f64 / 1e6,
         stats.phases.combine as f64 / 1e6,
+        stats.phases.overlap_ns as f64 / 1e6,
+        stats.combine_overlap_ratio() * 100.0,
         stats.waves,
         stats.busiest_shard_tokens,
         stats.shard_idle_ns.iter().copied().max().unwrap_or(0) as f64 / 1e6,
@@ -203,6 +208,7 @@ mod tests {
         }
         assert_eq!(s.decisions.len(), 2);
         assert_eq!(s.stats.expert_loads, stats.expert_loads);
+        assert_eq!(s.plan.expert_loads(), stats.expert_loads);
         assert!(stats.phases.route > 0, "unpipelined route wall recorded");
     }
 }

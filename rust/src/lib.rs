@@ -34,12 +34,22 @@
 //! previous step's measured busiest-shard idle
 //! ([`coordinator::AdaptiveWave`]).
 //!
+//! Step synchronization is **dependency-driven** rather than barriered:
+//! per-replica completion records emit each replica's gate-weighted
+//! combine as a worker-pool job the moment its last expert wave drains
+//! (an async all-to-all of per-replica combine messages), so combine
+//! runs hidden under later replicas' compute —
+//! [`coordinator::PhaseNanos::overlap_ns`] /
+//! [`coordinator::StepStats::combine_overlap_ratio`] measure how much.
+//! [`train::Trainer::step_streamed`] trains the MoE sublayer on this
+//! path with a native backward pass, no artifacts required.
+//!
 //! [`coordinator::Scheduler::execute_serial`] retains the
 //! single-threaded reference path; `rust/tests/engine_parity.rs` proves
 //! the engine and the streamed pipeline agree with it on randomized
 //! workloads, and [`coordinator::StepStats`] reports the per-phase
-//! (route / gather / compute / combine) and per-shard busy/idle
-//! breakdown that makes the §3.1 busiest-shard wait directly
+//! (route / gather / compute / combine / overlap) and per-shard
+//! busy/idle breakdown that makes the §3.1 busiest-shard wait directly
 //! observable.
 //!
 //! The `xla` dependency is a vendored API-compatible stub by default

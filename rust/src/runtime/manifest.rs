@@ -63,6 +63,44 @@ pub struct ModelConfig {
     pub optimizer: String,
 }
 
+impl ModelConfig {
+    /// A minimal MoE-sublayer config for the artifact-free native
+    /// training path ([`crate::train::Trainer::native`]): only the
+    /// fields the streamed MoE step consumes are meaningful, everything
+    /// artifact-specific is zeroed.
+    pub fn native_moe(
+        name: &str,
+        d_model: usize,
+        n_experts: usize,
+        k: usize,
+        expert_hidden: usize,
+        batch: usize,
+        seq_len: usize,
+    ) -> Self {
+        ModelConfig {
+            name: name.to_string(),
+            vocab: 0,
+            d_model,
+            lstm_hidden: 0,
+            lstm_proj: 0,
+            middle: "moe".to_string(),
+            n_experts,
+            k,
+            groups: 0,
+            expert_hidden,
+            capacity: 0,
+            k_effective: k,
+            batch,
+            seq_len,
+            w_importance: 0.1,
+            w_load: 0.1,
+            ops_per_timestep: 0,
+            moe_params: (n_experts * 2 * d_model * expert_hidden) as u64,
+            optimizer: "sgd".to_string(),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ConfigEntry {
     pub config: ModelConfig,

@@ -2,8 +2,16 @@
 //! and checkpointing.  Python never runs here — the artifact carries the
 //! whole fwd/bwd/update graph and the trainer just round-trips the flat
 //! parameter and optimizer buffers.
+//!
+//! The artifact is no longer a hard requirement: [`Trainer::native`] /
+//! [`Trainer::step_streamed`] train the MoE sublayer on the
+//! dependency-driven streamed engine with a native backward pass, on a
+//! bare offline checkout.
 
 pub mod checkpoint;
 pub mod trainer;
 
-pub use trainer::{EvalResult, StepMetrics, TrainState, Trainer};
+pub use trainer::{
+    EvalResult, StepMetrics, StreamedStepMetrics, StreamedTrainState,
+    TrainState, Trainer,
+};

@@ -339,6 +339,13 @@ fn assert_streamed_matches(
     }
     assert_eq!(s.stats.expert_loads, plan.expert_loads());
     assert_eq!(s.stats.network_bytes, plan.network_bytes(want[0].shape[1]));
+    // the streamed step's finished plan is the oracle plan, exactly
+    assert_eq!(s.plan.n_experts, plan.n_experts);
+    assert_eq!(s.plan.replica_rows, plan.replica_rows);
+    for (a, b) in s.plan.per_expert.iter().zip(plan.per_expert.iter()) {
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.gates, b.gates);
+    }
 }
 
 #[test]
@@ -486,6 +493,168 @@ fn streamed_degenerate_all_tokens_one_expert() {
         .unwrap();
     assert_streamed_matches(&s, &want, &decisions, &plan);
     assert_eq!(s.stats.waves, 5, "ceil(18/4) waves");
+}
+
+#[test]
+fn overlapped_combine_matches_serial_on_multiwave_multireplica() {
+    // the tentpole differential: the dependency-driven executor (per-
+    // replica completion records, combine emitted as worker jobs while
+    // later replicas still route/compute) must be exact across
+    // randomized replica/shard/k shapes with forced multi-wave caps,
+    // on both the streamed pipeline and the pre-routed engine path
+    prop::forall("overlapped combine == serial", |rng| {
+        let d = prop::dim(rng, 2, 8);
+        let h = prop::dim(rng, 2, 10);
+        let n = prop::dim(rng, 2, 10);
+        let k = prop::dim(rng, 1, n.min(3));
+        let replicas = prop::dim(rng, 2, 5);
+        let devices = prop::dim(rng, 1, n + 2);
+        let weights = mk_weights(n, d, h, rng);
+        let router = Router::flat_native(
+            d, n, k,
+            prop::vec_f32(rng, d * n, 0.5),
+            Some(prop::vec_f32(rng, d * n, 0.3)),
+        );
+        let xs: Vec<TensorF> = (0..replicas)
+            .map(|_| {
+                let rows = prop::dim(rng, 2, 16);
+                TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0))
+            })
+            .collect();
+        let layout = ShardLayout::new(devices, n);
+
+        let seed = rng.fold_in(41);
+        let mut r1 = seed.clone();
+        let (want, decisions, plan) =
+            serial_oracle(&router, &xs, &weights, &layout, Some(&mut r1));
+
+        // tiny cap => many waves per expert => many chunks per replica
+        let cap = prop::dim(rng, 1, 4);
+        let mut engine =
+            ExecutionEngine::with_wave_capacity(layout.clone(), Some(cap));
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let mut r2 = seed.clone();
+        let s = engine
+            .execute_streaming(&router, &refs, &weights, Some(&mut r2))
+            .unwrap();
+        assert_streamed_matches(&s, &want, &decisions, &plan);
+        assert!(
+            s.stats.combines_overlapped <= replicas,
+            "at most one combine per replica"
+        );
+        let ratio = s.stats.combine_overlap_ratio();
+        assert!((0.0..=1.0).contains(&ratio), "ratio {ratio}");
+
+        // the pre-routed engine path runs the same completion-tracked
+        // combine machinery
+        let (got, stats) = engine.execute_native(&plan, &refs, &weights).unwrap();
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.shape, w.shape);
+            for (a, b) in g.data.iter().zip(w.data.iter()) {
+                assert!((a - b).abs() <= TOL, "native {a} vs serial {b}");
+            }
+        }
+        assert!(stats.combines_overlapped <= replicas);
+    });
+}
+
+#[test]
+fn a_replica_combine_completes_before_the_last_expert_wave() {
+    // acceptance: on a multi-replica workload at least one replica's
+    // combine must finish while later replicas' expert waves are still
+    // in flight.  The assertion is timing-dependent, so escalate the
+    // workload until it happens (deterministic math either way — the
+    // exactness is covered by the differential tests above).
+    use moe::harness::workload::SyntheticMoe;
+
+    for (attempt, rows) in [256usize, 512, 1024, 2048, 4096]
+        .iter()
+        .enumerate()
+    {
+        let w =
+            SyntheticMoe::build(90 + attempt as u64, 32, 64, 8, 2, 4, *rows)
+                .unwrap();
+        let sched = Scheduler::with_policy(
+            ShardLayout::new(4, 8),
+            ExpertBackend::Native,
+            WavePolicy::Fixed(Some(64)),
+        );
+        let s = w.run_streamed(&sched, None).unwrap();
+        let ratio = s.stats.combine_overlap_ratio();
+        assert!((0.0..=1.0).contains(&ratio), "ratio {ratio}");
+        if s.stats.combines_overlapped > 0 {
+            return; // structural overlap witnessed
+        }
+    }
+    panic!(
+        "no replica combine completed before the final expert wave in \
+         any attempt"
+    );
+}
+
+#[test]
+fn adaptive_wave_bounds_under_pathological_stats() {
+    // satellite: AdaptiveWave::with_bounds must keep the capacity in
+    // [min, max] under degenerate telemetry
+    let in_bounds = |a: &AdaptiveWave, min: usize, max: usize| {
+        let c = a.capacity();
+        assert!((min..=max).contains(&c), "cap {c} outside [{min}, {max}]");
+    };
+
+    // zero busy time everywhere (e.g. an empty step): no shard computed,
+    // so idle reads 0 and the controller only ever grows toward max
+    let zero_busy = StepStats {
+        shard_compute_ns: vec![0, 0, 0],
+        shard_idle_ns: vec![0, 0, 0],
+        ..StepStats::default()
+    };
+    let mut a = AdaptiveWave::with_bounds(32, 8, 128);
+    for _ in 0..20 {
+        a.observe(&zero_busy);
+        in_bounds(&a, 8, 128);
+    }
+    assert_eq!(a.capacity(), 128, "zero-busy steps saturate at max");
+
+    // every shard structurally idle (busy 0, idle = whole wall): the
+    // busy>0 filter leaves nothing, so the capacity must not collapse
+    let all_idle = StepStats {
+        phases: PhaseNanos { compute: 1_000, ..PhaseNanos::default() },
+        shard_compute_ns: vec![0, 0],
+        shard_idle_ns: vec![1_000, 1_000],
+        ..StepStats::default()
+    };
+    let mut b = AdaptiveWave::with_bounds(64, 16, 64);
+    for _ in 0..10 {
+        b.observe(&all_idle);
+        in_bounds(&b, 16, 64);
+    }
+    assert_eq!(b.capacity(), 64, "structural idle must not shrink the cap");
+
+    // single-step oscillation between saturated idle and none: the
+    // multiplicative controller ping-pongs but never leaves the bounds
+    let hot = StepStats {
+        phases: PhaseNanos { compute: 1_000, ..PhaseNanos::default() },
+        shard_compute_ns: vec![100, 1_000],
+        shard_idle_ns: vec![900, 0],
+        ..StepStats::default()
+    };
+    let calm = StepStats {
+        phases: PhaseNanos { compute: 1_000, ..PhaseNanos::default() },
+        shard_compute_ns: vec![1_000, 1_000],
+        shard_idle_ns: vec![0, 0],
+        ..StepStats::default()
+    };
+    let mut c = AdaptiveWave::with_bounds(16, 16, 32);
+    for i in 0..50 {
+        c.observe(if i % 2 == 0 { &hot } else { &calm });
+        in_bounds(&c, 16, 32);
+    }
+
+    // degenerate bounds: min/max clamp their own inputs
+    let d = AdaptiveWave::with_bounds(0, 0, 0);
+    assert_eq!(d.capacity(), 1, "min is floored at 1");
+    let e = AdaptiveWave::with_bounds(500, 64, 16);
+    assert_eq!(e.capacity(), 64, "max is lifted to min, start clamped");
 }
 
 #[test]
