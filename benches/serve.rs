@@ -1,0 +1,75 @@
+//! Bench: serving SLOs under open-loop Poisson load.
+//!
+//! Replays seeded traces through the continuous micro-batching runtime
+//! (`moe::serve::ServeLoop`) at three offered loads relative to a
+//! burst-calibrated engine capacity (the shared
+//! `harness::workload::ServeHarness`), and emits the SLO metrics —
+//! total-latency p50/p95/p99, queue-wait p50, achieved tokens/sec,
+//! batch occupancy, shed count — into `BENCH_serve.json` so the
+//! serving trajectory is tracked across PRs alongside
+//! `BENCH_step.json`.  Set `BENCH_SMOKE=1` for the one-iteration CI
+//! smoke run, which gates on the report being well-formed (finite
+//! p50 <= p99, tokens/sec > 0).
+
+use moe::harness::workload::{serve_phase_line, ServeHarness};
+use moe::serve::ServeStats;
+use moe::util::bench::{black_box, BenchReport, Bencher};
+
+fn serve_extras(stats: &ServeStats) -> Vec<(&'static str, f64)> {
+    let total = stats.total.percentiles(&[0.50, 0.95, 0.99]);
+    vec![
+        ("serve_p50_ns", total[0] as f64),
+        ("serve_p95_ns", total[1] as f64),
+        ("serve_p99_ns", total[2] as f64),
+        ("queue_p50_ns", stats.queue_wait.percentile(0.50) as f64),
+        ("serve_tok_per_sec", stats.tokens_per_sec()),
+        ("batch_occupancy", stats.batch_occupancy()),
+        ("completed", stats.completed as f64),
+        ("shed", stats.shed as f64),
+        ("peak_queue_depth", stats.peak_queue_depth as f64),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher::from_env_quick();
+    let mut report = BenchReport::new("serve");
+    let n_requests = 192;
+
+    let harness = ServeHarness::build(23, 4)?;
+    let capacity = harness.calibrate(23)?;
+    println!(
+        "== serve: open-loop Poisson load on {} experts (k={}, d={}), \
+         {} device(s), capacity ~{capacity:.0} tok/s ==",
+        harness.n_experts, harness.k, harness.d_model, harness.devices,
+    );
+    for (label, mult, bursty) in [
+        ("0.3x", 0.3, false),
+        ("1.0x", 1.0, false),
+        ("3.0x", 3.0, false),
+        ("1.0x bursty", 1.0, true),
+    ] {
+        let rate = harness.rate_for(capacity, mult);
+        let trace = harness.trace(
+            0x5e12 ^ (mult * 1e3) as u64,
+            rate,
+            n_requests,
+            bursty,
+            2,
+        );
+        let r = bench.run(&format!("serve replay, offered {label}"), || {
+            black_box(harness.serve.run_trace(&trace).unwrap());
+        });
+        let stats = harness.serve.run_trace(&trace)?.stats;
+        r.report_throughput("req", n_requests as f64);
+        println!("  {}", stats.summary_line());
+        println!("  {}", serve_phase_line(&stats));
+        report.push(
+            &r,
+            Some(("req", n_requests as f64)),
+            &serve_extras(&stats),
+        );
+    }
+    report.write("BENCH_serve.json")?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

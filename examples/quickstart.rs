@@ -1,18 +1,36 @@
 //! Quickstart: load the AOT artifacts, run a few training steps of a
 //! small MoE language model, evaluate perplexity, and run a batch
 //! through the streamed dependency-driven step executor
-//! (`Scheduler::execute_streamed`), printing the per-phase ns
-//! breakdown including the combine-overlap metric.
+//! (`Scheduler::execute_streamed`), printing the per-phase breakdown
+//! including the combine-overlap metric.
 //!
 //! ```bash
 //! make artifacts                       # once: lower the JAX/Pallas model
 //! cargo run --release --example quickstart
+//! ```
+//!
+//! # Serving
+//!
+//! The same engine serves inference traffic through the continuous
+//! micro-batching runtime in `moe::serve`: a bounded `RequestQueue`
+//! (reject / shed-oldest backpressure), a `MicroBatcher` that coalesces
+//! ragged requests into engine-sized batches under a latency budget,
+//! and a `ServeLoop` running forward-only steps
+//! (`Scheduler::execute_forward`) with gating frozen from a
+//! `checkpoint::save_streamed` checkpoint or a fresh init.  It needs no
+//! artifacts — try the latency-vs-offered-load curve on a bare
+//! checkout:
+//!
+//! ```bash
+//! cargo run --release --example serve_demo
+//! cargo run --release -- serve --devices 4      # same curve via repro
 //! ```
 
 use anyhow::Result;
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
 use moe::data::Batcher;
 use moe::harness::distributed::{expert_weights, router_for};
+use moe::harness::workload::phase_line;
 use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
 use moe::runtime::{Engine, Manifest, TensorF};
 use moe::train::Trainer;
@@ -85,16 +103,8 @@ fn main() -> Result<()> {
         s.stats.busiest_shard_tokens,
         s.outs[0].shape
     );
-    println!(
-        "  phases: route {}ns  gather {}ns  compute {}ns  combine {}ns \
-         (+{}ns hidden under compute, overlap {:.0}%)",
-        s.stats.phases.route,
-        s.stats.phases.gather,
-        s.stats.phases.compute,
-        s.stats.phases.combine,
-        s.stats.phases.overlap_ns,
-        s.stats.combine_overlap_ratio() * 100.0,
-    );
+    // the one shared phase-report formatter (harness::workload)
+    println!("  phases: {}", phase_line(&s.stats));
     println!("quickstart OK");
     Ok(())
 }

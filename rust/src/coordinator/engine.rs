@@ -765,7 +765,40 @@ impl ExecutionEngine {
         router: &Router,
         xs: &[&TensorF],
         weights: &[ExpertWeights],
+        rng: Option<&mut Rng>,
+    ) -> Result<StreamedStep> {
+        self.execute_streaming_impl(router, xs, weights, rng, true)
+    }
+
+    /// Forward-only (inference) variant of
+    /// [`execute_streaming`](Self::execute_streaming): deterministic
+    /// routing (no eq-4 noise) and none of the trainer-only bookkeeping
+    /// — per-token [`GateVec`] copies, importance/load merges and the
+    /// retained [`DispatchPlan`] all exist solely so a backward pass or
+    /// a balance loss can re-walk the step, and a serving runtime does
+    /// neither.  Same math, same workers, same pooled arenas; returns
+    /// only the combined outputs and the step telemetry.
+    pub fn execute_streaming_forward(
+        &mut self,
+        router: &Router,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        let s = self.execute_streaming_impl(router, xs, weights, None, false)?;
+        Ok((s.outs, s.stats))
+    }
+
+    /// Shared body of the streaming paths.  `collect_decisions` gates
+    /// the per-token gate-vector copies and importance/load accumulation
+    /// (returned `decisions` are empty when false — forward-only callers
+    /// never read them).
+    fn execute_streaming_impl(
+        &mut self,
+        router: &Router,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
         mut rng: Option<&mut Rng>,
+        collect_decisions: bool,
     ) -> Result<StreamedStep> {
         let d = match xs.first() {
             Some(t) if t.shape.len() == 2 => t.shape[1],
@@ -880,9 +913,10 @@ impl ExecutionEngine {
             let mut pending: Vec<Option<RouteBlock>> =
                 (0..n_blocks).map(|_| None).collect();
             let mut next_append = 0usize;
-            let mut per_token: Vec<GateVec> = Vec::with_capacity(b);
-            let mut imp = vec![0f32; n];
-            let mut load = vec![0f32; n];
+            let mut per_token: Vec<GateVec> =
+                Vec::with_capacity(if collect_decisions { b } else { 0 });
+            let mut imp = vec![0f32; if collect_decisions { n } else { 0 }];
+            let mut load = vec![0f32; if collect_decisions { n } else { 0 }];
             for _ in 0..n_blocks {
                 // recycle finished waves while the gate stage runs;
                 // every drained chunk may complete a replica and send
@@ -931,11 +965,13 @@ impl ExecutionEngine {
                     let Some(blk) = pending[next_append].take() else {
                         break;
                     };
-                    for (a, v) in imp.iter_mut().zip(blk.importance.iter()) {
-                        *a += v;
-                    }
-                    for (a, v) in load.iter_mut().zip(blk.load.iter()) {
-                        *a += v;
+                    if collect_decisions {
+                        for (a, v) in imp.iter_mut().zip(blk.importance.iter()) {
+                            *a += v;
+                        }
+                        for (a, v) in load.iter_mut().zip(blk.load.iter()) {
+                            *a += v;
+                        }
                     }
                     for tok in &blk.per_token {
                         for &e in &tok.experts {
@@ -946,7 +982,9 @@ impl ExecutionEngine {
                         }
                     }
                     builder.push_rows(&blk.per_token);
-                    per_token.extend(blk.per_token);
+                    if collect_decisions {
+                        per_token.extend(blk.per_token);
+                    }
                     next_append += 1;
                 }
                 let t_g = Instant::now();
@@ -1016,11 +1054,13 @@ impl ExecutionEngine {
                 coord_in_window += staged;
             }
             builder.finish_replica();
-            decisions.push(RoutingDecision {
-                per_token,
-                importance: imp,
-                load,
-            });
+            if collect_decisions {
+                decisions.push(RoutingDecision {
+                    per_token,
+                    importance: imp,
+                    load,
+                });
+            }
             trackers[ri].sealed = true;
             if trackers[ri].ready() {
                 self.emit_combine(&mut trackers, ri, d, &k_tx)?;
@@ -1270,7 +1310,12 @@ impl ExecutionEngine {
             segments,
         } = reply;
         *combine_work_ns += combine_ns;
-        combine_stamps.push(finished_at);
+        // no-op combines (replicas owed no chunks) finish before any
+        // compute by construction; counting them would overstate the
+        // combines_overlapped structural witness
+        if !segments.is_empty() {
+            combine_stamps.push(finished_at);
+        }
         for seg in segments {
             if let Ok(buf) = Arc::try_unwrap(seg.data) {
                 self.pool.put(buf);

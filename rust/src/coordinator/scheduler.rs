@@ -148,6 +148,20 @@ impl PhaseNanos {
     pub fn total(&self) -> u64 {
         self.route + self.gather + self.compute + self.combine
     }
+
+    /// Fraction of total combine work hidden under expert compute:
+    /// `overlap_ns / (overlap_ns + combine)`.  0 when no combine work
+    /// was measured at all.  The single definition of the overlap
+    /// metric — [`StepStats::combine_overlap_ratio`] and the phase
+    /// reports both delegate here.
+    pub fn combine_overlap_ratio(&self) -> f64 {
+        let total = self.overlap_ns + self.combine;
+        if total == 0 {
+            0.0
+        } else {
+            self.overlap_ns as f64 / total as f64
+        }
+    }
 }
 
 /// How the Native paths pick their per-wave token capacity.
@@ -295,15 +309,9 @@ pub struct StepStats {
 
 impl StepStats {
     /// Fraction of total combine work the executor hid under expert
-    /// compute: `overlap_ns / (overlap_ns + combine)`.  0 when no
-    /// combine work was measured at all.
+    /// compute (see [`PhaseNanos::combine_overlap_ratio`]).
     pub fn combine_overlap_ratio(&self) -> f64 {
-        let total = self.phases.overlap_ns + self.phases.combine;
-        if total == 0 {
-            0.0
-        } else {
-            self.phases.overlap_ns as f64 / total as f64
-        }
+        self.phases.combine_overlap_ratio()
     }
 }
 
@@ -385,6 +393,60 @@ impl Scheduler {
         &self.backend
     }
 
+    /// Resolve (starting on first use) the persistent engine under the
+    /// lock and run `f` against it — the single engine-bootstrap path
+    /// every entry point shares.  A poisoned lock means a previous step
+    /// panicked mid-execute; the engine itself is safe to reuse (its
+    /// drain guards restore the worker protocol on unwind), so recover
+    /// instead of re-panicking.
+    fn with_engine<T>(
+        &self,
+        f: impl FnOnce(&mut ExecutionEngine) -> Result<T>,
+    ) -> Result<T> {
+        let mut guard = self
+            .engine
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner());
+        let engine = guard.get_or_insert_with(|| {
+            ExecutionEngine::with_policy(
+                self.layout.clone(),
+                self.policy.clone(),
+            )
+        });
+        f(engine)
+    }
+
+    /// Can the full step run as the engine's streaming pipeline?
+    /// (Native-math router and Native expert backend.)
+    fn streams_natively(&self, router: &Router) -> bool {
+        (router.groups > 0 || matches!(router.backend, RouterBackend::Native))
+            && matches!(self.backend, ExpertBackend::Native)
+    }
+
+    /// The serially-composed full step shared by the streamed/forward
+    /// fallbacks: route on the coordinator, execute the finished plan on
+    /// the engine, stamp the route wall into `stats.phases.route`.
+    fn composed_step(
+        &self,
+        engine: &mut ExecutionEngine,
+        router: &Router,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+        rng: Option<&mut crate::util::rng::Rng>,
+    ) -> Result<StreamedStep> {
+        let t0 = Instant::now();
+        let (decisions, plan) = Dispatcher::route_and_plan(router, xs, rng)?;
+        let route_ns = t0.elapsed().as_nanos() as u64;
+        let (outs, mut stats) = match &self.backend {
+            ExpertBackend::Native => engine.execute_native(&plan, xs, weights)?,
+            ExpertBackend::Artifact { exe, capacity } => {
+                engine.execute_artifact(&plan, xs, weights, exe, *capacity)?
+            }
+        };
+        stats.phases.route = route_ns;
+        Ok(StreamedStep { outs, decisions, plan, stats })
+    }
+
     /// Execute the expert computation for a dispatch plan on the
     /// persistent engine.
     ///
@@ -397,20 +459,7 @@ impl Scheduler {
         xs: &[&TensorF],
         weights: &[ExpertWeights],
     ) -> Result<(Vec<TensorF>, StepStats)> {
-        // a poisoned lock means a previous step panicked mid-execute; the
-        // engine itself is safe to reuse (its drain guards restore the
-        // worker protocol on unwind), so recover instead of re-panicking
-        let mut guard = self
-            .engine
-            .lock()
-            .unwrap_or_else(|poison| poison.into_inner());
-        let engine = guard.get_or_insert_with(|| {
-            ExecutionEngine::with_policy(
-                self.layout.clone(),
-                self.policy.clone(),
-            )
-        });
-        match &self.backend {
+        self.with_engine(|engine| match &self.backend {
             ExpertBackend::Native => engine.execute_native(plan, xs, weights),
             // The PJRT executable is not Send (the xla crate wraps the
             // client in an Rc), so artifact waves run from this thread;
@@ -419,7 +468,7 @@ impl Scheduler {
             ExpertBackend::Artifact { exe, capacity } => {
                 engine.execute_artifact(plan, xs, weights, exe, *capacity)
             }
-        }
+        })
     }
 
     /// Execute one *full* MoE step — gating, dispatch and expert
@@ -438,36 +487,42 @@ impl Scheduler {
         router: &Router,
         xs: &[&TensorF],
         weights: &[ExpertWeights],
-        mut rng: Option<&mut crate::util::rng::Rng>,
+        rng: Option<&mut crate::util::rng::Rng>,
     ) -> Result<StreamedStep> {
-        let mut guard = self
-            .engine
-            .lock()
-            .unwrap_or_else(|poison| poison.into_inner());
-        let engine = guard.get_or_insert_with(|| {
-            ExecutionEngine::with_policy(
-                self.layout.clone(),
-                self.policy.clone(),
-            )
-        });
-        let native_router = router.groups > 0
-            || matches!(router.backend, RouterBackend::Native);
-        if native_router && matches!(self.backend, ExpertBackend::Native) {
-            return engine.execute_streaming(router, xs, weights, rng);
-        }
-        // serial fallback: route on the coordinator, then execute
-        let t0 = Instant::now();
-        let (decisions, plan) =
-            Dispatcher::route_and_plan(router, xs, rng.as_deref_mut())?;
-        let route_ns = t0.elapsed().as_nanos() as u64;
-        let (outs, mut stats) = match &self.backend {
-            ExpertBackend::Native => engine.execute_native(&plan, xs, weights)?,
-            ExpertBackend::Artifact { exe, capacity } => {
-                engine.execute_artifact(&plan, xs, weights, exe, *capacity)?
+        self.with_engine(|engine| {
+            if self.streams_natively(router) {
+                engine.execute_streaming(router, xs, weights, rng)
+            } else {
+                self.composed_step(engine, router, xs, weights, rng)
             }
-        };
-        stats.phases.route = route_ns;
-        Ok(StreamedStep { outs, decisions, plan, stats })
+        })
+    }
+
+    /// Forward-only (inference) full step: deterministic routing (no
+    /// eq-4 noise) with none of the trainer-only bookkeeping — no
+    /// per-token gate-vector copies, no importance/load merges, no
+    /// retained [`DispatchPlan`]
+    /// ([`ExecutionEngine::execute_streaming_forward`]).  This is the
+    /// serving hot path: [`crate::serve::ServeLoop`] drives it batch
+    /// after batch, reusing the engine's pooled arenas across steps.
+    ///
+    /// Artifact-backed configurations fall back to the serially-composed
+    /// route → plan → execute step, exactly like
+    /// [`execute_streamed`](Self::execute_streamed).
+    pub fn execute_forward(
+        &self,
+        router: &Router,
+        xs: &[&TensorF],
+        weights: &[ExpertWeights],
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        self.with_engine(|engine| {
+            if self.streams_natively(router) {
+                engine.execute_streaming_forward(router, xs, weights)
+            } else {
+                let s = self.composed_step(engine, router, xs, weights, None)?;
+                Ok((s.outs, s.stats))
+            }
+        })
     }
 
     /// Retained single-threaded reference path: gather, run each expert
@@ -684,6 +739,37 @@ mod tests {
                 assert!((a - b).abs() <= 1e-5, "step {step}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn execute_forward_matches_streamed_eval_routing() {
+        // the serving entry point skips decision bookkeeping but must
+        // produce bit-identical outputs to the trainer's streamed step
+        // under the same (deterministic, noise-free) routing
+        let (d, h, n, k, rows) = (6, 9, 5, 2, 14);
+        let mut rng = Rng::new(21);
+        let weights = mk_weights(n, d, h, &mut rng);
+        let router = Router::flat_native(
+            d, n, k,
+            prop::vec_f32(&mut rng, d * n, 0.5),
+            Some(prop::vec_f32(&mut rng, d * n, 0.3)),
+        );
+        let xs: Vec<TensorF> = (0..2)
+            .map(|_| {
+                TensorF::new(vec![rows, d], prop::vec_f32(&mut rng, rows * d, 1.0))
+            })
+            .collect();
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let sched = Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+        let s = sched.execute_streamed(&router, &refs, &weights, None).unwrap();
+        let (outs, stats) = sched.execute_forward(&router, &refs, &weights).unwrap();
+        assert_eq!(outs.len(), s.outs.len());
+        for (a, b) in outs.iter().zip(s.outs.iter()) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data, "forward path must be bit-identical");
+        }
+        assert_eq!(stats.expert_loads, s.stats.expert_loads);
+        assert!(!s.decisions.is_empty(), "trainer path keeps decisions");
     }
 
     #[test]

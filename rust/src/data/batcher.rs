@@ -6,12 +6,44 @@
 //! expert batch, so the batcher's only job is to keep `batch` independent
 //! continuation streams — each row continues where it left off, giving the
 //! LSTMs coherent context while the MoE sees B*T tokens at once.
+//!
+//! Two row sources share that contract:
+//! - [`Batcher::new`] — the infinite [`TopicCorpus`] streams (training);
+//! - [`Batcher::from_tokens`] — a *finite* token slice (eval replays,
+//!   fixture corpora): rows start at staggered offsets and wrap around
+//!   at the corpus tail, so a corpus shorter than `batch * seq_len`
+//!   still batches forever without panicking and never emits a token
+//!   that was not in the slice.
 
-use crate::data::synthetic::{TokenStream, TopicCorpus};
+use crate::data::synthetic::{TokenStream, TopicCorpus, BOS};
 use crate::runtime::TensorI;
 
+/// One row's token supply: an infinite corpus stream, or a finite slice
+/// tiled with wrap-around at the tail.
+enum RowStream<'a> {
+    Corpus(TokenStream<'a>),
+    Finite { tokens: &'a [i32], pos: usize },
+}
+
+impl RowStream<'_> {
+    fn next_token(&mut self) -> i32 {
+        match self {
+            RowStream::Corpus(s) => s.next_token(),
+            RowStream::Finite { tokens, pos } => {
+                if tokens.is_empty() {
+                    // degenerate empty corpus: emit BOS rather than panic
+                    return BOS;
+                }
+                let t = tokens[*pos];
+                *pos = (*pos + 1) % tokens.len();
+                t
+            }
+        }
+    }
+}
+
 pub struct Batcher<'a> {
-    streams: Vec<TokenStream<'a>>,
+    rows: Vec<RowStream<'a>>,
     batch: usize,
     seq_len: usize,
     /// last token of the previous chunk per row (next chunk's first input)
@@ -22,11 +54,31 @@ pub struct Batcher<'a> {
 impl<'a> Batcher<'a> {
     pub fn new(corpus: &'a TopicCorpus, batch: usize, seq_len: usize,
                stream_base: u64) -> Self {
-        let mut streams: Vec<TokenStream<'a>> = (0..batch)
-            .map(|i| corpus.stream(stream_base + i as u64))
+        let rows: Vec<RowStream<'a>> = (0..batch)
+            .map(|i| RowStream::Corpus(corpus.stream(stream_base + i as u64)))
             .collect();
-        let carry = streams.iter_mut().map(|s| s.next_token()).collect();
-        Batcher { streams, batch, seq_len, carry, tokens_served: 0 }
+        Self::from_rows(rows, batch, seq_len)
+    }
+
+    /// Batch a finite token slice: row `r` starts at offset
+    /// `r * len / batch` and wraps at the corpus tail, so every token
+    /// of the slice is covered and a corpus shorter than
+    /// `batch * seq_len` simply tiles (module docs).
+    pub fn from_tokens(tokens: &'a [i32], batch: usize, seq_len: usize) -> Self {
+        let len = tokens.len();
+        let rows: Vec<RowStream<'a>> = (0..batch)
+            .map(|r| RowStream::Finite {
+                tokens,
+                pos: if len == 0 { 0 } else { r * len / batch.max(1) },
+            })
+            .collect();
+        Self::from_rows(rows, batch, seq_len)
+    }
+
+    fn from_rows(mut rows: Vec<RowStream<'a>>, batch: usize, seq_len: usize)
+        -> Self {
+        let carry = rows.iter_mut().map(|s| s.next_token()).collect();
+        Batcher { rows, batch, seq_len, carry, tokens_served: 0 }
     }
 
     /// Next (batch, seq_len+1) chunk.  Column 0 of row r is the carry from
@@ -37,7 +89,7 @@ impl<'a> Batcher<'a> {
         for r in 0..self.batch {
             data[r * cols] = self.carry[r];
             for c in 1..cols {
-                data[r * cols + c] = self.streams[r].next_token();
+                data[r * cols + c] = self.rows[r].next_token();
             }
             self.carry[r] = data[r * cols + cols - 1];
         }
@@ -89,5 +141,77 @@ mod tests {
             let t = b.next_batch();
             assert!(t.data.iter().all(|&w| w >= 0 && (w as usize) < 64));
         }
+    }
+
+    #[test]
+    fn corpus_shorter_than_one_batch_wraps_without_panicking() {
+        // 7 tokens vs a 4 * 5 = 20-token batch: every row must wrap the
+        // tail (multiple times) and only ever emit tokens from the slice
+        let vocab = 10;
+        let tokens: Vec<i32> = vec![2, 3, 4, 5, 6, 7, 8];
+        let mut b = Batcher::from_tokens(&tokens, 4, 5);
+        for _ in 0..6 {
+            let t = b.next_batch();
+            assert_eq!(t.shape, vec![4, 6]);
+            for &w in &t.data {
+                assert!(
+                    tokens.contains(&w),
+                    "token {w} not from the finite corpus"
+                );
+                assert!(w >= 0 && (w as usize) < vocab);
+            }
+        }
+        assert_eq!(b.tokens_served, 6 * 4 * 5);
+    }
+
+    #[test]
+    fn wraparound_at_tail_preserves_order_and_continuity() {
+        // single row: the emitted stream must be the slice repeated
+        // (carry included), i.e. wrap-around never skips or invents ids
+        let tokens: Vec<i32> = vec![5, 6, 7];
+        let mut b = Batcher::from_tokens(&tokens, 1, 4);
+        let t1 = b.next_batch();
+        let t2 = b.next_batch();
+        let mut emitted: Vec<i32> = t1.data.clone();
+        // column 0 of chunk 2 repeats the carry; drop it when splicing
+        emitted.extend_from_slice(&t2.data[1..]);
+        for (i, &w) in emitted.iter().enumerate() {
+            assert_eq!(
+                w,
+                tokens[i % tokens.len()],
+                "position {i} broke the wrap-around order"
+            );
+        }
+    }
+
+    #[test]
+    fn staggered_offsets_cover_the_corpus() {
+        // rows start at r * len / batch, so with batch = 2 over 8 tokens
+        // row 1 starts mid-corpus and wraps past the tail
+        let tokens: Vec<i32> = (10..18).collect();
+        let mut b = Batcher::from_tokens(&tokens, 2, 8);
+        let t = b.next_batch();
+        assert_eq!(t.at2(0, 0), 10);
+        assert_eq!(t.at2(1, 0), 14);
+        // row 1 wraps: ...16 17 10 11...
+        assert_eq!(t.row(1)[..6], [14, 15, 16, 17, 10, 11]);
+    }
+
+    #[test]
+    fn empty_and_degenerate_corpora_do_not_panic() {
+        let empty: Vec<i32> = Vec::new();
+        let mut b = Batcher::from_tokens(&empty, 2, 3);
+        let t = b.next_batch();
+        assert_eq!(t.shape, vec![2, 4]);
+        assert!(t.data.iter().all(|&w| w == BOS), "empty corpus emits BOS");
+
+        // zero rows and zero seq_len are valid no-ops
+        let tokens = vec![3, 4];
+        let mut none = Batcher::from_tokens(&tokens, 0, 4);
+        assert_eq!(none.next_batch().shape, vec![0, 5]);
+        let mut flat = Batcher::from_tokens(&tokens, 2, 0);
+        let t = flat.next_batch();
+        assert_eq!(t.shape, vec![2, 1]);
+        assert_eq!(flat.tokens_served, 0);
     }
 }

@@ -1,14 +1,23 @@
 //! Synthetic Native-backend MoE workloads, shared by the measured
 //! efficiency report and the bench targets so the expert/router/plan
-//! construction lives in exactly one place.
+//! construction lives in exactly one place — plus the **open-loop
+//! traffic generator** for the serving runtime: seeded Poisson
+//! arrivals with ragged request lengths and an optional bursty mode
+//! ([`poisson_trace`]), materialised into serve-ready requests by
+//! [`trace_requests`], and the shared latency-vs-offered-load report
+//! ([`serve_load_curve`]) behind `examples/serve_demo.rs` and
+//! `repro serve`.
 
 use anyhow::Result;
 
 use crate::coordinator::engine::StreamedStep;
 use crate::coordinator::router::Router;
-use crate::coordinator::scheduler::{ExpertWeights, Scheduler, StepStats};
+use crate::coordinator::scheduler::{
+    ExpertBackend, ExpertWeights, Scheduler, ShardLayout, StepStats,
+};
 use crate::coordinator::{DispatchPlan, Dispatcher};
 use crate::runtime::TensorF;
+use crate::serve::{ServeConfig, ServeLoop, TimedRequest};
 use crate::util::rng::Rng;
 
 /// A fully routed synthetic MoE step: expert weights, gating router,
@@ -152,25 +161,238 @@ impl SyntheticMoe {
     }
 }
 
-/// One-line rendering of a step's per-phase breakdown (shared by the
-/// benches and the efficiency report).  `combine` is the critical-path
-/// tail; the parenthesised hidden time is combine work the executor
-/// ran under expert compute (`overlap` = fraction of combine hidden).
-pub fn phase_line(stats: &StepStats) -> String {
+/// The route/gather/compute/combine fragment shared by every phase
+/// report ([`phase_line`], [`serve_phase_line`]) so the rendering lives
+/// in exactly one place.  `combine` is the critical-path tail; the
+/// parenthesised hidden time is combine work the executor ran under
+/// expert compute (`overlap` = fraction of combine hidden).
+fn phase_fragment(p: &crate::coordinator::PhaseNanos) -> String {
+    let overlap_pct = p.combine_overlap_ratio() * 100.0;
     format!(
         "route {:.3}ms  gather {:.3}ms  compute {:.3}ms  combine {:.3}ms \
-         (+{:.3}ms hidden, overlap {:.0}%)  waves={}  busiest_shard={} tok  \
-         max shard idle {:.3}ms",
-        stats.phases.route as f64 / 1e6,
-        stats.phases.gather as f64 / 1e6,
-        stats.phases.compute as f64 / 1e6,
-        stats.phases.combine as f64 / 1e6,
-        stats.phases.overlap_ns as f64 / 1e6,
-        stats.combine_overlap_ratio() * 100.0,
+         (+{:.3}ms hidden, overlap {overlap_pct:.0}%)",
+        p.route as f64 / 1e6,
+        p.gather as f64 / 1e6,
+        p.compute as f64 / 1e6,
+        p.combine as f64 / 1e6,
+        p.overlap_ns as f64 / 1e6,
+    )
+}
+
+/// One-line rendering of a step's per-phase breakdown (benches,
+/// efficiency report, quickstart — all through here).
+pub fn phase_line(stats: &StepStats) -> String {
+    format!(
+        "{}  waves={}  busiest_shard={} tok  max shard idle {:.3}ms",
+        phase_fragment(&stats.phases),
         stats.waves,
         stats.busiest_shard_tokens,
         stats.shard_idle_ns.iter().copied().max().unwrap_or(0) as f64 / 1e6,
     )
+}
+
+/// The serving variant of [`phase_line`]: the same phase fragment
+/// (summed over every dispatched batch) prefixed with the queue-wait
+/// column the serve path adds in front of the engine, plus batching
+/// telemetry.
+pub fn serve_phase_line(stats: &crate::serve::ServeStats) -> String {
+    format!(
+        "queue p50 {:.3}ms  {}  batches={}  occupancy {:.0}%",
+        stats.queue_wait.percentile(0.5) as f64 / 1e6,
+        phase_fragment(&stats.phases),
+        stats.batches,
+        stats.batch_occupancy() * 100.0,
+    )
+}
+
+/// Open-loop traffic spec for the serving harness.  Requests arrive by
+/// a Poisson process at `rate_per_sec` with lengths uniform in
+/// `[min_rows, max_rows]`; `bursty` modulates the rate ×4 / ÷4 in
+/// alternating 16-request epochs (mean rate roughly preserved, arrival
+/// clumping very much not).  Fully determined by `seed` — no
+/// wall-clock anywhere, so identical seeds give identical traces.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub seed: u64,
+    pub rate_per_sec: f64,
+    pub n_requests: usize,
+    pub min_rows: usize,
+    pub max_rows: usize,
+    pub bursty: bool,
+}
+
+/// One generated arrival: when (ns on the serve clock) and how long.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestSpec {
+    pub arrival_ns: u64,
+    pub rows: usize,
+}
+
+/// Generate an arrival trace from the spec (module docs): exponential
+/// inter-arrival gaps via inverse-transform sampling on the shared
+/// deterministic [`Rng`].
+pub fn poisson_trace(spec: &TraceSpec) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(spec.seed);
+    let lo = spec.min_rows.max(1);
+    let hi = spec.max_rows.max(lo);
+    let base_rate = spec.rate_per_sec.max(1e-9);
+    let mut t_secs = 0f64;
+    (0..spec.n_requests)
+        .map(|i| {
+            let rate = if spec.bursty {
+                // alternating hot/cold epochs; ×4 then ÷4
+                base_rate * if (i / 16) % 2 == 0 { 4.0 } else { 0.25 }
+            } else {
+                base_rate
+            };
+            // u in [0,1) so 1-u in (0,1]: ln is finite, gap >= 0
+            let u = rng.uniform();
+            t_secs += -(1.0 - u).ln() / rate;
+            RequestSpec {
+                arrival_ns: (t_secs * 1e9) as u64,
+                rows: lo + rng.below(hi - lo + 1),
+            }
+        })
+        .collect()
+}
+
+/// Materialise serve-ready requests for a trace: (rows, d) activations
+/// drawn from `seed` (independent of the arrival seed so load shape
+/// and payload can vary separately).
+pub fn trace_requests(
+    trace: &[RequestSpec],
+    d: usize,
+    seed: u64,
+) -> Vec<TimedRequest> {
+    let mut rng = Rng::new(seed);
+    trace
+        .iter()
+        .map(|r| TimedRequest {
+            arrival_ns: r.arrival_ns,
+            x: TensorF::new(
+                vec![r.rows, d],
+                (0..r.rows * d).map(|_| rng.normal_f32()).collect(),
+            ),
+        })
+        .collect()
+}
+
+/// A ready-to-drive serving stack over a synthetic frozen MoE — the
+/// model dims, serve config and burst-calibration ritual
+/// `examples/serve_demo.rs`, `repro serve` and `benches/serve.rs`
+/// share, defined once.
+pub struct ServeHarness {
+    pub serve: ServeLoop,
+    pub d_model: usize,
+    pub n_experts: usize,
+    pub k: usize,
+    pub devices: usize,
+    pub min_rows: usize,
+    pub max_rows: usize,
+}
+
+impl ServeHarness {
+    /// Freeze the standard synthetic serving model (16 experts, k=2,
+    /// d=32) behind a 64-deep queue batching up to 256 tokens under a
+    /// 0.5ms latency budget.
+    pub fn build(seed: u64, devices: usize) -> Result<Self> {
+        let (d, h, n, k) = (32, 128, 16, 2);
+        let devices = devices.max(1);
+        let work = SyntheticMoe::build(seed, d, h, n, k, 1, 8)?;
+        let cfg = ServeConfig {
+            queue_depth: 64,
+            max_batch_tokens: 256,
+            latency_budget_ns: 500_000, // 0.5ms
+            ..Default::default()
+        };
+        let sched = Scheduler::new(
+            ShardLayout::new(devices, n),
+            ExpertBackend::Native,
+        );
+        Ok(ServeHarness {
+            serve: ServeLoop::new(sched, work.router, work.weights, cfg)?,
+            d_model: d,
+            n_experts: n,
+            k,
+            devices,
+            min_rows: 4,
+            max_rows: 24,
+        })
+    }
+
+    /// Seeded Poisson trace at an absolute request rate, materialised.
+    pub fn trace(
+        &self,
+        arrival_seed: u64,
+        rate_per_sec: f64,
+        n_requests: usize,
+        bursty: bool,
+        payload_seed: u64,
+    ) -> Vec<TimedRequest> {
+        trace_requests(
+            &poisson_trace(&TraceSpec {
+                seed: arrival_seed,
+                rate_per_sec,
+                n_requests,
+                min_rows: self.min_rows,
+                max_rows: self.max_rows,
+                bursty,
+            }),
+            self.d_model,
+            payload_seed,
+        )
+    }
+
+    /// Warm the engine, then measure serving capacity (tokens/sec)
+    /// from a simultaneous 64-request burst — every batch saturated,
+    /// so the achieved rate approximates the engine's ceiling.
+    pub fn calibrate(&self, seed: u64) -> Result<f64> {
+        let calib = self.trace(seed ^ 0xca11b8, 1e12, 64, false, seed ^ 1);
+        self.serve.run_trace(&calib)?; // warm the engine + arenas
+        Ok(self.serve.run_trace(&calib)?.stats.tokens_per_sec().max(1.0))
+    }
+
+    /// Request rate offering `mult` × a calibrated token capacity.
+    pub fn rate_for(&self, capacity_tok_per_sec: f64, mult: f64) -> f64 {
+        let mean_rows = (self.min_rows + self.max_rows) as f64 / 2.0;
+        (capacity_tok_per_sec * mult / mean_rows).max(1.0)
+    }
+}
+
+/// The latency-vs-offered-load report shared by `examples/serve_demo.rs`
+/// and `repro serve`: calibrate a [`ServeHarness`], then replay
+/// open-loop Poisson traces at `load_multipliers` × capacity, printing
+/// p50/p99 latency, achieved tokens/sec, occupancy and sheds per point.
+pub fn serve_load_curve(
+    seed: u64,
+    devices: usize,
+    load_multipliers: &[f64],
+    n_requests: usize,
+) -> Result<()> {
+    let harness = ServeHarness::build(seed, devices)?;
+    let capacity = harness.calibrate(seed)?;
+    println!(
+        "# serve load curve: {} experts (k={}, d={}) on {} device(s), \
+         calibrated capacity {capacity:.0} tok/s",
+        harness.n_experts, harness.k, harness.d_model, harness.devices,
+    );
+    for &mult in load_multipliers {
+        let rate = harness.rate_for(capacity, mult);
+        let trace = harness.trace(
+            seed ^ 0x70ad ^ (mult * 1e3) as u64,
+            rate,
+            n_requests,
+            false,
+            seed ^ 2,
+        );
+        let report = harness.serve.run_trace(&trace)?;
+        println!(
+            "offered {mult:>4.1}x ({rate:>7.0} req/s)  {}",
+            report.stats.summary_line()
+        );
+        println!("  {}", serve_phase_line(&report.stats));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -210,5 +432,120 @@ mod tests {
         assert_eq!(s.stats.expert_loads, stats.expert_loads);
         assert_eq!(s.plan.expert_loads(), stats.expert_loads);
         assert!(stats.phases.route > 0, "unpipelined route wall recorded");
+    }
+
+    #[test]
+    fn poisson_trace_is_seed_deterministic() {
+        // the satellite property: identical seeds give identical traces,
+        // with no wall-clock input anywhere in the generator
+        crate::util::prop::forall("poisson trace seed", |rng| {
+            let spec = TraceSpec {
+                seed: rng.next_u64(),
+                rate_per_sec: 0.5 + rng.uniform() * 5000.0,
+                n_requests: 1 + rng.below(60),
+                min_rows: 1 + rng.below(4),
+                max_rows: 4 + rng.below(16),
+                bursty: rng.below(2) == 1,
+            };
+            let a = poisson_trace(&spec);
+            let b = poisson_trace(&spec);
+            assert_eq!(a, b, "same seed must give the same trace");
+            assert_eq!(a.len(), spec.n_requests);
+            let lo = spec.min_rows.max(1);
+            let hi = spec.max_rows.max(lo);
+            for w in a.windows(2) {
+                assert!(w[0].arrival_ns <= w[1].arrival_ns, "unsorted trace");
+            }
+            for r in &a {
+                assert!((lo..=hi).contains(&r.rows), "rows {} out of range", r.rows);
+            }
+            let other = TraceSpec {
+                seed: spec.seed.wrapping_add(1),
+                ..spec.clone()
+            };
+            assert_ne!(
+                a,
+                poisson_trace(&other),
+                "different seeds should differ"
+            );
+        });
+    }
+
+    #[test]
+    fn bursty_mode_clumps_arrivals() {
+        let base = TraceSpec {
+            seed: 11,
+            rate_per_sec: 1000.0,
+            n_requests: 64,
+            min_rows: 1,
+            max_rows: 8,
+            bursty: false,
+        };
+        let smooth = poisson_trace(&base);
+        let bursty =
+            poisson_trace(&TraceSpec { bursty: true, ..base.clone() });
+        // same seed, same length; burstiness only reshapes the gaps
+        assert_eq!(smooth.len(), bursty.len());
+        assert_ne!(smooth, bursty);
+        // gap j precedes arrival j+1, whose epoch chose its rate: hot
+        // epochs run ×4, cold ÷4, so mean cold gaps must dominate mean
+        // hot gaps by far more than exponential sampling noise (the
+        // nominal ratio is 16×; 4× is the regression-proof floor)
+        let mut hot: Vec<u64> = Vec::new();
+        let mut cold: Vec<u64> = Vec::new();
+        for (j, w) in bursty.windows(2).enumerate() {
+            let gap = w[1].arrival_ns - w[0].arrival_ns;
+            if ((j + 1) / 16) % 2 == 0 {
+                hot.push(gap);
+            } else {
+                cold.push(gap);
+            }
+        }
+        let mean =
+            |v: &[u64]| v.iter().sum::<u64>() as f64 / v.len().max(1) as f64;
+        assert!(!hot.is_empty() && !cold.is_empty());
+        assert!(
+            mean(&cold) > 4.0 * mean(&hot),
+            "bursty trace shows no clumping: cold mean {} vs hot mean {}",
+            mean(&cold),
+            mean(&hot)
+        );
+    }
+
+    #[test]
+    fn trace_requests_match_spec_shapes() {
+        let trace = poisson_trace(&TraceSpec {
+            seed: 3,
+            rate_per_sec: 100.0,
+            n_requests: 10,
+            min_rows: 2,
+            max_rows: 5,
+            bursty: false,
+        });
+        let reqs = trace_requests(&trace, 6, 9);
+        assert_eq!(reqs.len(), 10);
+        for (r, spec) in reqs.iter().zip(trace.iter()) {
+            assert_eq!(r.arrival_ns, spec.arrival_ns);
+            assert_eq!(r.x.shape, vec![spec.rows, 6]);
+        }
+        // payload seed is independent of the arrival seed
+        let reqs2 = trace_requests(&trace, 6, 10);
+        assert_eq!(reqs2[0].arrival_ns, reqs[0].arrival_ns);
+        assert_ne!(reqs2[0].x.data, reqs[0].x.data);
+    }
+
+    #[test]
+    fn phase_reports_share_one_fragment() {
+        let plain = phase_line(&StepStats::default());
+        assert!(!plain.contains("queue"));
+        assert!(plain.contains("route 0.000ms"));
+
+        let mut serve = crate::serve::ServeStats::new();
+        serve.queue_wait.push(2_000_000);
+        serve.phases.compute = 3_000_000;
+        let line = serve_phase_line(&serve);
+        assert!(line.starts_with("queue p50 2.000ms"), "{line}");
+        assert!(line.contains("compute 3.000ms"), "{line}");
+        assert!(line.contains("batches=0"), "{line}");
     }
 }

@@ -52,6 +52,24 @@
 //! busy/idle breakdown that makes the §3.1 busiest-shard wait directly
 //! observable.
 //!
+//! ## Serving runtime
+//!
+//! [`serve`] turns the same engine into a **continuous micro-batching
+//! inference runtime**: a bounded [`serve::RequestQueue`] with
+//! admission control (reject / shed-oldest backpressure), a
+//! [`serve::MicroBatcher`] that coalesces ragged requests into
+//! engine-sized batches under a latency budget, and a
+//! [`serve::ServeLoop`] driving forward-only steps on
+//! [`coordinator::Scheduler::execute_forward`] with gating frozen from
+//! a checkpoint or fresh init.  [`serve::ServeStats`] reports
+//! per-request queue/compute/total latency percentiles, achieved
+//! tokens/sec, batch occupancy and shed counts; the seeded open-loop
+//! Poisson traffic generator in [`harness::workload`] drives
+//! latency-vs-offered-load curves (`examples/serve_demo.rs`,
+//! `benches/serve.rs` → `BENCH_serve.json`).  `rust/tests/serve.rs`
+//! proves the serve path bit-identical to the serial oracle per
+//! request.
+//!
 //! The `xla` dependency is a vendored API-compatible stub by default
 //! (see `vendor/xla`); artifact-backed paths report "PJRT unavailable"
 //! until the real bindings are swapped in, while every Native path —
@@ -66,6 +84,7 @@ pub mod harness;
 pub mod metrics;
 pub mod ngram;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod translate;
 pub mod util;

@@ -6,6 +6,7 @@
 //! repro distributed --config moe-32 --devices 8 --steps 20
 //! repro table1|table6|table7|table8|table9|fig2|fig4|mt|mt5  [--steps N]
 //! repro efficiency --devices 16
+//! repro serve --devices 4 --requests 400
 //! repro info
 //! ```
 //!
@@ -67,6 +68,7 @@ fn usage() -> ! {
            fig2 [--side left|right] | fig4              [--steps N]\n\
            mt | mt5                                     [--steps N]\n\
            efficiency   [--devices D] [--tokens N]\n\
+           serve        [--devices D] [--requests N] [--seed S]\n\
            info\n\
          common flags: --artifacts DIR (default: artifacts)"
     );
@@ -148,6 +150,19 @@ fn main() -> Result<()> {
             let tokens = args.get_u64("tokens", 8192)? as usize;
             moe::harness::distributed::efficiency_report(
                 &artifacts, devices, tokens,
+            )?;
+        }
+        "serve" => {
+            // artifact-free: the continuous micro-batching inference
+            // runtime on the persistent engine, at 3 offered loads
+            let devices = args.get_u64("devices", 4)? as usize;
+            let requests = args.get_u64("requests", 400)? as usize;
+            let seed = args.get_u64("seed", 17)?;
+            moe::harness::workload::serve_load_curve(
+                seed,
+                devices,
+                &[0.3, 1.0, 3.0],
+                requests,
             )?;
         }
         "info" => {

@@ -1,0 +1,176 @@
+//! Continuous micro-batching: coalesce queued requests into
+//! engine-sized token batches under a latency budget.
+//!
+//! The dispatch rule is the classic two-trigger one: ship a batch the
+//! moment enough tokens are queued to fill the engine
+//! (`max_tokens`), *or* the moment the oldest queued request's
+//! deadline slack runs out (`latency_budget_ns` past its arrival) —
+//! whichever comes first.  Requests are taken whole (a request's rows
+//! must land in one step so its outputs scatter back in one piece),
+//! FIFO, and every batch carries a row→request map
+//! ([`BatchSlot`]) so the combined engine output is scattered back to
+//! its owners.
+
+use std::ops::Range;
+
+use crate::runtime::TensorF;
+use crate::serve::queue::{RequestId, RequestQueue};
+
+/// Where one request's rows landed inside a coalesced batch.
+#[derive(Clone, Debug)]
+pub struct BatchSlot {
+    pub id: RequestId,
+    pub arrival_ns: u64,
+    /// row range of this request inside the batch tensor
+    pub rows: Range<usize>,
+}
+
+/// One coalesced engine batch plus the map that scatters its combined
+/// output back per request.
+pub struct MicroBatch {
+    /// (rows, d) coalesced activations, requests concatenated FIFO
+    pub x: TensorF,
+    pub slots: Vec<BatchSlot>,
+}
+
+impl MicroBatch {
+    pub fn rows(&self) -> usize {
+        self.x.shape[0]
+    }
+}
+
+/// The two-trigger dispatch policy (module docs).
+#[derive(Clone, Debug)]
+pub struct MicroBatcher {
+    /// engine batch size: dispatch as soon as this many tokens queue up
+    pub max_tokens: usize,
+    /// deadline slack: dispatch a partial batch once the oldest request
+    /// has waited this long
+    pub latency_budget_ns: u64,
+}
+
+impl MicroBatcher {
+    pub fn new(max_tokens: usize, latency_budget_ns: u64) -> Self {
+        MicroBatcher { max_tokens: max_tokens.max(1), latency_budget_ns }
+    }
+
+    /// The oldest queued request's dispatch deadline.
+    pub fn deadline_ns(&self, queue: &RequestQueue) -> Option<u64> {
+        queue
+            .oldest_arrival_ns()
+            .map(|a| a.saturating_add(self.latency_budget_ns))
+    }
+
+    /// Should a batch be dispatched now?  `drained` marks that no more
+    /// arrivals are coming (trace exhausted), so waiting for a fuller
+    /// batch would only burn latency.
+    pub fn should_dispatch(
+        &self,
+        queue: &RequestQueue,
+        now_ns: u64,
+        drained: bool,
+    ) -> bool {
+        if queue.is_empty() {
+            return false;
+        }
+        drained
+            || queue.depth_tokens() >= self.max_tokens
+            || self.deadline_ns(queue).is_some_and(|d| now_ns >= d)
+    }
+
+    /// Pop whole requests FIFO until the next one would overflow
+    /// `max_tokens`, concatenating their rows into one (rows, d) tensor.
+    /// The first request is always taken, so a request as large as the
+    /// cap still ships alone.  `None` on an empty queue.
+    pub fn form(&self, queue: &mut RequestQueue, d: usize) -> Option<MicroBatch> {
+        queue.front()?;
+        let mut data: Vec<f32> = Vec::new();
+        let mut slots: Vec<BatchSlot> = Vec::new();
+        let mut rows = 0usize;
+        while let Some(next_rows) = queue.front().map(|r| r.rows()) {
+            if !slots.is_empty() && rows + next_rows > self.max_tokens {
+                break;
+            }
+            let req = queue.pop().expect("front() was Some");
+            data.extend_from_slice(&req.x.data);
+            slots.push(BatchSlot {
+                id: req.id,
+                arrival_ns: req.arrival_ns,
+                rows: rows..rows + next_rows,
+            });
+            rows += next_rows;
+            if rows >= self.max_tokens {
+                break;
+            }
+        }
+        Some(MicroBatch { x: TensorF::new(vec![rows, d], data), slots })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::queue::{AdmissionPolicy, ServeRequest};
+
+    fn queue_with(rows: &[usize]) -> RequestQueue {
+        let mut q = RequestQueue::new(64, AdmissionPolicy::Reject);
+        for (i, &r) in rows.iter().enumerate() {
+            let x = TensorF::new(
+                vec![r, 2],
+                (0..r * 2).map(|v| (i * 100 + v) as f32).collect(),
+            );
+            q.offer(ServeRequest { id: i, arrival_ns: 10 * i as u64, x });
+        }
+        q
+    }
+
+    #[test]
+    fn dispatches_on_fill_or_deadline_or_drain() {
+        let mb = MicroBatcher::new(8, 100);
+        let empty = RequestQueue::new(4, AdmissionPolicy::Reject);
+        assert!(!mb.should_dispatch(&empty, 1_000_000, true));
+
+        let q = queue_with(&[3, 2]); // 5 tokens, oldest arrived at 0
+        assert!(!mb.should_dispatch(&q, 50, false), "under fill + budget");
+        assert!(mb.should_dispatch(&q, 100, false), "deadline expired");
+        assert!(mb.should_dispatch(&q, 50, true), "trace drained");
+
+        let full = queue_with(&[3, 2, 4]); // 9 >= 8 tokens
+        assert!(mb.should_dispatch(&full, 0, false), "batch fills");
+        assert_eq!(mb.deadline_ns(&full), Some(100));
+    }
+
+    #[test]
+    fn form_coalesces_fifo_and_maps_rows_to_requests() {
+        let mb = MicroBatcher::new(6, 0);
+        let mut q = queue_with(&[3, 2, 4]);
+        let b = mb.form(&mut q, 2).unwrap();
+        // 3 + 2 fit; request 2 (4 rows) would overflow the 6-token cap
+        assert_eq!(b.rows(), 5);
+        assert_eq!(b.x.shape, vec![5, 2]);
+        assert_eq!(b.slots.len(), 2);
+        assert_eq!(b.slots[0].id, 0);
+        assert_eq!(b.slots[0].rows, 0..3);
+        assert_eq!(b.slots[1].id, 1);
+        assert_eq!(b.slots[1].rows, 3..5);
+        // rows land contiguously in request order
+        assert_eq!(b.x.row(0), &[0.0, 1.0]);
+        assert_eq!(b.x.row(3), &[100.0, 101.0]);
+        // the overflowing request is still queued for the next batch
+        assert_eq!(q.len(), 1);
+        let b2 = mb.form(&mut q, 2).unwrap();
+        assert_eq!(b2.slots[0].id, 2);
+        assert_eq!(b2.rows(), 4);
+        assert!(mb.form(&mut q, 2).is_none());
+    }
+
+    #[test]
+    fn oversized_request_ships_alone() {
+        let mb = MicroBatcher::new(4, 0);
+        let mut q = queue_with(&[9, 1]);
+        let b = mb.form(&mut q, 2).unwrap();
+        assert_eq!(b.rows(), 9);
+        assert_eq!(b.slots.len(), 1);
+        assert_eq!(q.len(), 1);
+    }
+}

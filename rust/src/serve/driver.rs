@@ -1,0 +1,461 @@
+//! The serve loop: continuous micro-batching inference on the
+//! persistent engine.
+//!
+//! [`ServeLoop::run_trace`] replays an arrival-stamped request trace
+//! against the frozen model.  Time is a **hybrid serve clock**: arrival
+//! stamps come from the (deterministic, seeded) trace, while each
+//! dispatched batch advances the clock by its *measured* engine wall —
+//! so queueing dynamics are exactly reproducible given a trace, compute
+//! cost is real, and open-loop semantics hold: arrivals keep landing
+//! (and shedding) while a batch computes, no matter how overloaded the
+//! engine is.  The loop between batches:
+//!
+//! 1. admit every arrival due at the current clock (admission control
+//!    may shed — [`RequestQueue`]);
+//! 2. if the queue is idle, jump the clock to the next arrival;
+//! 3. ask the [`MicroBatcher`] whether to dispatch (batch full, oldest
+//!    deadline blown, or trace drained); if not, advance the clock to
+//!    the earlier of next-arrival and oldest-deadline and retry;
+//! 4. form the batch, run one forward-only step
+//!    ([`Scheduler::execute_forward`] — no gating noise, no trainer
+//!    bookkeeping, pooled arenas reused across steps), advance the
+//!    clock by the measured wall, scatter outputs back per request via
+//!    the batch's row map, and record SLO samples.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::scheduler::ExpertWeights;
+use crate::coordinator::{Router, Scheduler};
+use crate::runtime::{ModelConfig, TensorF};
+use crate::serve::batcher::MicroBatcher;
+use crate::serve::queue::{AdmissionPolicy, RequestQueue, ServeRequest};
+use crate::serve::stats::ServeStats;
+use crate::train::checkpoint;
+use crate::train::trainer::StreamedTrainState;
+
+/// Serving-runtime knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// admission-queue depth bound (requests)
+    pub queue_depth: usize,
+    pub policy: AdmissionPolicy,
+    /// engine batch size the micro-batcher fills toward (tokens)
+    pub max_batch_tokens: usize,
+    /// dispatch a partial batch once the oldest request waited this long
+    pub latency_budget_ns: u64,
+    /// keep per-request outputs in the report (differential tests /
+    /// actual serving); off for pure load measurement
+    pub capture_outputs: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_depth: 256,
+            policy: AdmissionPolicy::Reject,
+            max_batch_tokens: 1024,
+            latency_budget_ns: 1_000_000, // 1ms
+            capture_outputs: false,
+        }
+    }
+}
+
+/// One trace entry: when the request arrives (serve clock, ns) and its
+/// ragged (rows, d) activations.
+pub struct TimedRequest {
+    pub arrival_ns: u64,
+    pub x: TensorF,
+}
+
+/// Result of one trace replay.
+pub struct ServeReport {
+    pub stats: ServeStats,
+    /// per-trace-index outputs when `capture_outputs` was set (`None`
+    /// for requests admission control shed); empty otherwise
+    pub outputs: Vec<Option<TensorF>>,
+}
+
+/// Continuous micro-batching inference runtime over a frozen MoE.
+pub struct ServeLoop {
+    sched: Scheduler,
+    router: Router,
+    weights: Vec<ExpertWeights>,
+    cfg: ServeConfig,
+    d_model: usize,
+}
+
+impl ServeLoop {
+    /// Serve the given frozen router + expert weights on `sched`'s
+    /// persistent engine.
+    pub fn new(
+        sched: Scheduler,
+        router: Router,
+        weights: Vec<ExpertWeights>,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        if weights.is_empty() {
+            bail!("serve loop needs at least one expert");
+        }
+        if router.n_experts != weights.len() {
+            bail!(
+                "router has {} experts but {} expert weights given",
+                router.n_experts,
+                weights.len()
+            );
+        }
+        if sched.layout().n_experts != router.n_experts {
+            bail!(
+                "scheduler layout has {} experts but router has {}",
+                sched.layout().n_experts,
+                router.n_experts
+            );
+        }
+        let d_model = router.d_model;
+        for (e, w) in weights.iter().enumerate() {
+            if w.d_model != d_model {
+                bail!("expert {e} has d_model {} (router {})", w.d_model, d_model);
+            }
+        }
+        Ok(ServeLoop { sched, router, weights, cfg, d_model })
+    }
+
+    /// Freeze a streamed training state (gating included) for serving.
+    pub fn from_state(
+        sched: Scheduler,
+        state: StreamedTrainState,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        Self::new(sched, state.router, state.weights, cfg)
+    }
+
+    /// Load a [`checkpoint::save_streamed`] checkpoint and serve it.
+    pub fn from_checkpoint(
+        sched: Scheduler,
+        path: &std::path::Path,
+        cfg_name: &str,
+        model: &ModelConfig,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        let state = checkpoint::load_streamed(path, cfg_name, model)?;
+        Self::from_state(sched, state, cfg)
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// Replay an arrival-sorted trace (module docs).  Requests are
+    /// identified by trace index in the report.
+    pub fn run_trace(&self, trace: &[TimedRequest]) -> Result<ServeReport> {
+        let d = self.d_model;
+        for (i, r) in trace.iter().enumerate() {
+            if r.x.shape.len() != 2 || r.x.shape[1] != d {
+                bail!(
+                    "request {i} shape {:?} (want (rows, {d}))",
+                    r.x.shape
+                );
+            }
+            if r.x.shape[0] == 0 {
+                bail!("request {i} has no rows");
+            }
+        }
+        if trace.windows(2).any(|w| w[0].arrival_ns > w[1].arrival_ns) {
+            bail!("trace must be sorted by arrival time");
+        }
+
+        let mut queue = RequestQueue::new(self.cfg.queue_depth, self.cfg.policy);
+        let batcher = MicroBatcher::new(
+            self.cfg.max_batch_tokens,
+            self.cfg.latency_budget_ns,
+        );
+        let mut stats = ServeStats::new();
+        let mut outputs: Vec<Option<TensorF>> = if self.cfg.capture_outputs {
+            (0..trace.len()).map(|_| None).collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut now: u64 = 0;
+        let mut next = 0usize; // next trace entry not yet offered
+        while next < trace.len() || !queue.is_empty() {
+            // 1. admit everything due at the current clock; dropped
+            // requests are counted by the queue and their outputs stay
+            // None in the report
+            while next < trace.len() && trace[next].arrival_ns <= now {
+                if queue.will_reject_next() {
+                    // O(1) refusal: don't clone an activation tensor
+                    // admission control would immediately discard
+                    queue.reject_next();
+                } else {
+                    queue.offer(ServeRequest {
+                        id: next,
+                        arrival_ns: trace[next].arrival_ns,
+                        x: trace[next].x.clone(),
+                    });
+                }
+                next += 1;
+            }
+            if queue.is_empty() {
+                // idle: jump to the next arrival (next < len because the
+                // outer condition held and the queue is empty)
+                now = trace[next].arrival_ns;
+                continue;
+            }
+            // 2. dispatch decision
+            let drained = next >= trace.len();
+            if !batcher.should_dispatch(&queue, now, drained) {
+                // sleep the serve clock to the next actionable instant:
+                // a drained trace with a non-empty queue always
+                // dispatches above, so more arrivals exist here, and
+                // both candidates are strictly ahead of `now` (arrivals
+                // due were admitted, an expired deadline dispatches)
+                let deadline = batcher
+                    .deadline_ns(&queue)
+                    .expect("non-empty queue has a deadline");
+                now = now.max(deadline.min(trace[next].arrival_ns));
+                continue;
+            }
+            // 3. one forward-only engine step over the coalesced batch
+            let batch = batcher
+                .form(&mut queue, d)
+                .expect("dispatch decision implies a non-empty queue");
+            let dispatched_at = now;
+            let t0 = Instant::now();
+            let (outs, step) = self.sched.execute_forward(
+                &self.router,
+                &[&batch.x],
+                &self.weights,
+            )?;
+            let wall = t0.elapsed().as_nanos() as u64;
+            now += wall;
+            stats.record_batch(&step, batch.rows(), self.cfg.max_batch_tokens);
+            let combined = &outs[0];
+            for slot in &batch.slots {
+                stats.queue_wait.push(dispatched_at - slot.arrival_ns);
+                stats.compute.push(wall);
+                stats.total.push(now - slot.arrival_ns);
+                stats.completed += 1;
+                stats.tokens_served += slot.rows.len() as u64;
+                if self.cfg.capture_outputs {
+                    let rows = slot.rows.len();
+                    let data = combined.data
+                        [slot.rows.start * d..slot.rows.end * d]
+                        .to_vec();
+                    outputs[slot.id] = Some(TensorF::new(vec![rows, d], data));
+                }
+            }
+        }
+        stats.shed = queue.shed();
+        stats.peak_queue_depth = queue.peak_depth();
+        stats.wall_ns = now;
+        Ok(ServeReport { stats, outputs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::ExpertBackend;
+    use crate::coordinator::ShardLayout;
+    use crate::util::{prop, rng::Rng};
+
+    fn mk_serve(
+        d: usize,
+        h: usize,
+        n: usize,
+        k: usize,
+        devices: usize,
+        cfg: ServeConfig,
+        seed: u64,
+    ) -> ServeLoop {
+        let mut rng = Rng::new(seed);
+        let weights = (0..n)
+            .map(|_| ExpertWeights {
+                w_in: prop::vec_f32(&mut rng, d * h, 0.3),
+                w_out: prop::vec_f32(&mut rng, h * d, 0.3),
+                d_model: d,
+                hidden: h,
+            })
+            .collect();
+        let router = Router::flat_native(
+            d, n, k,
+            prop::vec_f32(&mut rng, d * n, 0.5),
+            Some(prop::vec_f32(&mut rng, d * n, 0.3)),
+        );
+        let sched = Scheduler::new(
+            ShardLayout::new(devices, n),
+            ExpertBackend::Native,
+        );
+        ServeLoop::new(sched, router, weights, cfg).unwrap()
+    }
+
+    fn burst(count: usize, rows: usize, d: usize, seed: u64) -> Vec<TimedRequest> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| TimedRequest {
+                arrival_ns: 0,
+                x: TensorF::new(
+                    vec![rows, d],
+                    prop::vec_f32(&mut rng, rows * d, 1.0),
+                ),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_trace_is_a_noop() {
+        let serve = mk_serve(4, 6, 4, 2, 2, ServeConfig::default(), 1);
+        let r = serve.run_trace(&[]).unwrap();
+        assert_eq!(r.stats.completed, 0);
+        assert_eq!(r.stats.shed, 0);
+        assert_eq!(r.stats.batches, 0);
+        assert!(r.outputs.is_empty());
+    }
+
+    #[test]
+    fn simultaneous_arrivals_coalesce_into_one_batch() {
+        let cfg = ServeConfig {
+            queue_depth: 32,
+            max_batch_tokens: 64,
+            latency_budget_ns: u64::MAX / 2,
+            capture_outputs: true,
+            ..Default::default()
+        };
+        let serve = mk_serve(4, 6, 4, 2, 2, cfg, 2);
+        let trace = burst(6, 3, 4, 7); // 18 tokens, fits one 64-token batch
+        let r = serve.run_trace(&trace).unwrap();
+        assert_eq!(r.stats.batches, 1, "drain should coalesce everything");
+        assert_eq!(r.stats.completed, 6);
+        assert_eq!(r.stats.tokens_served, 18);
+        assert_eq!(r.stats.shed, 0);
+        assert!((r.stats.batch_occupancy() - 18.0 / 64.0).abs() < 1e-9);
+        assert!(r.outputs.iter().all(|o| o.is_some()));
+        for o in r.outputs.iter().flatten() {
+            assert_eq!(o.shape, vec![3, 4]);
+        }
+        // everyone rode the same batch, so queue wait is 0 on the serve
+        // clock and total == compute
+        assert_eq!(r.stats.queue_wait.max_ns(), 0);
+        assert_eq!(
+            r.stats.total.percentile(0.5),
+            r.stats.compute.percentile(0.5)
+        );
+    }
+
+    #[test]
+    fn from_checkpoint_serves_exactly_the_trained_model() {
+        use crate::runtime::ModelConfig;
+        use crate::train::Trainer;
+
+        // train a few streamed steps, freeze via save_streamed, then
+        // serve the checkpoint and the in-memory state side by side
+        let (d, h, n, k) = (6, 8, 4, 2);
+        let model = ModelConfig::native_moe("serve-ckpt", d, n, k, h, 1, 8);
+        let trainer = Trainer::native(model.clone());
+        let mut state = trainer.init_streamed(7);
+        let train_sched =
+            Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+        let mut rng = Rng::new(3);
+        let mk = |rng: &mut Rng| {
+            vec![TensorF::new(
+                vec![10, d],
+                prop::vec_f32(rng, 10 * d, 1.0),
+            )]
+        };
+        let xs = mk(&mut rng);
+        let targets = mk(&mut rng);
+        for _ in 0..3 {
+            trainer
+                .step_streamed(&train_sched, &mut state, &xs, &targets, 0.05, None)
+                .unwrap();
+        }
+
+        let dir = std::env::temp_dir().join("moe_serve_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.ckpt");
+        checkpoint::save_streamed(&path, &model.name, &state).unwrap();
+
+        let cfg = ServeConfig { capture_outputs: true, ..Default::default() };
+        let from_ckpt = ServeLoop::from_checkpoint(
+            Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native),
+            &path,
+            &model.name,
+            &model,
+            cfg.clone(),
+        )
+        .unwrap();
+        let from_state = ServeLoop::from_state(
+            Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native),
+            state,
+            cfg,
+        )
+        .unwrap();
+        let trace = burst(4, 3, d, 9);
+        let a = from_ckpt.run_trace(&trace).unwrap();
+        let b = from_state.run_trace(&trace).unwrap();
+        assert_eq!(a.stats.completed, 4);
+        assert_eq!(a.stats.shed, 0);
+        for (i, (x, y)) in a.outputs.iter().zip(b.outputs.iter()).enumerate() {
+            let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+            assert_eq!(x.shape, y.shape);
+            assert_eq!(
+                x.data, y.data,
+                "request {i}: checkpoint-served output drifted from the \
+                 trained state"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        let serve = mk_serve(4, 6, 4, 2, 1, ServeConfig::default(), 3);
+        let bad_shape = vec![TimedRequest {
+            arrival_ns: 0,
+            x: TensorF::zeros(vec![2, 5]),
+        }];
+        assert!(serve.run_trace(&bad_shape).is_err());
+        let empty_req = vec![TimedRequest {
+            arrival_ns: 0,
+            x: TensorF::zeros(vec![0, 4]),
+        }];
+        assert!(serve.run_trace(&empty_req).is_err());
+        let unsorted = vec![
+            TimedRequest { arrival_ns: 10, x: TensorF::zeros(vec![1, 4]) },
+            TimedRequest { arrival_ns: 5, x: TensorF::zeros(vec![1, 4]) },
+        ];
+        assert!(serve.run_trace(&unsorted).is_err());
+    }
+
+    #[test]
+    fn constructor_validates_dimensions() {
+        let mut rng = Rng::new(4);
+        let weights: Vec<ExpertWeights> = (0..3)
+            .map(|_| ExpertWeights {
+                w_in: prop::vec_f32(&mut rng, 4 * 6, 0.3),
+                w_out: prop::vec_f32(&mut rng, 6 * 4, 0.3),
+                d_model: 4,
+                hidden: 6,
+            })
+            .collect();
+        // router says 4 experts, weights say 3
+        let router = Router::flat_native(
+            4, 4, 2,
+            prop::vec_f32(&mut rng, 4 * 4, 0.5),
+            None,
+        );
+        let sched = Scheduler::new(
+            ShardLayout::new(1, 4),
+            ExpertBackend::Native,
+        );
+        assert!(
+            ServeLoop::new(sched, router, weights, ServeConfig::default())
+                .is_err()
+        );
+    }
+}

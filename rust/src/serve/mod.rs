@@ -1,0 +1,51 @@
+//! Serving runtime: continuous micro-batching inference on the
+//! persistent execution engine.
+//!
+//! The paper's economics are a *serving* argument — sparse conditional
+//! computation makes outrageous capacity affordable per query — and
+//! this module is the path from "N concurrent requests of ragged
+//! sizes" to MoE steps on the
+//! [`ExecutionEngine`](crate::coordinator::ExecutionEngine).  Four
+//! pieces:
+//!
+//! - [`RequestQueue`] (`queue.rs`) — bounded-depth admission control
+//!   with a shed-oldest or reject policy: the backpressure boundary
+//!   that keeps memory O(depth) at any offered load, counting every
+//!   drop;
+//! - [`MicroBatcher`] (`batcher.rs`) — coalesces queued requests into
+//!   engine-sized token batches under a latency budget (dispatch when
+//!   the batch fills *or* the oldest request's deadline slack runs
+//!   out), carrying the row→request map that scatters combined outputs
+//!   back to their owners;
+//! - [`ServeLoop`] (`driver.rs`) — drives forward-only steps on
+//!   [`Scheduler::execute_forward`](crate::coordinator::Scheduler::execute_forward)
+//!   (gating frozen from a [`checkpoint`](crate::train::checkpoint)
+//!   or a fresh init, no gate noise, no trainer bookkeeping), reusing
+//!   the engine's pooled arenas step after step, on a hybrid serve
+//!   clock: deterministic seeded arrivals, measured compute walls;
+//! - [`ServeStats`] (`stats.rs`) — per-request queue/compute/total
+//!   latency histograms (p50/p95/p99 order statistics), achieved
+//!   tokens/sec, batch occupancy and shed counts, rendered by the one
+//!   shared [`ServeStats::summary_line`] and exported to
+//!   `BENCH_serve.json` by `benches/serve.rs`.
+//!
+//! The open-loop Poisson traffic generator lives in
+//! [`crate::harness::workload`] (seeded, ragged request lengths,
+//! bursty mode); `examples/serve_demo.rs` and `repro serve` print
+//! latency-vs-offered-load curves from it.  `rust/tests/serve.rs`
+//! proves serve-path correctness differentially: scattered
+//! [`ServeLoop`] outputs are bit-identical to running every request
+//! alone through
+//! [`Scheduler::execute_serial`](crate::coordinator::Scheduler::execute_serial),
+//! and backpressure is asserted observable (bounded queue, counted
+//! sheds) at offered loads above engine throughput.
+
+pub mod batcher;
+pub mod driver;
+pub mod queue;
+pub mod stats;
+
+pub use batcher::{BatchSlot, MicroBatch, MicroBatcher};
+pub use driver::{ServeConfig, ServeLoop, ServeReport, TimedRequest};
+pub use queue::{AdmissionPolicy, RequestQueue, ServeRequest};
+pub use stats::ServeStats;

@@ -1,0 +1,231 @@
+//! Bounded request queue with admission control — the backpressure
+//! boundary of the serving runtime.
+//!
+//! The queue is depth-bounded: memory stays O(depth) no matter how far
+//! offered load exceeds engine throughput.  Over-limit admissions are
+//! resolved by the [`AdmissionPolicy`] — reject the newcomer, or shed
+//! the oldest queued request (the one whose latency SLO is already the
+//! most blown).  Every drop is counted so
+//! [`ServeStats::shed`](crate::serve::ServeStats) makes backpressure
+//! observable instead of silent.
+
+use std::collections::VecDeque;
+
+use crate::runtime::TensorF;
+
+/// Index of the request in the submitted trace (assigned by the
+/// [`ServeLoop`](crate::serve::ServeLoop)).
+pub type RequestId = usize;
+
+/// One queued inference request: a ragged `(rows, d)` activation batch
+/// plus its arrival stamp on the serve clock (nanoseconds).
+pub struct ServeRequest {
+    pub id: RequestId,
+    pub arrival_ns: u64,
+    pub x: TensorF,
+}
+
+impl ServeRequest {
+    pub fn rows(&self) -> usize {
+        self.x.shape[0]
+    }
+}
+
+/// What to do when a request arrives at a full queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// refuse the newcomer (fail fast at the edge)
+    Reject,
+    /// admit the newcomer, dropping the longest-waiting request(s)
+    ShedOldest,
+}
+
+/// FIFO of admitted requests, bounded at `max_depth` entries.
+pub struct RequestQueue {
+    max_depth: usize,
+    policy: AdmissionPolicy,
+    queue: VecDeque<ServeRequest>,
+    shed: u64,
+    peak_depth: usize,
+}
+
+impl RequestQueue {
+    pub fn new(max_depth: usize, policy: AdmissionPolicy) -> Self {
+        RequestQueue {
+            max_depth: max_depth.max(1),
+            policy,
+            queue: VecDeque::new(),
+            shed: 0,
+            peak_depth: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Total queued tokens (rows), the quantity the
+    /// [`MicroBatcher`](crate::serve::MicroBatcher) fills batches from.
+    pub fn depth_tokens(&self) -> usize {
+        self.queue.iter().map(|r| r.rows()).sum()
+    }
+
+    /// Arrival stamp of the longest-waiting request.
+    pub fn oldest_arrival_ns(&self) -> Option<u64> {
+        self.queue.front().map(|r| r.arrival_ns)
+    }
+
+    /// Requests dropped by admission control so far.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// High-water queue depth — the witness that memory stayed bounded.
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+
+    /// Whether the next [`offer`](Self::offer) would be refused
+    /// outright (full queue under the reject policy) — lets callers
+    /// skip materialising a request only to drop it, keeping rejection
+    /// O(1) instead of O(rows · d) under overload.
+    pub fn will_reject_next(&self) -> bool {
+        matches!(self.policy, AdmissionPolicy::Reject)
+            && self.queue.len() >= self.max_depth
+    }
+
+    /// Record the refusal of a request the caller never materialised
+    /// (pairs with [`will_reject_next`](Self::will_reject_next)).
+    pub fn reject_next(&mut self) {
+        debug_assert!(self.will_reject_next());
+        self.shed += 1;
+    }
+
+    /// Offer a request.  Returns the requests admission control dropped:
+    /// the newcomer under [`AdmissionPolicy::Reject`], the displaced
+    /// oldest under [`AdmissionPolicy::ShedOldest`], empty when the
+    /// queue had room.
+    pub fn offer(&mut self, req: ServeRequest) -> Vec<ServeRequest> {
+        let mut dropped = Vec::new();
+        if self.queue.len() >= self.max_depth {
+            match self.policy {
+                AdmissionPolicy::Reject => {
+                    self.shed += 1;
+                    dropped.push(req);
+                    return dropped;
+                }
+                AdmissionPolicy::ShedOldest => {
+                    while self.queue.len() >= self.max_depth {
+                        match self.queue.pop_front() {
+                            Some(old) => {
+                                self.shed += 1;
+                                dropped.push(old);
+                            }
+                            None => break,
+                        }
+                    }
+                    self.queue.push_back(req);
+                }
+            }
+        } else {
+            self.queue.push_back(req);
+        }
+        self.peak_depth = self.peak_depth.max(self.queue.len());
+        dropped
+    }
+
+    pub fn front(&self) -> Option<&ServeRequest> {
+        self.queue.front()
+    }
+
+    pub fn pop(&mut self) -> Option<ServeRequest> {
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival_ns: u64, rows: usize) -> ServeRequest {
+        ServeRequest {
+            id,
+            arrival_ns,
+            x: TensorF::zeros(vec![rows, 4]),
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_token_depth() {
+        let mut q = RequestQueue::new(8, AdmissionPolicy::Reject);
+        assert!(q.offer(req(0, 10, 3)).is_empty());
+        assert!(q.offer(req(1, 20, 5)).is_empty());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.depth_tokens(), 8);
+        assert_eq!(q.oldest_arrival_ns(), Some(10));
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.pop().is_none());
+        assert_eq!(q.shed(), 0);
+    }
+
+    #[test]
+    fn reject_policy_drops_the_newcomer() {
+        let mut q = RequestQueue::new(2, AdmissionPolicy::Reject);
+        assert!(q.offer(req(0, 0, 1)).is_empty());
+        assert!(q.offer(req(1, 1, 1)).is_empty());
+        let dropped = q.offer(req(2, 2, 1));
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].id, 2);
+        assert_eq!(q.shed(), 1);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.front().unwrap().id, 0);
+    }
+
+    #[test]
+    fn shed_oldest_policy_keeps_the_newcomer() {
+        let mut q = RequestQueue::new(2, AdmissionPolicy::ShedOldest);
+        q.offer(req(0, 0, 1));
+        q.offer(req(1, 1, 1));
+        let dropped = q.offer(req(2, 2, 1));
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].id, 0);
+        assert_eq!(q.shed(), 1);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.front().unwrap().id, 1);
+        assert_eq!(q.peak_depth(), 2);
+    }
+
+    #[test]
+    fn cheap_rejection_matches_offer_accounting() {
+        let mut q = RequestQueue::new(2, AdmissionPolicy::Reject);
+        assert!(!q.will_reject_next());
+        q.offer(req(0, 0, 1));
+        q.offer(req(1, 1, 1));
+        assert!(q.will_reject_next());
+        q.reject_next();
+        assert_eq!(q.shed(), 1);
+        assert_eq!(q.len(), 2);
+        // shed-oldest always admits the newcomer, so it never pre-rejects
+        let mut s = RequestQueue::new(1, AdmissionPolicy::ShedOldest);
+        s.offer(req(0, 0, 1));
+        assert!(!s.will_reject_next());
+    }
+
+    #[test]
+    fn depth_stays_bounded_under_sustained_overload() {
+        for policy in [AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest] {
+            let mut q = RequestQueue::new(4, policy);
+            for i in 0..100 {
+                q.offer(req(i, i as u64, 2));
+                assert!(q.len() <= 4, "{policy:?} queue overflowed");
+            }
+            assert_eq!(q.peak_depth(), 4);
+            assert_eq!(q.shed(), 96);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Serving SLO telemetry: per-request latency histograms, achieved
+//! throughput, batch occupancy and backpressure counters.
+//!
+//! Latency is decomposed the way an SLO dashboard wants it:
+//! `queue_wait` (arrival → batch dispatch), `compute` (the batch's
+//! engine wall, shared by every request riding it) and `total`
+//! (arrival → outputs scattered back).  All three are exact sample
+//! histograms ([`Histogram`]) so p50/p95/p99 are true order
+//! statistics, not bucket interpolations.
+
+use crate::coordinator::scheduler::{PhaseNanos, StepStats};
+use crate::util::bench::Histogram;
+
+/// Aggregated telemetry of one [`ServeLoop`](crate::serve::ServeLoop)
+/// trace replay.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// arrival → batch dispatch, per completed request
+    pub queue_wait: Histogram,
+    /// engine wall of the batch a request rode, per completed request
+    pub compute: Histogram,
+    /// arrival → output scattered back, per completed request
+    pub total: Histogram,
+    pub completed: u64,
+    /// requests dropped by admission control (reject or shed-oldest)
+    pub shed: u64,
+    pub tokens_served: u64,
+    pub batches: u64,
+    /// sum of batch rows (numerator of [`batch_occupancy`](Self::batch_occupancy))
+    pub batch_tokens: u64,
+    /// sum of batch capacities (`batches * max_tokens`)
+    pub batch_capacity: u64,
+    /// serve-clock time from first arrival consideration to last combine
+    pub wall_ns: u64,
+    /// high-water queue depth (bounded-memory witness)
+    pub peak_queue_depth: usize,
+    /// engine phase nanoseconds summed over every dispatched batch
+    pub phases: PhaseNanos,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one dispatched batch's engine telemetry in (per-request
+    /// latency attribution happens in the serve loop).
+    pub fn record_batch(
+        &mut self,
+        step: &StepStats,
+        batch_rows: usize,
+        max_tokens: usize,
+    ) {
+        self.batches += 1;
+        self.batch_tokens += batch_rows as u64;
+        // an oversized single request ships alone in a batch larger
+        // than the cap; count its true size as the capacity so the
+        // occupancy fraction stays <= 1
+        self.batch_capacity += max_tokens.max(batch_rows) as u64;
+        self.phases.route += step.phases.route;
+        self.phases.gather += step.phases.gather;
+        self.phases.compute += step.phases.compute;
+        self.phases.combine += step.phases.combine;
+        self.phases.overlap_ns += step.phases.overlap_ns;
+    }
+
+    /// Achieved throughput over the whole replay (serve-clock seconds).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.tokens_served as f64 / (self.wall_ns as f64 / 1e9)
+        }
+    }
+
+    /// Mean fraction of the engine batch the micro-batcher filled.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batch_capacity == 0 {
+            0.0
+        } else {
+            self.batch_tokens as f64 / self.batch_capacity as f64
+        }
+    }
+
+    /// One-line SLO summary — the single place the serve report format
+    /// lives (demos, benches and `repro serve` all print this).
+    pub fn summary_line(&self) -> String {
+        let queue = self.queue_wait.percentiles(&[0.50, 0.99]);
+        let total = self.total.percentiles(&[0.50, 0.99]);
+        format!(
+            "served {:>5} req ({:>4} shed)  {:>9.0} tok/s  occupancy {:>3.0}%  \
+             queue p50/p99 {:>8.3}/{:>8.3}ms  total p50/p99 {:>8.3}/{:>8.3}ms",
+            self.completed,
+            self.shed,
+            self.tokens_per_sec(),
+            self.batch_occupancy() * 100.0,
+            queue[0] as f64 / 1e6,
+            queue[1] as f64 / 1e6,
+            total[0] as f64 / 1e6,
+            total[1] as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics_handle_empty_and_filled_states() {
+        let mut s = ServeStats::new();
+        assert_eq!(s.tokens_per_sec(), 0.0);
+        assert_eq!(s.batch_occupancy(), 0.0);
+        assert!(s.summary_line().contains("0 req"));
+
+        let step = StepStats {
+            phases: PhaseNanos {
+                compute: 500,
+                combine: 100,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        s.record_batch(&step, 24, 32);
+        s.record_batch(&step, 8, 32);
+        s.tokens_served = 32;
+        s.wall_ns = 1_000_000_000; // 1s of serve clock
+        assert_eq!(s.batches, 2);
+        assert!((s.batch_occupancy() - 0.5).abs() < 1e-9);
+        assert!((s.tokens_per_sec() - 32.0).abs() < 1e-9);
+        assert_eq!(s.phases.compute, 1000);
+        assert_eq!(s.phases.combine, 200);
+
+        // an oversized single-request batch counts its true size as
+        // capacity, so mean occupancy cannot exceed 1
+        s.record_batch(&step, 48, 32);
+        assert!(s.batch_occupancy() <= 1.0);
+    }
+}

@@ -7,14 +7,26 @@
 //!   name   u32 len + utf-8       config name (sanity-checked on load)
 //!   3 sections, each: u64 len + len * f32   (params, m, v)
 //! ```
+//!
+//! The artifact-free streamed trainer state ([`StreamedTrainState`]) is
+//! stored in the same container via [`save_streamed`] /
+//! [`load_streamed`]: router and expert weights are flattened into the
+//! `params` section in a fixed order (`w_g | w_noise? | per expert
+//! w_in, w_out`) with empty optimizer sections (the streamed path is
+//! plain SGD).  Whether the router had a noise net is recovered from
+//! the section length, so both shapes round-trip.  This is also how
+//! the serving runtime ([`crate::serve`]) freezes gating from a
+//! training run.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::TensorF;
-use crate::train::trainer::TrainState;
+use crate::coordinator::scheduler::ExpertWeights;
+use crate::coordinator::Router;
+use crate::runtime::{ModelConfig, TensorF};
+use crate::train::trainer::{StreamedTrainState, TrainState};
 
 const MAGIC: &[u8; 8] = b"MOECKPT1";
 
@@ -75,6 +87,95 @@ pub fn load(path: &Path, expect_cfg: &str) -> Result<TrainState> {
     Ok(TrainState { params, m, v, step })
 }
 
+/// Save a [`StreamedTrainState`] (module docs: flattening order
+/// `w_g | w_noise? | per expert w_in, w_out`).  Flat routers only: the
+/// format carries no hierarchical secondary gates, and saving a
+/// truncated router would serve a different model than was trained.
+pub fn save_streamed(
+    path: &Path,
+    cfg_name: &str,
+    state: &StreamedTrainState,
+) -> Result<()> {
+    if state.router.groups > 0
+        || state.router.w_g_sec.is_some()
+        || state.router.w_n_sec.is_some()
+    {
+        bail!(
+            "streamed checkpoints support flat routers only (hierarchical \
+             gating has secondary weights this format does not carry)"
+        );
+    }
+    let mut flat = Vec::new();
+    flat.extend_from_slice(&state.router.w_g);
+    if let Some(wn) = &state.router.w_noise {
+        flat.extend_from_slice(wn);
+    }
+    for w in &state.weights {
+        flat.extend_from_slice(&w.w_in);
+        flat.extend_from_slice(&w.w_out);
+    }
+    let ts = TrainState {
+        params: TensorF::new(vec![flat.len()], flat),
+        m: TensorF::zeros(vec![0]),
+        v: TensorF::zeros(vec![0]),
+        step: state.step,
+    };
+    save(path, cfg_name, &ts)
+}
+
+/// Load a [`StreamedTrainState`] saved by [`save_streamed`].  `cfg`
+/// supplies the dimensions the flat buffer is sliced by; the router's
+/// noise net is detected from the section length.
+pub fn load_streamed(
+    path: &Path,
+    expect_cfg: &str,
+    cfg: &ModelConfig,
+) -> Result<StreamedTrainState> {
+    let ts = load(path, expect_cfg)?;
+    let (d, h, n, k) = (cfg.d_model, cfg.expert_hidden, cfg.n_experts, cfg.k);
+    let gate = d * n;
+    let expert = 2 * d * h;
+    let with_noise = 2 * gate + n * expert;
+    let without = gate + n * expert;
+    let flat = &ts.params.data;
+    let has_noise = if flat.len() == with_noise {
+        // ambiguous only if gate == 0, which new() forbids (d, n >= 1)
+        true
+    } else if flat.len() == without {
+        false
+    } else {
+        bail!(
+            "{path:?}: streamed checkpoint holds {} f32s but config \
+             '{}' needs {} (with noise net) or {} (without)",
+            flat.len(),
+            cfg.name,
+            with_noise,
+            without
+        );
+    };
+    let mut at = 0usize;
+    let mut take = |len: usize| {
+        let s = flat[at..at + len].to_vec();
+        at += len;
+        s
+    };
+    let w_g = take(gate);
+    let w_noise = if has_noise { Some(take(gate)) } else { None };
+    let weights = (0..n)
+        .map(|_| ExpertWeights {
+            w_in: take(d * h),
+            w_out: take(h * d),
+            d_model: d,
+            hidden: h,
+        })
+        .collect();
+    Ok(StreamedTrainState {
+        router: Router::flat_native(d, n, k, w_g, w_noise),
+        weights,
+        step: ts.step,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +212,112 @@ mod tests {
         };
         save(&path, "cfg-a", &state).unwrap();
         assert!(load(&path, "cfg-b").is_err());
+    }
+
+    #[test]
+    fn streamed_roundtrip_resumes_bit_identically() {
+        use crate::coordinator::scheduler::ExpertBackend;
+        use crate::coordinator::{Scheduler, ShardLayout};
+        use crate::train::Trainer;
+        use crate::util::rng::Rng;
+
+        let (d, h, n, k) = (6, 10, 4, 2);
+        let cfg = ModelConfig::native_moe("ckpt-stream", d, n, k, h, 2, 8);
+        let trainer = Trainer::native(cfg.clone());
+        let mut state = trainer.init_streamed(9);
+        let sched = Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+        let mut rng = Rng::new(31);
+        let rows = 12;
+        let mk = |rng: &mut Rng| {
+            (0..2)
+                .map(|_| {
+                    TensorF::new(
+                        vec![rows, d],
+                        (0..rows * d).map(|_| rng.normal_f32()).collect(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let xs = mk(&mut rng);
+        let targets = mk(&mut rng);
+        for _ in 0..5 {
+            trainer
+                .step_streamed(&sched, &mut state, &xs, &targets, 0.05, None)
+                .unwrap();
+        }
+
+        let dir = std::env::temp_dir().join("moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("streamed.ckpt");
+        save_streamed(&path, &cfg.name, &state).unwrap();
+        let mut reloaded = load_streamed(&path, &cfg.name, &cfg).unwrap();
+        assert_eq!(reloaded.step, state.step);
+        assert_eq!(reloaded.router.w_g, state.router.w_g);
+        assert_eq!(reloaded.router.w_noise, state.router.w_noise);
+        for (a, b) in state.weights.iter().zip(reloaded.weights.iter()) {
+            assert_eq!(a.w_in, b.w_in);
+            assert_eq!(a.w_out, b.w_out);
+        }
+
+        // resume: one more identical (noise-free, so deterministic) step
+        // on the original and the reloaded state must agree bit for bit
+        let sched2 = Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+        let m_orig = trainer
+            .step_streamed(&sched, &mut state, &xs, &targets, 0.05, None)
+            .unwrap();
+        let m_back = trainer
+            .step_streamed(&sched2, &mut reloaded, &xs, &targets, 0.05, None)
+            .unwrap();
+        assert_eq!(
+            m_orig.loss.to_bits(),
+            m_back.loss.to_bits(),
+            "reloaded state drifted: {} vs {}",
+            m_orig.loss,
+            m_back.loss
+        );
+        for (a, b) in state.weights.iter().zip(reloaded.weights.iter()) {
+            assert_eq!(a.w_in, b.w_in, "post-resume weights drifted");
+            assert_eq!(a.w_out, b.w_out, "post-resume weights drifted");
+        }
+    }
+
+    #[test]
+    fn streamed_checkpoint_rejects_wrong_dims() {
+        use crate::train::Trainer;
+
+        let (d, h, n, k) = (4, 6, 3, 1);
+        let cfg = ModelConfig::native_moe("ckpt-dims", d, n, k, h, 1, 4);
+        let trainer = Trainer::native(cfg.clone());
+        let state = trainer.init_streamed(2);
+        let dir = std::env::temp_dir().join("moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dims.ckpt");
+        save_streamed(&path, &cfg.name, &state).unwrap();
+        let wrong = ModelConfig::native_moe("ckpt-dims", d, n + 1, k, h, 1, 4);
+        assert!(load_streamed(&path, &cfg.name, &wrong).is_err());
+    }
+
+    #[test]
+    fn streamed_checkpoint_rejects_hierarchical_routers() {
+        use crate::coordinator::router::RouterBackend;
+
+        let router = Router {
+            backend: RouterBackend::Native,
+            n_experts: 4,
+            k: 1,
+            groups: 2,
+            d_model: 2,
+            w_g: vec![0.0; 2 * 2],
+            w_noise: None,
+            w_g_sec: Some(vec![0.0; 2 * 2 * 2]),
+            w_n_sec: None,
+        };
+        let state = StreamedTrainState { router, weights: Vec::new(), step: 0 };
+        let dir = std::env::temp_dir().join("moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hier.ckpt");
+        let err = save_streamed(&path, "hier", &state).unwrap_err().to_string();
+        assert!(err.contains("flat routers only"), "{err}");
     }
 
     #[test]

@@ -113,6 +113,68 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Exact sample histogram for latency telemetry: raw u64 nanosecond
+/// samples, percentiles by nearest-rank over the sorted set (the same
+/// convention as [`Bencher::run`]'s p50/p95).  Serving traces are
+/// thousands of requests, so storing the samples outright is cheaper
+/// and more precise than bucketing; used by
+/// [`crate::serve::ServeStats`].
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ns: u64) {
+        self.samples.push(ns);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Nearest-rank percentile, `q` in [0, 1]; 0 on an empty histogram
+    /// (serving reports render before any request may have completed).
+    pub fn percentile(&self, q: f64) -> u64 {
+        self.percentiles(&[q])[0]
+    }
+
+    /// Batch variant of [`percentile`](Self::percentile): one sort for
+    /// any number of quantiles (reports query several per histogram).
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<u64> {
+        if self.samples.is_empty() {
+            return vec![0; qs.len()];
+        }
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        qs.iter()
+            .map(|&q| {
+                v[((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize]
+            })
+            .collect()
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        (self.samples.iter().map(|&v| v as u128).sum::<u128>()
+            / self.samples.len() as u128) as u64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+}
+
 /// Machine-readable bench output: accumulates [`BenchResult`]s and
 /// writes a `BENCH_<name>.json` document (ns/op, throughput, arbitrary
 /// per-phase extras) so the perf trajectory is tracked across PRs.  The
@@ -229,6 +291,31 @@ mod tests {
         let r = b.run("once", || n += 1);
         assert_eq!(n, 1);
         assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_order_invariant_and_monotone() {
+        let mut h = Histogram::new();
+        for v in [50u64, 10, 40, 20, 30] {
+            h.push(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.percentile(0.0), 10);
+        assert_eq!(h.percentile(0.5), 30);
+        assert_eq!(h.percentile(1.0), 50);
+        assert!(h.percentile(0.5) <= h.percentile(0.95));
+        assert!(h.percentile(0.95) <= h.percentile(0.99));
+        assert_eq!(h.mean_ns(), 30);
+        assert_eq!(h.max_ns(), 50);
+        assert_eq!(
+            h.percentiles(&[0.0, 0.5, 1.0]),
+            vec![h.percentile(0.0), h.percentile(0.5), h.percentile(1.0)]
+        );
+        let empty = Histogram::new();
+        assert_eq!(empty.percentile(0.5), 0);
+        assert_eq!(empty.percentiles(&[0.5, 0.99]), vec![0, 0]);
+        assert_eq!(empty.mean_ns(), 0);
+        assert!(empty.is_empty());
     }
 
     #[test]
