@@ -32,8 +32,8 @@ use moe::data::Batcher;
 use moe::harness::distributed::{expert_weights, router_for};
 use moe::harness::workload::phase_line;
 use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
-use moe::runtime::{Engine, Manifest, TensorF};
-use moe::train::Trainer;
+use moe::runtime::{Engine, Manifest, ModelConfig, TensorF};
+use moe::train::{StreamedStepOptions, Trainer};
 use moe::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -105,6 +105,53 @@ fn main() -> Result<()> {
     );
     // the one shared phase-report formatter (harness::workload)
     println!("  phases: {}", phase_line(&s.stats));
+
+    // --- 5. trainable gating on the native path: a few artifact-free
+    //        streamed steps with the eq-6/eq-8 balance losses learning
+    //        the gating network (Adam), balance-CV trajectory printed ---
+    let nat = Trainer::native(ModelConfig::native_moe(
+        "quickstart-native", 16, 8, 2, 32, 2, 32,
+    ));
+    let mut nstate = nat.init_streamed(7);
+    let nsched = Scheduler::new(ShardLayout::new(2, 8), ExpertBackend::Native);
+    let mut drng = Rng::new(9);
+    let mk = |rng: &mut Rng, s: f32| -> Vec<TensorF> {
+        (0..2)
+            .map(|_| {
+                TensorF::new(
+                    vec![32, 16],
+                    (0..32 * 16).map(|_| rng.normal_f32() * s).collect(),
+                )
+            })
+            .collect()
+    };
+    let nxs = mk(&mut drng, 1.0);
+    let ntargets = mk(&mut drng, 0.5);
+    let mut noise_rng = drng.fold_in(2);
+    let opts = StreamedStepOptions {
+        lr: 0.01,
+        train_gating: true,
+        w_importance: 0.1,
+        w_load: 0.1,
+    };
+    println!("native gating training (balance losses on):");
+    for i in 0..12 {
+        let m = nat.step_streamed_with(
+            &nsched,
+            &mut nstate,
+            &nxs,
+            &ntargets,
+            Some(&mut noise_rng),
+            &opts,
+        )?;
+        if i % 3 == 0 || i == 11 {
+            println!(
+                "  step {:>2}: loss {:.4} balance {:.4} CV(imp) {:.3} \
+                 CV(load) {:.3}",
+                i, m.loss, m.balance_loss, m.cv_importance, m.cv_load
+            );
+        }
+    }
     println!("quickstart OK");
     Ok(())
 }

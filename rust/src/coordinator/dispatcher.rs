@@ -308,7 +308,12 @@ mod tests {
                 GateVec { experts, weights }
             })
             .collect();
-        RoutingDecision { per_token, importance: vec![0.0; n], load: vec![0.0; n] }
+        RoutingDecision {
+            per_token,
+            importance: vec![0.0; n],
+            load: vec![0.0; n],
+            noise: None,
+        }
     }
 
     #[test]
@@ -441,6 +446,7 @@ mod tests {
             per_token,
             importance: vec![0.0; n],
             load: vec![0.0; n],
+            noise: None,
         }
     }
 
@@ -548,6 +554,7 @@ mod tests {
             per_token: vec![gv; rows],
             importance: vec![0.0; n],
             load: vec![0.0; n],
+            noise: None,
         }];
         let want = Dispatcher::plan(&decisions, n);
         assert_eq!(want.per_expert[0].tokens.len(), 2 * rows);

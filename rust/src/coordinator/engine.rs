@@ -1059,6 +1059,10 @@ impl ExecutionEngine {
                     per_token,
                     importance: imp,
                     load,
+                    // safe to move out: every route job of this replica
+                    // has replied (the block loop above drained them
+                    // all), so no worker still borrows this noise
+                    noise: noises[ri].take(),
                 });
             }
             trackers[ri].sealed = true;

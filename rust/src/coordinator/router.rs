@@ -60,20 +60,29 @@ pub struct RoutingDecision {
     pub per_token: Vec<GateVec>,
     pub importance: Vec<f32>,
     pub load: Vec<f32>,
+    /// the pre-drawn eq-4 normals this replica's routing consumed,
+    /// retained on the training paths so the backward pass
+    /// ([`crate::gating::backward`]) can differentiate through the
+    /// noise term without redrawing it; `None` on deterministic (eval /
+    /// serving) routes and on the artifact router
+    pub noise: Option<RouteNoise>,
 }
 
 /// Every eq-4 normal one routing of a `b`-row batch will consume, drawn
 /// up front in the exact order the serial path draws them.  Pre-drawing
 /// is what lets disjoint row blocks route concurrently (each consumes
-/// its own slice) while staying bit-identical to [`Router::route`].
+/// its own slice) while staying bit-identical to [`Router::route`] —
+/// and, retained on [`RoutingDecision::noise`], it is the tape the
+/// gating backward replays.
+#[derive(Clone, Debug)]
 pub struct RouteNoise {
     /// primary-gate normals, row-major (b, n) for flat routers and
     /// (b, groups) for hierarchical; empty without noise weights
-    primary: Vec<f32>,
+    pub primary: Vec<f32>,
     /// hierarchical secondary normals, (b, k, group_size) consumed in
     /// primary-selection order; empty for flat routers or without
     /// secondary noise weights
-    secondary: Vec<f32>,
+    pub secondary: Vec<f32>,
 }
 
 /// One routed row block: per-row gate vectors plus partial balance sums
@@ -123,6 +132,7 @@ impl Router {
                 per_token: blk.per_token,
                 importance: blk.importance,
                 load: blk.load,
+                noise,
             });
         }
         match &self.backend {
@@ -177,7 +187,9 @@ impl Router {
                         GateVec { experts, weights }
                     })
                     .collect();
-                Ok(RoutingDecision { per_token, importance, load })
+                // the artifact consumed its noise device-side; nothing
+                // to retain for a native backward
+                Ok(RoutingDecision { per_token, importance, load, noise: None })
             }
         }
     }

@@ -788,6 +788,7 @@ mod tests {
             ],
             importance: vec![5.0, 0.0, 0.0, 0.0],
             load: vec![5.0, 0.0, 0.0, 0.0],
+            noise: None,
         };
         let x = TensorF::new(vec![5, d], prop::vec_f32(&mut rng, 5 * d, 1.0));
         let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);

@@ -1,0 +1,467 @@
+//! Exact analytic backward of the gating math — the paper's *trainable*
+//! gating network (§4, Appendices A & B) in native rust.
+//!
+//! Forward (eq 3–5): `H(x) = x·W_g + ε ⊙ softplus(x·W_noise)`, gates =
+//! `softmax(KeepTopK(H, k))`.  Three gradient sources flow back into
+//! `W_g` / `W_noise`:
+//!
+//! - the **task loss** through the top-k softmax: for a token with
+//!   selected set S and gates g, `∂L/∂H_i = g_i (a_i − Σ_j g_j a_j)`
+//!   for i ∈ S (zero outside S — KeepTopK pins the others at −∞),
+//!   where `a_i = ∂L/∂g_i`;
+//! - the **importance loss** (eq 6–7): `Importance_e = Σ_t g_{t,e}`,
+//!   so `w_imp · ∂CV²/∂Imp_e` simply adds to every selected gate's
+//!   `a_i` ([`cv_squared_grad`], chained by the caller);
+//! - the **load loss** (eq 8–10) through the smooth estimator:
+//!   `P_{t,i} = Φ((x·W_g)_i − T_{t,i}) / σ_{t,i})` with
+//!   `σ = softplus(x·W_noise) + 1e-10` and `T` the k-th (or k+1-th for
+//!   in-top-k logits) largest *noisy* logit of the row.  The gradient
+//!   goes through all three occurrences: the clean logit, σ, **and the
+//!   threshold** — T is itself a noisy logit `H_j` of a specific
+//!   competitor j (resolved under the forward's exact rank rule), so
+//!   `−∂L/∂T` flows into that competitor's clean logit and noise net.
+//!
+//! The noise path uses the **pre-drawn eq-4 normals retained from the
+//! forward** ([`RoutingDecision::noise`]
+//! (crate::coordinator::router::RoutingDecision)); the backward
+//! recomputes the cheap matmuls but never redraws ε, which is what
+//! makes two same-seed steps bit-identical.  Every formula here is
+//! proven against central finite differences in
+//! `rust/tests/grad_check.rs`.
+
+use crate::gating::noisy_topk::{
+    matmul_tn, noisy_topk_block, select_topk, GateVec,
+};
+use crate::gating::{normal_pdf, sigmoid, softplus};
+
+/// Gradients of the gating parameters, shaped like the router weights:
+/// `w_g` is (d, n) for flat routers and (d, a) for hierarchical
+/// primaries; secondary grads are (d, a, gs) flattened.
+#[derive(Clone, Debug)]
+pub struct GateGrads {
+    pub w_g: Vec<f32>,
+    pub w_noise: Option<Vec<f32>>,
+    pub w_g_sec: Option<Vec<f32>>,
+    pub w_n_sec: Option<Vec<f32>>,
+}
+
+impl GateGrads {
+    /// Accumulate another replica's gradients (shapes must match).
+    pub fn add(&mut self, other: &GateGrads) {
+        fn acc(a: &mut [f32], b: &[f32]) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += y;
+            }
+        }
+        acc(&mut self.w_g, &other.w_g);
+        if let (Some(a), Some(b)) = (self.w_noise.as_mut(), other.w_noise.as_ref()) {
+            acc(a, b);
+        }
+        if let (Some(a), Some(b)) = (self.w_g_sec.as_mut(), other.w_g_sec.as_ref()) {
+            acc(a, b);
+        }
+        if let (Some(a), Some(b)) = (self.w_n_sec.as_mut(), other.w_n_sec.as_ref()) {
+            acc(a, b);
+        }
+    }
+
+    /// Σ g² over every tensor, for the step's grad-norm telemetry.
+    pub fn sq_norm(&self) -> f64 {
+        let part = |v: &Option<Vec<f32>>| -> f64 {
+            v.as_deref()
+                .map(|s| s.iter().map(|g| (*g as f64) * (*g as f64)).sum())
+                .unwrap_or(0.0)
+        };
+        self.w_g.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>()
+            + part(&self.w_noise)
+            + part(&self.w_g_sec)
+            + part(&self.w_n_sec)
+    }
+}
+
+/// d/dv CV²(v) (eq 7 / 11, the exact gradient of
+/// [`cv_squared`](crate::gating::noisy_topk::cv_squared)):
+/// `∂/∂v_j [var/(mean²+ε)] = (2(v_j−mean)/n·(mean²+ε) − var·2·mean/n)
+/// / (mean²+ε)²`.  Zero for len ≤ 1, matching the forward.
+pub fn cv_squared_grad(v: &[f32]) -> Vec<f32> {
+    let n = v.len();
+    if n <= 1 {
+        return vec![0.0; n];
+    }
+    let nf = n as f32;
+    let mean = v.iter().sum::<f32>() / nf;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / nf;
+    let denom = mean * mean + 1e-10;
+    v.iter()
+        .map(|&x| {
+            (2.0 * (x - mean) / nf * denom - var * 2.0 * mean / nf)
+                / (denom * denom)
+        })
+        .collect()
+}
+
+/// Per-token softmax backward over the selected slots: given gates `g`
+/// and `a = ∂L/∂g`, returns `∂L/∂H_i = g_i (a_i − Σ_j g_j a_j)` per
+/// slot (softmax is shift-invariant, so the rows sum to ~0).
+fn softmax_backward(gates: &[f32], d_gates: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(gates.len(), d_gates.len());
+    let dot: f32 = gates.iter().zip(d_gates.iter()).map(|(g, a)| g * a).sum();
+    gates
+        .iter()
+        .zip(d_gates.iter())
+        .map(|(g, a)| g * (a - dot))
+        .collect()
+}
+
+/// Backward of one replica's **flat** noisy top-k gating.
+///
+/// - `x`: (b, d) activations the replica was routed with;
+/// - `w_g` (d, n), `w_noise` (d, n): the forward's gating parameters;
+/// - `eps`: the retained pre-drawn eq-4 normals, (b, n) row-major —
+///   `None` reproduces the deterministic (eval-routing) forward, in
+///   which case `w_noise` gets no gradient and `d_load` must be zeros
+///   (hard-count load is piecewise constant);
+/// - `per_token`: the forward's gate vectors (selection + weights);
+/// - `d_gates[t][slot]`: ∂L/∂gate for each selected slot — the task
+///   term plus the importance-loss term;
+/// - `d_load[e]`: ∂L/∂Load_e coefficient (`w_load · ∂CV²/∂Load_e`),
+///   applied through the eq-10 smooth estimator for every (token,
+///   expert) pair.
+#[allow(clippy::too_many_arguments)]
+pub fn flat_gate_backward(
+    x: &[f32],
+    b: usize,
+    d: usize,
+    w_g: &[f32],
+    w_noise: Option<&[f32]>,
+    n: usize,
+    k: usize,
+    eps: Option<&[f32]>,
+    per_token: &[GateVec],
+    d_gates: &[Vec<f32>],
+    d_load: &[f32],
+) -> GateGrads {
+    assert_eq!(per_token.len(), b);
+    assert_eq!(d_gates.len(), b);
+    assert_eq!(d_load.len(), n);
+    // mirror the forward exactly: the noise net only participates when
+    // the step drew noise (route_rows passes w_noise only when training)
+    let wn = if eps.is_some() { w_noise } else { None };
+    let g = noisy_topk_block(x, b, d, w_g, wn, n, k, eps);
+    let noise_active = g.sigma_raw.is_some() && eps.is_some();
+
+    let mut d_clean = vec![0f32; b * n];
+    let mut d_raw = vec![0f32; b * n];
+    // ∂L/∂noisy_j folds into clean_j (coefficient 1) and, when the
+    // noise path ran, into raw_j via ε_j · σ'(raw_j)
+    let add_noisy = |d_clean: &mut [f32],
+                         d_raw: &mut [f32],
+                         t: usize,
+                         j: usize,
+                         v: f32| {
+        d_clean[t * n + j] += v;
+        if noise_active {
+            let raw = g.sigma_raw.as_ref().unwrap()[t * n + j];
+            d_raw[t * n + j] += v * eps.unwrap()[t * n + j] * sigmoid(raw);
+        }
+    };
+
+    for (t, tok) in per_token.iter().enumerate() {
+        debug_assert_eq!(
+            tok.experts, g.per_token[t].experts,
+            "backward re-routed differently from the forward"
+        );
+        let dh = softmax_backward(&tok.weights, &d_gates[t]);
+        for (&e, dv) in tok.experts.iter().zip(dh.iter()) {
+            add_noisy(&mut d_clean, &mut d_raw, t, e, *dv);
+        }
+    }
+
+    // eq-8/10 load loss: only defined for the smooth estimator (noise
+    // path on, k < n); the forward's k >= n load is constant
+    let smooth = noise_active && k < n && d_load.iter().any(|c| *c != 0.0);
+    if smooth {
+        let raw_all = g.sigma_raw.as_ref().unwrap();
+        for t in 0..b {
+            let noisy = &g.noisy[t * n..(t + 1) * n];
+            let clean = &g.clean[t * n..(t + 1) * n];
+            // threshold indices under the forward's rank rule: order[k-1]
+            // is the k-th largest noisy logit, order[k] the (k+1)-th
+            let order = select_topk(noisy, k + 1);
+            let (jk, jk1) = (order[k - 1], order[k]);
+            let kth = noisy[jk];
+            for i in 0..n {
+                let c = d_load[i];
+                if c == 0.0 {
+                    continue;
+                }
+                // membership by value, exactly as load_estimate tests it
+                let thr_idx = if noisy[i] >= kth { jk1 } else { jk };
+                let sigma = softplus(raw_all[t * n + i]) + 1e-10;
+                let z = (clean[i] - noisy[thr_idx]) / sigma;
+                let base = c * normal_pdf(z) / sigma;
+                // ∂P/∂clean_i = φ(z)/σ
+                d_clean[t * n + i] += base;
+                // ∂P/∂T = −φ(z)/σ, T = noisy_{thr_idx}
+                add_noisy(&mut d_clean, &mut d_raw, t, thr_idx, -base);
+                // ∂P/∂σ = −φ(z)·z/σ, σ = softplus(raw_i) + 1e-10
+                d_raw[t * n + i] +=
+                    -(base * z) * sigmoid(raw_all[t * n + i]);
+            }
+        }
+    }
+
+    let mut d_w_g = vec![0f32; d * n];
+    matmul_tn(x, &d_clean, &mut d_w_g, b, d, n);
+    let d_w_noise = noise_active.then(|| {
+        let mut dwn = vec![0f32; d * n];
+        matmul_tn(x, &d_raw, &mut dwn, b, d, n);
+        dwn
+    });
+    GateGrads {
+        w_g: d_w_g,
+        w_noise: d_w_noise,
+        w_g_sec: None,
+        w_n_sec: None,
+    }
+}
+
+/// Backward of one replica's **two-level hierarchical** gating
+/// (Appendix B): composed gate (eq 12) `gate_{gi,ej} = p_{gi} ·
+/// s_{gi,ej}` unchains into both softmaxes, then into the primary
+/// (`w_g`/`w_noise`, (d, a)) and secondary (`w_g_sec`/`w_n_sec`,
+/// (d, a, gs)) nets.  `d_gates[t]` aligns with the composed flat
+/// [`GateVec`] (primary-slot-major, as `compose_hierarchical` emits).
+/// Hierarchical load is hard counts (piecewise constant), so there is
+/// no load-loss path here; importance flows through `d_gates` like any
+/// task gradient.  `eps_pri` is (b, a); `eps_sec` is (b, k, gs)
+/// consumed in primary-selection order — both retained from the
+/// forward.
+#[allow(clippy::too_many_arguments)]
+pub fn hierarchical_gate_backward(
+    x: &[f32],
+    b: usize,
+    d: usize,
+    w_g: &[f32],
+    w_noise: Option<&[f32]>,
+    w_g_sec: &[f32],
+    w_n_sec: Option<&[f32]>,
+    a: usize,
+    gs: usize,
+    k: usize,
+    eps_pri: Option<&[f32]>,
+    eps_sec: Option<&[f32]>,
+    per_token: &[GateVec],
+    d_gates: &[Vec<f32>],
+) -> GateGrads {
+    assert_eq!(per_token.len(), b);
+    assert_eq!(d_gates.len(), b);
+    assert_eq!(w_g_sec.len(), d * a * gs);
+    let wn_pri = if eps_pri.is_some() { w_noise } else { None };
+    let primary = noisy_topk_block(x, b, d, w_g, wn_pri, a, k, eps_pri);
+    let pri_noise_active = primary.sigma_raw.is_some() && eps_pri.is_some();
+    let sec_noise_active = w_n_sec.is_some() && eps_sec.is_some();
+    let k2 = k.min(gs);
+
+    let mut d_clean_p = vec![0f32; b * a];
+    let mut d_raw_p = vec![0f32; b * a];
+    let mut d_wsec = vec![0f32; d * a * gs];
+    let mut d_wnsec = vec![0f32; d * a * gs];
+
+    for (t, ptok) in primary.per_token.iter().enumerate() {
+        let xrow = &x[t * d..(t + 1) * d];
+        let mut d_primary = vec![0f32; ptok.experts.len()];
+        for (si, (&gi, &p)) in
+            ptok.experts.iter().zip(ptok.weights.iter()).enumerate()
+        {
+            // recompute this (token, slot)'s secondary logits exactly as
+            // the forward did, keeping the softplus inputs for the grads
+            let mut h = vec![0f32; gs];
+            for (l, &xv) in xrow.iter().enumerate() {
+                let base = l * a * gs + gi * gs;
+                for (j, hv) in h.iter_mut().enumerate() {
+                    *hv += xv * w_g_sec[base + j];
+                }
+            }
+            let mut rawsec = vec![0f32; gs];
+            if sec_noise_active {
+                let wn = w_n_sec.unwrap();
+                let eps = eps_sec.unwrap();
+                for (l, &xv) in xrow.iter().enumerate() {
+                    let base = l * a * gs + gi * gs;
+                    for (j, rv) in rawsec.iter_mut().enumerate() {
+                        *rv += xv * wn[base + j];
+                    }
+                }
+                for (j, hv) in h.iter_mut().enumerate() {
+                    *hv += eps[t * k * gs + si * gs + j] * softplus(rawsec[j]);
+                }
+            }
+            let sec = crate::gating::noisy_topk::topk_softmax(&h, k2);
+            // unchain the composed gates of this slot: slots si*k2 + sj
+            let mut d_sec = vec![0f32; sec.experts.len()];
+            for (sj, (&ej, &sw)) in
+                sec.experts.iter().zip(sec.weights.iter()).enumerate()
+            {
+                // the recomputed routing must reproduce the forward's
+                // composed order, or the slot alignment is garbage
+                debug_assert_eq!(
+                    per_token[t].experts[si * k2 + sj],
+                    gi * gs + ej,
+                    "hierarchical backward re-routed differently from \
+                     the forward"
+                );
+                let dg = d_gates[t][si * k2 + sj];
+                d_primary[si] += sw * dg;
+                d_sec[sj] = p * dg;
+            }
+            // secondary softmax backward, then into the secondary nets
+            let dh_sec = softmax_backward(&sec.weights, &d_sec);
+            for (&ej, &dv) in sec.experts.iter().zip(dh_sec.iter()) {
+                for (l, &xv) in xrow.iter().enumerate() {
+                    d_wsec[l * a * gs + gi * gs + ej] += xv * dv;
+                }
+                if sec_noise_active {
+                    let eps = eps_sec.unwrap();
+                    let dr = dv
+                        * eps[t * k * gs + si * gs + ej]
+                        * sigmoid(rawsec[ej]);
+                    for (l, &xv) in xrow.iter().enumerate() {
+                        d_wnsec[l * a * gs + gi * gs + ej] += xv * dr;
+                    }
+                }
+            }
+        }
+        // primary softmax backward, then into the primary nets
+        let dh_pri = softmax_backward(&ptok.weights, &d_primary);
+        for (&gi, &dv) in ptok.experts.iter().zip(dh_pri.iter()) {
+            d_clean_p[t * a + gi] += dv;
+            if pri_noise_active {
+                let raw = primary.sigma_raw.as_ref().unwrap()[t * a + gi];
+                d_raw_p[t * a + gi] +=
+                    dv * eps_pri.unwrap()[t * a + gi] * sigmoid(raw);
+            }
+        }
+    }
+
+    let mut d_w_g = vec![0f32; d * a];
+    matmul_tn(x, &d_clean_p, &mut d_w_g, b, d, a);
+    let d_w_noise = pri_noise_active.then(|| {
+        let mut dwn = vec![0f32; d * a];
+        matmul_tn(x, &d_raw_p, &mut dwn, b, d, a);
+        dwn
+    });
+    GateGrads {
+        w_g: d_w_g,
+        w_noise: d_w_noise,
+        w_g_sec: Some(d_wsec),
+        w_n_sec: sec_noise_active.then_some(d_wnsec),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::noisy_topk::{cv_squared, topk_softmax};
+    use crate::util::prop;
+
+    #[test]
+    fn cv_squared_grad_matches_central_differences() {
+        prop::forall("cv² grad", |rng| {
+            let n = prop::dim(rng, 1, 12);
+            // keep the mean away from 0 so the quotient stays tame
+            let mut v: Vec<f32> =
+                prop::vec_f32(rng, n, 0.5).iter().map(|x| x + 2.0).collect();
+            let grad = cv_squared_grad(&v);
+            for i in 0..n {
+                let w0 = v[i];
+                let h = 1e-3f32;
+                v[i] = w0 + h;
+                let lp = cv_squared(&v) as f64;
+                v[i] = w0 - h;
+                let lm = cv_squared(&v) as f64;
+                v[i] = w0;
+                let fd = (lp - lm) / (2.0 * h as f64);
+                let an = grad[i] as f64;
+                assert!(
+                    (fd - an).abs() <= 1e-3 * 1f64.max(fd.abs()).max(an.abs()),
+                    "i={i}: analytic {an} vs fd {fd}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_backward_matches_central_differences() {
+        prop::forall("topk softmax grad", |rng| {
+            let n = prop::dim(rng, 2, 10);
+            let k = prop::dim(rng, 1, n);
+            let mut h = prop::vec_f32(rng, n, 1.0);
+            let a = prop::vec_f32(rng, k, 1.0);
+            if k < n {
+                // skip selections thinner than the FD step: ±1e-3 on a
+                // near-tied boundary logit would flip the branch
+                let mut sorted = h.clone();
+                sorted.sort_by(|x, y| y.partial_cmp(x).unwrap());
+                if sorted[k - 1] - sorted[k] < 1e-2 {
+                    return;
+                }
+            }
+            let g0 = topk_softmax(&h, k);
+            // L = Σ a_i g_i ; ∂L/∂h at the selected logits
+            let dh = softmax_backward(&g0.weights, &a);
+            for (slot, &e) in g0.experts.iter().enumerate() {
+                let w0 = h[e];
+                let step = 1e-3f32;
+                h[e] = w0 + step;
+                let gp = topk_softmax(&h, k);
+                h[e] = w0 - step;
+                let gm = topk_softmax(&h, k);
+                h[e] = w0;
+                // frozen-branch FD: ±1e-3 can flip the selection only at
+                // exact ties, which vec_f32 never produces
+                assert_eq!(gp.experts, g0.experts);
+                let lp: f64 = gp
+                    .weights
+                    .iter()
+                    .zip(a.iter())
+                    .map(|(g, a)| (*g as f64) * (*a as f64))
+                    .sum();
+                let lm: f64 = gm
+                    .weights
+                    .iter()
+                    .zip(a.iter())
+                    .map(|(g, a)| (*g as f64) * (*a as f64))
+                    .sum();
+                let fd = (lp - lm) / (2.0 * step as f64);
+                let an = dh[slot] as f64;
+                assert!(
+                    (fd - an).abs() <= 2e-3 * 1f64.max(fd.abs()).max(an.abs()),
+                    "slot {slot} (logit {e}): analytic {an} vs fd {fd}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn gate_grads_accumulate_and_norm() {
+        let mut a = GateGrads {
+            w_g: vec![1.0, 2.0],
+            w_noise: Some(vec![0.5, -0.5]),
+            w_g_sec: None,
+            w_n_sec: None,
+        };
+        let b = GateGrads {
+            w_g: vec![0.25, -1.0],
+            w_noise: Some(vec![1.0, 1.0]),
+            w_g_sec: None,
+            w_n_sec: None,
+        };
+        a.add(&b);
+        assert_eq!(a.w_g, vec![1.25, 1.0]);
+        assert_eq!(a.w_noise.as_deref().unwrap(), &[1.5, 0.5]);
+        let want = 1.25f64 * 1.25 + 1.0 + 1.5 * 1.5 + 0.25;
+        assert!((a.sq_norm() - want).abs() < 1e-9);
+    }
+}

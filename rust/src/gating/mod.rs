@@ -8,8 +8,13 @@
 //! - the smooth load estimator P(x,i) / Load(X) (eq 8–10),
 //! - importance / CV² balance statistics (eq 6–7, 11),
 //! - strictly-balanced batchwise gating (Appendix F, eq 16–20),
-//! - two-level hierarchical gate composition (Appendix B, eq 12).
+//! - two-level hierarchical gate composition (Appendix B, eq 12),
+//! - the exact analytic backward of all of the above ([`backward`]):
+//!   task-loss gradients through the top-k softmax and the eq-4 noise
+//!   path, and the eq-6/7 importance and eq-8 smooth-load balance-loss
+//!   gradients into `w_g` / `w_noise`.
 
+pub mod backward;
 pub mod balanced;
 pub mod noisy_topk;
 
@@ -27,6 +32,23 @@ pub fn softplus(x: f32) -> f32 {
     } else {
         (1.0 + x.exp()).ln()
     }
+}
+
+/// Logistic sigmoid — the derivative of [`softplus`] (in every branch:
+/// d/dx x = 1 ≈ σ(x>30), d/dx eˣ = eˣ ≈ σ(x<-30) to f32 precision).
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Standard normal density φ — the derivative of [`normal_cdf`].
+pub fn normal_pdf(x: f32) -> f32 {
+    const INV_SQRT_2PI: f64 = 0.398_942_280_401_432_7;
+    ((-0.5 * (x as f64) * (x as f64)).exp() * INV_SQRT_2PI) as f32
 }
 
 /// Standard normal CDF Φ via erf (Abramowitz–Stegun 7.1.26 is not enough
@@ -62,6 +84,34 @@ mod tests {
         assert!((softplus(40.0) - 40.0).abs() < 1e-6);
         assert!(softplus(-40.0) > 0.0);
         assert!(softplus(-40.0) < 1e-15);
+    }
+
+    #[test]
+    fn sigmoid_is_softplus_derivative() {
+        for x in [-35.0f32, -3.0, -0.1, 0.0, 0.7, 4.0, 35.0] {
+            let h = 1e-3f32;
+            let fd = (softplus(x + h) - softplus(x - h)) / (2.0 * h);
+            assert!(
+                (sigmoid(x) - fd).abs() < 1e-3,
+                "x={x}: sigmoid {} vs fd {fd}",
+                sigmoid(x)
+            );
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn normal_pdf_matches_cdf_slope() {
+        for x in [-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3f32;
+            let fd = (normal_cdf(x + h) - normal_cdf(x - h)) / (2.0 * h);
+            assert!(
+                (normal_pdf(x) - fd).abs() < 2e-3,
+                "x={x}: pdf {} vs fd {fd}",
+                normal_pdf(x)
+            );
+        }
+        assert!((normal_pdf(0.0) - 0.3989423).abs() < 1e-6);
     }
 
     #[test]

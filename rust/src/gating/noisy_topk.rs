@@ -109,7 +109,9 @@ fn rank(h: &[f32], a: usize, b: usize) -> std::cmp::Ordering {
 /// instead of the old O(n log n) full sort.  Bit-identical to
 /// `sort_by(rank); truncate(k)` because `rank` is a strict total order
 /// (asserted against [`topk_softmax_via_sort`] by a property test).
-fn select_topk(h: &[f32], k: usize) -> Vec<usize> {
+/// `pub(crate)` so the gating backward resolves the eq-10 threshold
+/// *indices* under exactly the forward's rank rule.
+pub(crate) fn select_topk(h: &[f32], k: usize) -> Vec<usize> {
     use std::cmp::Ordering;
     let n = h.len();
     if k == 0 {
@@ -304,6 +306,37 @@ pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usiz
     }
 }
 
+/// `out (k, n) = aᵀ · b` for row-major `a (m, k)`, `b (m, n)`.  Walks
+/// `a`/`b` row by row so the inner loops stream contiguous memory.
+/// The backward-pass workhorse (`dW = xᵀ · dY`), shared by the trainer
+/// and the gating backward.
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (av, orow) in arow.iter().zip(out.chunks_mut(n)) {
+            for (o, bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out (m, n) = a · bᵀ` for row-major `a (m, k)`, `b (n, k)`.
+pub fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for (arow, orow) in a.chunks(k).zip(out.chunks_mut(n)) {
+        for (bv, o) in b.chunks(k).zip(orow.iter_mut()) {
+            *o = arow.iter().zip(bv.iter()).map(|(x, y)| x * y).sum();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -321,6 +354,53 @@ mod tests {
     fn topk_ties_prefer_lower_index() {
         let g = topk_softmax(&[2.0, 2.0, 2.0], 2);
         assert_eq!(g.experts, vec![0, 1]);
+    }
+
+    #[test]
+    fn duplicate_logits_select_deterministically_and_match_sort_oracle() {
+        // duplicates spanning the k boundary: selection must be the rank
+        // rule (higher value, then lower index) and bit-identical to the
+        // retained full-sort oracle for every k
+        let h = [1.0f32, 2.0, 2.0, 2.0, 0.5, 2.0];
+        for k in 1..=h.len() {
+            let fast = topk_softmax(&h, k);
+            let slow = topk_softmax_via_sort(&h, k);
+            assert_eq!(fast.experts, slow.experts, "k={k}");
+            assert_eq!(fast.weights, slow.weights, "k={k} (bitwise)");
+        }
+        // the four tied 2.0s win in index order before the rest
+        assert_eq!(topk_softmax(&h, 2).experts, vec![1, 2]);
+        assert_eq!(topk_softmax(&h, 4).experts, vec![1, 2, 3, 5]);
+        // rerunning the same row is bit-stable
+        let a = topk_softmax(&h, 3);
+        let b = topk_softmax(&h, 3);
+        assert_eq!(a.experts, b.experts);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn all_equal_rows_select_lowest_indices_in_every_branch() {
+        // n/k chosen to exercise all three selection branches: k >= n,
+        // the k <= 8 insertion scan, and the select-nth partition
+        for n in [1usize, 3, 9, 17] {
+            let h = vec![3.25f32; n];
+            for k in [1, 2, (n + 1) / 2, 9, n] {
+                let k = k.clamp(1, n);
+                let fast = topk_softmax(&h, k);
+                assert_eq!(
+                    fast.experts,
+                    (0..k).collect::<Vec<_>>(),
+                    "n={n} k={k}: all-equal row must pick the lowest indices"
+                );
+                let slow = topk_softmax_via_sort(&h, k);
+                assert_eq!(fast.experts, slow.experts, "n={n} k={k}");
+                assert_eq!(fast.weights, slow.weights, "n={n} k={k} (bitwise)");
+                // equal logits get exactly equal gate weights
+                for w in &fast.weights {
+                    assert_eq!(*w, fast.weights[0], "n={n} k={k}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -425,6 +505,38 @@ mod tests {
             }
             for (f, v) in fast.iter().zip(naive.iter()) {
                 assert_eq!(f, v, "blocked matmul must be bit-exact");
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_matmuls_match_naive() {
+        prop::forall("tn/nt matmuls", |rng| {
+            let (m, k, n) = (
+                prop::dim(rng, 1, 6),
+                prop::dim(rng, 1, 5),
+                prop::dim(rng, 1, 4),
+            );
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, m * n, 1.0);
+            let mut got = vec![0f32; k * n];
+            matmul_tn(&a, &b, &mut got, m, k, n);
+            for p in 0..k {
+                for q in 0..n {
+                    let want: f32 =
+                        (0..m).map(|i| a[i * k + p] * b[i * n + q]).sum();
+                    assert!((got[p * n + q] - want).abs() < 1e-4);
+                }
+            }
+            let c = prop::vec_f32(rng, n * k, 1.0);
+            let mut got = vec![0f32; m * n];
+            matmul_nt(&a, &c, &mut got, m, n, k);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 =
+                        (0..k).map(|l| a[i * k + l] * c[j * k + l]).sum();
+                    assert!((got[i * n + j] - want).abs() < 1e-4);
+                }
             }
         });
     }

@@ -331,3 +331,98 @@ pub fn efficiency_report(artifacts: &str, devices: usize, tokens: usize)
     }
     Ok(())
 }
+
+/// Artifact-free native training demo (`repro train-native`): trains
+/// the MoE sublayer end to end on the streamed executor with the
+/// gating network *learning* — task gradients through the noisy top-k
+/// plus the eq-6/eq-8 balance losses, Adam updates — and prints the
+/// per-step balance-CV trajectory next to a frozen-gating baseline run
+/// from the identical init, data and noise streams.  The CV columns
+/// falling while the frozen ones hold is the paper's §4 story made
+/// visible on a bare checkout.
+pub fn native_training_demo(devices: usize, steps: usize) -> Result<()> {
+    use crate::runtime::ModelConfig;
+    use crate::train::{StreamedStepOptions, Trainer};
+
+    let devices = devices.max(1);
+    let steps = steps.max(2);
+    let (d, h, n, k) = (16, 32, 4 * devices.max(2), 2);
+    let rows = 64;
+    let trainer = Trainer::native(ModelConfig::native_moe(
+        "train-native", d, n, k, h, devices, rows,
+    ));
+    println!(
+        "# native MoE training: {n} experts (k={k}) on {devices} simulated \
+         devices, {} tokens/step, Adam lr 0.01, w_importance/w_load 0.1 \
+         (no artifacts)",
+        devices * rows
+    );
+    println!(
+        "{:>4}  {:>10} {:>8} {:>8}   {:>10} {:>8} {:>8}",
+        "step", "loss", "cv_imp", "cv_load", "frozen", "cv_imp", "cv_load"
+    );
+    let run = |train_gating: bool| -> Result<Vec<crate::train::StreamedStepMetrics>> {
+        let mut state = trainer.init_streamed(17);
+        let sched = Scheduler::new(
+            ShardLayout::new(devices, n),
+            ExpertBackend::Native,
+        );
+        let mut data_rng = Rng::new(5);
+        let mk = |rng: &mut Rng, s: f32| -> Vec<TensorF> {
+            (0..devices)
+                .map(|_| {
+                    TensorF::new(
+                        vec![rows, d],
+                        (0..rows * d).map(|_| rng.normal_f32() * s).collect(),
+                    )
+                })
+                .collect()
+        };
+        let xs = mk(&mut data_rng, 1.0);
+        let targets = mk(&mut data_rng, 0.5);
+        let mut noise_rng = Rng::new(23);
+        let opts = StreamedStepOptions {
+            lr: 0.01,
+            train_gating,
+            w_importance: 0.1,
+            w_load: 0.1,
+        };
+        (0..steps)
+            .map(|_| {
+                trainer.step_streamed_with(
+                    &sched,
+                    &mut state,
+                    &xs,
+                    &targets,
+                    Some(&mut noise_rng),
+                    &opts,
+                )
+            })
+            .collect()
+    };
+    let learned = run(true)?;
+    let frozen = run(false)?;
+    let every = (steps / 10).max(1);
+    for (i, (l, f)) in learned.iter().zip(frozen.iter()).enumerate() {
+        if i % every == 0 || i + 1 == steps {
+            println!(
+                "{:>4}  {:>10.5} {:>8.3} {:>8.3}   {:>10.5} {:>8.3} {:>8.3}",
+                i, l.loss, l.cv_importance, l.cv_load, f.loss,
+                f.cv_importance, f.cv_load
+            );
+        }
+    }
+    let tail = |ms: &[crate::train::StreamedStepMetrics]| {
+        let w = ms.len().min(10);
+        let s: f64 = ms[ms.len() - w..].iter().map(|m| m.cv_importance).sum();
+        s / w as f64
+    };
+    println!(
+        "late-window CV(importance): learned {:.3} vs frozen {:.3} — the \
+         eq-6/eq-8 losses keep {} experts balanced while the task trains",
+        tail(&learned),
+        tail(&frozen),
+        n
+    );
+    Ok(())
+}

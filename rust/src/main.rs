@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! repro train --config moe-32 --steps 500 [--checkpoint out.ckpt]
+//! repro train-native --devices 2 --steps 40     (artifact-free)
 //! repro eval  --config moe-32 --checkpoint out.ckpt
 //! repro distributed --config moe-32 --devices 8 --steps 20
 //! repro table1|table6|table7|table8|table9|fig2|fig4|mt|mt5  [--steps N]
@@ -62,6 +63,8 @@ fn usage() -> ! {
         "usage: repro <command> [flags]\n\
          commands:\n\
            train        --config NAME --steps N [--checkpoint PATH] [--devices D]\n\
+           train-native [--devices D] [--steps N]   (no artifacts: streamed\n\
+                        engine + native gating backward, balance-CV trajectory)\n\
            eval         --config NAME --checkpoint PATH\n\
            distributed  --config NAME [--devices D] [--steps N]\n\
            table1 | table6 | table7 | table8 | table9   [--steps N]\n\
@@ -102,6 +105,15 @@ fn main() -> Result<()> {
                 r.config, r.steps, r.test_perplexity, r.ops_per_timestep,
                 r.tflops_per_device, r.wall_secs
             );
+        }
+        "train-native" => {
+            // artifact-free: the streamed executor + the exact native
+            // backward through the gating network (eq-6/eq-8 balance
+            // losses, Adam), printing the balance-CV trajectory next
+            // to a frozen-gating baseline
+            let devices = args.get_u64("devices", 2)? as usize;
+            let steps = args.get_u64("steps", 40)? as usize;
+            moe::harness::distributed::native_training_demo(devices, steps)?;
         }
         "eval" => {
             let cfg = args.get("config", "moe-32");

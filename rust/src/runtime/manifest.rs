@@ -96,7 +96,7 @@ impl ModelConfig {
             w_load: 0.1,
             ops_per_timestep: 0,
             moe_params: (n_experts * 2 * d_model * expert_hidden) as u64,
-            optimizer: "sgd".to_string(),
+            optimizer: "adam".to_string(),
         }
     }
 }

@@ -12,13 +12,16 @@
 //! stored in the same container via [`save_streamed`] /
 //! [`load_streamed`]: router and expert weights are flattened into the
 //! `params` section in a fixed order (`w_g | w_noise? | per expert
-//! w_in, w_out`) with empty optimizer sections (the streamed path is
-//! plain SGD).  Whether the router had a noise net is recovered from
-//! the section length, so both shapes round-trip.  This is also how
-//! the serving runtime ([`crate::serve`]) freezes gating from a
-//! training run.
+//! w_in, w_out`), and the per-tensor Adam moments
+//! ([`crate::train::optimizer::StreamedOptState`]) fill the `m` / `v`
+//! sections in the same order — so a resumed run continues
+//! bit-identically, optimizer momentum included.  Whether the router
+//! had a noise net is recovered from the section length, so both
+//! shapes round-trip; empty optimizer sections (pre-Adam checkpoints)
+//! resume with fresh moments.  This is also how the serving runtime
+//! ([`crate::serve`]) freezes gating from a training run.
 
-use std::io::{Read, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -29,6 +32,27 @@ use crate::runtime::{ModelConfig, TensorF};
 use crate::train::trainer::{StreamedTrainState, TrainState};
 
 const MAGIC: &[u8; 8] = b"MOECKPT1";
+
+/// Trailer appended by [`save_streamed`] carrying the per-tensor Adam
+/// bias-correction clocks
+/// ([`AdamState::t`](crate::train::optimizer::AdamState)), which can
+/// differ from the trainer step — and from each other — when a
+/// pre-Adam checkpoint was resumed (fresh moments restart at 0) or a
+/// tensor only received gradients on some steps (a noise net under
+/// deterministic routing, gating un-frozen mid-run).  Layout, at the
+/// very end of the file so old readers never see it:
+///
+/// ```text
+///   clocks  count * u64    (flatten order: w_g | w_noise? | experts)
+///   count   u64
+///   tag     "ADAMCLK1"     8 bytes
+/// ```
+///
+/// Old files simply end after the `v` section; [`load_streamed`]
+/// probes the tag from the end and falls back to the trainer step,
+/// which coincides with the clocks for runs trained from step 0 under
+/// Adam with noise on.
+const CLOCK_TAG: &[u8; 8] = b"ADAMCLK1";
 
 pub fn save(path: &Path, cfg_name: &str, state: &TrainState) -> Result<()> {
     let mut f = std::io::BufWriter::new(
@@ -88,9 +112,11 @@ pub fn load(path: &Path, expect_cfg: &str) -> Result<TrainState> {
 }
 
 /// Save a [`StreamedTrainState`] (module docs: flattening order
-/// `w_g | w_noise? | per expert w_in, w_out`).  Flat routers only: the
-/// format carries no hierarchical secondary gates, and saving a
-/// truncated router would serve a different model than was trained.
+/// `w_g | w_noise? | per expert w_in, w_out`, Adam moments in `m`/`v`).
+/// Flat routers only: the format carries no hierarchical secondary
+/// gates, and saving a truncated router would serve a different model
+/// than was trained.  The check runs before any file is created, so a
+/// rejected save leaves no partial file behind.
 pub fn save_streamed(
     path: &Path,
     cfg_name: &str,
@@ -114,18 +140,78 @@ pub fn save_streamed(
         flat.extend_from_slice(&w.w_in);
         flat.extend_from_slice(&w.w_out);
     }
+    let (m, v) = state.opt.flatten();
+    if m.len() != flat.len() || v.len() != flat.len() {
+        bail!(
+            "optimizer state holds {}/{} moment f32s but the model has {} \
+             params — the state was assembled inconsistently; refusing to \
+             write a checkpoint that cannot load",
+            m.len(),
+            v.len(),
+            flat.len()
+        );
+    }
     let ts = TrainState {
         params: TensorF::new(vec![flat.len()], flat),
-        m: TensorF::zeros(vec![0]),
-        v: TensorF::zeros(vec![0]),
+        m: TensorF::new(vec![m.len()], m),
+        v: TensorF::new(vec![v.len()], v),
         step: state.step,
     };
-    save(path, cfg_name, &ts)
+    save(path, cfg_name, &ts)?;
+    // trailer: the per-tensor Adam clocks, which diverge from the
+    // trainer step after a pre-Adam-checkpoint resume and from each
+    // other when a tensor skips steps (see CLOCK_TAG)
+    let clocks = state.opt.clocks();
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .with_context(|| format!("appending opt clocks to {path:?}"))?;
+    for c in &clocks {
+        f.write_all(&c.to_le_bytes())?;
+    }
+    f.write_all(&(clocks.len() as u64).to_le_bytes())?;
+    f.write_all(CLOCK_TAG)?;
+    Ok(())
+}
+
+/// Read the [`CLOCK_TAG`] trailer of a streamed checkpoint, if present
+/// (files from before the trailer existed simply end after the `v`
+/// section).
+fn read_opt_clocks(path: &Path) -> Result<Option<Vec<u64>>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?;
+    let size = f.metadata()?.len();
+    if size < 16 {
+        return Ok(None);
+    }
+    f.seek(SeekFrom::End(-16))?;
+    let mut buf = [0u8; 16];
+    f.read_exact(&mut buf)?;
+    if &buf[8..] != CLOCK_TAG {
+        return Ok(None);
+    }
+    let count = u64::from_le_bytes(buf[..8].try_into().unwrap());
+    let bytes = count
+        .checked_mul(8)
+        .and_then(|b| b.checked_add(16))
+        .filter(|total| *total <= size)
+        .map(|total| total - 16)
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: corrupt clock trailer"))?;
+    f.seek(SeekFrom::End(-16 - bytes as i64))?;
+    let mut raw = vec![0u8; bytes as usize];
+    f.read_exact(&mut raw)?;
+    Ok(Some(
+        raw.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+    ))
 }
 
 /// Load a [`StreamedTrainState`] saved by [`save_streamed`].  `cfg`
 /// supplies the dimensions the flat buffer is sliced by; the router's
-/// noise net is detected from the section length.
+/// noise net is detected from the section length.  Adam moments are
+/// rebuilt from the `m`/`v` sections — empty sections (checkpoints
+/// from before moments were carried) resume with fresh state.
 pub fn load_streamed(
     path: &Path,
     expect_cfg: &str,
@@ -169,9 +255,20 @@ pub fn load_streamed(
             hidden: h,
         })
         .collect();
+    let mut opt = crate::train::optimizer::StreamedOptState::from_flat(
+        &ts.m.data, &ts.v.data, d, h, n, has_noise, ts.step,
+    )
+    .with_context(|| format!("{path:?}: optimizer sections"))?;
+    if !ts.m.data.is_empty() {
+        if let Some(clocks) = read_opt_clocks(path)? {
+            opt.set_clocks(&clocks)
+                .with_context(|| format!("{path:?}: clock trailer"))?;
+        }
+    }
     Ok(StreamedTrainState {
         router: Router::flat_native(d, n, k, w_g, w_noise),
         weights,
+        opt,
         step: ts.step,
     })
 }
@@ -258,6 +355,10 @@ mod tests {
             assert_eq!(a.w_in, b.w_in);
             assert_eq!(a.w_out, b.w_out);
         }
+        // the round trip now carries the Adam moments, bit for bit —
+        // after 5 steps they are non-trivial
+        assert!(state.opt.w_g.m.iter().any(|v| *v != 0.0));
+        assert_eq!(reloaded.opt, state.opt, "Adam moments drifted");
 
         // resume: one more identical (noise-free, so deterministic) step
         // on the original and the reloaded state must agree bit for bit
@@ -282,6 +383,80 @@ mod tests {
     }
 
     #[test]
+    fn pre_adam_checkpoint_resumes_with_fresh_clock_and_persists_it() {
+        use crate::coordinator::scheduler::ExpertBackend;
+        use crate::coordinator::{Scheduler, ShardLayout};
+        use crate::train::Trainer;
+        use crate::util::rng::Rng;
+
+        let (d, h, n, k) = (4, 6, 3, 1);
+        let cfg = ModelConfig::native_moe("ckpt-preadam", d, n, k, h, 1, 4);
+        let trainer = Trainer::native(cfg.clone());
+        let donor = trainer.init_streamed(4);
+
+        // simulate the old (pre-Adam) format: same param flattening,
+        // empty optimizer sections, saved mid-run at step 1000
+        let mut flat = Vec::new();
+        flat.extend_from_slice(&donor.router.w_g);
+        flat.extend_from_slice(donor.router.w_noise.as_ref().unwrap());
+        for w in &donor.weights {
+            flat.extend_from_slice(&w.w_in);
+            flat.extend_from_slice(&w.w_out);
+        }
+        let legacy = TrainState {
+            params: TensorF::new(vec![flat.len()], flat),
+            m: TensorF::zeros(vec![0]),
+            v: TensorF::zeros(vec![0]),
+            step: 1000,
+        };
+        let dir = std::env::temp_dir().join("moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("preadam.ckpt");
+        save(&path, &cfg.name, &legacy).unwrap();
+
+        // fresh moments must restart the Adam bias-correction clock at
+        // 0 even though the trainer step is 1000
+        let mut state = load_streamed(&path, &cfg.name, &cfg).unwrap();
+        assert_eq!(state.step, 1000);
+        assert!(
+            state.opt.clocks().iter().all(|t| *t == 0),
+            "pre-Adam resume must reset every Adam clock"
+        );
+
+        // train a little, save with the new format, reload: the clock
+        // (now 2, not 1002) must round-trip via the trailer
+        let sched = Scheduler::new(ShardLayout::new(1, n), ExpertBackend::Native);
+        let mut rng = Rng::new(8);
+        let xs = vec![TensorF::new(
+            vec![4, d],
+            (0..4 * d).map(|_| rng.normal_f32()).collect(),
+        )];
+        let targets = vec![TensorF::new(
+            vec![4, d],
+            (0..4 * d).map(|_| rng.normal_f32() * 0.5).collect(),
+        )];
+        for _ in 0..2 {
+            trainer
+                .step_streamed(&sched, &mut state, &xs, &targets, 0.01, None)
+                .unwrap();
+        }
+        assert_eq!(state.opt.w_g.t, 2);
+        // deterministic routing: the noise net never saw a gradient,
+        // so its own clock stays cold
+        assert_eq!(state.opt.w_noise.as_ref().unwrap().t, 0);
+        assert_eq!(state.step, 1002);
+        let path2 = dir.join("preadam2.ckpt");
+        save_streamed(&path2, &cfg.name, &state).unwrap();
+        let back = load_streamed(&path2, &cfg.name, &cfg).unwrap();
+        assert_eq!(back.step, 1002);
+        assert_eq!(
+            back.opt.w_g.t, 2,
+            "Adam clocks must persist independently of the trainer step"
+        );
+        assert_eq!(back.opt, state.opt);
+    }
+
+    #[test]
     fn streamed_checkpoint_rejects_wrong_dims() {
         use crate::train::Trainer;
 
@@ -298,8 +473,9 @@ mod tests {
     }
 
     #[test]
-    fn streamed_checkpoint_rejects_hierarchical_routers() {
+    fn streamed_checkpoint_rejects_hierarchical_routers_without_partial_file() {
         use crate::coordinator::router::RouterBackend;
+        use crate::train::optimizer::StreamedOptState;
 
         let router = Router {
             backend: RouterBackend::Native,
@@ -312,12 +488,21 @@ mod tests {
             w_g_sec: Some(vec![0.0; 2 * 2 * 2]),
             w_n_sec: None,
         };
-        let state = StreamedTrainState { router, weights: Vec::new(), step: 0 };
+        let opt = StreamedOptState::zeros(&router, &[]);
+        let state =
+            StreamedTrainState { router, weights: Vec::new(), opt, step: 0 };
         let dir = std::env::temp_dir().join("moe_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("hier.ckpt");
+        let _ = std::fs::remove_file(&path);
         let err = save_streamed(&path, "hier", &state).unwrap_err().to_string();
+        // the documented error, no panic...
         assert!(err.contains("flat routers only"), "{err}");
+        // ...and no partial file: the reject happens before create()
+        assert!(
+            !path.exists(),
+            "failed hierarchical save must not leave a partial checkpoint"
+        );
     }
 
     #[test]

@@ -5,13 +5,18 @@
 //!
 //! The artifact is no longer a hard requirement: [`Trainer::native`] /
 //! [`Trainer::step_streamed`] train the MoE sublayer on the
-//! dependency-driven streamed engine with a native backward pass, on a
-//! bare offline checkout.
+//! dependency-driven streamed engine with a native backward pass —
+//! expert FFNs, combine, *and* the gating network with its eq-6/eq-8
+//! balance losses ([`trainer::streamed_backward`]) — updated by the
+//! shared Adam optimizer ([`optimizer`]), on a bare offline checkout.
 
 pub mod checkpoint;
+pub mod optimizer;
 pub mod trainer;
 
+pub use optimizer::{AdamParams, AdamState, StreamedOptState};
 pub use trainer::{
-    EvalResult, StepMetrics, StreamedStepMetrics, StreamedTrainState,
-    TrainState, Trainer,
+    streamed_backward, EvalResult, StepMetrics, StreamedGrads, StreamedLoss,
+    StreamedStepMetrics, StreamedStepOptions, StreamedTrainState, TrainState,
+    Trainer,
 };

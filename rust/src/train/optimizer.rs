@@ -1,0 +1,446 @@
+//! Shared native optimizer: Adam (Kingma & Ba, algorithm 1) with
+//! per-tensor first/second-moment state — the same optimizer the
+//! artifact path bakes into its step graph, now available to the
+//! artifact-free streamed trainer.  [`StreamedOptState`] mirrors the
+//! streamed model tensors (`w_g | w_noise? | per expert w_in, w_out`,
+//! plus hierarchical secondaries when present) and flattens in exactly
+//! that order so `checkpoint::save_streamed` / `load_streamed` can
+//! thread it through the `m` / `v` sections of the existing container.
+
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::ExpertWeights;
+use crate::gating::backward::GateGrads;
+
+/// Adam hyperparameters (the paper-standard defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        AdamParams { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// First/second moments of one parameter tensor, plus that tensor's
+/// own bias-correction clock.  The clock is per tensor — not shared
+/// with the trainer step — so a tensor whose updates begin mid-run
+/// (gating un-frozen after baseline steps, a noise net that only gets
+/// gradients on noisy steps, fresh moments after a pre-Adam-checkpoint
+/// resume) still gets the correct cold-start bias correction instead
+/// of a ~3× first-step overshoot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// updates applied to this tensor so far
+    pub t: u64,
+}
+
+impl AdamState {
+    pub fn zeros(len: usize) -> Self {
+        AdamState { m: vec![0.0; len], v: vec![0.0; len], t: 0 }
+    }
+
+    /// One Adam update: advances this tensor's clock, then
+    /// `m ← β₁m + (1−β₁)g`, `v ← β₂v + (1−β₂)g²`,
+    /// `w ← w − lr · m̂ / (√v̂ + ε)` with bias correction at the new
+    /// (1-based) clock value.
+    pub fn update(&mut self, p: &AdamParams, lr: f32, w: &mut [f32], g: &[f32]) {
+        assert_eq!(w.len(), g.len(), "adam: grad shape");
+        assert_eq!(w.len(), self.m.len(), "adam: moment shape");
+        self.t += 1;
+        let t = self.t.clamp(1, i32::MAX as u64) as i32;
+        let bc1 = 1.0 - p.beta1.powi(t);
+        let bc2 = 1.0 - p.beta2.powi(t);
+        for i in 0..w.len() {
+            self.m[i] = p.beta1 * self.m[i] + (1.0 - p.beta1) * g[i];
+            self.v[i] = p.beta2 * self.v[i] + (1.0 - p.beta2) * g[i] * g[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            w[i] -= lr * mhat / (vhat.sqrt() + p.eps);
+        }
+    }
+}
+
+/// Optimizer state for every tensor of a
+/// [`StreamedTrainState`](crate::train::StreamedTrainState), in the
+/// checkpoint flattening order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamedOptState {
+    pub w_g: AdamState,
+    pub w_noise: Option<AdamState>,
+    /// per expert: (w_in, w_out) moments
+    pub experts: Vec<(AdamState, AdamState)>,
+    pub w_g_sec: Option<AdamState>,
+    pub w_n_sec: Option<AdamState>,
+}
+
+impl StreamedOptState {
+    /// Fresh (all-zero) moments shaped like the given model tensors.
+    pub fn zeros(router: &Router, weights: &[ExpertWeights]) -> Self {
+        StreamedOptState {
+            w_g: AdamState::zeros(router.w_g.len()),
+            w_noise: router
+                .w_noise
+                .as_ref()
+                .map(|w| AdamState::zeros(w.len())),
+            experts: weights
+                .iter()
+                .map(|w| {
+                    (
+                        AdamState::zeros(w.w_in.len()),
+                        AdamState::zeros(w.w_out.len()),
+                    )
+                })
+                .collect(),
+            w_g_sec: router
+                .w_g_sec
+                .as_ref()
+                .map(|w| AdamState::zeros(w.len())),
+            w_n_sec: router
+                .w_n_sec
+                .as_ref()
+                .map(|w| AdamState::zeros(w.len())),
+        }
+    }
+
+    /// Flatten (m, v) in the checkpoint parameter order
+    /// `w_g | w_noise? | per expert w_in, w_out` (flat routers only —
+    /// the container carries no secondary gates, and `save_streamed`
+    /// rejects hierarchical states before calling this).
+    pub fn flatten(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        let push = |s: &AdamState, m: &mut Vec<f32>, v: &mut Vec<f32>| {
+            m.extend_from_slice(&s.m);
+            v.extend_from_slice(&s.v);
+        };
+        push(&self.w_g, &mut m, &mut v);
+        if let Some(s) = &self.w_noise {
+            push(s, &mut m, &mut v);
+        }
+        for (w_in, w_out) in &self.experts {
+            push(w_in, &mut m, &mut v);
+            push(w_out, &mut m, &mut v);
+        }
+        (m, v)
+    }
+
+    /// Rebuild from checkpoint `m` / `v` sections (inverse of
+    /// [`flatten`](Self::flatten)).  Empty sections mean a checkpoint
+    /// from before moments were carried — resume with fresh state and
+    /// every tensor's bias-correction clock restarted at 0 (ignoring
+    /// `fallback_t`).  Non-empty sections must cover the model exactly;
+    /// every tensor's clock is seeded with `fallback_t` — the loader
+    /// then overwrites the clocks from the checkpoint's `ADAMCLK1`
+    /// trailer via [`set_clocks`](Self::set_clocks) when present
+    /// (falling back to the trainer step, which coincides with the
+    /// clocks for runs trained from step 0 under Adam with noise on).
+    pub fn from_flat(
+        m: &[f32],
+        v: &[f32],
+        d: usize,
+        h: usize,
+        n: usize,
+        has_noise: bool,
+        fallback_t: u64,
+    ) -> anyhow::Result<Self> {
+        let gate = d * n;
+        let want = gate * if has_noise { 2 } else { 1 } + n * 2 * d * h;
+        if m.is_empty() && v.is_empty() {
+            return Ok(StreamedOptState {
+                w_g: AdamState::zeros(gate),
+                w_noise: has_noise.then(|| AdamState::zeros(gate)),
+                experts: (0..n)
+                    .map(|_| (AdamState::zeros(d * h), AdamState::zeros(h * d)))
+                    .collect(),
+                w_g_sec: None,
+                w_n_sec: None,
+            });
+        }
+        if m.len() != want || v.len() != want {
+            anyhow::bail!(
+                "optimizer sections hold {}/{} f32s but the model needs {want}",
+                m.len(),
+                v.len()
+            );
+        }
+        let mut at = 0usize;
+        let mut take = |len: usize| {
+            let s = AdamState {
+                m: m[at..at + len].to_vec(),
+                v: v[at..at + len].to_vec(),
+                t: fallback_t,
+            };
+            at += len;
+            s
+        };
+        let w_g = take(gate);
+        let w_noise = if has_noise { Some(take(gate)) } else { None };
+        let experts = (0..n).map(|_| (take(d * h), take(h * d))).collect();
+        Ok(StreamedOptState {
+            w_g,
+            w_noise,
+            experts,
+            w_g_sec: None,
+            w_n_sec: None,
+        })
+    }
+
+    /// Per-tensor bias-correction clocks in the flatten order
+    /// `w_g | w_noise? | per expert w_in, w_out` (what the checkpoint
+    /// trailer persists).
+    pub fn clocks(&self) -> Vec<u64> {
+        let mut out = vec![self.w_g.t];
+        if let Some(s) = &self.w_noise {
+            out.push(s.t);
+        }
+        for (w_in, w_out) in &self.experts {
+            out.push(w_in.t);
+            out.push(w_out.t);
+        }
+        out
+    }
+
+    /// Restore per-tensor clocks saved by [`clocks`](Self::clocks);
+    /// the count must match this state's tensor count exactly.
+    pub fn set_clocks(&mut self, clocks: &[u64]) -> anyhow::Result<()> {
+        let want = 1
+            + usize::from(self.w_noise.is_some())
+            + 2 * self.experts.len();
+        if clocks.len() != want {
+            anyhow::bail!(
+                "checkpoint carries {} optimizer clocks but the model has \
+                 {want} tensors",
+                clocks.len()
+            );
+        }
+        let mut it = clocks.iter().copied();
+        self.w_g.t = it.next().unwrap();
+        if let Some(s) = self.w_noise.as_mut() {
+            s.t = it.next().unwrap();
+        }
+        for (w_in, w_out) in self.experts.iter_mut() {
+            w_in.t = it.next().unwrap();
+            w_out.t = it.next().unwrap();
+        }
+        Ok(())
+    }
+
+    /// One Adam update of every gating tensor that received a gradient
+    /// this step (`w_g` always; the optional tensors when present).
+    /// A gradient with no matching weight or moments is an error, not a
+    /// silent skip — a state assembled with mismatched router/opt
+    /// shapes must fail loudly instead of letting a tensor quietly stop
+    /// learning.  Each tensor advances its own bias-correction clock.
+    pub fn update_gating(
+        &mut self,
+        p: &AdamParams,
+        lr: f32,
+        router: &mut Router,
+        g: &GateGrads,
+    ) -> anyhow::Result<()> {
+        self.w_g.update(p, lr, &mut router.w_g, &g.w_g);
+        let slots = [
+            (
+                "w_noise",
+                router.w_noise.as_mut(),
+                g.w_noise.as_ref(),
+                self.w_noise.as_mut(),
+            ),
+            (
+                "w_g_sec",
+                router.w_g_sec.as_mut(),
+                g.w_g_sec.as_ref(),
+                self.w_g_sec.as_mut(),
+            ),
+            (
+                "w_n_sec",
+                router.w_n_sec.as_mut(),
+                g.w_n_sec.as_ref(),
+                self.w_n_sec.as_mut(),
+            ),
+        ];
+        for (name, w, grad, st) in slots {
+            match (w, grad, st) {
+                (Some(w), Some(grad), Some(st)) => {
+                    st.update(p, lr, w, grad);
+                }
+                // no gradient this step (e.g. noise net under
+                // deterministic routing) — nothing to apply
+                (_, None, _) => {}
+                (w, Some(_), st) => anyhow::bail!(
+                    "gating tensor {name} has a gradient but weight \
+                     present={} / moments present={} — optimizer state \
+                     does not match the router",
+                    w.is_some(),
+                    st.is_some()
+                ),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_adam_step_is_signed_lr() {
+        // with zero moments, step 1 moves each weight by ~lr·sign(g)
+        // (bias correction cancels the (1−β) factors exactly)
+        let p = AdamParams::default();
+        let mut st = AdamState::zeros(3);
+        let mut w = vec![1.0f32, -2.0, 0.5];
+        let g = vec![0.3f32, -4.0, 0.0];
+        st.update(&p, 0.01, &mut w, &g);
+        assert_eq!(st.t, 1, "update advances the tensor's own clock");
+        assert!((w[0] - (1.0 - 0.01)).abs() < 1e-4, "w0={}", w[0]);
+        assert!((w[1] - (-2.0 + 0.01)).abs() < 1e-4, "w1={}", w[1]);
+        assert_eq!(w[2], 0.5, "zero grad, zero moments: no movement");
+    }
+
+    #[test]
+    fn adam_matches_reference_recurrence() {
+        // two hand-unrolled updates against the algorithm-1 recurrence
+        let p = AdamParams { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let mut st = AdamState::zeros(1);
+        let mut w = vec![0.0f32];
+        let (mut m, mut v) = (0.0f64, 0.0f64);
+        let mut w_ref = 0.0f64;
+        for (t, g) in [0.5f64, -0.25].iter().enumerate() {
+            st.update(&p, 0.1, &mut w, &[*g as f32]);
+            m = 0.9 * m + 0.1 * g;
+            v = 0.999 * v + 0.001 * g * g;
+            let mhat = m / (1.0 - 0.9f64.powi(t as i32 + 1));
+            let vhat = v / (1.0 - 0.999f64.powi(t as i32 + 1));
+            w_ref -= 0.1 * mhat / (vhat.sqrt() + 1e-8);
+            assert!(
+                (w[0] as f64 - w_ref).abs() < 1e-5,
+                "t={t}: {} vs {w_ref}",
+                w[0]
+            );
+        }
+        assert_eq!(st.m.len(), 1);
+        assert!(st.v[0] > 0.0);
+    }
+
+    #[test]
+    fn opt_state_flatten_roundtrips() {
+        let (d, h, n) = (3, 4, 2);
+        let mut st = StreamedOptState {
+            w_g: AdamState::zeros(d * n),
+            w_noise: Some(AdamState::zeros(d * n)),
+            experts: (0..n)
+                .map(|_| (AdamState::zeros(d * h), AdamState::zeros(h * d)))
+                .collect(),
+            w_g_sec: None,
+            w_n_sec: None,
+        };
+        // stamp recognizable values
+        let mut c = 0.0f32;
+        for s in [&mut st.w_g]
+            .into_iter()
+            .chain(st.w_noise.as_mut())
+        {
+            for x in s.m.iter_mut().chain(s.v.iter_mut()) {
+                c += 1.0;
+                *x = c;
+            }
+        }
+        for (a, b) in st.experts.iter_mut() {
+            for x in a
+                .m
+                .iter_mut()
+                .chain(a.v.iter_mut())
+                .chain(b.m.iter_mut())
+                .chain(b.v.iter_mut())
+            {
+                c += 1.0;
+                *x = c;
+            }
+        }
+        // clocks are not part of the m/v sections: from_flat seeds them
+        // with the fallback, so stamp the same value here for equality
+        st.w_g.t = 7;
+        st.w_noise.as_mut().unwrap().t = 7;
+        for (a, b) in st.experts.iter_mut() {
+            a.t = 7;
+            b.t = 7;
+        }
+        let (m, v) = st.flatten();
+        let want = d * n * 2 + n * 2 * d * h;
+        assert_eq!(m.len(), want);
+        assert_eq!(v.len(), want);
+        let back =
+            StreamedOptState::from_flat(&m, &v, d, h, n, true, 7).unwrap();
+        assert_eq!(back, st);
+        // per-tensor clocks round-trip through clocks()/set_clocks()
+        let mut with_clocks = back.clone();
+        with_clocks.set_clocks(&[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(with_clocks.clocks(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(with_clocks.set_clocks(&[1, 2]).is_err(), "count mismatch");
+        // empty sections resume fresh, every clock reset to 0 no matter
+        // how far the run had trained
+        let fresh =
+            StreamedOptState::from_flat(&[], &[], d, h, n, true, 1000).unwrap();
+        assert!(fresh.w_g.m.iter().all(|x| *x == 0.0));
+        assert_eq!(fresh.experts.len(), n);
+        assert!(
+            fresh.clocks().iter().all(|t| *t == 0),
+            "fresh moments must restart the Adam clocks"
+        );
+        // wrong length is a clean error
+        assert!(
+            StreamedOptState::from_flat(&m[1..], &v[1..], d, h, n, true, 7)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn update_gating_rejects_mismatched_state() {
+        use crate::coordinator::router::Router;
+
+        let (d, n) = (2, 3);
+        let mut router = Router::flat_native(
+            d,
+            n,
+            1,
+            vec![0.0; d * n],
+            Some(vec![0.0; d * n]),
+        );
+        // opt state built WITHOUT a noise slot: a w_noise gradient must
+        // be a loud error, not a silent skip
+        let mut opt = StreamedOptState {
+            w_g: AdamState::zeros(d * n),
+            w_noise: None,
+            experts: Vec::new(),
+            w_g_sec: None,
+            w_n_sec: None,
+        };
+        let g = GateGrads {
+            w_g: vec![0.1; d * n],
+            w_noise: Some(vec![0.1; d * n]),
+            w_g_sec: None,
+            w_n_sec: None,
+        };
+        let err = opt
+            .update_gating(&AdamParams::default(), 0.01, &mut router, &g)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("w_noise"), "{err}");
+        // with the matching slot present the same update applies cleanly
+        let mut opt2 = StreamedOptState::zeros(&router, &[]);
+        opt2.update_gating(&AdamParams::default(), 0.01, &mut router, &g)
+            .unwrap();
+        assert_eq!(opt2.w_g.t, 1);
+        assert_eq!(opt2.w_noise.as_ref().unwrap().t, 1);
+        assert!(router.w_g.iter().all(|w| *w != 0.0));
+        assert!(router.w_noise.as_ref().unwrap().iter().all(|w| *w != 0.0));
+    }
+}

@@ -11,12 +11,19 @@
 //! [`Trainer::native`] builds a trainer from a bare [`ModelConfig`]
 //! (no manifest, no PJRT), and [`Trainer::step_streamed`] runs the MoE
 //! sublayer forward on [`Scheduler::execute_streamed`] — the
-//! dependency-driven pipelined engine — then backpropagates through the
-//! gate-weighted combine (eq 1) and the expert FFNs in native rust and
-//! applies SGD to the expert weights.  Gating parameters are frozen
-//! within the step (the balance statistics are reported, not trained);
-//! the loss is mean squared error against caller-provided targets, the
-//! regression framing the sublayer admits without the LSTM stack.
+//! dependency-driven pipelined engine — then backpropagates **exactly**
+//! through the gate-weighted combine (eq 1), the expert FFNs, *and the
+//! gating network itself*: task gradients through the noisy top-k
+//! softmax into `w_g`/`w_noise` (via the pre-drawn eq-4 noise retained
+//! from the forward), plus the eq-6/7 importance and eq-8 smooth-load
+//! balance-loss gradients ([`crate::gating::backward`], proven against
+//! central finite differences in `rust/tests/grad_check.rs`).  Updates
+//! use the artifact path's Adam ([`crate::train::optimizer`]) with
+//! per-tensor moments that checkpoint through
+//! `checkpoint::save_streamed` / `load_streamed`.  The loss is mean
+//! squared error against caller-provided targets, the regression
+//! framing the sublayer admits without the LSTM stack; per-step balance
+//! CVs and the balance loss are reported alongside it.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -25,14 +32,20 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::scheduler::ExpertWeights;
-use crate::coordinator::{Dispatcher, Router, Scheduler, StepStats};
+use crate::coordinator::{
+    Dispatcher, Router, Scheduler, StepStats, StreamedStep,
+};
 use crate::data::Batcher;
-use crate::gating::noisy_topk::{cv_squared, matmul};
+use crate::gating::backward::{
+    cv_squared_grad, flat_gate_backward, hierarchical_gate_backward, GateGrads,
+};
+use crate::gating::noisy_topk::{cv_squared, matmul, matmul_nt, matmul_tn};
 use crate::metrics::perplexity;
 use crate::runtime::{
     ConfigEntry, Engine, ExecPhases, Executable, Host, Manifest, ModelConfig,
     TensorF, TensorI,
 };
+use crate::train::optimizer::{AdamParams, StreamedOptState};
 use crate::util::rng::Rng;
 
 /// Decoded metrics vector of one step (names from the manifest).
@@ -102,10 +115,12 @@ pub struct TrainState {
 }
 
 /// Model + optimizer state of the artifact-free streamed path: the MoE
-/// sublayer's router and expert weights, trained natively.
+/// sublayer's router and expert weights — *all* trained natively — plus
+/// the per-tensor Adam moments.
 pub struct StreamedTrainState {
     pub router: Router,
     pub weights: Vec<ExpertWeights>,
+    pub opt: StreamedOptState,
     pub step: u64,
 }
 
@@ -113,9 +128,13 @@ pub struct StreamedTrainState {
 #[derive(Clone, Debug)]
 pub struct StreamedStepMetrics {
     pub step: u64,
-    /// mean squared error over every output element
+    /// task term: mean squared error over every output element
     pub loss: f64,
-    /// l2 norm of the expert-weight gradients this step
+    /// auxiliary term: w_importance·CV²(Importance) + w_load·CV²(Load)
+    /// (eq 6–8) as evaluated this step — the quantity whose gradients
+    /// train the gating network
+    pub balance_loss: f64,
+    /// l2 norm of every gradient this step (experts + gating nets)
     pub grad_norm: f64,
     /// CV(Importance) over the step's merged routing decisions (eq 6)
     pub cv_importance: f64,
@@ -125,6 +144,302 @@ pub struct StreamedStepMetrics {
     /// full engine telemetry of the forward step (overlap ratio et al.
     /// via [`StepStats::combine_overlap_ratio`])
     pub stats: StepStats,
+}
+
+/// Knobs of one streamed training step.
+/// [`Trainer::streamed_options`] fills the balance-loss weights from
+/// the config; `train_gating: false` reproduces the frozen-gating
+/// baseline (experts-only backward) for ablations.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamedStepOptions {
+    pub lr: f32,
+    pub train_gating: bool,
+    pub w_importance: f32,
+    pub w_load: f32,
+}
+
+/// Loss breakdown of one streamed step's backward pass.
+#[derive(Clone, Debug)]
+pub struct StreamedLoss {
+    pub task: f64,
+    pub balance: f64,
+    pub cv_importance: f64,
+    pub cv_load: f64,
+    pub grad_norm: f64,
+}
+
+/// Every gradient of one streamed step, shaped like the model tensors.
+pub struct StreamedGrads {
+    /// per expert: (∂L/∂w_in, ∂L/∂w_out)
+    pub experts: Vec<(Vec<f32>, Vec<f32>)>,
+    /// gating-net gradients; `None` when the step froze gating
+    pub gate: Option<GateGrads>,
+}
+
+/// The exact native backward of one streamed MoE step — public so the
+/// finite-difference harness (`rust/tests/grad_check.rs`) can check
+/// every analytic gradient without going through an optimizer update.
+///
+/// Takes the finished forward ([`StreamedStep`]: outputs, retained
+/// decisions + eq-4 noise, dispatch plan) and produces the task (MSE
+/// against `targets`) + balance loss breakdown and the gradients of
+/// every trainable tensor: expert FFNs, `w_g`, `w_noise` (and the
+/// hierarchical secondaries).  The load loss differentiates through
+/// the smooth eq-10 estimator only where it is defined (flat router,
+/// noise retained, k < n); elsewhere Load is piecewise constant and
+/// contributes no gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn streamed_backward(
+    router: &Router,
+    weights: &[ExpertWeights],
+    xs: &[&TensorF],
+    targets: &[TensorF],
+    s: &StreamedStep,
+    w_importance: f32,
+    w_load: f32,
+    train_gating: bool,
+) -> Result<(StreamedLoss, StreamedGrads)> {
+    let d = xs
+        .first()
+        .map(|t| t.shape[1])
+        .ok_or_else(|| anyhow!("no replica inputs"))?;
+    let n = router.n_experts;
+    if s.decisions.len() != xs.len() {
+        bail!(
+            "step retained {} decisions for {} replicas (forward-only \
+             steps cannot be backpropagated)",
+            s.decisions.len(),
+            xs.len()
+        );
+    }
+    if targets.len() != xs.len() {
+        bail!("{} replica inputs but {} targets", xs.len(), targets.len());
+    }
+    for (i, (x, t)) in xs.iter().zip(targets.iter()).enumerate() {
+        if x.shape != t.shape {
+            bail!(
+                "replica {i}: input shape {:?} vs target shape {:?}",
+                x.shape,
+                t.shape
+            );
+        }
+    }
+
+    // task loss and ∂L/∂y per replica
+    let n_el: usize = s.outs.iter().map(|t| t.data.len()).sum();
+    let scale = 2.0 / n_el.max(1) as f32;
+    let mut task = 0.0f64;
+    let mut grads_y: Vec<Vec<f32>> = Vec::with_capacity(s.outs.len());
+    for (y, t) in s.outs.iter().zip(targets.iter()) {
+        let g = y
+            .data
+            .iter()
+            .zip(t.data.iter())
+            .map(|(a, b)| {
+                let e = a - b;
+                task += (e * e) as f64;
+                scale * e
+            })
+            .collect();
+        grads_y.push(g);
+    }
+    task /= n_el.max(1) as f64;
+
+    // balance statistics over the merged decisions, and the CV²
+    // gradient coefficients the gating backward chains through
+    let mut imp = vec![0f32; n];
+    let mut load = vec![0f32; n];
+    for dec in &s.decisions {
+        for (a, v) in imp.iter_mut().zip(dec.importance.iter()) {
+            *a += v;
+        }
+        for (a, v) in load.iter_mut().zip(dec.load.iter()) {
+            *a += v;
+        }
+    }
+    let cv2_imp = cv_squared(&imp);
+    let cv2_load = cv_squared(&load);
+    let balance = (w_importance * cv2_imp + w_load * cv2_load) as f64;
+    let d_imp: Vec<f32> = cv_squared_grad(&imp)
+        .iter()
+        .map(|g| g * w_importance)
+        .collect();
+    let smooth_load = train_gating
+        && w_load != 0.0
+        && router.groups == 0
+        && router.k < n
+        && s.decisions.iter().all(|dec| dec.noise.is_some());
+    let d_load: Vec<f32> = if smooth_load {
+        cv_squared_grad(&load).iter().map(|g| g * w_load).collect()
+    } else {
+        vec![0.0; n]
+    };
+
+    // per-token ∂L_task/∂gate accumulators, aligned with the decisions
+    let mut d_gates: Vec<Vec<Vec<f32>>> = s
+        .decisions
+        .iter()
+        .map(|dec| {
+            dec.per_token
+                .iter()
+                .map(|tok| vec![0f32; tok.experts.len()])
+                .collect()
+        })
+        .collect();
+
+    // backprop per expert: dL/d(expert row) = gate · dL/dy[token]
+    // (eq 1 is bilinear), then the standard two-layer relu-FFN
+    // backward; gather reuses the step's plan.  The recomputed expert
+    // outputs also yield the task's gate gradients: ∂L/∂gate = gy · y.
+    let mut grad_sq = 0.0f64;
+    let mut expert_grads: Vec<(Vec<f32>, Vec<f32>)> =
+        Vec::with_capacity(weights.len());
+    for (e, w) in weights.iter().enumerate() {
+        let batch = &s.plan.per_expert[e];
+        let rows = batch.tokens.len();
+        let h = w.hidden;
+        if rows == 0 {
+            expert_grads.push((vec![0.0; d * h], vec![0.0; h * d]));
+            continue;
+        }
+        let x = Dispatcher::gather(&s.plan, e, xs);
+        // recompute hidden activations (cheaper than caching them
+        // across the engine boundary)
+        let mut hid = vec![0f32; rows * h];
+        matmul(&x.data, &w.w_in, &mut hid, rows, d, h);
+        for v in hid.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let mut y = vec![0f32; rows * d];
+        if train_gating {
+            matmul(&hid, &w.w_out, &mut y, rows, h, d);
+        }
+        let mut gout = vec![0f32; rows * d];
+        for (slot, (addr, gate)) in
+            batch.tokens.iter().zip(batch.gates.iter()).enumerate()
+        {
+            let gy = &grads_y[addr.replica][addr.row * d..(addr.row + 1) * d];
+            for (o, g) in gout[slot * d..(slot + 1) * d].iter_mut().zip(gy) {
+                *o = gate * g;
+            }
+            if train_gating {
+                let yrow = &y[slot * d..(slot + 1) * d];
+                let dg: f32 =
+                    gy.iter().zip(yrow.iter()).map(|(a, b)| a * b).sum();
+                let tok = &s.decisions[addr.replica].per_token[addr.row];
+                // slot of this expert in the token's gate vector (first
+                // match; gating-produced selections are distinct)
+                if let Some(p) = tok.experts.iter().position(|&te| te == e) {
+                    d_gates[addr.replica][addr.row][p] += dg;
+                }
+            }
+        }
+        // dW_out = hiddenᵀ · gout
+        let mut d_wout = vec![0f32; h * d];
+        matmul_tn(&hid, &gout, &mut d_wout, rows, h, d);
+        // d_hidden = gout · W_outᵀ, masked by the relu
+        let mut d_hid = vec![0f32; rows * h];
+        matmul_nt(&gout, &w.w_out, &mut d_hid, rows, h, d);
+        for (dh, hv) in d_hid.iter_mut().zip(hid.iter()) {
+            if *hv <= 0.0 {
+                *dh = 0.0;
+            }
+        }
+        // dW_in = xᵀ · d_hidden
+        let mut d_win = vec![0f32; d * h];
+        matmul_tn(&x.data, &d_hid, &mut d_win, rows, d, h);
+        for g in d_wout.iter().chain(d_win.iter()) {
+            grad_sq += (*g as f64) * (*g as f64);
+        }
+        expert_grads.push((d_win, d_wout));
+    }
+
+    // gating backward per replica: task + importance terms through the
+    // top-k softmax, load through the smooth estimator — all on the
+    // noise retained from the forward
+    let gate = if train_gating {
+        let mut acc: Option<GateGrads> = None;
+        for (r, dec) in s.decisions.iter().enumerate() {
+            let x = xs[r];
+            let b = x.shape[0];
+            let dldg: Vec<Vec<f32>> = dec
+                .per_token
+                .iter()
+                .zip(d_gates[r].iter())
+                .map(|(tok, task_g)| {
+                    tok.experts
+                        .iter()
+                        .zip(task_g.iter())
+                        .map(|(&e, &tg)| tg + d_imp[e])
+                        .collect()
+                })
+                .collect();
+            let eps_pri = dec.noise.as_ref().and_then(|ns| {
+                (!ns.primary.is_empty()).then_some(ns.primary.as_slice())
+            });
+            let g = if router.groups > 0 {
+                let gs = n / router.groups;
+                let wsec = router.w_g_sec.as_deref().ok_or_else(|| {
+                    anyhow!("hierarchical router needs secondary gates")
+                })?;
+                let eps_sec = dec.noise.as_ref().and_then(|ns| {
+                    (!ns.secondary.is_empty())
+                        .then_some(ns.secondary.as_slice())
+                });
+                hierarchical_gate_backward(
+                    &x.data,
+                    b,
+                    d,
+                    &router.w_g,
+                    router.w_noise.as_deref(),
+                    wsec,
+                    router.w_n_sec.as_deref(),
+                    router.groups,
+                    gs,
+                    router.k,
+                    eps_pri,
+                    eps_sec,
+                    &dec.per_token,
+                    &dldg,
+                )
+            } else {
+                flat_gate_backward(
+                    &x.data,
+                    b,
+                    d,
+                    &router.w_g,
+                    router.w_noise.as_deref(),
+                    n,
+                    router.k,
+                    eps_pri,
+                    &dec.per_token,
+                    &dldg,
+                    &d_load,
+                )
+            };
+            match &mut acc {
+                Some(t) => t.add(&g),
+                None => acc = Some(g),
+            }
+        }
+        if let Some(g) = &acc {
+            grad_sq += g.sq_norm();
+        }
+        acc
+    } else {
+        None
+    };
+
+    Ok((
+        StreamedLoss {
+            task,
+            balance,
+            cv_importance: (cv2_imp as f64).sqrt(),
+            cv_load: (cv2_load as f64).sqrt(),
+            grad_norm: grad_sq.sqrt(),
+        },
+        StreamedGrads { experts: expert_grads, gate },
+    ))
 }
 
 pub struct Trainer {
@@ -259,16 +574,15 @@ impl Trainer {
     }
 
     /// Initialize the artifact-free streamed state from the config
-    /// dims: small random expert weights, and gating weights perturbed
+    /// dims: small random expert weights, gating weights perturbed
     /// slightly away from the Appendix-A zero init so routing is
-    /// non-degenerate from step 0 (the artifact's training ramp does
-    /// this within a few steps).
+    /// non-degenerate from step 0, and fresh (zero) Adam moments.
     pub fn init_streamed(&self, seed: u64) -> StreamedTrainState {
         let c = &self.entry.config;
         let (d, h, n, k) = (c.d_model, c.expert_hidden, c.n_experts, c.k);
         let mut rng = Rng::new(seed);
         let scale = (2.0 / d.max(1) as f32).sqrt() * 0.5;
-        let weights = (0..n)
+        let weights: Vec<ExpertWeights> = (0..n)
             .map(|_| ExpertWeights {
                 w_in: (0..d * h).map(|_| rng.normal_f32() * scale).collect(),
                 w_out: (0..h * d).map(|_| rng.normal_f32() * scale).collect(),
@@ -283,15 +597,30 @@ impl Trainer {
             (0..d * n).map(|_| rng.normal_f32() * 0.1).collect(),
             Some((0..d * n).map(|_| rng.normal_f32() * 0.1).collect()),
         );
-        StreamedTrainState { router, weights, step: 0 }
+        let opt = StreamedOptState::zeros(&router, &weights);
+        StreamedTrainState { router, weights, opt, step: 0 }
+    }
+
+    /// Default options for [`Self::step_streamed_with`]: gating
+    /// learning on, balance-loss weights from the config.
+    pub fn streamed_options(&self, lr: f32) -> StreamedStepOptions {
+        StreamedStepOptions {
+            lr,
+            train_gating: true,
+            w_importance: self.entry.config.w_importance as f32,
+            w_load: self.entry.config.w_load as f32,
+        }
     }
 
     /// One artifact-free training step of the MoE sublayer (module
-    /// docs): forward on [`Scheduler::execute_streamed`], MSE loss
-    /// against `targets`, exact backprop through the gate-weighted
-    /// combine and the expert FFNs, SGD update of the expert weights.
-    /// `rng` draws the eq-4 routing noise (`None` = deterministic
-    /// routing).  Runs end to end on a bare offline checkout.
+    /// docs) with the default options: forward on
+    /// [`Scheduler::execute_streamed`], MSE loss against `targets`,
+    /// exact backprop through the combine, the expert FFNs *and* the
+    /// gating network (balance losses included), Adam update.  `rng`
+    /// draws the eq-4 routing noise (`None` = deterministic routing —
+    /// gating still trains through the clean logits, but the smooth
+    /// load loss needs noise).  Runs end to end on a bare offline
+    /// checkout.
     pub fn step_streamed(
         &self,
         sched: &Scheduler,
@@ -301,10 +630,27 @@ impl Trainer {
         lr: f32,
         rng: Option<&mut Rng>,
     ) -> Result<StreamedStepMetrics> {
-        let c = &self.entry.config;
-        let d = c.d_model;
+        let opts = self.streamed_options(lr);
+        self.step_streamed_with(sched, state, xs, targets, rng, &opts)
+    }
+
+    /// [`step_streamed`](Self::step_streamed) with explicit
+    /// [`StreamedStepOptions`] (frozen-gating baselines, custom
+    /// balance-loss weights).
+    pub fn step_streamed_with(
+        &self,
+        sched: &Scheduler,
+        state: &mut StreamedTrainState,
+        xs: &[TensorF],
+        targets: &[TensorF],
+        rng: Option<&mut Rng>,
+        opts: &StreamedStepOptions,
+    ) -> Result<StreamedStepMetrics> {
         if xs.len() != targets.len() {
             bail!("{} replica inputs but {} targets", xs.len(), targets.len());
+        }
+        if xs.is_empty() {
+            bail!("no replica inputs");
         }
         for (x, t) in xs.iter().zip(targets.iter()) {
             if x.shape != t.shape {
@@ -313,101 +659,47 @@ impl Trainer {
         }
         let t0 = Instant::now();
         let refs: Vec<&TensorF> = xs.iter().collect();
-        let s = sched.execute_streamed(&state.router, &refs, &state.weights, rng)?;
+        let s =
+            sched.execute_streamed(&state.router, &refs, &state.weights, rng)?;
 
-        // MSE loss and its gradient wrt the combined outputs
-        let n_el: usize = s.outs.iter().map(|t| t.data.len()).sum();
-        let scale = 2.0 / n_el.max(1) as f32;
-        let mut loss = 0.0f64;
-        let mut grads_y: Vec<Vec<f32>> = Vec::with_capacity(s.outs.len());
-        for (y, t) in s.outs.iter().zip(targets.iter()) {
-            let g = y
-                .data
-                .iter()
-                .zip(t.data.iter())
-                .map(|(a, b)| {
-                    let e = a - b;
-                    loss += (e * e) as f64;
-                    scale * e
-                })
-                .collect();
-            grads_y.push(g);
+        let (loss, grads) = streamed_backward(
+            &state.router,
+            &state.weights,
+            &refs,
+            targets,
+            &s,
+            opts.w_importance,
+            opts.w_load,
+            opts.train_gating,
+        )?;
+
+        // Adam updates (shared optimizer module); every tensor advances
+        // its own bias-correction clock, so tensors whose gradients
+        // start mid-run (gating un-frozen after baseline steps, a noise
+        // net that only sees noisy steps, fresh moments after a
+        // pre-Adam-checkpoint resume) warm up correctly instead of
+        // inheriting a stale clock and over-scaling their first updates
+        let p = AdamParams::default();
+        for ((w, (g_in, g_out)), (st_in, st_out)) in state
+            .weights
+            .iter_mut()
+            .zip(grads.experts.iter())
+            .zip(state.opt.experts.iter_mut())
+        {
+            st_in.update(&p, opts.lr, &mut w.w_in, g_in);
+            st_out.update(&p, opts.lr, &mut w.w_out, g_out);
         }
-        loss /= n_el.max(1) as f64;
-
-        // backprop per expert: dL/d(expert row) = gate · dL/dy[token]
-        // (eq 1 is linear in the expert outputs), then the standard
-        // two-layer relu-FFN backward; gather reuses the step's plan
-        let mut grad_sq = 0.0f64;
-        for (e, w) in state.weights.iter_mut().enumerate() {
-            let batch = &s.plan.per_expert[e];
-            let rows = batch.tokens.len();
-            if rows == 0 {
-                continue;
-            }
-            let h = w.hidden;
-            let x = Dispatcher::gather(&s.plan, e, &refs);
-            let mut gout = vec![0f32; rows * d];
-            for (slot, (addr, gate)) in
-                batch.tokens.iter().zip(batch.gates.iter()).enumerate()
-            {
-                let gy = &grads_y[addr.replica][addr.row * d..(addr.row + 1) * d];
-                for (o, g) in gout[slot * d..(slot + 1) * d].iter_mut().zip(gy) {
-                    *o = gate * g;
-                }
-            }
-            // recompute hidden activations (cheaper than caching them
-            // across the engine boundary)
-            let mut hid = vec![0f32; rows * h];
-            matmul(&x.data, &w.w_in, &mut hid, rows, d, h);
-            for v in hid.iter_mut() {
-                *v = v.max(0.0);
-            }
-            // dW_out = hiddenᵀ · gout
-            let mut d_wout = vec![0f32; h * d];
-            matmul_tn(&hid, &gout, &mut d_wout, rows, h, d);
-            // d_hidden = gout · W_outᵀ, masked by the relu
-            let mut d_hid = vec![0f32; rows * h];
-            matmul_nt(&gout, &w.w_out, &mut d_hid, rows, h, d);
-            for (dh, hv) in d_hid.iter_mut().zip(hid.iter()) {
-                if *hv <= 0.0 {
-                    *dh = 0.0;
-                }
-            }
-            // dW_in = xᵀ · d_hidden
-            let mut d_win = vec![0f32; d * h];
-            matmul_tn(&x.data, &d_hid, &mut d_win, rows, d, h);
-
-            for g in d_wout.iter().chain(d_win.iter()) {
-                grad_sq += (*g as f64) * (*g as f64);
-            }
-            for (wv, g) in w.w_out.iter_mut().zip(d_wout.iter()) {
-                *wv -= lr * g;
-            }
-            for (wv, g) in w.w_in.iter_mut().zip(d_win.iter()) {
-                *wv -= lr * g;
-            }
+        if let Some(g) = &grads.gate {
+            state.opt.update_gating(&p, opts.lr, &mut state.router, g)?;
         }
 
-        // balance telemetry over the merged decisions (reported, not
-        // trained — gating is frozen within the step)
-        let n = c.n_experts;
-        let mut imp = vec![0f32; n];
-        let mut load = vec![0f32; n];
-        for dec in &s.decisions {
-            for (a, v) in imp.iter_mut().zip(dec.importance.iter()) {
-                *a += v;
-            }
-            for (a, v) in load.iter_mut().zip(dec.load.iter()) {
-                *a += v;
-            }
-        }
         let metrics = StreamedStepMetrics {
             step: state.step,
-            loss,
-            grad_norm: grad_sq.sqrt(),
-            cv_importance: (cv_squared(&imp) as f64).sqrt(),
-            cv_load: (cv_squared(&load) as f64).sqrt(),
+            loss: loss.task,
+            balance_loss: loss.balance,
+            grad_norm: loss.grad_norm,
+            cv_importance: loss.cv_importance,
+            cv_load: loss.cv_load,
             step_time: t0.elapsed().as_secs_f64(),
             stats: s.stats,
         };
@@ -444,73 +736,11 @@ impl Trainer {
     }
 }
 
-/// `out (k, n) = aᵀ · b` for row-major `a (m, k)`, `b (m, n)`.  Walks
-/// `a`/`b` row by row so the inner loops stream contiguous memory.
-fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (av, orow) in arow.iter().zip(out.chunks_mut(n)) {
-            for (o, bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out (m, n) = a · bᵀ` for row-major `a (m, k)`, `b (n, k)`.
-fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(out.len(), m * n);
-    for (arow, orow) in a.chunks(k).zip(out.chunks_mut(n)) {
-        for (bv, o) in b.chunks(k).zip(orow.iter_mut()) {
-            *o = arow.iter().zip(bv.iter()).map(|(x, y)| x * y).sum();
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::scheduler::ExpertBackend;
     use crate::coordinator::ShardLayout;
-    use crate::util::prop;
-
-    #[test]
-    fn transpose_matmuls_match_naive() {
-        prop::forall("tn/nt matmuls", |rng| {
-            let (m, k, n) = (
-                prop::dim(rng, 1, 6),
-                prop::dim(rng, 1, 5),
-                prop::dim(rng, 1, 4),
-            );
-            let a = prop::vec_f32(rng, m * k, 1.0);
-            let b = prop::vec_f32(rng, m * n, 1.0);
-            let mut got = vec![0f32; k * n];
-            matmul_tn(&a, &b, &mut got, m, k, n);
-            for p in 0..k {
-                for q in 0..n {
-                    let want: f32 =
-                        (0..m).map(|i| a[i * k + p] * b[i * n + q]).sum();
-                    assert!((got[p * n + q] - want).abs() < 1e-4);
-                }
-            }
-            let c = prop::vec_f32(rng, n * k, 1.0);
-            let mut got = vec![0f32; m * n];
-            matmul_nt(&a, &c, &mut got, m, n, k);
-            for i in 0..m {
-                for j in 0..n {
-                    let want: f32 =
-                        (0..k).map(|l| a[i * k + l] * c[j * k + l]).sum();
-                    assert!((got[i * n + j] - want).abs() < 1e-4);
-                }
-            }
-        });
-    }
 
     #[test]
     fn artifact_methods_error_cleanly_without_artifacts() {
@@ -526,8 +756,9 @@ mod tests {
     fn streamed_training_reduces_loss_without_artifacts() {
         // the acceptance path: Trainer::step_streamed end to end on a
         // bare checkout — forward on the dependency-driven streamed
-        // engine, native backward, SGD.  Deterministic (eval routing,
-        // fixed batch), so the loss trajectory is exactly reproducible.
+        // engine, native backward through combine + experts + gating,
+        // Adam.  Deterministic (eval routing, fixed batch), so the loss
+        // trajectory is exactly reproducible.
         let (d, h, n, k) = (8, 16, 6, 2);
         let trainer =
             Trainer::native(ModelConfig::native_moe("native-moe", d, n, k, h, 2, 16));
@@ -551,9 +782,10 @@ mod tests {
         let mut last = f64::NAN;
         for i in 0..40 {
             let m = trainer
-                .step_streamed(&sched, &mut state, &xs, &targets, 0.05, None)
+                .step_streamed(&sched, &mut state, &xs, &targets, 0.01, None)
                 .unwrap();
             assert!(m.loss.is_finite(), "step {i}: loss diverged");
+            assert!(m.balance_loss.is_finite());
             assert!(m.grad_norm.is_finite());
             assert!((0.0..=1.0).contains(&m.stats.combine_overlap_ratio()));
             if i == 0 {
@@ -564,11 +796,52 @@ mod tests {
         assert_eq!(state.step, 40);
         assert!(
             last < first,
-            "SGD on the streamed step must descend: {first} -> {last}"
+            "Adam on the streamed step must descend: {first} -> {last}"
         );
         // telemetry flows through from the engine
         assert_eq!(state.weights.len(), n);
         assert!(state.router.n_experts == n);
+        // gating actually moved (it is no longer frozen) and its Adam
+        // moments are live
+        assert!(state.opt.w_g.m.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn frozen_gating_option_leaves_router_untouched() {
+        let (d, h, n, k) = (6, 10, 4, 2);
+        let trainer = Trainer::native(ModelConfig::native_moe(
+            "native-frozen", d, n, k, h, 1, 8,
+        ));
+        let mut state = trainer.init_streamed(7);
+        let w_g_before = state.router.w_g.clone();
+        let w_n_before = state.router.w_noise.clone();
+        let sched = Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+        let mut rng = Rng::new(5);
+        let xs = vec![TensorF::new(
+            vec![8, d],
+            (0..8 * d).map(|_| rng.normal_f32()).collect(),
+        )];
+        let targets = vec![TensorF::new(
+            vec![8, d],
+            (0..8 * d).map(|_| rng.normal_f32() * 0.5).collect(),
+        )];
+        let opts = StreamedStepOptions {
+            lr: 0.01,
+            train_gating: false,
+            w_importance: 0.1,
+            w_load: 0.1,
+        };
+        let mut nrng = rng.fold_in(1);
+        let m = trainer
+            .step_streamed_with(
+                &sched, &mut state, &xs, &targets, Some(&mut nrng), &opts,
+            )
+            .unwrap();
+        assert_eq!(state.router.w_g, w_g_before, "frozen gating moved");
+        assert_eq!(state.router.w_noise, w_n_before);
+        assert!(m.balance_loss.is_finite());
+        // experts still train
+        assert!(state.opt.experts[0].0.m.iter().any(|v| *v != 0.0));
     }
 
     #[test]

@@ -34,6 +34,66 @@ pub fn vec_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32() * scale).collect()
 }
 
+/// Central finite difference of `f` at `x0` with nominal step `h`.
+/// The perturbed points are rounded to f32 (parameters are f32), so the
+/// quotient divides by the *achieved* step `(x0+h) − (x0−h)`, not the
+/// nominal `2h` — removing the quantization error that would otherwise
+/// dominate near large `x0`.
+pub fn central_diff(f: &mut dyn FnMut(f32) -> f64, x0: f32, h: f32) -> f64 {
+    let (wp, wm) = (x0 + h, x0 - h);
+    let step = wp as f64 - wm as f64;
+    assert!(step > 0.0, "step underflow at x0={x0} h={h}");
+    (f(wp) - f(wm)) / step
+}
+
+/// Check an analytic gradient against central finite differences, one
+/// parameter at a time: `loss` is evaluated on a perturbed copy of
+/// `base` (±`h` per coordinate, via [`central_diff`]) and each quotient
+/// must match `analytic[i]` within
+/// `|fd − an| ≤ tol · max(1, |fd|, |an|)` — relative for large
+/// gradients, absolute at `tol` for small ones.  Panics with the
+/// offending index and both values.  `loss` should be the *frozen-branch*
+/// loss (fixed top-k selection / thresholds / relu masks) so piecewise
+/// boundaries — exact duplicate logits included — stay differentiable;
+/// see `rust/tests/grad_check.rs` for the harness built on this.
+pub fn grad_check(
+    name: &str,
+    base: &[f32],
+    analytic: &[f32],
+    mut loss: impl FnMut(&[f32]) -> f64,
+    h: f32,
+    tol: f64,
+) {
+    assert_eq!(
+        base.len(),
+        analytic.len(),
+        "{name}: {} params but {} analytic grads",
+        base.len(),
+        analytic.len()
+    );
+    let mut w = base.to_vec();
+    for i in 0..w.len() {
+        let x0 = base[i];
+        let fd = central_diff(
+            &mut |x| {
+                w[i] = x;
+                loss(&w)
+            },
+            x0,
+            h,
+        );
+        w[i] = x0;
+        let an = analytic[i] as f64;
+        let scale = 1f64.max(fd.abs()).max(an.abs());
+        assert!(
+            (fd - an).abs() <= tol * scale,
+            "{name}[{i}]: analytic {an:.6e} vs central difference {fd:.6e} \
+             (|Δ| {:.3e} > {tol:.1e}·{scale:.3e})",
+            (fd - an).abs()
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,5 +118,41 @@ mod tests {
             let d = dim(&mut rng, 3, 9);
             assert!((3..=9).contains(&d));
         }
+    }
+
+    #[test]
+    fn central_diff_recovers_polynomial_slope() {
+        // f(x) = x³ − 2x: f'(x) = 3x² − 2
+        let mut f = |x: f32| {
+            let x = x as f64;
+            x * x * x - 2.0 * x
+        };
+        for x0 in [-1.5f32, -0.2, 0.0, 0.8, 2.0] {
+            let fd = central_diff(&mut f, x0, 1e-3);
+            let want = 3.0 * (x0 as f64) * (x0 as f64) - 2.0;
+            assert!((fd - want).abs() < 1e-4, "x0={x0}: {fd} vs {want}");
+        }
+    }
+
+    #[test]
+    fn grad_check_accepts_exact_and_rejects_wrong_gradients() {
+        // L(w) = Σ w_i² + w_0·w_1 over f64
+        let base = [0.5f32, -1.25, 2.0];
+        let loss = |w: &[f32]| -> f64 {
+            let s: f64 = w.iter().map(|x| (*x as f64) * (*x as f64)).sum();
+            s + w[0] as f64 * w[1] as f64
+        };
+        let good = [
+            2.0 * base[0] + base[1],
+            2.0 * base[1] + base[0],
+            2.0 * base[2],
+        ];
+        grad_check("quadratic", &base, &good, loss, 1e-3, 1e-4);
+        let mut bad = good;
+        bad[1] += 0.1;
+        let r = std::panic::catch_unwind(|| {
+            grad_check("bad quadratic", &base, &bad, loss, 1e-3, 1e-4)
+        });
+        assert!(r.is_err(), "a wrong gradient must fail the check");
     }
 }

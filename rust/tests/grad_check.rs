@@ -1,0 +1,924 @@
+//! Finite-difference proof of the native backward pass.
+//!
+//! Every analytic gradient of the streamed trainer —
+//! `train::streamed_backward`: task MSE through the eq-1 combine, the
+//! expert FFNs, the noisy top-k softmax into `w_g`/`w_noise` (and the
+//! hierarchical secondaries), the eq-6/7 importance loss, and the eq-8
+//! smooth load loss through the normal-CDF estimator *including its
+//! threshold term* — is checked against central finite differences of
+//! an independent **f64 frozen-branch oracle**.
+//!
+//! "Frozen branch" is the load-bearing idea: top-k selection, the
+//! eq-10 threshold indices/membership, and the relu masks are all
+//! piecewise-constant, so the analytic gradient is the gradient of the
+//! *active branch*.  The oracle freezes those structures at the base
+//! point (taken from the production forward's retained decisions) and
+//! evaluates the loss in f64, which makes the finite differences exact
+//! for that branch — even at deliberate duplicate-top-k ties, where a
+//! naive FD would step across the selection boundary.  The f64
+//! evaluation is what makes the 1e-4 relative tolerance honest: an f32
+//! loss would bury the quotient in rounding noise.
+//!
+//! Checked over randomized shapes (k, experts, hierarchical vs flat,
+//! noise on/off, duplicate ties), via `util::prop::grad_check`.  The
+//! same file carries the seed-determinism guard for the
+//! pre-drawn-noise contract and the end-to-end acceptance run: with
+//! the balance losses on, per-step balance CVs fall below the
+//! frozen-gating baseline while the task loss stays no worse.
+
+use moe::coordinator::router::RouterBackend;
+use moe::coordinator::scheduler::{
+    ExpertBackend, ExpertWeights, Scheduler, ShardLayout,
+};
+use moe::coordinator::{Router, StreamedStep};
+use moe::gating::erf;
+use moe::gating::noisy_topk::noisy_topk_block;
+use moe::runtime::{ModelConfig, TensorF};
+use moe::train::{streamed_backward, StreamedStepOptions, Trainer};
+use moe::util::prop;
+use moe::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// f64 mirrors of the forward math (same branch structure as the f32
+// production code, so base-point values agree to f32 precision)
+
+fn softplus64(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+fn phi64(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn cv2_64(v: &[f64]) -> f64 {
+    if v.len() <= 1 {
+        return 0.0;
+    }
+    let n = v.len() as f64;
+    let mean = v.iter().sum::<f64>() / n;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    var / (mean * mean + 1e-10)
+}
+
+/// softmax over the given values (f64, max-shifted like the forward).
+fn softmax64(vals: &[f64]) -> Vec<f64> {
+    let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = vals.iter().map(|v| (v - max).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// `x_row · w[:, j]` for row-major w (d, n), all f64.
+fn dot_col64(x: &[f64], w: &[f32], d: usize, n: usize, j: usize) -> f64 {
+    (0..d).map(|l| x[l] * w[l * n + j] as f64).sum()
+}
+
+// ---------------------------------------------------------------------
+// the model under test and its frozen branch structure
+
+#[derive(Clone)]
+struct Params {
+    w_g: Vec<f32>,
+    w_noise: Option<Vec<f32>>,
+    w_g_sec: Option<Vec<f32>>,
+    w_n_sec: Option<Vec<f32>>,
+    experts: Vec<ExpertWeights>,
+}
+
+struct Model {
+    d: usize,
+    n: usize,
+    k: usize,
+    /// 0 = flat
+    groups: usize,
+    gs: usize,
+    w_importance: f64,
+    w_load: f64,
+}
+
+/// Everything piecewise-constant, captured at the base point.
+struct Frozen {
+    /// [replica][token] selected (composed) experts, forward slot order
+    sel: Vec<Vec<Vec<usize>>>,
+    /// hierarchical: [replica][token] primary groups per slot
+    pri: Vec<Vec<Vec<usize>>>,
+    /// hierarchical: [replica][token][primary slot] secondary picks
+    sec: Vec<Vec<Vec<Vec<usize>>>>,
+    /// flat smooth load: [replica][token] (k-th, k+1-th) competitor
+    /// indices under the forward's rank rule
+    thr: Vec<Vec<(usize, usize)>>,
+    /// flat smooth load: [replica][token][expert] in-top-k by value
+    member: Vec<Vec<Vec<bool>>>,
+    /// [replica][token][slot][hidden unit] relu mask of the selected
+    /// expert's preactivation (f32 sign, matching the backward)
+    relu: Vec<Vec<Vec<Vec<bool>>>>,
+    load_on: bool,
+}
+
+struct Inputs {
+    xs: Vec<Vec<f64>>,
+    targets: Vec<Vec<f64>>,
+    rows: Vec<usize>,
+    eps_pri: Vec<Option<Vec<f64>>>,
+    eps_sec: Vec<Option<Vec<f64>>>,
+    n_el: usize,
+}
+
+/// Rank order of the forward (`select_topk` / `topk_softmax_via_sort`):
+/// descending value, ties to the lower index.
+fn rank_order_f32(h: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..h.len()).collect();
+    idx.sort_by(|&a, &b| {
+        h[b].partial_cmp(&h[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Capture the frozen branch structure at the base point from the
+/// production forward's retained decisions (+ f32 recomputes that are
+/// bit-identical to the backward's own).
+fn freeze(
+    m: &Model,
+    p: &Params,
+    xs: &[TensorF],
+    s: &StreamedStep,
+    load_on: bool,
+) -> Frozen {
+    let (d, n) = (m.d, m.n);
+    let k2 = m.k.min(m.gs.max(1));
+    let mut fr = Frozen {
+        sel: Vec::new(),
+        pri: Vec::new(),
+        sec: Vec::new(),
+        thr: Vec::new(),
+        member: Vec::new(),
+        relu: Vec::new(),
+        load_on,
+    };
+    for (r, dec) in s.decisions.iter().enumerate() {
+        let x = &xs[r];
+        let b = x.shape[0];
+        let mut sel_r = Vec::with_capacity(b);
+        let mut pri_r = Vec::new();
+        let mut sec_r = Vec::new();
+        let mut relu_r = Vec::with_capacity(b);
+        for (t, tok) in dec.per_token.iter().enumerate() {
+            sel_r.push(tok.experts.clone());
+            if m.groups > 0 {
+                let pri: Vec<usize> = (0..tok.experts.len() / k2)
+                    .map(|si| tok.experts[si * k2] / m.gs)
+                    .collect();
+                let sec: Vec<Vec<usize>> = (0..pri.len())
+                    .map(|si| {
+                        (0..k2)
+                            .map(|sj| tok.experts[si * k2 + sj] % m.gs)
+                            .collect()
+                    })
+                    .collect();
+                pri_r.push(pri);
+                sec_r.push(sec);
+            }
+            // relu masks: f32 preactivations in the same l-increasing
+            // reduction order as the production matmul (bit-identical)
+            let xrow = &x.data[t * d..(t + 1) * d];
+            let mut relu_t = Vec::with_capacity(tok.experts.len());
+            for &e in &tok.experts {
+                let w = &p.experts[e];
+                let h = w.hidden;
+                let mut mask = vec![false; h];
+                for (j, mk) in mask.iter_mut().enumerate() {
+                    let mut acc = 0f32;
+                    for (l, &xv) in xrow.iter().enumerate() {
+                        acc += xv * w.w_in[l * h + j];
+                    }
+                    *mk = acc > 0.0;
+                }
+                relu_t.push(mask);
+            }
+            relu_r.push(relu_t);
+        }
+        fr.sel.push(sel_r);
+        fr.pri.push(pri_r);
+        fr.sec.push(sec_r);
+        fr.relu.push(relu_r);
+
+        // flat load thresholds from the f32 noisy logits, recomputed
+        // exactly as the backward recomputes them
+        if load_on {
+            let eps = dec
+                .noise
+                .as_ref()
+                .map(|ns| ns.primary.as_slice())
+                .expect("load-on freeze needs retained noise");
+            let g = noisy_topk_block(
+                &x.data,
+                b,
+                d,
+                &p.w_g,
+                p.w_noise.as_deref(),
+                n,
+                m.k,
+                Some(eps),
+            );
+            let mut thr_r = Vec::with_capacity(b);
+            let mut mem_r = Vec::with_capacity(b);
+            for t in 0..b {
+                let noisy = &g.noisy[t * n..(t + 1) * n];
+                let order = rank_order_f32(noisy);
+                let (jk, jk1) = (order[m.k - 1], order[m.k]);
+                let kth = noisy[jk];
+                thr_r.push((jk, jk1));
+                mem_r.push((0..n).map(|i| noisy[i] >= kth).collect());
+            }
+            fr.thr.push(thr_r);
+            fr.member.push(mem_r);
+        } else {
+            fr.thr.push(Vec::new());
+            fr.member.push(Vec::new());
+        }
+    }
+    fr
+}
+
+/// The frozen-branch loss in f64: MSE + w_imp·CV²(Importance)
+/// (+ w_load·CV²(Load) through the smooth estimator when `load_on`).
+fn frozen_loss(m: &Model, inp: &Inputs, fr: &Frozen, p: &Params) -> f64 {
+    let (d, n) = (m.d, m.n);
+    let n_pri = if m.groups > 0 { m.groups } else { n };
+    let mut mse = 0.0f64;
+    let mut imp = vec![0.0f64; n];
+    let mut load = vec![0.0f64; n];
+    for (r, x) in inp.xs.iter().enumerate() {
+        let b = inp.rows[r];
+        let eps = inp.eps_pri[r].as_deref();
+        for t in 0..b {
+            let xrow = &x[t * d..(t + 1) * d];
+            // primary (or flat) logits of this row
+            let mut clean = vec![0.0f64; n_pri];
+            let mut raw = vec![0.0f64; n_pri];
+            let mut noisy = vec![0.0f64; n_pri];
+            for j in 0..n_pri {
+                clean[j] = dot_col64(xrow, &p.w_g, d, n_pri, j);
+                noisy[j] = clean[j];
+                if let (Some(wn), Some(eps)) = (p.w_noise.as_deref(), eps) {
+                    raw[j] = dot_col64(xrow, wn, d, n_pri, j);
+                    noisy[j] +=
+                        eps[t * n_pri + j] * softplus64(raw[j]);
+                }
+            }
+            // gates over the frozen selection
+            let gates: Vec<f64> = if m.groups == 0 {
+                let sel = &fr.sel[r][t];
+                let vals: Vec<f64> = sel.iter().map(|&e| noisy[e]).collect();
+                softmax64(&vals)
+            } else {
+                let pri = &fr.pri[r][t];
+                let pvals: Vec<f64> = pri.iter().map(|&g| noisy[g]).collect();
+                let pg = softmax64(&pvals);
+                let eps_sec = inp.eps_sec[r].as_deref();
+                let mut composed = Vec::new();
+                for (si, (&gi, &pw)) in
+                    pri.iter().zip(pg.iter()).enumerate()
+                {
+                    // this slot's secondary logits over the full group
+                    let mut h = vec![0.0f64; m.gs];
+                    for (j, hv) in h.iter_mut().enumerate() {
+                        *hv = (0..d)
+                            .map(|l| {
+                                xrow[l]
+                                    * p.w_g_sec.as_ref().unwrap()
+                                        [l * m.groups * m.gs + gi * m.gs + j]
+                                        as f64
+                            })
+                            .sum();
+                        if let (Some(wn), Some(eps)) =
+                            (p.w_n_sec.as_deref(), eps_sec)
+                        {
+                            let rawj: f64 = (0..d)
+                                .map(|l| {
+                                    xrow[l]
+                                        * wn[l * m.groups * m.gs
+                                            + gi * m.gs
+                                            + j]
+                                            as f64
+                                })
+                                .sum();
+                            *hv += eps[t * m.k * m.gs + si * m.gs + j]
+                                * softplus64(rawj);
+                        }
+                    }
+                    let sec_sel = &fr.sec[r][t][si];
+                    let svals: Vec<f64> =
+                        sec_sel.iter().map(|&j| h[j]).collect();
+                    let sg = softmax64(&svals);
+                    for sw in sg {
+                        composed.push(pw * sw);
+                    }
+                }
+                composed
+            };
+            // frozen-mask expert mixture -> MSE
+            let sel = &fr.sel[r][t];
+            let mut y = vec![0.0f64; d];
+            for (slot, (&e, &g)) in sel.iter().zip(gates.iter()).enumerate() {
+                let w = &p.experts[e];
+                let h = w.hidden;
+                let mask = &fr.relu[r][t][slot];
+                let mut hid = vec![0.0f64; h];
+                for (j, hv) in hid.iter_mut().enumerate() {
+                    if !mask[j] {
+                        continue;
+                    }
+                    *hv = (0..d)
+                        .map(|l| xrow[l] * w.w_in[l * h + j] as f64)
+                        .sum();
+                }
+                for (o, yv) in y.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for (j, hv) in hid.iter().enumerate() {
+                        acc += hv * w.w_out[j * d + o] as f64;
+                    }
+                    *yv += g * acc;
+                }
+                imp[e] += g;
+            }
+            for (o, yv) in y.iter().enumerate() {
+                let e = yv - inp.targets[r][t * d + o];
+                mse += e * e;
+            }
+            // smooth load over the frozen threshold structure
+            if fr.load_on {
+                let (jk, jk1) = fr.thr[r][t];
+                let member = &fr.member[r][t];
+                for i in 0..n {
+                    let thr = if member[i] { noisy[jk1] } else { noisy[jk] };
+                    let sigma = softplus64(raw[i]) + 1e-10;
+                    load[i] += phi64((clean[i] - thr) / sigma);
+                }
+            }
+        }
+    }
+    let mut total = mse / inp.n_el.max(1) as f64
+        + m.w_importance * cv2_64(&imp);
+    if fr.load_on {
+        total += m.w_load * cv2_64(&load);
+    }
+    total
+}
+
+// ---------------------------------------------------------------------
+// harness plumbing
+
+/// Run the production forward + backward, build the oracle, and check
+/// every analytic gradient against central differences of the frozen
+/// f64 loss at 1e-4 relative tolerance.
+fn check_case(
+    tag: &str,
+    m: &Model,
+    p: &Params,
+    xs: Vec<TensorF>,
+    targets: Vec<TensorF>,
+    devices: usize,
+    rng: Option<&mut Rng>,
+) {
+    let router = if m.groups > 0 {
+        Router {
+            backend: RouterBackend::Native,
+            n_experts: m.n,
+            k: m.k,
+            groups: m.groups,
+            d_model: m.d,
+            w_g: p.w_g.clone(),
+            w_noise: p.w_noise.clone(),
+            w_g_sec: p.w_g_sec.clone(),
+            w_n_sec: p.w_n_sec.clone(),
+        }
+    } else {
+        Router::flat_native(
+            m.d,
+            m.n,
+            m.k,
+            p.w_g.clone(),
+            p.w_noise.clone(),
+        )
+    };
+    let with_noise = rng.is_some();
+    let sched =
+        Scheduler::new(ShardLayout::new(devices, m.n), ExpertBackend::Native);
+    let refs: Vec<&TensorF> = xs.iter().collect();
+    let s = sched
+        .execute_streamed(&router, &refs, &p.experts, rng)
+        .unwrap();
+    if with_noise {
+        assert!(
+            s.decisions.iter().all(|dec| dec.noise.is_some()),
+            "{tag}: training path must retain the pre-drawn noise"
+        );
+    }
+    let (loss, grads) = streamed_backward(
+        &router,
+        &p.experts,
+        &refs,
+        &targets,
+        &s,
+        m.w_importance as f32,
+        m.w_load as f32,
+        true,
+    )
+    .unwrap();
+    let gate = grads.gate.as_ref().expect("gating gradients requested");
+
+    let load_on = with_noise
+        && m.groups == 0
+        && p.w_noise.is_some()
+        && m.k < m.n
+        && m.w_load != 0.0;
+    let fr = freeze(m, p, &xs, &s, load_on);
+    let inp = Inputs {
+        xs: xs.iter().map(|x| x.data.iter().map(|v| *v as f64).collect()).collect(),
+        targets: targets
+            .iter()
+            .map(|x| x.data.iter().map(|v| *v as f64).collect())
+            .collect(),
+        rows: xs.iter().map(|x| x.shape[0]).collect(),
+        eps_pri: s
+            .decisions
+            .iter()
+            .map(|dec| {
+                dec.noise.as_ref().and_then(|ns| {
+                    (!ns.primary.is_empty()).then(|| {
+                        ns.primary.iter().map(|v| *v as f64).collect()
+                    })
+                })
+            })
+            .collect(),
+        eps_sec: s
+            .decisions
+            .iter()
+            .map(|dec| {
+                dec.noise.as_ref().and_then(|ns| {
+                    (!ns.secondary.is_empty()).then(|| {
+                        ns.secondary.iter().map(|v| *v as f64).collect()
+                    })
+                })
+            })
+            .collect(),
+        n_el: xs.iter().map(|x| x.data.len()).sum(),
+    };
+
+    // the oracle must reproduce the production loss at the base point
+    // (validates the mirror before any FD is trusted)
+    let base = frozen_loss(m, &inp, &fr, p);
+    let expect = loss.task
+        + m.w_importance * loss.cv_importance * loss.cv_importance
+        + if load_on {
+            m.w_load * loss.cv_load * loss.cv_load
+        } else {
+            0.0
+        };
+    assert!(
+        (base - expect).abs() <= 1e-3 * expect.abs().max(1.0),
+        "{tag}: oracle loss {base} vs production {expect}"
+    );
+
+    // h = 5e-4 keeps the truncation term of the normal-CDF load path
+    // (third derivatives grow like 1/σ³) well under tol; the achieved-
+    // step division in `central_diff` keeps f32 quantization out of it
+    let (h, tol) = (5e-4f32, 1e-4f64);
+    prop::grad_check(
+        &format!("{tag}/w_g"),
+        &p.w_g,
+        &gate.w_g,
+        |w| {
+            let mut p2 = p.clone();
+            p2.w_g = w.to_vec();
+            frozen_loss(m, &inp, &fr, &p2)
+        },
+        h,
+        tol,
+    );
+    if with_noise && p.w_noise.is_some() {
+        let an = gate
+            .w_noise
+            .as_ref()
+            .expect("noise net trained on the noisy path");
+        prop::grad_check(
+            &format!("{tag}/w_noise"),
+            p.w_noise.as_ref().unwrap(),
+            an,
+            |w| {
+                let mut p2 = p.clone();
+                p2.w_noise = Some(w.to_vec());
+                frozen_loss(m, &inp, &fr, &p2)
+            },
+            h,
+            tol,
+        );
+    } else {
+        assert!(
+            gate.w_noise.is_none(),
+            "{tag}: deterministic routing must not grad the noise net"
+        );
+    }
+    if let Some(wsec) = &p.w_g_sec {
+        let an = gate.w_g_sec.as_ref().expect("secondary gate grads");
+        prop::grad_check(
+            &format!("{tag}/w_g_sec"),
+            wsec,
+            an,
+            |w| {
+                let mut p2 = p.clone();
+                p2.w_g_sec = Some(w.to_vec());
+                frozen_loss(m, &inp, &fr, &p2)
+            },
+            h,
+            tol,
+        );
+    }
+    if with_noise {
+        if let (Some(wnsec), Some(an)) = (&p.w_n_sec, gate.w_n_sec.as_ref()) {
+            prop::grad_check(
+                &format!("{tag}/w_n_sec"),
+                wnsec,
+                an,
+                |w| {
+                    let mut p2 = p.clone();
+                    p2.w_n_sec = Some(w.to_vec());
+                    frozen_loss(m, &inp, &fr, &p2)
+                },
+                h,
+                tol,
+            );
+        }
+    }
+    for (e, (g_in, g_out)) in grads.experts.iter().enumerate() {
+        prop::grad_check(
+            &format!("{tag}/expert{e}/w_in"),
+            &p.experts[e].w_in,
+            g_in,
+            |w| {
+                let mut p2 = p.clone();
+                p2.experts[e].w_in = w.to_vec();
+                frozen_loss(m, &inp, &fr, &p2)
+            },
+            h,
+            tol,
+        );
+        prop::grad_check(
+            &format!("{tag}/expert{e}/w_out"),
+            &p.experts[e].w_out,
+            g_out,
+            |w| {
+                let mut p2 = p.clone();
+                p2.experts[e].w_out = w.to_vec();
+                frozen_loss(m, &inp, &fr, &p2)
+            },
+            h,
+            tol,
+        );
+    }
+}
+
+fn mk_experts(rng: &mut Rng, n: usize, d: usize, h: usize) -> Vec<ExpertWeights> {
+    (0..n)
+        .map(|_| ExpertWeights {
+            w_in: prop::vec_f32(rng, d * h, 0.4),
+            w_out: prop::vec_f32(rng, h * d, 0.4),
+            d_model: d,
+            hidden: h,
+        })
+        .collect()
+}
+
+fn mk_batch(rng: &mut Rng, replicas: usize, rows: usize, d: usize, s: f32)
+    -> Vec<TensorF> {
+    (0..replicas)
+        .map(|_| {
+            TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, s))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// the checks
+
+#[test]
+fn flat_gating_gradients_match_central_differences_with_noise() {
+    // the full stack: task + importance + smooth load, noise net live —
+    // randomized (b, d, n, k, replicas, devices) shapes
+    for case in 0..6u64 {
+        let rng = &mut prop::case_rng(1000 + case);
+        let d = prop::dim(rng, 3, 5);
+        let n = prop::dim(rng, 3, 6);
+        let k = prop::dim(rng, 1, (n - 1).min(3));
+        let hdim = prop::dim(rng, 3, 6);
+        let replicas = prop::dim(rng, 1, 2);
+        let rows = prop::dim(rng, 3, 7);
+        let devices = prop::dim(rng, 1, 3);
+        let m = Model {
+            d,
+            n,
+            k,
+            groups: 0,
+            gs: 0,
+            w_importance: 0.1,
+            w_load: 0.1,
+        };
+        let p = Params {
+            w_g: prop::vec_f32(rng, d * n, 0.5),
+            // modest noise-net scale keeps σ = softplus(x·W_noise) away
+            // from the sharp small-σ regime of the load estimator
+            w_noise: Some(prop::vec_f32(rng, d * n, 0.25)),
+            w_g_sec: None,
+            w_n_sec: None,
+            experts: mk_experts(rng, n, d, hdim),
+        };
+        let xs = mk_batch(rng, replicas, rows, d, 1.0);
+        let targets = mk_batch(rng, replicas, rows, d, 0.5);
+        let mut nrng = rng.fold_in(77);
+        check_case(
+            &format!("flat-noise#{case}"),
+            &m,
+            &p,
+            xs,
+            targets,
+            devices,
+            Some(&mut nrng),
+        );
+    }
+}
+
+#[test]
+fn flat_gating_gradients_match_without_noise() {
+    // deterministic routing: gating still trains through the clean
+    // logits (task + importance); the noise net and the load loss are
+    // inert and must stay gradient-free
+    for case in 0..4u64 {
+        let rng = &mut prop::case_rng(2000 + case);
+        let d = prop::dim(rng, 3, 5);
+        let n = prop::dim(rng, 3, 6);
+        let k = prop::dim(rng, 1, n.min(3));
+        let hdim = prop::dim(rng, 3, 6);
+        let m = Model {
+            d,
+            n,
+            k,
+            groups: 0,
+            gs: 0,
+            w_importance: 0.15,
+            w_load: 0.1,
+        };
+        let p = Params {
+            w_g: prop::vec_f32(rng, d * n, 0.5),
+            w_noise: Some(prop::vec_f32(rng, d * n, 0.4)),
+            w_g_sec: None,
+            w_n_sec: None,
+            experts: mk_experts(rng, n, d, hdim),
+        };
+        let xs = mk_batch(rng, 1, prop::dim(rng, 4, 8), d, 1.0);
+        let targets: Vec<TensorF> = xs
+            .iter()
+            .map(|x| {
+                TensorF::new(
+                    x.shape.clone(),
+                    prop::vec_f32(rng, x.data.len(), 0.5),
+                )
+            })
+            .collect();
+        check_case(&format!("flat-eval#{case}"), &m, &p, xs, targets, 2, None);
+    }
+}
+
+#[test]
+fn hierarchical_gradients_match_central_differences() {
+    // Appendix-B two-level gating: task + importance through both
+    // softmaxes into the primary and secondary nets, with live noise
+    for case in 0..4u64 {
+        let rng = &mut prop::case_rng(3000 + case);
+        let d = prop::dim(rng, 3, 4);
+        let a = prop::dim(rng, 2, 3);
+        let gs = prop::dim(rng, 2, 3);
+        let k = prop::dim(rng, 1, a.min(2));
+        let n = a * gs;
+        let hdim = prop::dim(rng, 3, 5);
+        let m = Model {
+            d,
+            n,
+            k,
+            groups: a,
+            gs,
+            w_importance: 0.1,
+            w_load: 0.1,
+        };
+        let p = Params {
+            w_g: prop::vec_f32(rng, d * a, 0.5),
+            w_noise: Some(prop::vec_f32(rng, d * a, 0.3)),
+            w_g_sec: Some(prop::vec_f32(rng, d * a * gs, 0.5)),
+            w_n_sec: Some(prop::vec_f32(rng, d * a * gs, 0.3)),
+            experts: mk_experts(rng, n, d, hdim),
+        };
+        let rows = prop::dim(rng, 3, 6);
+        let xs = mk_batch(rng, 1, rows, d, 1.0);
+        let targets = mk_batch(rng, 1, rows, d, 0.5);
+        let mut nrng = rng.fold_in(13);
+        check_case(
+            &format!("hier#{case}"),
+            &m,
+            &p,
+            xs,
+            targets,
+            2,
+            Some(&mut nrng),
+        );
+    }
+}
+
+#[test]
+fn duplicate_topk_ties_are_frozen_and_still_differentiable() {
+    // w_g with duplicated columns + deterministic routing ⇒ exact
+    // duplicate logits on every row; selection must tie-break to the
+    // lower index, and the frozen-branch gradients must still pass the
+    // FD check (a naive FD would step across the selection boundary)
+    for case in 0..2u64 {
+        let rng = &mut prop::case_rng(4000 + case);
+        let (d, n, k, hdim) = (4, 5, 2, 5);
+        let mut w_g = prop::vec_f32(rng, d * n, 0.5);
+        // expert columns 1 and 2 identical -> tied logits on every row
+        for l in 0..d {
+            w_g[l * n + 2] = w_g[l * n + 1];
+        }
+        let m = Model {
+            d,
+            n,
+            k,
+            groups: 0,
+            gs: 0,
+            w_importance: 0.2,
+            w_load: 0.1,
+        };
+        let p = Params {
+            w_g,
+            w_noise: Some(prop::vec_f32(rng, d * n, 0.4)),
+            w_g_sec: None,
+            w_n_sec: None,
+            experts: mk_experts(rng, n, d, hdim),
+        };
+        let xs = mk_batch(rng, 1, 6, d, 1.0);
+        let targets = mk_batch(rng, 1, 6, d, 0.5);
+
+        // tie-break sanity on the actual decisions
+        let router = Router::flat_native(
+            d, n, k, p.w_g.clone(), p.w_noise.clone(),
+        );
+        let dec = router.route(&xs[0], None).unwrap();
+        for tok in &dec.per_token {
+            if tok.experts.contains(&2) {
+                assert!(
+                    tok.experts.contains(&1),
+                    "tied duplicate column must enter at the lower index \
+                     first: {:?}",
+                    tok.experts
+                );
+            }
+        }
+        check_case(&format!("ties#{case}"), &m, &p, xs, targets, 2, None);
+    }
+}
+
+// ---------------------------------------------------------------------
+// satellite: the pre-drawn-noise / determinism contract
+
+#[test]
+fn same_seed_training_runs_are_bit_identical() {
+    // two full Trainer runs from the same seeds: the engine's parallel
+    // row-blocked routing must consume the pre-drawn eq-4 noise stream
+    // identically under any thread interleaving, and the backward +
+    // Adam must be deterministic — weights and moments agree bit for
+    // bit after N steps
+    let (d, h, n, k) = (6, 10, 5, 2);
+    let run = || {
+        let trainer = Trainer::native(ModelConfig::native_moe(
+            "det", d, n, k, h, 2, 8,
+        ));
+        let mut state = trainer.init_streamed(21);
+        let sched =
+            Scheduler::new(ShardLayout::new(3, n), ExpertBackend::Native);
+        let mut data_rng = Rng::new(7);
+        let xs = mk_batch(&mut data_rng, 2, 12, d, 1.0);
+        let targets = mk_batch(&mut data_rng, 2, 12, d, 0.5);
+        let mut noise_rng = Rng::new(42);
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            let m = trainer
+                .step_streamed(
+                    &sched,
+                    &mut state,
+                    &xs,
+                    &targets,
+                    0.01,
+                    Some(&mut noise_rng),
+                )
+                .unwrap();
+            losses.push(m.loss.to_bits());
+        }
+        (state, losses)
+    };
+    let (sa, la) = run();
+    let (sb, lb) = run();
+    assert_eq!(la, lb, "per-step losses diverged between identical runs");
+    assert_eq!(sa.router.w_g, sb.router.w_g, "w_g drifted");
+    assert_eq!(sa.router.w_noise, sb.router.w_noise, "w_noise drifted");
+    for (wa, wb) in sa.weights.iter().zip(sb.weights.iter()) {
+        assert_eq!(wa.w_in, wb.w_in, "expert w_in drifted");
+        assert_eq!(wa.w_out, wb.w_out, "expert w_out drifted");
+    }
+    assert_eq!(sa.opt, sb.opt, "Adam moments drifted");
+}
+
+// ---------------------------------------------------------------------
+// satellite: the end-to-end acceptance run
+
+#[test]
+fn balance_losses_reduce_cv_and_task_loss_is_no_worse() {
+    // identical init / data / noise streams, one run with the gating
+    // frozen (the pre-PR behaviour) and one with the full backward +
+    // balance losses: the learned run's balance CVs must fall below
+    // the frozen baseline without giving up task loss
+    let (d, h, n, k) = (8, 16, 8, 2);
+    let steps = 60;
+    let trainer = Trainer::native(ModelConfig::native_moe(
+        "bal-e2e", d, n, k, h, 2, 32,
+    ));
+    let run = |train_gating: bool| {
+        let mut state = trainer.init_streamed(3);
+        let sched =
+            Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+        let mut data_rng = Rng::new(11);
+        let xs = mk_batch(&mut data_rng, 2, 32, d, 1.0);
+        let targets = mk_batch(&mut data_rng, 2, 32, d, 0.5);
+        let mut noise_rng = Rng::new(99);
+        let opts = StreamedStepOptions {
+            lr: 0.01,
+            train_gating,
+            w_importance: 0.1,
+            w_load: 0.1,
+        };
+        let mut cvs = Vec::with_capacity(steps);
+        let mut tasks = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let m = trainer
+                .step_streamed_with(
+                    &sched,
+                    &mut state,
+                    &xs,
+                    &targets,
+                    Some(&mut noise_rng),
+                    &opts,
+                )
+                .unwrap();
+            assert!(m.loss.is_finite(), "step {i} diverged");
+            cvs.push(m.cv_importance);
+            tasks.push(m.loss);
+        }
+        (cvs, tasks)
+    };
+    let (cv_frozen, task_frozen) = run(false);
+    let (cv_learned, task_learned) = run(true);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let late = |v: &[f64]| mean(&v[v.len() - 10..]);
+
+    // the balance losses must actually balance: late-window CV below
+    // both the frozen baseline and the learned run's own start
+    assert!(
+        late(&cv_learned) < late(&cv_frozen),
+        "balance CV did not fall below the frozen-gating baseline: \
+         learned {:.4} vs frozen {:.4}",
+        late(&cv_learned),
+        late(&cv_frozen)
+    );
+    assert!(
+        late(&cv_learned) < mean(&cv_learned[..10]),
+        "balance CV did not fall over training: {:.4} -> {:.4}",
+        mean(&cv_learned[..10]),
+        late(&cv_learned)
+    );
+    // ...without costing the task: late-window task loss no worse than
+    // the frozen baseline's
+    assert!(
+        late(&task_learned) <= late(&task_frozen) * 1.02,
+        "task loss regressed with gating learning on: learned {:.5} vs \
+         frozen {:.5}",
+        late(&task_learned),
+        late(&task_frozen)
+    );
+    // and both descended overall
+    assert!(late(&task_learned) < mean(&task_learned[..5]));
+}

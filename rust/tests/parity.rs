@@ -199,6 +199,7 @@ fn waves_handle_over_capacity_batches() {
             .collect(),
         importance: vec![len as f32],
         load: vec![len as f32],
+        noise: None,
     };
     let plan = Dispatcher::plan(std::slice::from_ref(&dec), 1);
     let sched = Scheduler::new(

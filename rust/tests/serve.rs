@@ -211,3 +211,112 @@ fn latency_budget_flushes_partial_batches() {
     assert!(report.stats.queue_wait.max_ns() >= 1_000_000);
     assert!(report.stats.batches >= 2, "arrivals 10ms apart cannot all coalesce");
 }
+
+#[test]
+fn admission_accounting_is_conserved_across_random_traces() {
+    // the serve loop drains its queue before returning, so over any
+    // trace: offered == completed + shed, outputs agree with the
+    // completion count, and nothing is double-counted — under both
+    // admission policies, across randomized traces and configs
+    let (d, h, n, k) = (5, 7, 4, 2);
+    let frozen = Frozen::build(61, d, h, n);
+    for case in 0..10u64 {
+        let rng = &mut prop::case_rng(5000 + case);
+        let n_requests = prop::dim(rng, 5, 40);
+        let trace = trace_requests(
+            &poisson_trace(&TraceSpec {
+                seed: 100 + case,
+                rate_per_sec: 1_000.0 * (1 + rng.below(200)) as f64,
+                n_requests,
+                min_rows: 1,
+                max_rows: prop::dim(rng, 1, 6),
+                bursty: rng.below(2) == 1,
+            }),
+            d,
+            999 + case,
+        );
+        let queue_depth = prop::dim(rng, 1, 8);
+        let max_batch_tokens = prop::dim(rng, 2, 12);
+        let latency_budget_ns = 50_000 * (1 + rng.below(40)) as u64;
+        for policy in [AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest] {
+            let serve = ServeLoop::new(
+                Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native),
+                frozen.router(k),
+                frozen.weights.clone(),
+                ServeConfig {
+                    queue_depth,
+                    policy,
+                    max_batch_tokens,
+                    latency_budget_ns,
+                    capture_outputs: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let report = serve.run_trace(&trace).unwrap();
+            assert_eq!(
+                report.stats.completed + report.stats.shed,
+                trace.len() as u64,
+                "case {case} {policy:?}: requests leaked or double-counted \
+                 (completed {} + shed {} != offered {})",
+                report.stats.completed,
+                report.stats.shed,
+                trace.len()
+            );
+            let served = report.outputs.iter().filter(|o| o.is_some()).count();
+            assert_eq!(
+                served as u64, report.stats.completed,
+                "case {case} {policy:?}: outputs disagree with completions"
+            );
+            // every completed request's tokens are accounted
+            let served_tokens: usize = report
+                .outputs
+                .iter()
+                .flatten()
+                .map(|t| t.shape[0])
+                .sum();
+            assert_eq!(
+                served_tokens as u64, report.stats.tokens_served,
+                "case {case} {policy:?}: token accounting drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn queue_conservation_under_random_offer_pop_interleavings() {
+    // the queue-level invariant behind the loop-level one: at every
+    // instant, admitted == popped + shed + still-queued, under random
+    // interleavings of offers and pops for both policies
+    use moe::serve::{RequestQueue, ServeRequest};
+    for policy in [AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest] {
+        prop::forall("queue conservation", |rng| {
+            let depth = prop::dim(rng, 1, 6);
+            let mut q = RequestQueue::new(depth, policy);
+            let mut offered = 0u64;
+            let mut popped = 0u64;
+            for step in 0..prop::dim(rng, 1, 60) {
+                if rng.below(3) < 2 {
+                    if q.will_reject_next() {
+                        q.reject_next();
+                    } else {
+                        q.offer(ServeRequest {
+                            id: step,
+                            arrival_ns: step as u64,
+                            x: TensorF::zeros(vec![1, 2]),
+                        });
+                    }
+                    offered += 1;
+                } else if q.pop().is_some() {
+                    popped += 1;
+                }
+                assert!(q.len() <= depth, "{policy:?}: depth bound broken");
+                assert_eq!(
+                    offered,
+                    popped + q.shed() + q.len() as u64,
+                    "{policy:?}: conservation broken at step {step}"
+                );
+            }
+        });
+    }
+}
