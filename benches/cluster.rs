@@ -1,11 +1,81 @@
-//! Bench/report: the cluster performance model across the paper's expert
-//! ladder — regenerates the SHAPE of the TFLOPS/GPU columns (Tables 1, 7,
-//! 8), including the efficiency drop at extreme expert counts (Table 8's
-//! 131072-expert row) and the §3.1 shrinking-batch effect.
+//! Bench/report: the 64 → 4096-expert cluster scaling study.
+//!
+//! Section 1 (always runs, writes `BENCH_cluster.json`): drive the REAL
+//! engine — hierarchical O(√n) local-group routing, streaming dispatch,
+//! GShard-style capacity buffers — at every rung of the expert ladder,
+//! then price each step's *measured* dispatch plan on the multi-host
+//! [`Topology`] model using the corrected §3.2 traffic accounting
+//! (same-device routes are free; only inter-device bytes hit a link).
+//! Swept at exact dispatch and capacity factors 1.0 / 2.0 so the curves
+//! show what capping buys (bounded buffers, pay in dropped tokens) and
+//! what it costs.  Set `BENCH_SMOKE=1` for a single-iteration CI run.
+//!
+//! Section 2 (print-only): the original analytic ladder out to the
+//! paper's 131072-expert configuration (Table 8), which no real plan
+//! can drive at this scale — retained as the TFLOPS/GPU shape check.
 
 use moe::cluster::perf::{model_step, ClusterSpec};
+use moe::harness::cluster_sim::{point_line, scaling_ladder, ClusterSim};
 use moe::metrics::OpsModel;
 use moe::runtime::ModelConfig;
+use moe::util::bench::{black_box, BenchReport, Bencher};
+
+fn measured_ladder(bench: &Bencher, report: &mut BenchReport) {
+    let rows_per_replica = 8usize;
+    println!(
+        "== measured cluster scaling: real engine + corrected §3.2 \
+         pricing (16 experts/device, 8 devices/host) =="
+    );
+    for cf in [None, Some(1.0f64), Some(2.0)] {
+        for n in scaling_ladder() {
+            let sim = ClusterSim::build(n, rows_per_replica, cf, 7).unwrap();
+            let tokens = sim.tokens();
+            let label = match cf {
+                None => format!("cluster step n={n} exact"),
+                Some(f) => format!("cluster step n={n} cf={f:.1}"),
+            };
+            // warm the persistent engine, then time the streamed step
+            black_box(sim.step(0).unwrap());
+            let mut fold = 0u64;
+            let r = bench.run(&label, || {
+                fold += 1;
+                black_box(sim.step(fold).unwrap());
+            });
+            r.report_throughput("tok", tokens as f64);
+            let p = sim.point().unwrap();
+            println!("  {}", point_line(&p));
+            report.push(
+                &r,
+                Some(("tok", tokens as f64)),
+                &[
+                    ("n_experts", p.n_experts as f64),
+                    ("groups", p.groups as f64),
+                    ("sim_devices", p.sim_devices as f64),
+                    ("n_hosts", p.n_hosts as f64),
+                    ("tokens", p.tokens as f64),
+                    // 0.0 encodes exact (uncapped) dispatch
+                    ("capacity_factor", p.capacity_factor),
+                    ("capacity", p.capacity as f64),
+                    ("offered_routes", p.offered_routes as f64),
+                    ("kept_routes", p.kept_routes as f64),
+                    ("dropped_routes", p.dropped_routes as f64),
+                    ("rerouted_routes", p.rerouted_routes as f64),
+                    ("drop_fraction", p.drop_fraction),
+                    ("interconnect_bytes", p.interconnect_bytes as f64),
+                    ("intra_host_bytes", p.intra_host_bytes as f64),
+                    ("inter_host_bytes", p.inter_host_bytes as f64),
+                    ("local_bytes", p.local_bytes as f64),
+                    ("messages", p.messages as f64),
+                    ("gating_time_s", p.timing.gating_time),
+                    ("moe_compute_time_s", p.timing.moe_compute_time),
+                    ("all_to_all_time_s", p.timing.all_to_all_time),
+                    ("step_time_model_s", p.timing.total()),
+                    ("model_tok_per_s", p.tokens_per_sec()),
+                ],
+            );
+        }
+    }
+}
 
 fn cfg(n_experts: usize, k: usize, devices: usize) -> ModelConfig {
     let d = 64;
@@ -33,11 +103,15 @@ fn cfg(n_experts: usize, k: usize, devices: usize) -> ModelConfig {
     }
 }
 
-fn main() {
-    println!("== modelled TFLOPS/GPU vs expert count (k=4, batch grows with devices) ==");
+fn analytic_ladder() {
+    println!(
+        "\n== modelled TFLOPS/GPU vs expert count (k=4, analytic loads, \
+         out to Table 8's 131072 experts) =="
+    );
     println!(
         "{:>9} {:>8} {:>10} {:>12} {:>12} {:>12} {:>10}",
-        "experts", "devices", "tokens", "dense(ms)", "moe(ms)", "a2a(ms)", "TFLOPS"
+        "experts", "devices", "tokens", "dense(ms)", "moe(ms)", "a2a(ms)",
+        "TFLOPS"
     );
     for (n, devices) in [(4usize, 16usize), (32, 16), (256, 16), (1024, 32),
                          (4096, 32), (16384, 64), (65536, 64), (131072, 128)] {
@@ -77,4 +151,14 @@ fn main() {
             t.moe_compute_time * 1e3
         );
     }
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher::from_env_quick();
+    let mut report = BenchReport::new("cluster");
+    measured_ladder(&bench, &mut report);
+    report.write("BENCH_cluster.json")?;
+    println!("wrote BENCH_cluster.json");
+    analytic_ladder();
+    Ok(())
 }

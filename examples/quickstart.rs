@@ -25,6 +25,24 @@
 //! cargo run --release --example serve_demo
 //! cargo run --release -- serve --devices 4      # same curve via repro
 //! ```
+//!
+//! # Cluster scaling (`repro cluster`)
+//!
+//! The 64 → 4096-expert scaling study drives the *real* engine —
+//! hierarchical O(√n) local-group routing, GShard-style capacity
+//! buffers — and prices each step's measured dispatch plan on a
+//! simulated multi-host topology (PCIe within a host, a slow fabric
+//! between hosts).  It uses the corrected §3.2 traffic accounting:
+//! `network_bytes` counts only routes whose expert lives on a
+//! *different* device than the token's replica; a token dispatched to
+//! an expert on its own shard never crosses the interconnect (those
+//! bytes are reported separately as `local`).  Earlier revisions
+//! charged every route, overstating the all-to-all:
+//!
+//! ```bash
+//! cargo run --release -- cluster --rows 8
+//! BENCH_SMOKE=1 cargo bench --bench cluster   # same study + BENCH_cluster.json
+//! ```
 
 use anyhow::Result;
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
@@ -152,6 +170,14 @@ fn main() -> Result<()> {
             );
         }
     }
+    // --- 6. one rung of the cluster scaling study: real engine step,
+    //        priced on the simulated multi-host topology with the
+    //        corrected network-bytes accounting (local routes free;
+    //        `repro cluster` sweeps the full 64 → 4096 ladder) ---
+    let sim = moe::harness::cluster_sim::ClusterSim::build(64, 4, Some(1.0), 7)?;
+    let p = sim.point()?;
+    println!("cluster rung: {}", moe::harness::cluster_sim::point_line(&p));
+
     println!("quickstart OK");
     Ok(())
 }

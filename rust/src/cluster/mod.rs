@@ -13,5 +13,9 @@
 //! from those three terms.
 
 pub mod perf;
+pub mod topology;
 
 pub use perf::{ClusterSpec, DeviceSpec, StepTiming};
+pub use topology::{
+    model_cluster_step, AllToAllCost, ClusterStepTiming, LinkSpec, Topology,
+};

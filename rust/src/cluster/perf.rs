@@ -40,6 +40,11 @@ impl DeviceSpec {
     /// make step time independent of how tokens distribute over experts —
     /// the sqrt keeps the §3.1 imbalance cost real.
     pub fn compute_time(&self, flops: f64, batch_rows: f64) -> f64 {
+        if batch_rows <= 0.0 {
+            // an empty batch launches no kernel at all — the
+            // capacity-drop dispatch path produces these routinely
+            return 0.0;
+        }
         let fill = (batch_rows / 64.0).sqrt().min(1.0).max(1.0 / 32.0);
         flops / (self.peak_flops * self.gemm_efficiency * fill)
             + self.kernel_overhead
@@ -167,6 +172,17 @@ mod tests {
             moe_params: (n_experts * 2 * 64 * 256) as u64,
             optimizer: "adam".into(),
         }
+    }
+
+    #[test]
+    fn empty_batch_costs_nothing() {
+        // a zero-row expert batch must not be charged kernel overhead or
+        // floor-fill FLOPs (no kernel is launched for it)
+        let dev = DeviceSpec::k40();
+        assert_eq!(dev.compute_time(0.0, 0.0), 0.0);
+        assert_eq!(dev.compute_time(1e9, 0.0), 0.0);
+        // and the smallest non-empty batch still pays overhead
+        assert!(dev.compute_time(1.0, 1.0) >= dev.kernel_overhead);
     }
 
     #[test]

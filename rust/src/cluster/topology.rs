@@ -1,0 +1,343 @@
+//! Multi-host cluster topology: two link tiers (intra-host, inter-host)
+//! with per-link bandwidth and per-message latency, priced against the
+//! *measured* per-link all-to-all traffic the dispatcher tracks
+//! ([`LinkTraffic`], from [`DispatchPlan::network_bytes_by_link`]).
+//!
+//! This is the GShard-style view of the paper's §3.2 network concern:
+//! the all-to-all is cheap while the experts fit one host's PCIe
+//! complex, then the inter-host fabric (an order of magnitude less
+//! bandwidth, an order of magnitude more per-message latency) takes
+//! over as the expert count — and with it the device count — grows.
+//! Because the traffic matrix comes from a real [`DispatchPlan`], the
+//! model prices exactly the routes the corrected accounting says cross
+//! the interconnect: a token dispatched to an expert on its own shard
+//! costs nothing anywhere in this module.
+//!
+//! [`DispatchPlan`]: crate::coordinator::dispatcher::DispatchPlan
+//! [`DispatchPlan::network_bytes_by_link`]:
+//!     crate::coordinator::dispatcher::DispatchPlan::network_bytes_by_link
+
+use crate::cluster::perf::DeviceSpec;
+use crate::coordinator::dispatcher::LinkTraffic;
+use crate::coordinator::scheduler::ShardLayout;
+
+/// One link tier: sustainable point-to-point bandwidth plus the fixed
+/// per-message cost (latency, framing, kernel hand-off).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// bytes/s
+    pub bandwidth: f64,
+    /// seconds per message
+    pub latency: f64,
+}
+
+/// Devices packed onto hosts: device `d` lives on host
+/// `d / devices_per_host`; links within a host use the `intra` tier,
+/// links between hosts the `inter` tier.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n_devices: usize,
+    pub devices_per_host: usize,
+    pub intra: LinkSpec,
+    pub inter: LinkSpec,
+}
+
+impl Topology {
+    /// The paper-era testbed shape: K40s on PCIe within a host
+    /// (~8 GB/s effective, microsecond messages), a 10GbE-class fabric
+    /// between hosts (~1.1 GB/s effective, tens of microseconds per
+    /// message).
+    pub fn k40_hosts(n_devices: usize, devices_per_host: usize) -> Self {
+        Topology {
+            n_devices: n_devices.max(1),
+            devices_per_host: devices_per_host.max(1),
+            intra: LinkSpec { bandwidth: 8e9, latency: 5e-6 },
+            inter: LinkSpec { bandwidth: 1.1e9, latency: 50e-6 },
+        }
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        (self.n_devices + self.devices_per_host - 1) / self.devices_per_host
+    }
+
+    pub fn host_of(&self, device: usize) -> usize {
+        device / self.devices_per_host
+    }
+
+    /// The link tier connecting two *distinct* devices.
+    pub fn link(&self, src: usize, dst: usize) -> &LinkSpec {
+        if self.host_of(src) == self.host_of(dst) {
+            &self.intra
+        } else {
+            &self.inter
+        }
+    }
+
+    /// Serialization time of one message batch over one link.
+    fn leg_time(&self, src: usize, dst: usize, bytes: u64, msgs: u64) -> f64 {
+        let l = self.link(src, dst);
+        bytes as f64 / l.bandwidth + msgs as f64 * l.latency
+    }
+
+    /// Price the all-to-all described by `traffic`: all links run
+    /// concurrently, but each device's egress serializes through its
+    /// send port and its ingress through its receive port, so the phase
+    /// lasts as long as the busiest port.  Local bytes cost nothing.
+    pub fn all_to_all_time(&self, traffic: &LinkTraffic) -> AllToAllCost {
+        let n = traffic.n_devices;
+        assert!(
+            n <= self.n_devices,
+            "traffic over {n} devices on a {}-device topology",
+            self.n_devices
+        );
+        let mut egress = vec![0f64; n];
+        let mut ingress = vec![0f64; n];
+        let mut cost = AllToAllCost::default();
+        for (src, dst, bytes, msgs) in traffic.links() {
+            let t = self.leg_time(src, dst, bytes, msgs);
+            egress[src] += t;
+            ingress[dst] += t;
+            if self.host_of(src) == self.host_of(dst) {
+                cost.intra_bytes += bytes;
+            } else {
+                cost.inter_bytes += bytes;
+            }
+            cost.messages += msgs;
+        }
+        cost.time = egress
+            .iter()
+            .chain(ingress.iter())
+            .fold(0.0f64, |a, &b| a.max(b));
+        cost
+    }
+}
+
+/// One all-to-all phase, priced.
+#[derive(Clone, Debug, Default)]
+pub struct AllToAllCost {
+    /// wall time of the phase: the busiest port's serialization time
+    pub time: f64,
+    /// interconnect bytes that stayed within a host (PCIe tier)
+    pub intra_bytes: u64,
+    /// interconnect bytes that crossed hosts (fabric tier)
+    pub inter_bytes: u64,
+    /// messages sent (replica-runs per direction)
+    pub messages: u64,
+}
+
+/// Modelled wall time of one synchronous training step of the §3.1
+/// scheme on the simulated cluster, built from measured dispatch state.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStepTiming {
+    /// gating cost per device — O(gate_cols) per token, which is why
+    /// hierarchical local-group routing matters at large expert counts
+    pub gating_time: f64,
+    /// busiest expert shard's compute (empty batches cost nothing)
+    pub moe_compute_time: f64,
+    /// forward + backward all-to-all over the topology
+    pub all_to_all_time: f64,
+    /// the forward all-to-all's per-tier breakdown
+    pub a2a: AllToAllCost,
+}
+
+impl ClusterStepTiming {
+    pub fn total(&self) -> f64 {
+        self.gating_time + self.moe_compute_time + self.all_to_all_time
+    }
+}
+
+/// Model one MoE-layer training step on the cluster.
+///
+/// * `gate_cols` — output columns the gating network computes per token:
+///   `n_experts` for flat softmax gating, `groups + k · group_size` for
+///   the two-level hierarchical gate (the O(group) routing cost).
+/// * `expert_loads` — real per-expert batch sizes from the dispatch
+///   plan (post-capacity if capacity dispatch was on).
+/// * `traffic` — the plan's measured per-link traffic on `layout`.
+pub fn model_cluster_step(
+    dev: &DeviceSpec,
+    topo: &Topology,
+    layout: &ShardLayout,
+    d_model: usize,
+    expert_hidden: usize,
+    gate_cols: usize,
+    tokens_per_device: usize,
+    expert_loads: &[usize],
+    traffic: &LinkTraffic,
+) -> ClusterStepTiming {
+    // fwd + bwd ≈ 3× forward MACs, 2 FLOPs per MAC (paper's accounting)
+    let train_mult = 3.0 * 2.0;
+
+    let gating_flops =
+        (tokens_per_device * d_model * gate_cols) as f64 * train_mult;
+    let gating_time = dev.compute_time(gating_flops, tokens_per_device as f64);
+
+    // every shard computes its experts back to back; the synchronous
+    // step waits on the busiest shard
+    let expert_flops_per_row = (2 * d_model * expert_hidden) as f64 * train_mult;
+    let mut shard_time = vec![0f64; layout.n_devices];
+    for (e, &load) in expert_loads.iter().enumerate() {
+        shard_time[layout.owner(e)] +=
+            dev.compute_time(expert_flops_per_row * load as f64, load as f64);
+    }
+    let moe_compute_time = shard_time.iter().fold(0.0f64, |a, &b| a.max(b));
+
+    let a2a = topo.all_to_all_time(traffic);
+    // the backward pass moves the same activations' gradients back
+    // through the same links
+    let all_to_all_time = a2a.time * 2.0;
+
+    ClusterStepTiming { gating_time, moe_compute_time, all_to_all_time, a2a }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dispatcher::Dispatcher;
+    use crate::coordinator::router::RoutingDecision;
+    use crate::gating::noisy_topk::GateVec;
+
+    fn topo(devices: usize, per_host: usize) -> Topology {
+        Topology::k40_hosts(devices, per_host)
+    }
+
+    /// One replica per device, every token of replica r routed to
+    /// `expert_of(r)` — a controllable traffic generator.
+    fn traffic_for(
+        devices: usize,
+        n_experts: usize,
+        rows: usize,
+        d_model: usize,
+        expert_of: impl Fn(usize) -> usize,
+    ) -> (LinkTraffic, crate::coordinator::dispatcher::DispatchPlan) {
+        let decisions: Vec<RoutingDecision> = (0..devices)
+            .map(|r| RoutingDecision {
+                per_token: vec![
+                    GateVec {
+                        experts: vec![expert_of(r)],
+                        weights: vec![1.0],
+                    };
+                    rows
+                ],
+                importance: vec![0.0; n_experts],
+                load: vec![0.0; n_experts],
+                noise: None,
+            })
+            .collect();
+        let plan = Dispatcher::plan(&decisions, n_experts);
+        let layout = ShardLayout::new(devices, n_experts);
+        (plan.network_bytes_by_link(d_model, &layout), plan)
+    }
+
+    #[test]
+    fn hosts_partition_devices() {
+        let t = topo(16, 8);
+        assert_eq!(t.n_hosts(), 2);
+        assert_eq!(t.host_of(0), 0);
+        assert_eq!(t.host_of(7), 0);
+        assert_eq!(t.host_of(8), 1);
+        assert!((t.link(0, 7).bandwidth - t.intra.bandwidth).abs() < 1.0);
+        assert!((t.link(0, 8).bandwidth - t.inter.bandwidth).abs() < 1.0);
+    }
+
+    #[test]
+    fn local_traffic_is_free() {
+        // every replica keeps its tokens on its own shard: nothing to
+        // price, regardless of volume
+        let devices = 8;
+        let (traffic, plan) =
+            traffic_for(devices, devices, 64, 32, |r| r);
+        assert_eq!(plan.total_routes(), 8 * 64);
+        let cost = topo(devices, 4).all_to_all_time(&traffic);
+        assert_eq!(cost.time, 0.0);
+        assert_eq!(cost.intra_bytes + cost.inter_bytes, 0);
+        assert!(traffic.local_bytes > 0);
+    }
+
+    #[test]
+    fn inter_host_hops_cost_more_than_intra() {
+        // same byte volume, one hop within the host vs one across hosts
+        let devices = 4;
+        let t = topo(devices, 2);
+        let (intra, _) = traffic_for(devices, devices, 32, 16, |r| {
+            if r == 0 { 1 } else { r } // device 0 -> device 1 (same host)
+        });
+        let (inter, _) = traffic_for(devices, devices, 32, 16, |r| {
+            if r == 0 { 2 } else { r } // device 0 -> device 2 (other host)
+        });
+        let c_intra = t.all_to_all_time(&intra);
+        let c_inter = t.all_to_all_time(&inter);
+        assert!(c_intra.time > 0.0);
+        assert!(
+            c_inter.time > c_intra.time * 2.0,
+            "inter {} vs intra {}",
+            c_inter.time,
+            c_intra.time
+        );
+        assert_eq!(c_intra.inter_bytes, 0);
+        assert_eq!(c_inter.intra_bytes, 0);
+        assert_eq!(c_intra.intra_bytes, c_inter.inter_bytes);
+    }
+
+    #[test]
+    fn a2a_time_scales_with_bytes() {
+        let devices = 4;
+        let t = topo(devices, 2);
+        let (small, _) = traffic_for(devices, devices, 16, 16, |r| {
+            (r + 1) % devices
+        });
+        let (large, _) = traffic_for(devices, devices, 160, 16, |r| {
+            (r + 1) % devices
+        });
+        let c_small = t.all_to_all_time(&small);
+        let c_large = t.all_to_all_time(&large);
+        assert!(c_large.time > c_small.time);
+        assert_eq!(c_large.inter_bytes, 10 * c_small.inter_bytes);
+    }
+
+    #[test]
+    fn cluster_step_prices_imbalance_and_drops() {
+        let devices = 4;
+        let n = 8;
+        let t = topo(devices, 2);
+        let layout = ShardLayout::new(devices, n);
+        let (traffic, _) =
+            traffic_for(devices, n, 32, 16, |r| (2 * r + 3) % n);
+        let dev = DeviceSpec::k40();
+        let balanced = model_cluster_step(
+            &dev, &t, &layout, 16, 32, n, 32, &[16; 8], &traffic,
+        );
+        let mut skewed_loads = [0usize; 8];
+        skewed_loads[0] = 128;
+        let skewed = model_cluster_step(
+            &dev, &t, &layout, 16, 32, n, 32, &skewed_loads, &traffic,
+        );
+        assert!(balanced.total().is_finite() && balanced.total() > 0.0);
+        assert!(
+            skewed.moe_compute_time > balanced.moe_compute_time,
+            "one hot shard must bound the step"
+        );
+        // empty expert batches cost nothing (the capacity-drop path
+        // produces them routinely): all-empty loads price to zero, and
+        // a shard full of empty batches charges no kernel overhead
+        let empty = model_cluster_step(
+            &dev, &t, &layout, 16, 32, n, 32, &[0; 8], &traffic,
+        );
+        assert_eq!(empty.moe_compute_time, 0.0);
+        let mut one_shard = [0usize; 8];
+        one_shard[0] = 16;
+        one_shard[1] = 16;
+        let sparse = model_cluster_step(
+            &dev, &t, &layout, 16, 32, n, 32, &one_shard, &traffic,
+        );
+        assert_eq!(sparse.moe_compute_time, balanced.moe_compute_time);
+        // hierarchical gating (fewer gate columns) beats flat at scale
+        let flat = model_cluster_step(
+            &dev, &t, &layout, 16, 32, 4096, 32, &[16; 8], &traffic,
+        );
+        let hier = model_cluster_step(
+            &dev, &t, &layout, 16, 32, 64 + 2 * 64, 32, &[16; 8], &traffic,
+        );
+        assert!(hier.gating_time < flat.gating_time);
+    }
+}

@@ -12,6 +12,7 @@
 //! drops) is covered in rust/tests/.
 
 use crate::coordinator::router::RoutingDecision;
+use crate::coordinator::scheduler::ShardLayout;
 use crate::runtime::TensorF;
 
 /// (replica, token-row) source address of a dispatched token.
@@ -34,12 +35,40 @@ pub struct DispatchPlan {
     pub per_expert: Vec<ExpertBatch>,
     /// tokens per replica (for combine allocation)
     pub replica_rows: Vec<usize>,
+    /// routes redirected to another of their token's selected experts
+    /// because the first choice's capacity buffer was full (GShard-style
+    /// residual dispatch); always 0 on the exact (uncapped) paths
+    pub rerouted_routes: usize,
+    /// routes dropped outright — every expert the token selected was
+    /// full; always 0 on the exact paths
+    pub dropped_routes: usize,
+}
+
+/// The device a replica's activations live on: replica `r` is combined
+/// on device `r % n_devices` (the engine's convention in
+/// `ExecutionEngine::emit_combine`), so that is where its tokens depart
+/// from and return to.
+pub fn home_device(replica: usize, layout: &ShardLayout) -> usize {
+    replica % layout.n_devices.max(1)
 }
 
 impl DispatchPlan {
-    /// Total (token, expert) routes.
+    /// Total (token, expert) routes the plan kept.
     pub fn total_routes(&self) -> usize {
         self.per_expert.iter().map(|e| e.tokens.len()).sum()
+    }
+
+    /// Routes the router offered this step: kept + dropped.
+    pub fn offered_routes(&self) -> usize {
+        self.total_routes() + self.dropped_routes
+    }
+
+    /// Fraction of offered routes the capacity buffers dropped.
+    pub fn drop_fraction(&self) -> f64 {
+        if self.dropped_routes == 0 {
+            return 0.0;
+        }
+        self.dropped_routes as f64 / self.offered_routes() as f64
     }
 
     pub fn expert_loads(&self) -> Vec<usize> {
@@ -47,9 +76,115 @@ impl DispatchPlan {
     }
 
     /// Bytes moved over the interconnect for this plan (activations in +
-    /// out, f32), the §3.2 quantity.
-    pub fn network_bytes(&self, d_model: usize) -> u64 {
-        (self.total_routes() * d_model * 4 * 2) as u64
+    /// out, f32), the §3.2 quantity.  Only routes whose expert lives on
+    /// a *different* device than the token's replica cross the
+    /// interconnect; a token dispatched to an expert on its own shard
+    /// never leaves the device and costs nothing here.
+    pub fn network_bytes(&self, d_model: usize, layout: &ShardLayout) -> u64 {
+        let mut remote_routes = 0u64;
+        for (e, batch) in self.per_expert.iter().enumerate() {
+            let owner = layout.owner(e);
+            for addr in &batch.tokens {
+                if home_device(addr.replica, layout) != owner {
+                    remote_routes += 1;
+                }
+            }
+        }
+        remote_routes * (d_model * 4 * 2) as u64
+    }
+
+    /// Per-link breakdown of the same traffic: directional bytes and
+    /// message counts between every (source, destination) device pair,
+    /// with shard-local bytes tallied separately.  One "message" is one
+    /// contiguous (replica, expert) run per direction — exactly the
+    /// chunks [`Dispatcher::replica_runs`] partitions an expert batch
+    /// into, i.e. the units the async all-to-all actually sends — so a
+    /// topology model can price per-message latency as well as
+    /// bandwidth, and intra-host vs inter-host hops separately.
+    pub fn network_bytes_by_link(
+        &self,
+        d_model: usize,
+        layout: &ShardLayout,
+    ) -> LinkTraffic {
+        let mut traffic = LinkTraffic::new(layout.n_devices);
+        let row_bytes = (d_model * 4) as u64;
+        for (e, batch) in self.per_expert.iter().enumerate() {
+            let owner = layout.owner(e);
+            for (replica, rows) in
+                Dispatcher::replica_runs(self, e, 0..batch.tokens.len())
+            {
+                let bytes = rows.len() as u64 * row_bytes;
+                let home = home_device(replica, layout);
+                if home == owner {
+                    // stays on-device: in + out, but never on a link
+                    traffic.local_bytes += bytes * 2;
+                } else {
+                    traffic.add(home, owner, bytes, 1); // dispatch leg
+                    traffic.add(owner, home, bytes, 1); // combine leg
+                }
+            }
+        }
+        traffic
+    }
+}
+
+/// Directional per-device-pair traffic of one plan's all-to-all, as
+/// measured from the dispatch plan by
+/// [`DispatchPlan::network_bytes_by_link`].  The diagonal is always
+/// empty: same-device traffic is recorded in `local_bytes` and is not
+/// interconnect traffic.
+#[derive(Clone, Debug)]
+pub struct LinkTraffic {
+    pub n_devices: usize,
+    /// bytes moved src→dst, row-major `src * n_devices + dst`
+    bytes: Vec<u64>,
+    /// messages src→dst (one per contiguous replica-run per direction)
+    messages: Vec<u64>,
+    /// bytes that never left their device (expert on the token's shard)
+    pub local_bytes: u64,
+}
+
+impl LinkTraffic {
+    pub fn new(n_devices: usize) -> Self {
+        let n = n_devices.max(1);
+        LinkTraffic {
+            n_devices: n,
+            bytes: vec![0; n * n],
+            messages: vec![0; n * n],
+            local_bytes: 0,
+        }
+    }
+
+    fn add(&mut self, src: usize, dst: usize, bytes: u64, msgs: u64) {
+        debug_assert_ne!(src, dst, "local traffic is not link traffic");
+        self.bytes[src * self.n_devices + dst] += bytes;
+        self.messages[src * self.n_devices + dst] += msgs;
+    }
+
+    pub fn bytes_between(&self, src: usize, dst: usize) -> u64 {
+        self.bytes[src * self.n_devices + dst]
+    }
+
+    pub fn messages_between(&self, src: usize, dst: usize) -> u64 {
+        self.messages[src * self.n_devices + dst]
+    }
+
+    /// Total bytes crossing any link — equals
+    /// [`DispatchPlan::network_bytes`] for the same plan and layout.
+    pub fn interconnect_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages.iter().sum()
+    }
+
+    /// Non-empty links as `(src, dst, bytes, messages)`.
+    pub fn links(&self) -> impl Iterator<Item = (usize, usize, u64, u64)> + '_ {
+        let n = self.n_devices;
+        self.bytes.iter().enumerate().filter(|(_, &b)| b > 0).map(
+            move |(i, &b)| (i / n, i % n, b, self.messages[i]),
+        )
     }
 }
 
@@ -68,29 +203,77 @@ pub struct PlanBuilder {
     plan: DispatchPlan,
     /// rows appended so far for the replica currently being routed
     cur_rows: usize,
+    /// per-expert capacity buffer (GShard-style); `None` = exact
+    /// dispatch, every route kept
+    capacity: Option<usize>,
 }
 
 impl PlanBuilder {
     pub fn new(n_experts: usize) -> Self {
+        Self::with_capacity(n_experts, None)
+    }
+
+    /// A builder whose per-expert batches are bounded by `capacity`
+    /// rows.  When a token's chosen expert is full, the route falls
+    /// through to the token's next selected expert with room (residual
+    /// second-choice dispatch, gate weight carried along); if every
+    /// selected expert is full the route is dropped.  The rule depends
+    /// only on loads-so-far and tokens are processed in (replica, row,
+    /// gate-slot) order, so capped dispatch is exactly as deterministic
+    /// — and keeps the immutable-prefix property — as the exact path,
+    /// and with `capacity` at or above every expert's natural load the
+    /// resulting plan is bit-identical to the uncapped one.
+    pub fn with_capacity(n_experts: usize, capacity: Option<usize>) -> Self {
         PlanBuilder {
             plan: DispatchPlan {
                 n_experts,
                 per_expert: vec![ExpertBatch::default(); n_experts],
                 replica_rows: Vec::new(),
+                rerouted_routes: 0,
+                dropped_routes: 0,
             },
             cur_rows: 0,
+            capacity,
         }
     }
 
     /// Append the next routed rows of the current replica; row indices
     /// are assigned consecutively from the rows already pushed.
     pub fn push_rows(&mut self, gates: &[crate::gating::noisy_topk::GateVec]) {
+        let cap = self.capacity.unwrap_or(usize::MAX);
         let replica = self.plan.replica_rows.len();
         for tok in gates {
             let row = self.cur_rows;
-            for (e, w) in tok.experts.iter().zip(tok.weights.iter()) {
-                self.plan.per_expert[*e].tokens.push(TokenAddr { replica, row });
-                self.plan.per_expert[*e].gates.push(*w);
+            for (slot, (&first, &w)) in
+                tok.experts.iter().zip(tok.weights.iter()).enumerate()
+            {
+                let chosen = if self.plan.per_expert[first].tokens.len() < cap
+                {
+                    Some(first)
+                } else {
+                    // residual dispatch: scan the token's other selected
+                    // experts in gate order for one with room (a
+                    // duplicate of `first` can never qualify — its
+                    // buffer is the full one)
+                    tok.experts
+                        .iter()
+                        .enumerate()
+                        .filter(|&(j, _)| j != slot)
+                        .map(|(_, &e)| e)
+                        .find(|&e| self.plan.per_expert[e].tokens.len() < cap)
+                };
+                match chosen {
+                    Some(e) => {
+                        if e != first {
+                            self.plan.rerouted_routes += 1;
+                        }
+                        self.plan.per_expert[e]
+                            .tokens
+                            .push(TokenAddr { replica, row });
+                        self.plan.per_expert[e].gates.push(w);
+                    }
+                    None => self.plan.dropped_routes += 1,
+                }
             }
             self.cur_rows += 1;
         }
@@ -161,7 +344,40 @@ impl Dispatcher {
             n_experts,
             per_expert,
             replica_rows: decisions.iter().map(|d| d.per_token.len()).collect(),
+            rerouted_routes: 0,
+            dropped_routes: 0,
         }
+    }
+
+    /// Like [`plan`](Self::plan) but with a GShard-style per-expert
+    /// capacity buffer — the serial oracle for capacity-factor dispatch.
+    /// `capacity: None` is exact and bit-identical to `plan`.
+    pub fn plan_with_capacity(
+        decisions: &[RoutingDecision],
+        n_experts: usize,
+        capacity: Option<usize>,
+    ) -> DispatchPlan {
+        let mut builder = PlanBuilder::with_capacity(n_experts, capacity);
+        for dec in decisions {
+            builder.push_rows(&dec.per_token);
+            builder.finish_replica();
+        }
+        builder.finish()
+    }
+
+    /// GShard's per-expert buffer size for a capacity factor:
+    /// `max(ceil(cf · tokens · k / n_experts), 1)` — at `cf = 1.0` a
+    /// perfectly balanced router fills every buffer exactly and drops
+    /// nothing.
+    pub fn capacity_for(
+        factor: f64,
+        tokens: usize,
+        k: usize,
+        n_experts: usize,
+    ) -> usize {
+        let per_expert =
+            (tokens * k) as f64 * factor / n_experts.max(1) as f64;
+        (per_expert.ceil() as usize).max(1)
     }
 
     /// Gather the input rows for one expert from the replica activations.
@@ -586,8 +802,139 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(0);
         let dec = decision(10, 4, 2, &mut rng);
         let plan = Dispatcher::plan(std::slice::from_ref(&dec), 4);
-        // 10 tokens * k=2 routes * d=8 * 4 bytes * 2 directions
-        assert_eq!(plan.network_bytes(8), 10 * 2 * 8 * 4 * 2);
+        // one device owns every expert: nothing crosses the interconnect
+        let one = ShardLayout::new(1, 4);
+        assert_eq!(plan.network_bytes(8, &one), 0);
+        // one expert per device, the single replica homes on device 0:
+        // only expert 0's routes stay local (§3.2 counts inter-device
+        // traffic only)
+        let four = ShardLayout::new(4, 4);
+        let remote: usize = (1..4).map(|e| plan.per_expert[e].tokens.len()).sum();
+        assert_eq!(plan.network_bytes(8, &four), (remote * 8 * 4 * 2) as u64);
+        assert!(remote < plan.total_routes(), "some routes must be local");
+    }
+
+    #[test]
+    fn local_expert_routes_cost_zero_interconnect() {
+        // all tokens on their home shard's expert => zero interconnect
+        // bytes, all bytes local (the over-counting bug this fixes)
+        let n = 4;
+        let layout = ShardLayout::new(2, n);
+        // replica 0 homes on device 0, which owns experts 0 and 1
+        let gv = GateVec { experts: vec![0, 1], weights: vec![0.5, 0.5] };
+        let dec = RoutingDecision {
+            per_token: vec![gv; 6],
+            importance: vec![0.0; n],
+            load: vec![0.0; n],
+            noise: None,
+        };
+        let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
+        assert_eq!(plan.network_bytes(8, &layout), 0);
+        let traffic = plan.network_bytes_by_link(8, &layout);
+        assert_eq!(traffic.interconnect_bytes(), 0);
+        assert_eq!(traffic.total_messages(), 0);
+        // in + out for every route, all of it on-device
+        assert_eq!(traffic.local_bytes, (12 * 8 * 4 * 2) as u64);
+    }
+
+    #[test]
+    fn per_link_breakdown_is_conservative() {
+        // link totals + local bytes == the old (over-counted) figure,
+        // and interconnect totals match network_bytes, on any layout
+        prop::forall("link conservation", |rng| {
+            let (n, k) = (prop::dim(rng, 2, 12), prop::dim(rng, 1, 3));
+            let replicas = prop::dim(rng, 1, 5);
+            let devices = prop::dim(rng, 1, 4);
+            let d_model = prop::dim(rng, 1, 8);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision(prop::dim(rng, 1, 9), n, k, rng))
+                .collect();
+            let plan = Dispatcher::plan(&decisions, n);
+            let layout = ShardLayout::new(devices, n);
+            let traffic = plan.network_bytes_by_link(d_model, &layout);
+            assert_eq!(
+                traffic.interconnect_bytes(),
+                plan.network_bytes(d_model, &layout)
+            );
+            assert_eq!(
+                traffic.interconnect_bytes() + traffic.local_bytes,
+                (plan.total_routes() * d_model * 4 * 2) as u64
+            );
+            // diagonal stays empty and links() agrees with the matrix
+            for dev in 0..devices {
+                assert_eq!(traffic.bytes_between(dev, dev), 0);
+            }
+            let from_links: u64 =
+                traffic.links().map(|(_, _, b, _)| b).sum();
+            assert_eq!(from_links, traffic.interconnect_bytes());
+        });
+    }
+
+    #[test]
+    fn capacity_respects_buffers_and_conserves_routes() {
+        // capped dispatch: no expert ever exceeds the buffer (even via
+        // residual second choices), kept + dropped == offered, and the
+        // same decisions always produce the bit-identical plan
+        prop::forall("capacity buffers", |rng| {
+            let (n, k) = (prop::dim(rng, 2, 8), prop::dim(rng, 1, 3));
+            let replicas = prop::dim(rng, 1, 4);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision(prop::dim(rng, 1, 10), n, k, rng))
+                .collect();
+            let offered: usize =
+                decisions.iter().map(|d| d.per_token.len() * k).sum();
+            let cap = prop::dim(rng, 1, 6);
+            let plan =
+                Dispatcher::plan_with_capacity(&decisions, n, Some(cap));
+            for load in plan.expert_loads() {
+                assert!(load <= cap, "load {load} exceeds capacity {cap}");
+            }
+            assert_eq!(plan.total_routes() + plan.dropped_routes, offered);
+            assert_eq!(plan.offered_routes(), offered);
+            assert!(plan.drop_fraction() >= 0.0 && plan.drop_fraction() <= 1.0);
+            let again =
+                Dispatcher::plan_with_capacity(&decisions, n, Some(cap));
+            assert_eq!(plan.dropped_routes, again.dropped_routes);
+            assert_eq!(plan.rerouted_routes, again.rerouted_routes);
+            for (a, b) in plan.per_expert.iter().zip(again.per_expert.iter()) {
+                assert_eq!(a.tokens, b.tokens);
+                assert_eq!(a.gates, b.gates);
+            }
+        });
+    }
+
+    #[test]
+    fn capacity_at_or_above_peak_load_is_bit_identical_to_exact() {
+        prop::forall("ample capacity is exact", |rng| {
+            let (n, k) = (prop::dim(rng, 2, 8), prop::dim(rng, 1, 3));
+            let replicas = prop::dim(rng, 1, 4);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision(prop::dim(rng, 1, 10), n, k, rng))
+                .collect();
+            let exact = Dispatcher::plan(&decisions, n);
+            let peak = exact.expert_loads().into_iter().max().unwrap_or(0);
+            let capped =
+                Dispatcher::plan_with_capacity(&decisions, n, Some(peak.max(1)));
+            assert_eq!(capped.dropped_routes, 0);
+            assert_eq!(capped.rerouted_routes, 0);
+            assert_eq!(capped.replica_rows, exact.replica_rows);
+            for (a, b) in capped.per_expert.iter().zip(exact.per_expert.iter())
+            {
+                assert_eq!(a.tokens, b.tokens);
+                assert_eq!(a.gates, b.gates);
+            }
+        });
+    }
+
+    #[test]
+    fn capacity_for_matches_gshard_formula() {
+        // cf=1.0: perfectly divisible load fills buffers exactly
+        assert_eq!(Dispatcher::capacity_for(1.0, 64, 2, 8), 16);
+        // fractional capacities round up
+        assert_eq!(Dispatcher::capacity_for(1.25, 64, 2, 8), 20);
+        assert_eq!(Dispatcher::capacity_for(1.0, 10, 2, 8), 3);
+        // floor at one row so an expert can always be addressed
+        assert_eq!(Dispatcher::capacity_for(0.01, 4, 1, 64), 1);
     }
 
     #[test]

@@ -371,6 +371,10 @@ pub struct ExecutionEngine {
     /// the artifact capacity); adaptive policies are updated from every
     /// finished step's stats
     policy: WavePolicy,
+    /// GShard-style per-expert capacity buffer applied by the streaming
+    /// dispatch (`None` = exact: every route kept); see
+    /// [`PlanBuilder::with_capacity`]
+    dispatch_capacity: Option<usize>,
     txs: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     pool: BufferPool,
@@ -407,10 +411,22 @@ impl ExecutionEngine {
         ExecutionEngine {
             layout,
             policy,
+            dispatch_capacity: None,
             txs,
             handles,
             pool: BufferPool::default(),
         }
+    }
+
+    /// Bound every expert's streamed batch at `capacity` rows: the
+    /// streaming dispatch builds its plan with
+    /// [`PlanBuilder::with_capacity`], so overflow routes fall through
+    /// to the token's other selected experts and are dropped only when
+    /// all are full.  Routing decisions (and thus balance losses) are
+    /// unaffected — capacity shapes the dispatch, not the gating.
+    pub fn with_dispatch_capacity(mut self, capacity: Option<usize>) -> Self {
+        self.dispatch_capacity = capacity;
+        self
     }
 
     /// The wave capacity the next Native step will use.
@@ -838,7 +854,7 @@ impl ExecutionEngine {
         // declaration) then drains every in-flight job before any
         // borrowed noise buffer is freed — see module safety notes.
         let mut noises: Vec<Option<RouteNoise>> = Vec::with_capacity(xs.len());
-        let mut builder = PlanBuilder::new(n);
+        let mut builder = PlanBuilder::with_capacity(n, self.dispatch_capacity);
         let mut decisions: Vec<RoutingDecision> = Vec::with_capacity(xs.len());
         // rows already gathered + dispatched per expert (≤ its final load)
         let mut emitted = vec![0usize; n];

@@ -12,9 +12,12 @@
 //!    of §3.1) and shipped to the shard owning that expert;
 //! 3. expert shards execute in waves of `capacity` tokens on the
 //!    persistent [`engine::ExecutionEngine`] — long-lived worker threads
-//!    with reusable arenas, staged through [`scheduler::Scheduler`]; no
-//!    token is ever dropped, matching the paper's dynamically-sized
-//!    expert batches, and wave w+1 is gathered while wave w computes;
+//!    with reusable arenas, staged through [`scheduler::Scheduler`]; by
+//!    default no token is ever dropped, matching the paper's
+//!    dynamically-sized expert batches (GShard-style bounded buffers
+//!    with deterministic drop/reroute are opt-in via
+//!    [`scheduler::Scheduler::with_dispatch_capacity`]), and wave w+1 is
+//!    gathered while wave w computes;
 //! 4. outputs are combined back per token with gate weights (eq 1), and
 //!    [`balance::BalanceMeter`] tracks Importance / Load / CV² telemetry.
 //!

@@ -292,7 +292,15 @@ pub struct StepStats {
     /// synchronous waves needed: max over experts of ceil(load/capacity)
     /// (1 for the un-chunked Native path whenever any token routed)
     pub waves: usize,
+    /// interconnect bytes of this step's all-to-all — inter-device
+    /// routes only ([`DispatchPlan::network_bytes`]); a token whose
+    /// expert lives on its own shard moves nothing
     pub network_bytes: u64,
+    /// routes redirected to a second-choice expert by the capacity
+    /// buffers (0 on the exact paths)
+    pub rerouted_routes: usize,
+    /// routes dropped at the capacity buffers (0 on the exact paths)
+    pub dropped_routes: usize,
     pub busiest_shard_tokens: usize,
     /// per-phase wall-clock breakdown of this step
     pub phases: PhaseNanos,
@@ -349,7 +357,9 @@ pub(crate) fn build_stats(
         busiest_shard_tokens: shard_tokens.iter().copied().max().unwrap_or(0),
         expert_loads: loads,
         waves,
-        network_bytes: plan.network_bytes(d_model),
+        network_bytes: plan.network_bytes(d_model, layout),
+        rerouted_routes: plan.rerouted_routes,
+        dropped_routes: plan.dropped_routes,
         phases,
         shard_compute_ns,
         shard_idle_ns,
@@ -365,6 +375,9 @@ pub struct Scheduler {
     backend: ExpertBackend,
     /// wave-capacity policy handed to the engine when it starts
     policy: WavePolicy,
+    /// GShard-style per-expert capacity buffer applied by the streaming
+    /// dispatch (`None` = exact: every route kept)
+    dispatch_capacity: Option<usize>,
     /// Persistent execution engine, started on first use and reused for
     /// every subsequent step (no per-step thread spawn).
     engine: Mutex<Option<ExecutionEngine>>,
@@ -382,7 +395,24 @@ impl Scheduler {
         backend: ExpertBackend,
         policy: WavePolicy,
     ) -> Self {
-        Scheduler { layout, backend, policy, engine: Mutex::new(None) }
+        Scheduler {
+            layout,
+            backend,
+            policy,
+            dispatch_capacity: None,
+            engine: Mutex::new(None),
+        }
+    }
+
+    /// Bound every expert's per-step batch at `capacity` rows
+    /// (GShard-style capacity-factor dispatch, see
+    /// [`Dispatcher::capacity_for`]); overflow falls through to the
+    /// token's other selected experts and is dropped only when all are
+    /// full.  Must be set before the first step (the engine is keyed to
+    /// it on start).
+    pub fn with_dispatch_capacity(mut self, capacity: Option<usize>) -> Self {
+        self.dispatch_capacity = capacity;
+        self
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -412,6 +442,7 @@ impl Scheduler {
                 self.layout.clone(),
                 self.policy.clone(),
             )
+            .with_dispatch_capacity(self.dispatch_capacity)
         });
         f(engine)
     }

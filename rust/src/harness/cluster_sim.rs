@@ -1,0 +1,359 @@
+//! GShard-style cluster scaling simulation: drive the REAL engine —
+//! hierarchical O(group) local-group routing, streaming dispatch with
+//! capacity-factor buffers — and price the *measured* dispatch plan
+//! against the multi-host [`Topology`] model.
+//!
+//! This is the 64 → 4096-expert scaling study the ROADMAP's
+//! cluster-scale item asks for, feeding `benches/cluster.rs`
+//! (`BENCH_cluster.json`), `repro cluster` and the quickstart.  One
+//! simulated device hosts 16 experts (the paper's ratio at its largest
+//! configurations), 8 devices share a host's PCIe complex, and hosts
+//! talk over a far slower fabric — so the curves show exactly the §3.2
+//! story: the all-to-all is nearly free while the model fits one host,
+//! then inter-host bytes take over the step.
+//!
+//! Network bytes here use the *corrected* accounting
+//! ([`DispatchPlan::network_bytes`]): only routes whose expert lives on
+//! a different device than the token's replica count; same-shard
+//! dispatches are tallied as `local_bytes` and priced at zero.
+
+use anyhow::Result;
+
+use crate::cluster::perf::DeviceSpec;
+use crate::cluster::topology::{model_cluster_step, ClusterStepTiming, Topology};
+use crate::coordinator::engine::StreamedStep;
+use crate::coordinator::router::{Router, RouterBackend};
+use crate::coordinator::scheduler::{
+    ExpertBackend, ExpertWeights, Scheduler, ShardLayout, WavePolicy,
+};
+use crate::coordinator::{DispatchPlan, Dispatcher};
+use crate::runtime::TensorF;
+use crate::util::rng::Rng;
+
+/// Experts per simulated device and devices per host — fixed across the
+/// ladder so the device count grows with the expert count.
+pub const EXPERTS_PER_DEVICE: usize = 16;
+pub const DEVICES_PER_HOST: usize = 8;
+
+/// The expert-count ladder the scaling study sweeps.
+pub fn scaling_ladder() -> [usize; 4] {
+    [64, 256, 1024, 4096]
+}
+
+/// One simulated cluster configuration, holding a real engine sized to
+/// the coordinator host plus the (much larger) simulated layout and
+/// topology the measured plan is priced against.
+pub struct ClusterSim {
+    pub n_experts: usize,
+    pub groups: usize,
+    pub group_size: usize,
+    pub d_model: usize,
+    pub hidden: usize,
+    /// primary/secondary top-k; each token routes k² experts
+    pub k: usize,
+    pub sim_devices: usize,
+    pub rows_per_replica: usize,
+    /// `None` = exact dispatch; `Some(cf)` = GShard capacity factor
+    pub capacity_factor: Option<f64>,
+    /// the per-expert buffer derived from `capacity_factor`
+    pub capacity: Option<usize>,
+    pub seed: u64,
+    pub sim_layout: ShardLayout,
+    pub topo: Topology,
+    device: DeviceSpec,
+    router: Router,
+    weights: Vec<ExpertWeights>,
+    xs: Vec<TensorF>,
+    sched: Scheduler,
+}
+
+/// One priced point of the scaling curve.
+#[derive(Clone, Debug)]
+pub struct ClusterPoint {
+    pub n_experts: usize,
+    pub groups: usize,
+    pub sim_devices: usize,
+    pub n_hosts: usize,
+    pub tokens: usize,
+    /// 0.0 encodes exact (uncapped) dispatch
+    pub capacity_factor: f64,
+    pub capacity: usize,
+    pub offered_routes: usize,
+    pub kept_routes: usize,
+    pub dropped_routes: usize,
+    pub rerouted_routes: usize,
+    pub drop_fraction: f64,
+    /// corrected §3.2 interconnect bytes (inter-device routes only)
+    pub interconnect_bytes: u64,
+    pub intra_host_bytes: u64,
+    pub inter_host_bytes: u64,
+    /// bytes that never left their device (previously over-counted)
+    pub local_bytes: u64,
+    pub messages: u64,
+    pub timing: ClusterStepTiming,
+    /// wall time of the real engine step on the coordinator host
+    pub measured_step_ns: u64,
+}
+
+impl ClusterPoint {
+    /// Modelled cluster throughput at this point.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.timing.total().max(1e-12)
+    }
+}
+
+impl ClusterSim {
+    /// Build a point of the ladder: `n_experts` must be a square (the
+    /// hierarchical gate uses `√n` groups of `√n` experts, Appendix B's
+    /// O(√n)-per-level routing) with at least [`EXPERTS_PER_DEVICE`]
+    /// experts.  One replica per simulated device, `rows_per_replica`
+    /// tokens each.
+    pub fn build(
+        n_experts: usize,
+        rows_per_replica: usize,
+        capacity_factor: Option<f64>,
+        seed: u64,
+    ) -> Result<Self> {
+        let groups = (n_experts as f64).sqrt().round() as usize;
+        anyhow::ensure!(
+            groups * groups == n_experts,
+            "cluster sim wants a square expert count, got {n_experts}"
+        );
+        let group_size = n_experts / groups;
+        let (d, h, k) = (16usize, 32usize, 2usize);
+        let sim_devices = (n_experts / EXPERTS_PER_DEVICE).max(1);
+        let replicas = sim_devices;
+        let tokens = replicas * rows_per_replica;
+        let k_eff = k * k;
+        let capacity = capacity_factor.map(|cf| {
+            Dispatcher::capacity_for(cf, tokens, k_eff, n_experts)
+        });
+
+        let mut rng = Rng::new(seed);
+        let weights: Vec<ExpertWeights> = (0..n_experts)
+            .map(|_| ExpertWeights {
+                w_in: (0..d * h).map(|_| rng.normal_f32() * 0.2).collect(),
+                w_out: (0..h * d).map(|_| rng.normal_f32() * 0.2).collect(),
+                d_model: d,
+                hidden: h,
+            })
+            .collect();
+        let router = Router {
+            backend: RouterBackend::Native,
+            n_experts,
+            k,
+            groups,
+            d_model: d,
+            w_g: (0..d * groups).map(|_| rng.normal_f32() * 0.4).collect(),
+            w_noise: Some(
+                (0..d * groups).map(|_| rng.normal_f32() * 0.3).collect(),
+            ),
+            w_g_sec: Some(
+                (0..d * n_experts).map(|_| rng.normal_f32() * 0.4).collect(),
+            ),
+            w_n_sec: Some(
+                (0..d * n_experts).map(|_| rng.normal_f32() * 0.3).collect(),
+            ),
+        };
+        let xs: Vec<TensorF> = (0..replicas)
+            .map(|_| {
+                TensorF::new(
+                    vec![rows_per_replica, d],
+                    (0..rows_per_replica * d)
+                        .map(|_| rng.normal_f32())
+                        .collect(),
+                )
+            })
+            .collect();
+
+        // the real engine runs on the coordinator host: a worker per
+        // core-ish shard, while traffic is priced on the simulated
+        // cluster layout below
+        let exec_devices = sim_devices.min(8);
+        let sched = Scheduler::with_policy(
+            ShardLayout::new(exec_devices, n_experts),
+            ExpertBackend::Native,
+            WavePolicy::Fixed(Some(256)),
+        )
+        .with_dispatch_capacity(capacity);
+
+        Ok(ClusterSim {
+            n_experts,
+            groups,
+            group_size,
+            d_model: d,
+            hidden: h,
+            k,
+            sim_devices,
+            rows_per_replica,
+            capacity_factor,
+            capacity,
+            seed,
+            sim_layout: ShardLayout::new(sim_devices, n_experts),
+            topo: Topology::k40_hosts(sim_devices, DEVICES_PER_HOST),
+            device: DeviceSpec::k40(),
+            router,
+            weights,
+            xs,
+            sched,
+        })
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.xs.iter().map(|x| x.shape[0]).sum()
+    }
+
+    /// One streamed step on the real engine (seeded eq-4 noise; `fold`
+    /// varies the draw across bench iterations deterministically).
+    pub fn step(&self, fold: u64) -> Result<StreamedStep> {
+        let refs: Vec<&TensorF> = self.xs.iter().collect();
+        let mut nrng = Rng::new(self.seed).fold_in(fold);
+        self.sched.execute_streamed(
+            &self.router,
+            &refs,
+            &self.weights,
+            Some(&mut nrng),
+        )
+    }
+
+    /// Price a finished step's plan on the simulated cluster.
+    pub fn price(&self, plan: &DispatchPlan, measured_step_ns: u64)
+        -> ClusterPoint {
+        let traffic =
+            plan.network_bytes_by_link(self.d_model, &self.sim_layout);
+        // two-level gate: primary over `groups` columns, then k
+        // secondary slices of `group_size` columns — O(√n) each, vs the
+        // flat gate's O(n)
+        let gate_cols = self.groups + self.k * self.group_size;
+        let timing = model_cluster_step(
+            &self.device,
+            &self.topo,
+            &self.sim_layout,
+            self.d_model,
+            self.hidden,
+            gate_cols,
+            self.rows_per_replica,
+            &plan.expert_loads(),
+            &traffic,
+        );
+        ClusterPoint {
+            n_experts: self.n_experts,
+            groups: self.groups,
+            sim_devices: self.sim_devices,
+            n_hosts: self.topo.n_hosts(),
+            tokens: self.tokens(),
+            capacity_factor: self.capacity_factor.unwrap_or(0.0),
+            capacity: self.capacity.unwrap_or(0),
+            offered_routes: plan.offered_routes(),
+            kept_routes: plan.total_routes(),
+            dropped_routes: plan.dropped_routes,
+            rerouted_routes: plan.rerouted_routes,
+            drop_fraction: plan.drop_fraction(),
+            interconnect_bytes: traffic.interconnect_bytes(),
+            intra_host_bytes: timing.a2a.intra_bytes,
+            inter_host_bytes: timing.a2a.inter_bytes,
+            local_bytes: traffic.local_bytes,
+            messages: traffic.total_messages(),
+            timing,
+            measured_step_ns,
+        }
+    }
+
+    /// Run one step and price it.
+    pub fn point(&self) -> Result<ClusterPoint> {
+        let t0 = std::time::Instant::now();
+        let s = self.step(1)?;
+        let ns = t0.elapsed().as_nanos() as u64;
+        Ok(self.price(&s.plan, ns))
+    }
+}
+
+/// One formatted row of the scaling table (shared by `repro cluster`
+/// and the quickstart).
+pub fn point_line(p: &ClusterPoint) -> String {
+    let cf = if p.capacity_factor == 0.0 {
+        "exact".to_string()
+    } else {
+        format!("cf={:.2}", p.capacity_factor)
+    };
+    format!(
+        "n={:<5} dev={:<4} hosts={:<3} {:<8} drop={:>5.1}%  \
+         net={:>10}B (intra {:>10}B | inter {:>10}B | local {:>10}B)  \
+         step={:>8.3}ms  {:>9.0} tok/s",
+        p.n_experts,
+        p.sim_devices,
+        p.n_hosts,
+        cf,
+        p.drop_fraction * 100.0,
+        p.interconnect_bytes,
+        p.intra_host_bytes,
+        p.inter_host_bytes,
+        p.local_bytes,
+        p.timing.total() * 1e3,
+        p.tokens_per_sec(),
+    )
+}
+
+/// The 64 → 4096 scaling study: every ladder rung at every requested
+/// capacity factor (`None` = exact), printed as a table and returned
+/// for further rendering.
+pub fn run_scaling_study(
+    rows_per_replica: usize,
+    factors: &[Option<f64>],
+    seed: u64,
+) -> Result<Vec<ClusterPoint>> {
+    let mut points = Vec::new();
+    println!(
+        "cluster scaling study ({EXPERTS_PER_DEVICE} experts/device, \
+         {DEVICES_PER_HOST} devices/host, corrected §3.2 traffic):"
+    );
+    for &cf in factors {
+        for n in scaling_ladder() {
+            let sim = ClusterSim::build(n, rows_per_replica, cf, seed)?;
+            let p = sim.point()?;
+            println!("  {}", point_line(&p));
+            points.push(p);
+        }
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smallest_rung_prices_sanely() {
+        let sim = ClusterSim::build(64, 4, None, 7).unwrap();
+        assert_eq!(sim.sim_devices, 4);
+        assert_eq!(sim.groups, 8);
+        let p = sim.point().unwrap();
+        assert_eq!(p.tokens, 16);
+        assert_eq!(p.offered_routes, 16 * 4, "k²=4 routes per token");
+        assert_eq!(p.dropped_routes, 0, "exact dispatch drops nothing");
+        assert_eq!(p.drop_fraction, 0.0);
+        assert!(p.timing.total().is_finite() && p.timing.total() > 0.0);
+        // conservation: every route's in+out bytes are either on a link
+        // or local
+        assert_eq!(
+            p.interconnect_bytes + p.local_bytes,
+            (p.kept_routes * sim.d_model * 4 * 2) as u64
+        );
+        // 4 devices on one host: nothing crosses the fabric
+        assert_eq!(p.n_hosts, 1);
+        assert_eq!(p.inter_host_bytes, 0);
+    }
+
+    #[test]
+    fn capacity_factor_bounds_every_buffer() {
+        let sim = ClusterSim::build(64, 6, Some(1.0), 11).unwrap();
+        let cap = sim.capacity.unwrap();
+        let s = sim.step(1).unwrap();
+        for load in s.plan.expert_loads() {
+            assert!(load <= cap, "load {load} over capacity {cap}");
+        }
+        let p = sim.price(&s.plan, 0);
+        assert!(p.drop_fraction >= 0.0 && p.drop_fraction <= 1.0);
+        assert_eq!(p.kept_routes + p.dropped_routes, p.offered_routes);
+    }
+}

@@ -156,11 +156,14 @@ pub fn run_distributed_demo(artifacts: &str, cfg: &str, devices: usize,
                      &merge_vec(&s.decisions, |d| &d.load), &counts);
         let timing = model_step(&c, &cluster, tokens_per_replica, &counts);
         if step < 3 || step + 1 == steps {
+            // xdev_net is the corrected §3.2 interconnect volume: only
+            // routes landing on another device's shard count; a token
+            // dispatched to an expert on its own device moves nothing
             let idle_max =
                 stats.shard_idle_ns.iter().copied().max().unwrap_or(0);
             println!(
                 "step {:>3}: routes={:<6} busiest_shard={:<5} waves={:<3} \
-                 net={:>8}B  wall={:.3}s  measured: route {:.2}ms + gather \
+                 xdev_net={:>8}B  wall={:.3}s  measured: route {:.2}ms + gather \
                  {:.2}ms + compute {:.2}ms + combine {:.2}ms (+{:.2}ms \
                  hidden, overlap {:.0}%, max shard idle {:.2}ms)  \
                  modelled: dense {:.1}ms + moe {:.1}ms + a2a {:.1}ms",

@@ -7,6 +7,7 @@
 //! repro distributed --config moe-32 --devices 8 --steps 20
 //! repro table1|table6|table7|table8|table9|fig2|fig4|mt|mt5  [--steps N]
 //! repro efficiency --devices 16
+//! repro cluster --rows 8 [--seed S]
 //! repro serve --devices 4 --requests 400
 //! repro info
 //! ```
@@ -71,6 +72,9 @@ fn usage() -> ! {
            fig2 [--side left|right] | fig4              [--steps N]\n\
            mt | mt5                                     [--steps N]\n\
            efficiency   [--devices D] [--tokens N]\n\
+           cluster      [--rows R] [--seed S]   (64..4096-expert scaling\n\
+                        study: real engine, corrected \u{a7}3.2 traffic, GShard\n\
+                        capacity sweep on the multi-host topology model)\n\
            serve        [--devices D] [--requests N] [--seed S]\n\
            info\n\
          common flags: --artifacts DIR (default: artifacts)"
@@ -162,6 +166,19 @@ fn main() -> Result<()> {
             let tokens = args.get_u64("tokens", 8192)? as usize;
             moe::harness::distributed::efficiency_report(
                 &artifacts, devices, tokens,
+            )?;
+        }
+        "cluster" => {
+            // artifact-free: hierarchical routing + capacity dispatch on
+            // the real engine at every rung of the expert ladder, priced
+            // on the simulated multi-host cluster with the corrected
+            // network-bytes accounting (local routes are free)
+            let rows = args.get_u64("rows", 8)? as usize;
+            let seed = args.get_u64("seed", 7)?;
+            moe::harness::cluster_sim::run_scaling_study(
+                rows,
+                &[None, Some(1.0), Some(2.0)],
+                seed,
             )?;
         }
         "serve" => {

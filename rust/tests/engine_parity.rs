@@ -255,13 +255,14 @@ fn native_step_smoke_stats_invariants() {
     let mut nrng = rng.fold_in(2);
     let dec = router.route(&x, Some(&mut nrng)).unwrap();
     let plan = Dispatcher::plan(std::slice::from_ref(&dec), n);
-    let sched = Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native);
+    let layout = ShardLayout::new(devices, n);
+    let sched = Scheduler::new(layout.clone(), ExpertBackend::Native);
     let (outs, stats) = sched.execute(&plan, &[&x], &weights).unwrap();
 
     assert_eq!(outs.len(), 1);
     assert_eq!(outs[0].shape, vec![rows, d]);
     assert!(stats.waves >= 1, "waves = {}", stats.waves);
-    assert_eq!(stats.network_bytes, plan.network_bytes(d));
+    assert_eq!(stats.network_bytes, plan.network_bytes(d, &layout));
     assert_eq!(
         stats.expert_loads.iter().sum::<usize>(),
         plan.total_routes(),
@@ -315,6 +316,7 @@ fn assert_streamed_matches(
     want: &[TensorF],
     decisions: &[moe::coordinator::router::RoutingDecision],
     plan: &DispatchPlan,
+    layout: &ShardLayout,
 ) {
     assert_eq!(s.outs.len(), want.len());
     for (g, w) in s.outs.iter().zip(want.iter()) {
@@ -338,7 +340,10 @@ fn assert_streamed_matches(
         }
     }
     assert_eq!(s.stats.expert_loads, plan.expert_loads());
-    assert_eq!(s.stats.network_bytes, plan.network_bytes(want[0].shape[1]));
+    assert_eq!(
+        s.stats.network_bytes,
+        plan.network_bytes(want[0].shape[1], layout)
+    );
     // the streamed step's finished plan is the oracle plan, exactly
     assert_eq!(s.plan.n_experts, plan.n_experts);
     assert_eq!(s.plan.replica_rows, plan.replica_rows);
@@ -401,7 +406,7 @@ fn streamed_pipeline_matches_serial_reference() {
         let s = engine
             .execute_streaming(&router, &refs, &weights, Some(&mut r2))
             .unwrap();
-        assert_streamed_matches(&s, &want, &decisions, &plan);
+        assert_streamed_matches(&s, &want, &decisions, &plan, &engine.layout);
     });
 }
 
@@ -450,7 +455,7 @@ fn streamed_pipeline_matches_serial_on_hierarchical_gating() {
         let s = engine
             .execute_streaming(&router, &refs, &weights, Some(&mut r2))
             .unwrap();
-        assert_streamed_matches(&s, &want, &decisions, &plan);
+        assert_streamed_matches(&s, &want, &decisions, &plan, &engine.layout);
     });
 }
 
@@ -491,7 +496,7 @@ fn streamed_degenerate_all_tokens_one_expert() {
     let s = engine
         .execute_streaming(&router, &refs, &weights, None)
         .unwrap();
-    assert_streamed_matches(&s, &want, &decisions, &plan);
+    assert_streamed_matches(&s, &want, &decisions, &plan, &engine.layout);
     assert_eq!(s.stats.waves, 5, "ceil(18/4) waves");
 }
 
@@ -537,7 +542,7 @@ fn overlapped_combine_matches_serial_on_multiwave_multireplica() {
         let s = engine
             .execute_streaming(&router, &refs, &weights, Some(&mut r2))
             .unwrap();
-        assert_streamed_matches(&s, &want, &decisions, &plan);
+        assert_streamed_matches(&s, &want, &decisions, &plan, &engine.layout);
         assert!(
             s.stats.combines_overlapped <= replicas,
             "at most one combine per replica"
@@ -731,7 +736,7 @@ fn adaptive_engine_stays_exact_across_steps() {
             .unwrap();
         let cap = engine.wave_capacity().expect("adaptive cap is concrete");
         assert!((1..=64).contains(&cap), "cap {cap} within bounds");
-        assert_streamed_matches(&s, &want, &decisions, &plan);
+        assert_streamed_matches(&s, &want, &decisions, &plan, &engine.layout);
     }
 }
 
