@@ -1,0 +1,118 @@
+//! Bench/report: the chaos sweep — deterministic fault injection on
+//! the real engine + serve loop, writing `BENCH_chaos.json`.
+//!
+//! Each row is one (fault_rate, recovery_policy) point (plus two
+//! shard-death schedules at the max rate, including all-shards-dead):
+//! the timed quantity is the streamed step under injected faults, and
+//! the extras carry the recovery counters and the serving-boundary
+//! conservation buckets so CI can re-assert liveness and
+//! `offered == completed + shed + failed` from the artifact alone.
+//! Set `BENCH_SMOKE=1` for a single-iteration CI run.
+
+use moe::coordinator::{FaultPlan, RecoveryPolicy};
+use moe::harness::chaos::{point_line, run_point, ChaosSim};
+use moe::util::bench::{black_box, BenchReport, Bencher};
+
+fn policy_code(p: RecoveryPolicy) -> f64 {
+    match p {
+        RecoveryPolicy::Redispatch => 1.0,
+        RecoveryPolicy::DegradeOnly => 0.0,
+    }
+}
+
+fn bench_point(
+    bench: &Bencher,
+    report: &mut BenchReport,
+    label: &str,
+    plan: FaultPlan,
+) -> anyhow::Result<()> {
+    let (devices, n_experts, rows) = (4usize, 8usize, 8usize);
+    let sim = ChaosSim::build(devices, n_experts, rows, plan, 7)?;
+    let tokens = devices * rows;
+    // warm the persistent engine, then time the streamed step; fault
+    // draws follow the engine's step counter, so every iteration sees
+    // the schedule of a fresh step
+    black_box(sim.step(0)?);
+    let mut fold = 0u64;
+    let r = bench.run(label, || {
+        fold += 1;
+        black_box(sim.step(fold).unwrap());
+    });
+    r.report_throughput("tok", tokens as f64);
+    let p = run_point(&sim, 2, 24)?;
+    println!("  {}", point_line(&p));
+    report.push(
+        &r,
+        Some(("tok", tokens as f64)),
+        &[
+            ("fault_rate", p.fault_rate),
+            ("policy", policy_code(p.policy)),
+            ("shard_deaths", p.shard_deaths as f64),
+            ("live_fraction", p.live_fraction),
+            ("failed_chunks", p.failed_chunks as f64),
+            ("redispatched_routes", p.redispatched_routes as f64),
+            ("degraded_tokens", p.degraded_tokens as f64),
+            ("renorm_mass_lost", p.renorm_mass_lost),
+            ("max_step_ns", p.max_step_ns as f64),
+            ("all_finite", if p.all_finite { 1.0 } else { 0.0 }),
+            ("offered", p.offered as f64),
+            ("completed", p.completed as f64),
+            ("shed", p.shed as f64),
+            ("failed", p.failed as f64),
+            ("retried", p.retried as f64),
+            ("conserved", if p.conserved() { 1.0 } else { 0.0 }),
+        ],
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher::from_env_quick();
+    let mut report = BenchReport::new("chaos");
+    println!("== chaos sweep: seeded fault injection on the real engine ==");
+    for rate in [0.0f64, 0.05, 0.2, 0.5] {
+        for policy in [RecoveryPolicy::Redispatch, RecoveryPolicy::DegradeOnly]
+        {
+            let plan = FaultPlan {
+                seed: 0xc4a0_5000,
+                chunk_fail_rate: rate,
+                straggler_rate: rate * 0.5,
+                straggler_delay_ns: 30_000,
+                deadline_ns: 60_000,
+                combine_drop_rate: rate * 0.25,
+                shard_deaths: Vec::new(),
+                policy,
+            };
+            let label = format!(
+                "chaos step rate={rate:.2} {}",
+                match policy {
+                    RecoveryPolicy::Redispatch => "redispatch",
+                    RecoveryPolicy::DegradeOnly => "degrade",
+                }
+            );
+            bench_point(&bench, &mut report, &label, plan)?;
+        }
+    }
+    // shard deaths at the max swept rate: one mid-run death, then the
+    // all-dead extreme — liveness means both rows exist at all
+    for (name, deaths) in [
+        ("one-death", vec![(1u64, 1usize)]),
+        ("all-dead", (0..4).map(|sh| (0u64, sh)).collect::<Vec<_>>()),
+    ] {
+        let plan = FaultPlan {
+            seed: 0xdead,
+            chunk_fail_rate: 0.5,
+            straggler_rate: 0.0,
+            straggler_delay_ns: 0,
+            deadline_ns: u64::MAX,
+            combine_drop_rate: 0.125,
+            shard_deaths: deaths,
+            policy: RecoveryPolicy::Redispatch,
+        };
+        let label = format!("chaos step rate=0.50 {name}");
+        bench_point(&bench, &mut report, &label, plan)?;
+    }
+    report.write("BENCH_chaos.json")?;
+    println!("wrote BENCH_chaos.json");
+    Ok(())
+}

@@ -43,6 +43,29 @@
 //! cargo run --release -- cluster --rows 8
 //! BENCH_SMOKE=1 cargo bench --bench cluster   # same study + BENCH_cluster.json
 //! ```
+//!
+//! # Fault model & degraded mode (`repro chaos`)
+//!
+//! The streaming step optionally runs under a seeded, deterministic
+//! `FaultPlan` (`moe::coordinator::faults`): per-chunk failures,
+//! straggler delays past a deadline, dropped all-to-all combine
+//! messages and permanent shard deaths are all pure keyed-hash draws —
+//! same seed, same faults, bit-identical degraded outputs.  Recovery is
+//! two-tier: a failed route first re-dispatches to the token's other
+//! selected experts on live shards (`RecoveryPolicy::Redispatch`), and
+//! whatever remains becomes lost gate mass — the combine then
+//! *renormalizes* eq-1 over the surviving contributions, so outputs
+//! stay finite under any schedule (even every shard dead).  Dead shards
+//! are masked out of the router on subsequent steps, the serve loop
+//! retries degraded requests with backoff and sheds infeasible
+//! deadlines against `Scheduler::live_fraction`, and
+//! `rust/tests/faults.rs` proves the degraded outputs bit-equal to a
+//! serial failure-masked oracle:
+//!
+//! ```bash
+//! cargo run --release -- chaos --rows 8       # rates × policies sweep
+//! BENCH_SMOKE=1 cargo bench --bench chaos     # same sweep + BENCH_chaos.json
+//! ```
 
 use anyhow::Result;
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
@@ -177,6 +200,20 @@ fn main() -> Result<()> {
     let sim = moe::harness::cluster_sim::ClusterSim::build(64, 4, Some(1.0), 7)?;
     let p = sim.point()?;
     println!("cluster rung: {}", moe::harness::cluster_sim::point_line(&p));
+
+    // --- 7. fault model & degraded mode: one chaos point — seeded
+    //        chunk failures + a recovery policy on the real engine and
+    //        serve loop, asserting liveness and request conservation
+    //        (`repro chaos` sweeps rates × policies + shard deaths) ---
+    let plan = moe::coordinator::FaultPlan {
+        chunk_fail_rate: 0.2,
+        combine_drop_rate: 0.05,
+        ..moe::coordinator::FaultPlan::none(21)
+    };
+    let chaos = moe::harness::chaos::ChaosSim::build(2, 8, 8, plan, 21)?;
+    let cp = moe::harness::chaos::run_point(&chaos, 2, 16)?;
+    println!("chaos point: {}", moe::harness::chaos::point_line(&cp));
+    assert!(cp.conserved() && cp.all_finite);
 
     println!("quickstart OK");
     Ok(())

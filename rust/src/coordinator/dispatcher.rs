@@ -188,6 +188,30 @@ impl LinkTraffic {
     }
 }
 
+/// How residual dispatch picks among a full token's *other* selected
+/// experts with room when its first choice's capacity buffer is full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ResidualPolicy {
+    /// First eligible expert in gate (descending-weight) order — the
+    /// original deterministic rule.
+    #[default]
+    GateOrder,
+    /// Seeded uniform pick among the eligible experts: a keyed hash of
+    /// `(seed, replica, row, slot)` indexes the candidate list, so the
+    /// choice is reproducible (same seed, same plan, bit for bit) and
+    /// independent of thread timing, while spreading overflow load
+    /// instead of always piling onto the next-heaviest gate.
+    Random { seed: u64 },
+}
+
+/// splitmix64 finalizer — the residual pick's keyed hash.
+fn mix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
 /// Incrementally built [`DispatchPlan`]: gate vectors are appended in
 /// (replica, row) order — replica by replica, any number of row blocks
 /// per replica — and per-expert rows become immutable the moment they
@@ -206,11 +230,20 @@ pub struct PlanBuilder {
     /// per-expert capacity buffer (GShard-style); `None` = exact
     /// dispatch, every route kept
     capacity: Option<usize>,
+    /// residual-target selection rule when the first choice is full
+    residual: ResidualPolicy,
 }
 
 impl PlanBuilder {
     pub fn new(n_experts: usize) -> Self {
         Self::with_capacity(n_experts, None)
+    }
+
+    /// Set the residual-target selection rule (default
+    /// [`ResidualPolicy::GateOrder`]).  Only relevant with a capacity.
+    pub fn with_residual_policy(mut self, residual: ResidualPolicy) -> Self {
+        self.residual = residual;
+        self
     }
 
     /// A builder whose per-expert batches are bounded by `capacity`
@@ -234,6 +267,7 @@ impl PlanBuilder {
             },
             cur_rows: 0,
             capacity,
+            residual: ResidualPolicy::GateOrder,
         }
     }
 
@@ -251,16 +285,44 @@ impl PlanBuilder {
                 {
                     Some(first)
                 } else {
-                    // residual dispatch: scan the token's other selected
-                    // experts in gate order for one with room (a
-                    // duplicate of `first` can never qualify — its
-                    // buffer is the full one)
-                    tok.experts
-                        .iter()
-                        .enumerate()
-                        .filter(|&(j, _)| j != slot)
-                        .map(|(_, &e)| e)
-                        .find(|&e| self.plan.per_expert[e].tokens.len() < cap)
+                    // residual dispatch: among the token's other selected
+                    // experts with room (a duplicate of `first` can never
+                    // qualify — its buffer is the full one), pick per the
+                    // residual policy
+                    match self.residual {
+                        ResidualPolicy::GateOrder => tok
+                            .experts
+                            .iter()
+                            .enumerate()
+                            .filter(|&(j, _)| j != slot)
+                            .map(|(_, &e)| e)
+                            .find(|&e| {
+                                self.plan.per_expert[e].tokens.len() < cap
+                            }),
+                        ResidualPolicy::Random { seed } => {
+                            let cands: Vec<usize> = tok
+                                .experts
+                                .iter()
+                                .enumerate()
+                                .filter(|&(j, _)| j != slot)
+                                .map(|(_, &e)| e)
+                                .filter(|&e| {
+                                    self.plan.per_expert[e].tokens.len() < cap
+                                })
+                                .collect();
+                            if cands.is_empty() {
+                                None
+                            } else {
+                                // keyed hash of the route coordinates —
+                                // deterministic, timing-independent
+                                let h = mix64(
+                                    mix64(seed ^ replica as u64)
+                                        ^ ((row as u64) << 20 | slot as u64),
+                                );
+                                Some(cands[(h % cands.len() as u64) as usize])
+                            }
+                        }
+                    }
                 };
                 match chosen {
                     Some(e) => {
@@ -357,7 +419,25 @@ impl Dispatcher {
         n_experts: usize,
         capacity: Option<usize>,
     ) -> DispatchPlan {
-        let mut builder = PlanBuilder::with_capacity(n_experts, capacity);
+        Self::plan_with_capacity_policy(
+            decisions,
+            n_experts,
+            capacity,
+            ResidualPolicy::GateOrder,
+        )
+    }
+
+    /// [`plan_with_capacity`](Self::plan_with_capacity) with an explicit
+    /// [`ResidualPolicy`] — the serial oracle for the seeded-random
+    /// residual dispatch variant.
+    pub fn plan_with_capacity_policy(
+        decisions: &[RoutingDecision],
+        n_experts: usize,
+        capacity: Option<usize>,
+        residual: ResidualPolicy,
+    ) -> DispatchPlan {
+        let mut builder = PlanBuilder::with_capacity(n_experts, capacity)
+            .with_residual_policy(residual);
         for dec in decisions {
             builder.push_rows(&dec.per_token);
             builder.finish_replica();
@@ -935,6 +1015,94 @@ mod tests {
         assert_eq!(Dispatcher::capacity_for(1.0, 10, 2, 8), 3);
         // floor at one row so an expert can always be addressed
         assert_eq!(Dispatcher::capacity_for(0.01, 4, 1, 64), 1);
+    }
+
+    #[test]
+    fn random_residual_policy_is_seeded_and_conserves_routes() {
+        // the seeded-random residual target selection keeps every
+        // capacity invariant (buffers bounded, kept + dropped ==
+        // offered) and is a pure function of (decisions, seed)
+        prop::forall("random residual", |rng| {
+            let (n, k) = (prop::dim(rng, 3, 8), prop::dim(rng, 2, 4));
+            let replicas = prop::dim(rng, 1, 4);
+            let decisions: Vec<_> = (0..replicas)
+                .map(|_| decision(prop::dim(rng, 1, 10), n, k, rng))
+                .collect();
+            let offered: usize =
+                decisions.iter().map(|d| d.per_token.len() * k).sum();
+            let cap = prop::dim(rng, 1, 4);
+            let seed = rng.next_u64();
+            let policy = ResidualPolicy::Random { seed };
+            let plan = Dispatcher::plan_with_capacity_policy(
+                &decisions, n, Some(cap), policy,
+            );
+            for load in plan.expert_loads() {
+                assert!(load <= cap, "load {load} exceeds capacity {cap}");
+            }
+            assert_eq!(plan.total_routes() + plan.dropped_routes, offered);
+            let again = Dispatcher::plan_with_capacity_policy(
+                &decisions, n, Some(cap), policy,
+            );
+            assert_eq!(plan.dropped_routes, again.dropped_routes);
+            assert_eq!(plan.rerouted_routes, again.rerouted_routes);
+            for (a, b) in plan.per_expert.iter().zip(again.per_expert.iter())
+            {
+                assert_eq!(a.tokens, b.tokens);
+                assert_eq!(a.gates, b.gates);
+            }
+        });
+    }
+
+    #[test]
+    fn random_residual_policy_can_differ_from_gate_order() {
+        // a witness that the random policy actually changes placement.
+        // cap=9: nine k=1 tokens fill expert 0, then eight k=3 tokens
+        // overflow slot 0 with residual candidates {1, 2} both open —
+        // GateOrder always sends that route to expert 1, so some seed
+        // of Random must place it differently
+        let n = 3;
+        let filler = GateVec { experts: vec![0], weights: vec![1.0] };
+        let over = GateVec {
+            experts: vec![0, 1, 2],
+            weights: vec![0.5, 0.3, 0.2],
+        };
+        let mut per_token = vec![filler; 9];
+        per_token.extend(vec![over; 8]);
+        let offered: usize =
+            per_token.iter().map(|t| t.experts.len()).sum();
+        let decisions = vec![RoutingDecision {
+            per_token,
+            importance: vec![0.0; n],
+            load: vec![0.0; n],
+            noise: None,
+        }];
+        let gate_order =
+            Dispatcher::plan_with_capacity(&decisions, n, Some(9));
+        assert!(gate_order.rerouted_routes > 0, "witness must reroute");
+        let mut saw_different = false;
+        for seed in 0..32u64 {
+            let p = Dispatcher::plan_with_capacity_policy(
+                &decisions,
+                n,
+                Some(9),
+                ResidualPolicy::Random { seed },
+            );
+            assert_eq!(p.total_routes() + p.dropped_routes, offered);
+            for load in p.expert_loads() {
+                assert!(load <= 9);
+            }
+            if p.per_expert[1].tokens != gate_order.per_expert[1].tokens
+                || p.per_expert[2].tokens != gate_order.per_expert[2].tokens
+            {
+                saw_different = true;
+                break;
+            }
+        }
+        assert!(
+            saw_different,
+            "32 seeds of Random placed residual routes exactly like \
+             GateOrder — the policy is not actually randomizing"
+        );
     }
 
     #[test]

@@ -83,11 +83,16 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::dispatcher::{DispatchPlan, Dispatcher, PlanBuilder};
+use crate::coordinator::dispatcher::{
+    DispatchPlan, Dispatcher, PlanBuilder, ResidualPolicy,
+};
+use crate::coordinator::faults::{
+    renormalize_row, ChunkOutcome, FaultPlan, FaultSession, FaultTally,
+};
 use crate::coordinator::router::{
     RouteBlock, RouteNoise, Router, RouterBackend, RoutingDecision,
 };
@@ -104,7 +109,22 @@ use crate::util::rng::Rng;
 /// overlap dispatch with routing at all, so it falls back to this.
 /// Chunking is bit-exact (expert rows are independent), so the value
 /// only affects pipelining granularity, never results.
-const STREAM_DEFAULT_CAP: usize = 128;
+pub(crate) const STREAM_DEFAULT_CAP: usize = 128;
+
+/// Provenance of a single re-dispatched route: when a streamed chunk is
+/// failed by the active [`FaultPlan`], each of its routes is retried as
+/// a one-row task on the token's next surviving selected expert.  The
+/// `retry_order` key reproduces the serial oracle's accumulation order
+/// (redirects sort after originals, by source `(expert, position)`).
+struct RetryTask {
+    replica: usize,
+    /// replica-local destination row
+    row: usize,
+    gate: f32,
+    /// `((src_expert + 1) << 32) | src_pos` — strictly positive, so
+    /// original segments (order 0) always sort first
+    retry_order: u64,
+}
 
 /// One expert-chunk of work bound for a shard worker.
 struct ExpertTask {
@@ -116,6 +136,9 @@ struct ExpertTask {
     input: Vec<f32>,
     /// output buffer, from the buffer pool; worker fills (rows, d)
     output: Vec<f32>,
+    /// `Some` when this task is a fault-recovery re-dispatch of a
+    /// single route rather than a planned chunk
+    retry: Option<RetryTask>,
 }
 
 struct ComputeJob {
@@ -123,6 +146,9 @@ struct ComputeJob {
     /// borrowed `&[ExpertWeights]` — see module safety notes
     weights: *const [ExpertWeights],
     tasks: Vec<ExpertTask>,
+    /// injected straggler delay (fault plan); the worker sleeps this
+    /// long inside its timed compute window
+    delay_ns: u64,
     reply: Sender<ComputeReply>,
 }
 
@@ -166,6 +192,9 @@ struct RouteJob {
     x: *const TensorF,
     /// borrowed pre-drawn eq-4 noise; `None` = deterministic eval
     noise: Option<*const RouteNoise>,
+    /// borrowed dead-expert mask (fault plan); masked experts gate to
+    /// −inf before top-k, so dead shards receive no routes
+    mask: Option<*const Vec<bool>>,
     /// block index, for in-order reassembly on the coordinator
     block: usize,
     lo: usize,
@@ -194,6 +223,10 @@ struct CombineSegment {
     chunk_lo: usize,
     /// first expert-batch row covered by this segment (≥ `chunk_lo`)
     lo: usize,
+    /// 0 for planned chunks; [`RetryTask::retry_order`] for recovery
+    /// re-dispatches, so the combine sort reproduces the oracle's
+    /// originals-then-redirects accumulation order per expert
+    retry_order: u64,
     /// destination token rows within the replica, one per segment row
     rows: Vec<usize>,
     /// gate weights aligned with `rows`
@@ -213,6 +246,10 @@ struct CombineJob {
     /// sorted expert-major so per-token accumulation order matches the
     /// serial reference exactly
     segments: Vec<CombineSegment>,
+    /// gate mass lost to unrecovered faults, per replica row (`None` =
+    /// healthy replica).  Rows with lost mass > 0 are renormalized over
+    /// the gate mass actually delivered (degraded eq-1 combine).
+    lost: Option<Vec<f32>>,
     /// pooled output buffer
     out: Vec<f32>,
     reply: Sender<CombineReply>,
@@ -241,6 +278,9 @@ struct ReplicaTracker {
     rows: usize,
     /// combine messages received so far (the all-to-all recv queue)
     inbox: Vec<CombineSegment>,
+    /// gate mass lost to unrecovered faults per replica row (lazily
+    /// sized; empty while the replica is healthy)
+    lost: Vec<f32>,
     /// combine job emitted (terminal state)
     emitted: bool,
 }
@@ -252,8 +292,17 @@ impl ReplicaTracker {
             sealed,
             rows,
             inbox: Vec::new(),
+            lost: Vec::new(),
             emitted: false,
         }
+    }
+
+    /// Charge `gate` of lost mass to replica-local `row`.
+    fn lose(&mut self, row: usize, gate: f32) {
+        if self.lost.is_empty() {
+            self.lost.resize(self.rows, 0.0);
+        }
+        self.lost[row] += gate;
     }
 
     fn ready(&self) -> bool {
@@ -319,6 +368,12 @@ impl<'a, T> DrainGuard<'a, T> {
         self.outstanding += 1;
     }
 
+    /// Record `n` jobs sent (fault recovery fans one failed chunk out
+    /// into several one-row re-dispatches).
+    fn sent_n(&mut self, n: usize) {
+        self.outstanding += n;
+    }
+
     fn recv(&mut self) -> Result<T> {
         let v = self
             .rx
@@ -375,6 +430,14 @@ pub struct ExecutionEngine {
     /// dispatch (`None` = exact: every route kept); see
     /// [`PlanBuilder::with_capacity`]
     dispatch_capacity: Option<usize>,
+    /// how over-capacity residual routes pick among a token's other
+    /// selected experts (see [`PlanBuilder::with_residual_policy`])
+    residual: ResidualPolicy,
+    /// active fault-injection session (`None` = no faults); advances
+    /// one plan step per streamed step so same-seed runs are identical
+    fault: Option<FaultSession>,
+    /// fault/recovery counters of the most recent streamed step
+    tally: FaultTally,
     txs: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     pool: BufferPool,
@@ -412,6 +475,9 @@ impl ExecutionEngine {
             layout,
             policy,
             dispatch_capacity: None,
+            residual: ResidualPolicy::default(),
+            fault: None,
+            tally: FaultTally::default(),
             txs,
             handles,
             pool: BufferPool::default(),
@@ -427,6 +493,39 @@ impl ExecutionEngine {
     pub fn with_dispatch_capacity(mut self, capacity: Option<usize>) -> Self {
         self.dispatch_capacity = capacity;
         self
+    }
+
+    /// Choose how streamed over-capacity residual routes pick among a
+    /// token's other selected experts (gate order by default; seeded
+    /// random spreads the spill — see
+    /// [`PlanBuilder::with_residual_policy`]).
+    pub fn with_residual_policy(mut self, residual: ResidualPolicy) -> Self {
+        self.residual = residual;
+        self
+    }
+
+    /// Attach a deterministic fault-injection plan.  Each streamed step
+    /// advances the session's step counter; faults are drawn by pure
+    /// keyed hashing of `(seed, step, shard, expert, chunk)`, so
+    /// same-seed chaos runs are bit-identical regardless of thread
+    /// timing (same pre-draw discipline as the eq-4 noise).
+    pub fn with_fault_plan(mut self, plan: Option<FaultPlan>) -> Self {
+        self.fault = plan.map(FaultSession::new);
+        self
+    }
+
+    /// Fraction of shards still live at the session's current step
+    /// (1.0 without a fault plan) — the serve loop's health signal.
+    pub fn live_fraction(&self) -> f64 {
+        self.fault
+            .as_ref()
+            .map(|s| s.plan.live_fraction(&self.layout, s.step))
+            .unwrap_or(1.0)
+    }
+
+    /// Fault/recovery counters of the most recent streamed step.
+    pub fn fault_tally(&self) -> &FaultTally {
+        &self.tally
     }
 
     /// The wave capacity the next Native step will use.
@@ -519,6 +618,7 @@ impl ExecutionEngine {
                     device: dev,
                     weights,
                     tasks,
+                    delay_ns: 0,
                     reply: reply_tx.clone(),
                 };
                 // workers only exit when the engine is dropped, so this
@@ -548,6 +648,7 @@ impl ExecutionEngine {
                     &k_tx,
                     &mut k_guard,
                     &mut panicked,
+                    None,
                 )?;
                 // recycle finished combines while later waves compute
                 while let Some(kr) = k_guard.try_recv() {
@@ -850,11 +951,30 @@ impl ExecutionEngine {
         let mut phases = PhaseNanos::default();
         let mut shard_compute = vec![0u64; n_dev];
 
+        // fault-injection context for this step: snapshot the plan and
+        // the session's step index, then advance the counter (even if
+        // the step later errors, so retries see fresh draws)
+        self.tally = FaultTally::default();
+        let fault_ctx: Option<(FaultPlan, u64)> =
+            self.fault.as_mut().map(|s| {
+                let st = s.step;
+                s.step += 1;
+                (s.plan.clone(), st)
+            });
+        // recovery needs each token's other selected experts, even on
+        // the forward-only path that otherwise skips gate-vector copies
+        let need_sel = collect_decisions || fault_ctx.is_some();
+
         // Declared before the guards below: drop order (reverse of
         // declaration) then drains every in-flight job before any
-        // borrowed noise buffer is freed — see module safety notes.
+        // borrowed noise buffer or dead-expert mask is freed — see
+        // module safety notes.
+        let mask: Option<Vec<bool>> = fault_ctx
+            .as_ref()
+            .and_then(|(fp, st)| fp.router_mask(*st, &self.layout));
         let mut noises: Vec<Option<RouteNoise>> = Vec::with_capacity(xs.len());
-        let mut builder = PlanBuilder::with_capacity(n, self.dispatch_capacity);
+        let mut builder = PlanBuilder::with_capacity(n, self.dispatch_capacity)
+            .with_residual_policy(self.residual);
         let mut decisions: Vec<RoutingDecision> = Vec::with_capacity(xs.len());
         // rows already gathered + dispatched per expert (≤ its final load)
         let mut emitted = vec![0usize; n];
@@ -913,6 +1033,7 @@ impl ExecutionEngine {
                     router,
                     x: *x as *const TensorF,
                     noise: noise_ptr,
+                    mask: mask.as_ref().map(|m| m as *const Vec<bool>),
                     block: blk,
                     lo: blk * block_rows,
                     hi: ((blk + 1) * block_rows).min(b),
@@ -930,7 +1051,7 @@ impl ExecutionEngine {
                 (0..n_blocks).map(|_| None).collect();
             let mut next_append = 0usize;
             let mut per_token: Vec<GateVec> =
-                Vec::with_capacity(if collect_decisions { b } else { 0 });
+                Vec::with_capacity(if need_sel { b } else { 0 });
             let mut imp = vec![0f32; if collect_decisions { n } else { 0 }];
             let mut load = vec![0f32; if collect_decisions { n } else { 0 }];
             for _ in 0..n_blocks {
@@ -948,6 +1069,7 @@ impl ExecutionEngine {
                         &k_tx,
                         &mut k_guard,
                         &mut compute_panic,
+                        fault_ctx.as_ref(),
                     )?;
                 }
                 while let Some(kr) = k_guard.try_recv() {
@@ -998,7 +1120,7 @@ impl ExecutionEngine {
                         }
                     }
                     builder.push_rows(&blk.per_token);
-                    if collect_decisions {
+                    if need_sel {
                         per_token.extend(blk.per_token);
                     }
                     next_append += 1;
@@ -1011,7 +1133,7 @@ impl ExecutionEngine {
                         if first_dispatch.is_none() {
                             first_dispatch = Some(Instant::now());
                         }
-                        self.send_streamed_chunk(
+                        let sent = self.send_streamed_chunk(
                             builder.plan(),
                             &mut trackers,
                             xs,
@@ -1021,8 +1143,10 @@ impl ExecutionEngine {
                             lo + cap,
                             d,
                             &c_tx,
+                            fault_ctx.as_ref(),
+                            &per_token,
                         )?;
-                        c_guard.sent();
+                        c_guard.sent_n(sent);
                         emitted[e] = lo + cap;
                     }
                 }
@@ -1048,7 +1172,7 @@ impl ExecutionEngine {
                     if first_dispatch.is_none() {
                         first_dispatch = Some(Instant::now());
                     }
-                    self.send_streamed_chunk(
+                    let sent = self.send_streamed_chunk(
                         builder.plan(),
                         &mut trackers,
                         xs,
@@ -1058,8 +1182,10 @@ impl ExecutionEngine {
                         hi,
                         d,
                         &c_tx,
+                        fault_ctx.as_ref(),
+                        &per_token,
                     )?;
-                    c_guard.sent();
+                    c_guard.sent_n(sent);
                     lo = hi;
                 }
                 emitted[e] = len;
@@ -1100,6 +1226,7 @@ impl ExecutionEngine {
                 &k_tx,
                 &mut k_guard,
                 &mut compute_panic,
+                fault_ctx.as_ref(),
             )?;
         }
         if let Some(e) = route_err {
@@ -1156,6 +1283,10 @@ impl ExecutionEngine {
             .iter()
             .filter(|t| **t <= last_compute_done)
             .count();
+        stats.failed_chunks = self.tally.failed_chunks;
+        stats.redispatched_routes = self.tally.redispatched_routes;
+        stats.degraded_tokens = self.tally.degraded_tokens;
+        stats.renorm_mass_lost = self.tally.renorm_mass_lost;
         self.policy.observe(&stats);
         Ok(StreamedStep { outs, decisions, plan, stats })
     }
@@ -1163,7 +1294,15 @@ impl ExecutionEngine {
     /// Gather rows `[lo, hi)` of expert `e` from the builder plan's
     /// immutable prefix into pooled buffers, record the chunk on the
     /// completion records of the replicas it serves, and dispatch it to
-    /// the owning shard worker.
+    /// the owning shard worker.  Returns the number of compute jobs
+    /// sent: 1 on the healthy path, and one single-row re-dispatch per
+    /// recovered route when the fault plan fails the chunk (0 when
+    /// every route degrades instead).
+    ///
+    /// `cur_sel` holds the current replica's routed gate vectors —
+    /// streamed chunks never span replicas (everything routed is tail-
+    /// flushed at each replica boundary), so every token address in
+    /// `[lo, hi)` indexes into it.
     #[allow(clippy::too_many_arguments)]
     fn send_streamed_chunk(
         &mut self,
@@ -1176,13 +1315,82 @@ impl ExecutionEngine {
         hi: usize,
         d: usize,
         reply: &Sender<ComputeReply>,
-    ) -> Result<()> {
+        fault: Option<&(FaultPlan, u64)>,
+        cur_sel: &[GateVec],
+    ) -> Result<usize> {
+        let dev = self.layout.owner(e);
+        let outcome = fault
+            .map(|(fp, st)| fp.chunk_outcome(*st, dev, e, lo))
+            .unwrap_or(ChunkOutcome::Healthy);
+        if let ChunkOutcome::Failed = outcome {
+            // detected failure (shard death, chunk fault, or straggler
+            // past its deadline): bounded recovery — re-dispatch each
+            // route to the token's next surviving selected expert, or
+            // charge its gate to the replica's lost mass.  The chunk is
+            // never registered; only successful re-dispatches add owed
+            // messages (retries are not themselves re-faulted).
+            let (fp, st) = fault.expect("failed outcome implies a plan");
+            self.tally.failed_chunks += 1;
+            let batch = &plan.per_expert[e];
+            let mut sent = 0usize;
+            for pos in lo..hi {
+                let addr = batch.tokens[pos];
+                let gate = batch.gates[pos];
+                let target = fp.redirect_target(
+                    *st,
+                    &self.layout,
+                    &cur_sel[addr.row].experts,
+                    e,
+                );
+                let Some(target) = target else {
+                    trackers[addr.replica].lose(addr.row, gate);
+                    continue;
+                };
+                let mut input = self.pool.take();
+                input.extend_from_slice(
+                    &xs[addr.replica].data[addr.row * d..(addr.row + 1) * d],
+                );
+                let mut output = self.pool.take();
+                output.resize(d, 0.0);
+                let tdev = self.layout.owner(target);
+                let job = ComputeJob {
+                    device: tdev,
+                    weights,
+                    tasks: vec![ExpertTask {
+                        expert: target,
+                        rows: 1,
+                        out_offset: 0,
+                        input,
+                        output,
+                        retry: Some(RetryTask {
+                            replica: addr.replica,
+                            row: addr.row,
+                            gate,
+                            retry_order: ((e as u64 + 1) << 32)
+                                | pos as u64,
+                        }),
+                    }],
+                    delay_ns: 0,
+                    reply: reply.clone(),
+                };
+                self.txs[tdev]
+                    .send(Job::Compute(job))
+                    .map_err(|_| anyhow!("shard worker {tdev} unavailable"))?;
+                trackers[addr.replica].outstanding += 1;
+                self.tally.redispatched_routes += 1;
+                sent += 1;
+            }
+            return Ok(sent);
+        }
+        let delay_ns = match outcome {
+            ChunkOutcome::Delayed(ns) => ns,
+            _ => 0,
+        };
         register_chunk(plan, trackers, e, lo, hi);
         let mut input = self.pool.take();
         Dispatcher::gather_range_into(plan, e, lo..hi, xs, &mut input);
         let mut output = self.pool.take();
         output.resize((hi - lo) * d, 0.0);
-        let dev = self.layout.owner(e);
         let job = ComputeJob {
             device: dev,
             weights,
@@ -1192,17 +1400,24 @@ impl ExecutionEngine {
                 out_offset: lo,
                 input,
                 output,
+                retry: None,
             }],
+            delay_ns,
             reply: reply.clone(),
         };
         self.txs[dev]
             .send(Job::Compute(job))
-            .map_err(|_| anyhow!("shard worker {dev} unavailable"))
+            .map_err(|_| anyhow!("shard worker {dev} unavailable"))?;
+        Ok(1)
     }
 
     /// Fold one finished compute reply into the executor state: credit
     /// the shard, recycle input buffers, and deliver each task's output
-    /// chunk to the combine queues of the replicas it serves.
+    /// chunk to the combine queues of the replicas it serves.  Under an
+    /// active fault plan a worker panic degrades the affected routes
+    /// (their gate mass is charged to the replicas' lost mass and the
+    /// owed message resolved) instead of failing the step, so the
+    /// engine stays live.
     #[allow(clippy::too_many_arguments)]
     fn absorb_compute_reply(
         &mut self,
@@ -1214,12 +1429,35 @@ impl ExecutionEngine {
         k_tx: &Sender<CombineReply>,
         k_guard: &mut DrainGuard<'_, CombineReply>,
         panicked: &mut bool,
+        fault: Option<&(FaultPlan, u64)>,
     ) -> Result<()> {
         shard_compute[reply.device] += reply.compute_ns;
-        *panicked |= !reply.ok;
         for t in reply.tasks {
             self.pool.put(t.input);
-            if reply.ok {
+            if let Some(rt) = t.retry {
+                // one re-dispatched route: deliver as a single-row
+                // segment, or charge its gate to the lost mass —
+                // either way the owed message resolves
+                if reply.ok {
+                    trackers[rt.replica].inbox.push(CombineSegment {
+                        expert: t.expert,
+                        chunk_lo: 0,
+                        lo: 0,
+                        retry_order: rt.retry_order,
+                        rows: vec![rt.row],
+                        gates: vec![rt.gate],
+                        data: Arc::new(t.output),
+                    });
+                } else {
+                    trackers[rt.replica].lose(rt.row, rt.gate);
+                    self.pool.put(t.output);
+                }
+                trackers[rt.replica].outstanding -= 1;
+                if trackers[rt.replica].ready() {
+                    self.emit_combine(trackers, rt.replica, d, k_tx)?;
+                    k_guard.sent();
+                }
+            } else if reply.ok {
                 self.deliver_chunk(
                     plan,
                     trackers,
@@ -1230,10 +1468,34 @@ impl ExecutionEngine {
                     d,
                     k_tx,
                     k_guard,
+                    fault,
                 )?;
+            } else if fault.is_some() {
+                // worker panic with recovery armed: degrade every route
+                // of the chunk and resolve the owed messages so the
+                // step completes with renormalized outputs
+                self.tally.failed_chunks += 1;
+                let batch = &plan.per_expert[t.expert];
+                for (replica, run) in Dispatcher::replica_runs(
+                    plan,
+                    t.expert,
+                    t.out_offset..t.out_offset + t.rows,
+                ) {
+                    for pos in run {
+                        trackers[replica]
+                            .lose(batch.tokens[pos].row, batch.gates[pos]);
+                    }
+                    trackers[replica].outstanding -= 1;
+                    if trackers[replica].ready() {
+                        self.emit_combine(trackers, replica, d, k_tx)?;
+                        k_guard.sent();
+                    }
+                }
+                self.pool.put(t.output);
             } else {
                 // garbage output of a panicked worker: recycle, leave
                 // the owed counts standing (the step bails after drain)
+                *panicked = true;
                 self.pool.put(t.output);
             }
         }
@@ -1244,7 +1506,10 @@ impl ExecutionEngine {
     /// split it along [`Dispatcher::replica_runs`] into per-replica
     /// segments (copying destination rows and gates out of the plan's
     /// immutable prefix), and emit the combine job of every replica
-    /// whose last owed chunk this was.
+    /// whose last owed chunk this was.  An active fault plan may drop
+    /// the combine *message* (the all-to-all return leg) even though
+    /// the chunk computed: the affected routes degrade exactly like a
+    /// failed chunk, but after compute — no retry, only renorm.
     #[allow(clippy::too_many_arguments)]
     fn deliver_chunk(
         &mut self,
@@ -1257,20 +1522,38 @@ impl ExecutionEngine {
         d: usize,
         k_tx: &Sender<CombineReply>,
         k_guard: &mut DrainGuard<'_, CombineReply>,
+        fault: Option<&(FaultPlan, u64)>,
     ) -> Result<()> {
         let data = Arc::new(output);
         let batch = &plan.per_expert[expert];
         for (replica, run) in
             Dispatcher::replica_runs(plan, expert, chunk_lo..chunk_lo + rows)
         {
-            trackers[replica].inbox.push(CombineSegment {
-                expert,
-                chunk_lo,
-                lo: run.start,
-                rows: batch.tokens[run.clone()].iter().map(|a| a.row).collect(),
-                gates: batch.gates[run].to_vec(),
-                data: data.clone(),
-            });
+            let dropped = fault
+                .map(|(fp, st)| {
+                    fp.combine_dropped(*st, expert, chunk_lo, replica)
+                })
+                .unwrap_or(false);
+            if dropped {
+                self.tally.failed_chunks += 1;
+                for pos in run {
+                    trackers[replica]
+                        .lose(batch.tokens[pos].row, batch.gates[pos]);
+                }
+            } else {
+                trackers[replica].inbox.push(CombineSegment {
+                    expert,
+                    chunk_lo,
+                    lo: run.start,
+                    retry_order: 0,
+                    rows: batch.tokens[run.clone()]
+                        .iter()
+                        .map(|a| a.row)
+                        .collect(),
+                    gates: batch.gates[run].to_vec(),
+                    data: data.clone(),
+                });
+            }
             trackers[replica].outstanding -= 1;
             if trackers[replica].ready() {
                 self.emit_combine(trackers, replica, d, k_tx)?;
@@ -1281,9 +1564,12 @@ impl ExecutionEngine {
     }
 
     /// Emit replica `r`'s gate-weighted combine as a worker-pool job.
-    /// The inbox is sorted expert-major (then by batch row) first, so
-    /// each token accumulates its contributions in exactly the serial
-    /// reference order regardless of chunk completion timing.
+    /// The inbox is sorted expert-major (then retries after originals,
+    /// then by batch row) first, so each token accumulates its
+    /// contributions in exactly the serial reference order — and, under
+    /// faults, the degraded oracle's order — regardless of chunk
+    /// completion timing.  Any lost gate mass rides along so the worker
+    /// renormalizes the affected rows over what was actually delivered.
     fn emit_combine(
         &mut self,
         trackers: &mut [ReplicaTracker],
@@ -1296,7 +1582,18 @@ impl ExecutionEngine {
         tracker.emitted = true;
         let rows = tracker.rows;
         let mut segments = std::mem::take(&mut tracker.inbox);
-        segments.sort_by_key(|s| (s.expert, s.lo));
+        segments.sort_by_key(|s| (s.expert, s.retry_order, s.lo));
+        let lost = if tracker.lost.iter().any(|&m| m > 0.0) {
+            let mut lost = std::mem::take(&mut tracker.lost);
+            lost.resize(rows, 0.0);
+            self.tally.degraded_tokens +=
+                lost.iter().filter(|&&m| m > 0.0).count();
+            self.tally.renorm_mass_lost +=
+                lost.iter().map(|&m| m as f64).sum::<f64>();
+            Some(lost)
+        } else {
+            None
+        };
         let out = self.pool.take();
         let dev = r % self.layout.n_devices;
         self.txs[dev]
@@ -1305,6 +1602,7 @@ impl ExecutionEngine {
                 rows,
                 d,
                 segments,
+                lost,
                 out,
                 reply: k_tx.clone(),
             }))
@@ -1375,6 +1673,7 @@ impl ExecutionEngine {
                 out_offset: lo,
                 input,
                 output,
+                retry: None,
             });
         }
         (tasks, t0.elapsed().as_nanos() as u64)
@@ -1471,6 +1770,11 @@ fn worker_loop(rx: Receiver<Job>) {
         match job {
             Job::Compute(mut j) => {
                 let t0 = Instant::now();
+                if j.delay_ns > 0 {
+                    // injected straggler: burn wall time inside the
+                    // timed window so telemetry sees the slow shard
+                    std::thread::sleep(Duration::from_nanos(j.delay_ns));
+                }
                 let ok = catch_unwind(AssertUnwindSafe(|| {
                     // SAFETY: the coordinator blocks until our reply
                     let weights: &[ExpertWeights] = unsafe { &*j.weights };
@@ -1501,7 +1805,9 @@ fn worker_loop(rx: Receiver<Job>) {
                     let x: &TensorF = unsafe { &*j.x };
                     let noise: Option<&RouteNoise> =
                         j.noise.map(|p| unsafe { &*p });
-                    router.route_rows(x, j.lo, j.hi, noise)
+                    let dead: Option<&[bool]> =
+                        j.mask.map(|p| unsafe { (*p).as_slice() });
+                    router.route_rows_masked(x, j.lo, j.hi, noise, dead)
                 })) {
                     Ok(Ok(blk)) => Ok(blk),
                     Ok(Err(e)) => Err(e.to_string()),
@@ -1529,12 +1835,20 @@ fn worker_loop(rx: Receiver<Job>) {
             Job::Combine(mut j) => {
                 // gate-weighted combine (eq 1) of one replica; segments
                 // arrive pre-sorted expert-major, all data owned/Arc'd,
-                // so this touches nothing borrowed from the step
+                // so this touches nothing borrowed from the step.  With
+                // lost gate mass attached, delivered mass is tallied in
+                // the same accumulation order and the affected rows are
+                // renormalized over it (degraded combine).
                 let t0 = Instant::now();
                 let ok = catch_unwind(AssertUnwindSafe(|| {
                     let d = j.d;
                     j.out.clear();
                     j.out.resize(j.rows * d, 0.0);
+                    let mut mass: Vec<f32> = if j.lost.is_some() {
+                        vec![0.0; j.rows]
+                    } else {
+                        Vec::new()
+                    };
                     for seg in &j.segments {
                         let base = seg.lo - seg.chunk_lo;
                         for (i, (&row, &gate)) in
@@ -1546,6 +1860,19 @@ fn worker_loop(rx: Receiver<Job>) {
                                 &mut j.out[row * d..(row + 1) * d];
                             for (o, s) in dst.iter_mut().zip(src.iter()) {
                                 *o += gate * s;
+                            }
+                            if !mass.is_empty() {
+                                mass[row] += gate;
+                            }
+                        }
+                    }
+                    if let Some(lost) = &j.lost {
+                        for (row, &m) in lost.iter().enumerate() {
+                            if m > 0.0 {
+                                renormalize_row(
+                                    &mut j.out[row * d..(row + 1) * d],
+                                    mass[row],
+                                );
                             }
                         }
                     }

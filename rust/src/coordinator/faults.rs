@@ -1,0 +1,553 @@
+//! Deterministic fault injection for the MoE execution engine.
+//!
+//! The paper's capacity argument (§1, §3) assumes clusters where shard
+//! failures, stragglers and lost all-to-all messages are routine.  MoE
+//! is naturally fault-tolerant: a token's output is a gate-weighted sum
+//! over k experts (eq 1), so a lost expert contribution can be absorbed
+//! by renormalizing the gates over the surviving routes — the same
+//! degradation GShard's capacity-factor token dropping already exploits.
+//!
+//! A [`FaultPlan`] is a *schedule*, not a random process: every fault
+//! outcome is a pure keyed hash of `(seed, kind, step, expert,
+//! chunk_lo[, replica])`, evaluated at the moment the engine would
+//! dispatch (or deliver) that chunk — the same pre-drawn-determinism
+//! trick [`Router::draw_noise`](crate::coordinator::Router) uses for the
+//! eq-4 noise.  Same seed ⇒ bit-identical chaos run, regardless of
+//! thread timing.  Three fault kinds:
+//!
+//! - **permanent shard death** (`shard_deaths`): every chunk owned by a
+//!   dead shard fails from its death step on; from the *next* step the
+//!   shard's experts are masked out of the router
+//!   ([`FaultPlan::router_mask`]) so no new routes are offered to it;
+//! - **straggler delay** (`straggler_rate` / `straggler_delay_ns`): the
+//!   chunk completes but `straggler_delay_ns` late; if the injected
+//!   delay exceeds `deadline_ns` the chunk is treated as timed out and
+//!   fails (the deadline is enforced on the injected delay, which keeps
+//!   the outcome deterministic — real compute time is only measured);
+//! - **dropped combine message** (`combine_drop_rate`): the chunk
+//!   computes but one of its per-replica all-to-all combine messages is
+//!   lost in flight.
+//!
+//! Recovery is two-tier ([`RecoveryPolicy`]): a failed chunk's routes
+//! are first re-dispatched one by one to the token's *other* selected
+//! experts on live shards (reusing the PR-6 residual-dispatch idea at
+//! execution time), and whatever cannot be re-homed becomes *lost gate
+//! mass* — the replica's combine then renormalizes eq-1 over the
+//! surviving contributions ([`renormalize_row`]).  The serial oracle
+//! for all of this is [`degrade_plan`] + [`combine_degraded`], which
+//! `rust/tests/faults.rs` proves bit-equal to the streamed engine under
+//! the same plan.
+
+use crate::coordinator::dispatcher::{
+    DispatchPlan, Dispatcher, ExpertBatch, TokenAddr,
+};
+use crate::coordinator::scheduler::ShardLayout;
+use crate::gating::noisy_topk::GateVec;
+use crate::runtime::TensorF;
+
+/// What to do with the routes of a failed chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Re-dispatch each route to the token's next selected expert on a
+    /// live shard (single bounded retry), degrade whatever remains.
+    Redispatch,
+    /// Skip re-dispatch: every failed route immediately becomes lost
+    /// mass and the combine renormalizes over survivors.
+    DegradeOnly,
+}
+
+/// Deterministic injected outcome for one dispatched expert chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkOutcome {
+    Healthy,
+    /// Completes, but the worker is held for this many injected ns.
+    Delayed(u64),
+    /// Never delivers (shard dead, injected failure, or the injected
+    /// straggler delay blew the per-chunk deadline).
+    Failed,
+}
+
+/// A seeded, deterministic schedule of injected faults.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// per-chunk probability of outright failure
+    pub chunk_fail_rate: f64,
+    /// per-chunk probability of a straggler delay
+    pub straggler_rate: f64,
+    /// injected delay for straggler chunks
+    pub straggler_delay_ns: u64,
+    /// per-chunk compute deadline; a straggler whose injected delay
+    /// exceeds it counts as failed (timed out)
+    pub deadline_ns: u64,
+    /// per-delivery probability the chunk's combine message is dropped
+    pub combine_drop_rate: f64,
+    /// `(death_step, shard)`: the shard fails every chunk from
+    /// `death_step` on, and is masked out of the router afterwards
+    pub shard_deaths: Vec<(u64, usize)>,
+    pub policy: RecoveryPolicy,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            chunk_fail_rate: 0.0,
+            straggler_rate: 0.0,
+            straggler_delay_ns: 0,
+            deadline_ns: u64::MAX,
+            combine_drop_rate: 0.0,
+            shard_deaths: Vec::new(),
+            policy: RecoveryPolicy::Redispatch,
+        }
+    }
+}
+
+/// splitmix64 finalizer: the one-way mixer behind every fault draw.
+fn mix(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (useful as the zero-fault control).
+    pub fn none(seed: u64) -> Self {
+        FaultPlan { seed, ..Default::default() }
+    }
+
+    /// Chained keyed draw in [0, 1): a pure function of the plan seed
+    /// and the fault coordinates, independent of thread timing.
+    fn draw(&self, kind: u64, keys: &[u64]) -> f64 {
+        let mut h = mix(self.seed ^ kind.wrapping_mul(0x2545f4914f6cdd1d));
+        for &k in keys {
+            h = mix(h ^ k);
+        }
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Does the schedule inject anything at all?
+    pub fn any_faults(&self) -> bool {
+        self.chunk_fail_rate > 0.0
+            || self.straggler_rate > 0.0
+            || self.combine_drop_rate > 0.0
+            || !self.shard_deaths.is_empty()
+    }
+
+    /// Is `shard` dead during `step`?  A shard fails chunks *during*
+    /// its death step (the step discovers the failure mid-flight).
+    pub fn shard_dead(&self, shard: usize, step: u64) -> bool {
+        self.shard_deaths.iter().any(|&(s, sh)| sh == shard && s <= step)
+    }
+
+    /// Shards live at `step` as a fraction of the layout (health signal
+    /// for admission control).
+    pub fn live_fraction(&self, layout: &ShardLayout, step: u64) -> f64 {
+        let n = layout.n_devices.max(1);
+        let live =
+            (0..n).filter(|&sh| !self.shard_dead(sh, step)).count();
+        live as f64 / n as f64
+    }
+
+    /// Experts to mask out of the router at `step`: those owned by a
+    /// shard that died on an *earlier* step ("permanently dead shards
+    /// are masked out for subsequent steps" — the death step itself
+    /// still routes to them and degrades).  `None` when nothing is
+    /// masked, and also when *every* expert would be masked: with no
+    /// live expert the softmax over masked logits is undefined, so the
+    /// all-dead case routes normally and degrades at dispatch instead
+    /// (every chunk fails, every row renormalizes to zero mass).
+    pub fn router_mask(
+        &self,
+        step: u64,
+        layout: &ShardLayout,
+    ) -> Option<Vec<bool>> {
+        let mask: Vec<bool> = (0..layout.n_experts)
+            .map(|e| {
+                self.shard_deaths
+                    .iter()
+                    .any(|&(s, sh)| sh == layout.owner(e) && s < step)
+            })
+            .collect();
+        if mask.iter().any(|&m| m) && !mask.iter().all(|&m| m) {
+            Some(mask)
+        } else {
+            None
+        }
+    }
+
+    /// Injected outcome for the chunk `[chunk_lo, ..)` of `expert`
+    /// dispatched at `step` to `owner_shard`.
+    pub fn chunk_outcome(
+        &self,
+        step: u64,
+        owner_shard: usize,
+        expert: usize,
+        chunk_lo: usize,
+    ) -> ChunkOutcome {
+        if self.shard_dead(owner_shard, step) {
+            return ChunkOutcome::Failed;
+        }
+        let keys = [step, expert as u64, chunk_lo as u64];
+        if self.chunk_fail_rate > 0.0
+            && self.draw(1, &keys) < self.chunk_fail_rate
+        {
+            return ChunkOutcome::Failed;
+        }
+        if self.straggler_rate > 0.0
+            && self.draw(2, &keys) < self.straggler_rate
+        {
+            return if self.straggler_delay_ns > self.deadline_ns {
+                ChunkOutcome::Failed
+            } else {
+                ChunkOutcome::Delayed(self.straggler_delay_ns)
+            };
+        }
+        ChunkOutcome::Healthy
+    }
+
+    /// Is the combine message of chunk `(expert, chunk_lo)` to
+    /// `replica` dropped in flight?
+    pub fn combine_dropped(
+        &self,
+        step: u64,
+        expert: usize,
+        chunk_lo: usize,
+        replica: usize,
+    ) -> bool {
+        self.combine_drop_rate > 0.0
+            && self.draw(
+                3,
+                &[step, expert as u64, chunk_lo as u64, replica as u64],
+            ) < self.combine_drop_rate
+    }
+
+    /// Re-dispatch target for one failed route: the first of the
+    /// token's *other* selected experts that lives on a shard still
+    /// alive at `step`.  `None` under [`RecoveryPolicy::DegradeOnly`]
+    /// or when no live alternative exists — the route's gate mass is
+    /// then lost and the combine renormalizes.
+    pub fn redirect_target(
+        &self,
+        step: u64,
+        layout: &ShardLayout,
+        experts: &[usize],
+        failed: usize,
+    ) -> Option<usize> {
+        if self.policy == RecoveryPolicy::DegradeOnly {
+            return None;
+        }
+        experts
+            .iter()
+            .copied()
+            .find(|&e| e != failed && !self.shard_dead(layout.owner(e), step))
+    }
+}
+
+/// A live fault schedule threaded through the engine: the plan plus
+/// the engine's step counter (each `execute_streaming` call is one
+/// fault step).
+#[derive(Clone, Debug)]
+pub struct FaultSession {
+    pub plan: FaultPlan,
+    pub step: u64,
+}
+
+impl FaultSession {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultSession { plan, step: 0 }
+    }
+}
+
+/// Per-step fault/recovery accounting, surfaced on
+/// [`StepStats`](crate::coordinator::StepStats).
+#[derive(Clone, Debug, Default)]
+pub struct FaultTally {
+    pub failed_chunks: usize,
+    pub redispatched_routes: usize,
+    pub degraded_tokens: usize,
+    pub renorm_mass_lost: f64,
+}
+
+/// Renormalize one combined output row over its delivered gate mass:
+/// the degraded eq-1.  `mass` is the sum of the gates that actually
+/// contributed; zero delivered mass zeroes the row (every route lost).
+pub fn renormalize_row(row: &mut [f32], mass: f32) {
+    if mass > 0.0 {
+        let inv = 1.0 / mass;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    } else {
+        row.fill(0.0);
+    }
+}
+
+/// The failure-masked plan [`degrade_plan`] builds: what survives of a
+/// [`DispatchPlan`] under a [`FaultPlan`], plus the gate mass each
+/// token lost.
+#[derive(Clone, Debug)]
+pub struct DegradedPlan {
+    pub plan: DispatchPlan,
+    /// per replica, per row: gate mass whose routes were lost
+    pub lost_mass: Vec<Vec<f32>>,
+    pub failed_chunks: usize,
+    pub redispatched_routes: usize,
+}
+
+/// Serial oracle for fault recovery: replay the engine's chunking of
+/// `plan` (streamed chunks never span replicas, and start at each
+/// replica run's start with stride `cap`), apply the fault schedule to
+/// every chunk and combine delivery, re-home redirectable routes, and
+/// return the surviving plan plus the lost mass per token.
+/// `sel[replica][row]` are the routing decisions the redirects consult.
+pub fn degrade_plan(
+    plan: &DispatchPlan,
+    layout: &ShardLayout,
+    sel: &[Vec<GateVec>],
+    cap: usize,
+    step: u64,
+    fp: &FaultPlan,
+) -> DegradedPlan {
+    let cap = cap.max(1);
+    let n = plan.n_experts;
+    let mut kept = vec![ExpertBatch::default(); n];
+    // redirects land after an expert's kept originals, sorted by
+    // (src_expert, src_pos) — the engine's `retry_order` key
+    let mut redirects: Vec<Vec<(usize, usize, TokenAddr, f32)>> =
+        vec![Vec::new(); n];
+    let mut lost_mass: Vec<Vec<f32>> =
+        plan.replica_rows.iter().map(|&r| vec![0.0; r]).collect();
+    let mut failed_chunks = 0usize;
+    let mut redispatched = 0usize;
+
+    for (e, batch) in plan.per_expert.iter().enumerate() {
+        let owner = layout.owner(e);
+        for (replica, run) in
+            Dispatcher::replica_runs(plan, e, 0..batch.tokens.len())
+        {
+            let mut lo = run.start;
+            while lo < run.end {
+                let hi = (lo + cap).min(run.end);
+                let mut chunk_lost = false;
+                match fp.chunk_outcome(step, owner, e, lo) {
+                    ChunkOutcome::Failed => {
+                        failed_chunks += 1;
+                        for pos in lo..hi {
+                            let addr = batch.tokens[pos];
+                            let gate = batch.gates[pos];
+                            let experts =
+                                &sel[addr.replica][addr.row].experts;
+                            match fp.redirect_target(step, layout, experts, e)
+                            {
+                                Some(t) => {
+                                    redirects[t].push((e, pos, addr, gate));
+                                    redispatched += 1;
+                                }
+                                None => {
+                                    lost_mass[addr.replica][addr.row] += gate;
+                                }
+                            }
+                        }
+                        chunk_lost = true;
+                    }
+                    ChunkOutcome::Healthy | ChunkOutcome::Delayed(_) => {
+                        if fp.combine_dropped(step, e, lo, replica) {
+                            failed_chunks += 1;
+                            for pos in lo..hi {
+                                let addr = batch.tokens[pos];
+                                lost_mass[addr.replica][addr.row] +=
+                                    batch.gates[pos];
+                            }
+                            chunk_lost = true;
+                        }
+                    }
+                }
+                if !chunk_lost {
+                    for pos in lo..hi {
+                        kept[e].tokens.push(batch.tokens[pos]);
+                        kept[e].gates.push(batch.gates[pos]);
+                    }
+                }
+                lo = hi;
+            }
+        }
+    }
+    for (e, mut rs) in redirects.into_iter().enumerate() {
+        rs.sort_by_key(|&(src_e, src_pos, _, _)| (src_e, src_pos));
+        for (_, _, addr, gate) in rs {
+            kept[e].tokens.push(addr);
+            kept[e].gates.push(gate);
+        }
+    }
+    DegradedPlan {
+        plan: DispatchPlan {
+            n_experts: n,
+            per_expert: kept,
+            replica_rows: plan.replica_rows.clone(),
+            rerouted_routes: plan.rerouted_routes,
+            dropped_routes: plan.dropped_routes,
+        },
+        lost_mass,
+        failed_chunks,
+        redispatched_routes: redispatched,
+    }
+}
+
+/// The degraded eq-1 combine the oracle uses: accumulate surviving
+/// contributions *and* delivered gate mass expert-major (the same
+/// per-destination-row float sequence the engine's sorted combine
+/// segments produce), then renormalize every row that lost mass.
+pub fn combine_degraded(
+    dp: &DegradedPlan,
+    expert_outputs: &[TensorF],
+    d_model: usize,
+) -> Vec<TensorF> {
+    let mut out: Vec<TensorF> = dp
+        .plan
+        .replica_rows
+        .iter()
+        .map(|&rows| TensorF::zeros(vec![rows, d_model]))
+        .collect();
+    let mut mass: Vec<Vec<f32>> =
+        dp.plan.replica_rows.iter().map(|&r| vec![0.0; r]).collect();
+    for (e, batch) in dp.plan.per_expert.iter().enumerate() {
+        let eo = &expert_outputs[e];
+        debug_assert_eq!(eo.shape, vec![batch.tokens.len(), d_model]);
+        for (slot, (addr, gate)) in
+            batch.tokens.iter().zip(batch.gates.iter()).enumerate()
+        {
+            let src = &eo.data[slot * d_model..(slot + 1) * d_model];
+            let dst = &mut out[addr.replica].data
+                [addr.row * d_model..(addr.row + 1) * d_model];
+            for (o, s) in dst.iter_mut().zip(src.iter()) {
+                *o += gate * s;
+            }
+            mass[addr.replica][addr.row] += gate;
+        }
+    }
+    for (r, lm) in dp.lost_mass.iter().enumerate() {
+        let d = d_model;
+        for (row, &lost) in lm.iter().enumerate() {
+            if lost > 0.0 {
+                renormalize_row(
+                    &mut out[r].data[row * d..(row + 1) * d],
+                    mass[r][row],
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_deterministic_and_keyed() {
+        let fp = FaultPlan {
+            seed: 42,
+            chunk_fail_rate: 0.5,
+            ..Default::default()
+        };
+        let a = fp.chunk_outcome(3, 0, 5, 128);
+        let b = fp.chunk_outcome(3, 0, 5, 128);
+        assert_eq!(a, b, "same key, same outcome");
+        // different keys decorrelate: over many chunks roughly half
+        // fail at rate 0.5 (a pure schedule, not a biased one)
+        let fails = (0..1000)
+            .filter(|&c| {
+                fp.chunk_outcome(0, 0, 0, c) == ChunkOutcome::Failed
+            })
+            .count();
+        assert!((300..700).contains(&fails), "{fails}/1000 at rate 0.5");
+        // a different seed is a different schedule
+        let fp2 = FaultPlan { seed: 43, ..fp.clone() };
+        let diff = (0..200)
+            .filter(|&c| fp.chunk_outcome(0, 0, 0, c)
+                != fp2.chunk_outcome(0, 0, 0, c))
+            .count();
+        assert!(diff > 0, "seeds must change the schedule");
+    }
+
+    #[test]
+    fn zero_rates_inject_nothing() {
+        let fp = FaultPlan::none(7);
+        assert!(!fp.any_faults());
+        for c in 0..100 {
+            assert_eq!(fp.chunk_outcome(0, 0, 0, c), ChunkOutcome::Healthy);
+            assert!(!fp.combine_dropped(0, 0, c, 0));
+        }
+    }
+
+    #[test]
+    fn shard_death_semantics() {
+        let layout = ShardLayout::new(2, 8);
+        let fp = FaultPlan {
+            shard_deaths: vec![(2, 1)],
+            ..Default::default()
+        };
+        assert!(!fp.shard_dead(1, 1));
+        assert!(fp.shard_dead(1, 2), "dead during its death step");
+        assert!(fp.shard_dead(1, 5), "death is permanent");
+        // masked only on steps after the death step
+        assert!(fp.router_mask(2, &layout).is_none());
+        let m = fp.router_mask(3, &layout).unwrap();
+        for (e, &dead) in m.iter().enumerate() {
+            assert_eq!(dead, layout.owner(e) == 1);
+        }
+        assert!((fp.live_fraction(&layout, 1) - 1.0).abs() < 1e-12);
+        assert!((fp.live_fraction(&layout, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_dead_mask_is_none() {
+        // with every expert masked the softmax would be undefined, so
+        // the all-dead case routes normally and degrades at dispatch
+        let layout = ShardLayout::new(2, 4);
+        let fp = FaultPlan {
+            shard_deaths: vec![(0, 0), (0, 1)],
+            ..Default::default()
+        };
+        assert!(fp.router_mask(5, &layout).is_none());
+        assert_eq!(fp.live_fraction(&layout, 5), 0.0);
+    }
+
+    #[test]
+    fn straggler_deadline_turns_delay_into_failure() {
+        let base = FaultPlan {
+            straggler_rate: 1.0,
+            straggler_delay_ns: 500,
+            ..Default::default()
+        };
+        assert_eq!(base.chunk_outcome(0, 0, 0, 0), ChunkOutcome::Delayed(500));
+        let tight = FaultPlan { deadline_ns: 100, ..base };
+        assert_eq!(tight.chunk_outcome(0, 0, 0, 0), ChunkOutcome::Failed);
+    }
+
+    #[test]
+    fn redirect_respects_policy_and_dead_shards() {
+        let layout = ShardLayout::new(4, 4); // expert e on shard e
+        let fp = FaultPlan {
+            shard_deaths: vec![(0, 1)],
+            ..Default::default()
+        };
+        // expert 0 failed; token also selected 1 (dead) and 2 (live)
+        assert_eq!(fp.redirect_target(0, &layout, &[0, 1, 2], 0), Some(2));
+        assert_eq!(fp.redirect_target(0, &layout, &[0, 1], 0), None);
+        let degrade =
+            FaultPlan { policy: RecoveryPolicy::DegradeOnly, ..fp };
+        assert_eq!(degrade.redirect_target(0, &layout, &[0, 1, 2], 0), None);
+    }
+
+    #[test]
+    fn renormalize_row_divides_or_zeroes() {
+        let mut row = [1.0f32, 2.0, 4.0];
+        renormalize_row(&mut row, 0.5);
+        assert_eq!(row, [2.0, 4.0, 8.0]);
+        renormalize_row(&mut row, 0.0);
+        assert_eq!(row, [0.0, 0.0, 0.0]);
+    }
+}

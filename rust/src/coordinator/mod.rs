@@ -58,16 +58,51 @@
 //! outputs, gate decisions, finished plan and telemetry;
 //! [`train::Trainer::step_streamed`](crate::train::Trainer::step_streamed)
 //! drives training on it without any artifacts.
+//!
+//! # Fault tolerance and the degraded combine
+//!
+//! The streaming step optionally runs under a seeded, deterministic
+//! [`faults::FaultPlan`]: shard deaths, per-chunk failures, straggler
+//! delays past a deadline, and dropped all-to-all combine messages are
+//! all pure keyed-hash draws, so same-seed chaos runs are bit-identical
+//! (the eq-4 noise pre-draw discipline, applied to faults).  Recovery
+//! is two-tier: failed routes are first re-dispatched to the token's
+//! other selected experts on live shards, and whatever remains becomes
+//! lost gate mass — the replica's combine then *renormalizes* eq-1 over
+//! the surviving contributions.  The completion records above are what
+//! keep the step live: a failed chunk resolves its owed messages
+//! (charging lost mass) instead of hanging the replica, and permanently
+//! dead shards are masked out of the router on subsequent steps.
+//!
+//! **Degraded-combine / oracle-mask equivalence** (proven in
+//! `rust/tests/faults.rs`): every degraded streamed output is *bit
+//! equal* to evaluating the same step serially under the same failure
+//! mask — [`faults::degrade_plan`] replays the engine's chunking over
+//! the finished plan, applies the identical fault draws, and
+//! [`faults::combine_degraded`] renormalizes in the identical
+//! accumulation order.  Surviving chunks deliver all their rows and
+//! failed chunks none, so the kept routes form a filtered subsequence
+//! of the original dispatch order; combine segments sort
+//! `(expert, retry_order, lo)` with re-dispatches keyed by their source
+//! route, which reproduces the oracle's per-destination-row f32
+//! sequence exactly.
 
 pub mod balance;
 pub mod dispatcher;
 pub mod engine;
+pub mod faults;
 pub mod router;
 pub mod scheduler;
 
 pub use balance::BalanceMeter;
-pub use dispatcher::{DispatchPlan, Dispatcher, ExpertBatch, PlanBuilder};
+pub use dispatcher::{
+    DispatchPlan, Dispatcher, ExpertBatch, PlanBuilder, ResidualPolicy,
+};
 pub use engine::{ExecutionEngine, StreamedStep};
+pub use faults::{
+    combine_degraded, degrade_plan, renormalize_row, ChunkOutcome,
+    DegradedPlan, FaultPlan, FaultSession, FaultTally, RecoveryPolicy,
+};
 pub use router::{RouteBlock, RouteNoise, Router, RouterBackend};
 pub use scheduler::{
     AdaptiveWave, PhaseNanos, Scheduler, ShardLayout, StepStats, WavePolicy,

@@ -29,7 +29,7 @@ use anyhow::{bail, Result};
 
 use crate::gating::noisy_topk::{
     compose_hierarchical, importance, load_estimate, noisy_topk_block,
-    GateVec,
+    noisy_topk_block_masked, GateVec,
 };
 use crate::runtime::{Executable, Host, TensorF};
 use crate::util::rng::Rng;
@@ -223,6 +223,28 @@ impl Router {
     /// importance/load sums equal up to f32 reassociation across blocks.
     pub fn route_rows(&self, x: &TensorF, lo: usize, hi: usize,
                       noise: Option<&RouteNoise>) -> Result<RouteBlock> {
+        self.route_rows_masked(x, lo, hi, noise, None)
+    }
+
+    /// [`route_rows`](Self::route_rows) with an optional dead-expert
+    /// mask (the fault layer's [`FaultPlan::router_mask`] output):
+    /// masked experts' noisy logits are `-inf`, so they are never
+    /// selected and carry exactly-zero gate weight.  `dead: None` is
+    /// byte-identical to the unmasked path.  The hierarchical path
+    /// ignores the mask (degrade-only there): its group-structured
+    /// gate has no per-expert logit row to mask, and dead shards still
+    /// degrade safely at dispatch time.
+    ///
+    /// [`FaultPlan::router_mask`]:
+    ///     crate::coordinator::faults::FaultPlan::router_mask
+    pub fn route_rows_masked(
+        &self,
+        x: &TensorF,
+        lo: usize,
+        hi: usize,
+        noise: Option<&RouteNoise>,
+        dead: Option<&[bool]>,
+    ) -> Result<RouteBlock> {
         let (b, d) = (x.shape[0], self.d_model);
         if x.shape.len() != 2 || x.shape[1] != d {
             bail!("router: bad input shape {:?}", x.shape);
@@ -239,7 +261,7 @@ impl Router {
         let normals = noise.and_then(|ns| {
             (!ns.primary.is_empty()).then(|| &ns.primary[lo * n..hi * n])
         });
-        let g = noisy_topk_block(
+        let g = noisy_topk_block_masked(
             &x.data[lo * d..hi * d],
             hi - lo,
             d,
@@ -248,6 +270,7 @@ impl Router {
             n,
             self.k,
             normals,
+            dead,
         );
         let imp = importance(&g);
         let load = load_estimate(&g, self.k);

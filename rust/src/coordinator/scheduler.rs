@@ -28,8 +28,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::dispatcher::{DispatchPlan, Dispatcher};
+use crate::coordinator::dispatcher::{
+    DispatchPlan, Dispatcher, ResidualPolicy,
+};
 use crate::coordinator::engine::{ExecutionEngine, StreamedStep};
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::router::{Router, RouterBackend};
 use crate::runtime::{Executable, Host, TensorF};
 
@@ -313,6 +316,18 @@ pub struct StepStats {
     /// wave drained — the structural witness that the dependency-driven
     /// executor overlapped the all-to-all "receive" with compute
     pub combines_overlapped: usize,
+    /// expert chunks that failed this step (injected chunk faults, dead
+    /// shards, blown deadlines, dropped combine messages, or worker
+    /// panics absorbed by recovery); 0 without a fault plan
+    pub failed_chunks: usize,
+    /// failed routes recovered by re-dispatching to another of the
+    /// token's selected experts
+    pub redispatched_routes: usize,
+    /// tokens whose combine renormalized over surviving routes because
+    /// some of their gate mass was lost
+    pub degraded_tokens: usize,
+    /// total eq-1 gate mass lost to unrecovered faults this step
+    pub renorm_mass_lost: f64,
 }
 
 impl StepStats {
@@ -365,6 +380,11 @@ pub(crate) fn build_stats(
         shard_idle_ns,
         // set by the engine paths that track per-replica completion
         combines_overlapped: 0,
+        // set by the streaming path when a fault plan is active
+        failed_chunks: 0,
+        redispatched_routes: 0,
+        degraded_tokens: 0,
+        renorm_mass_lost: 0.0,
     }
 }
 
@@ -378,6 +398,11 @@ pub struct Scheduler {
     /// GShard-style per-expert capacity buffer applied by the streaming
     /// dispatch (`None` = exact: every route kept)
     dispatch_capacity: Option<usize>,
+    /// residual-target selection rule for over-capacity routes
+    residual: ResidualPolicy,
+    /// deterministic fault-injection schedule handed to the engine when
+    /// it starts (`None` = no faults)
+    fault_plan: Option<FaultPlan>,
     /// Persistent execution engine, started on first use and reused for
     /// every subsequent step (no per-step thread spawn).
     engine: Mutex<Option<ExecutionEngine>>,
@@ -400,6 +425,8 @@ impl Scheduler {
             backend,
             policy,
             dispatch_capacity: None,
+            residual: ResidualPolicy::default(),
+            fault_plan: None,
             engine: Mutex::new(None),
         }
     }
@@ -413,6 +440,30 @@ impl Scheduler {
     pub fn with_dispatch_capacity(mut self, capacity: Option<usize>) -> Self {
         self.dispatch_capacity = capacity;
         self
+    }
+
+    /// Choose how over-capacity residual routes pick among a token's
+    /// other selected experts (see [`ResidualPolicy`]).  Must be set
+    /// before the first step.
+    pub fn with_residual_policy(mut self, residual: ResidualPolicy) -> Self {
+        self.residual = residual;
+        self
+    }
+
+    /// Attach a deterministic fault-injection schedule (see
+    /// [`FaultPlan`]); each streamed step advances the fault step
+    /// counter.  Must be set before the first step (the engine is keyed
+    /// to it on start).
+    pub fn with_fault_plan(mut self, plan: Option<FaultPlan>) -> Self {
+        self.fault_plan = plan;
+        self
+    }
+
+    /// Fraction of shards still live at the engine's current fault step
+    /// (1.0 without a fault plan) — the serve loop's health signal.
+    pub fn live_fraction(&self) -> f64 {
+        self.with_engine(|engine| Ok(engine.live_fraction()))
+            .unwrap_or(1.0)
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -443,6 +494,8 @@ impl Scheduler {
                 self.policy.clone(),
             )
             .with_dispatch_capacity(self.dispatch_capacity)
+            .with_residual_policy(self.residual)
+            .with_fault_plan(self.fault_plan.clone())
         });
         f(engine)
     }

@@ -70,6 +70,27 @@ pub fn noisy_topk_block(
     k: usize,
     normals: Option<&[f32]>,
 ) -> Gating {
+    noisy_topk_block_masked(x, rows, d, w_g, w_noise, n, k, normals, None)
+}
+
+/// [`noisy_topk_block`] with an optional expert mask: masked experts'
+/// noisy logits are forced to `-inf` *after* the eq-4 noise add, so
+/// they can never be selected and (with at least one live expert in
+/// the row) receive exactly-zero softmax weight.  The fault layer uses
+/// this to route around permanently dead shards; with `masked: None`
+/// the path is byte-for-byte the unmasked one.
+#[allow(clippy::too_many_arguments)]
+pub fn noisy_topk_block_masked(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    w_g: &[f32],
+    w_noise: Option<&[f32]>,
+    n: usize,
+    k: usize,
+    normals: Option<&[f32]>,
+    masked: Option<&[bool]>,
+) -> Gating {
     assert_eq!(x.len(), rows * d);
     assert_eq!(w_g.len(), d * n);
     assert!(k >= 1 && k <= n, "k={k} n={n}");
@@ -86,6 +107,20 @@ pub fn noisy_topk_block(
         assert_eq!(eps.len(), rows * n);
         for i in 0..rows * n {
             noisy[i] += eps[i] * softplus(raw[i]);
+        }
+    }
+    if let Some(mask) = masked {
+        assert_eq!(mask.len(), n);
+        debug_assert!(
+            mask.iter().any(|&m| !m),
+            "an all-masked row has no valid softmax"
+        );
+        for r in 0..rows {
+            for (i, &dead) in mask.iter().enumerate() {
+                if dead {
+                    noisy[r * n + i] = f32::NEG_INFINITY;
+                }
+            }
         }
     }
     let per_token = (0..rows)
@@ -444,6 +479,53 @@ mod tests {
                 e.sort();
                 e.dedup();
                 assert_eq!(e.len(), k);
+            }
+        });
+    }
+
+    #[test]
+    fn masked_experts_are_never_selected_and_none_mask_is_identity() {
+        prop::forall("masked gating", |rng| {
+            let (b, d) = (prop::dim(rng, 1, 10), prop::dim(rng, 1, 6));
+            let n = prop::dim(rng, 3, 12);
+            let k = prop::dim(rng, 1, (n - 1).min(3));
+            let x = prop::vec_f32(rng, b * d, 1.0);
+            let wg = prop::vec_f32(rng, d * n, 0.5);
+            let wn = prop::vec_f32(rng, d * n, 0.5);
+            let normals = prop::vec_f32(rng, b * n, 1.0);
+            // mask up to n-k experts so k live ones always remain
+            let mut mask = vec![false; n];
+            for _ in 0..prop::dim(rng, 1, n - k) {
+                mask[rng.below(n)] = true;
+            }
+            while mask.iter().filter(|&&m| !m).count() < k {
+                mask[rng.below(n)] = false;
+            }
+            let g = noisy_topk_block_masked(
+                &x, b, d, &wg, Some(&wn), n, k, Some(&normals), Some(&mask),
+            );
+            for tok in &g.per_token {
+                for (&e, &w) in tok.experts.iter().zip(tok.weights.iter()) {
+                    assert!(!mask[e], "masked expert {e} selected");
+                    assert!(w.is_finite() && w >= 0.0);
+                }
+                let s: f32 = tok.weights.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "sum={s}");
+            }
+            // masked: None is byte-identical to the unmasked entry point
+            let a = noisy_topk_block(
+                &x, b, d, &wg, Some(&wn), n, k, Some(&normals),
+            );
+            let bm = noisy_topk_block_masked(
+                &x, b, d, &wg, Some(&wn), n, k, Some(&normals), None,
+            );
+            for (ta, tb) in a.per_token.iter().zip(&bm.per_token) {
+                assert_eq!(ta.experts, tb.experts);
+                let wa: Vec<u32> =
+                    ta.weights.iter().map(|w| w.to_bits()).collect();
+                let wb: Vec<u32> =
+                    tb.weights.iter().map(|w| w.to_bits()).collect();
+                assert_eq!(wa, wb);
             }
         });
     }

@@ -1,0 +1,431 @@
+//! Chaos harness: sweep deterministic fault rates × recovery policies
+//! on the REAL engine and serve loop, proving the two properties the
+//! fault layer owes (`rust/tests/faults.rs` proves the bit-level
+//! ones):
+//!
+//! - **liveness** — every step under every injected schedule (chunk
+//!   failures, stragglers past deadline, dropped combines, shard
+//!   deaths) completes with finite latency and finite outputs: no
+//!   replica ever hangs waiting on a chunk that will never deliver;
+//! - **conservation** — at the serving boundary every offered request
+//!   lands in exactly one bucket: `offered == completed + shed +
+//!   failed`.
+//!
+//! Faults are drawn from a seeded [`FaultPlan`], so every point of the
+//! sweep is exactly reproducible: same seed, same faults, same
+//! degraded outputs.  Feeds `benches/chaos.rs` (`BENCH_chaos.json`)
+//! and `repro chaos`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::StreamedStep;
+use crate::coordinator::scheduler::{
+    ExpertBackend, ExpertWeights, Scheduler, ShardLayout, WavePolicy,
+};
+use crate::coordinator::{Dispatcher, FaultPlan, RecoveryPolicy, Router};
+use crate::runtime::TensorF;
+use crate::serve::{AdmissionPolicy, ServeConfig, ServeLoop, TimedRequest};
+use crate::util::rng::Rng;
+
+/// One chaos configuration: a small sharded MoE plus the injected
+/// [`FaultPlan`] it runs under.
+pub struct ChaosSim {
+    pub devices: usize,
+    pub n_experts: usize,
+    pub d_model: usize,
+    pub hidden: usize,
+    pub k: usize,
+    pub rows_per_replica: usize,
+    /// per-expert dispatch/wave capacity (capacity factor 1.25)
+    pub capacity: usize,
+    pub seed: u64,
+    pub plan: FaultPlan,
+    router: Router,
+    weights: Vec<ExpertWeights>,
+    xs: Vec<TensorF>,
+    sched: Scheduler,
+}
+
+/// Model-size constants shared by every point of the sweep (small: the
+/// harness measures recovery behaviour, not throughput).
+const D_MODEL: usize = 8;
+const HIDDEN: usize = 16;
+const TOP_K: usize = 2;
+
+fn build_model(
+    seed: u64,
+    devices: usize,
+    n_experts: usize,
+    rows_per_replica: usize,
+) -> (Router, Vec<ExpertWeights>, Vec<TensorF>) {
+    let (d, h) = (D_MODEL, HIDDEN);
+    let mut rng = Rng::new(seed);
+    let weights: Vec<ExpertWeights> = (0..n_experts)
+        .map(|_| ExpertWeights {
+            w_in: (0..d * h).map(|_| rng.normal_f32() * 0.2).collect(),
+            w_out: (0..h * d).map(|_| rng.normal_f32() * 0.2).collect(),
+            d_model: d,
+            hidden: h,
+        })
+        .collect();
+    let router = Router::flat_native(
+        d,
+        n_experts,
+        TOP_K,
+        (0..d * n_experts).map(|_| rng.normal_f32() * 0.4).collect(),
+        Some((0..d * n_experts).map(|_| rng.normal_f32() * 0.3).collect()),
+    );
+    let xs: Vec<TensorF> = (0..devices)
+        .map(|_| {
+            TensorF::new(
+                vec![rows_per_replica, d],
+                (0..rows_per_replica * d).map(|_| rng.normal_f32()).collect(),
+            )
+        })
+        .collect();
+    (router, weights, xs)
+}
+
+impl ChaosSim {
+    /// One replica per device, `rows_per_replica` tokens each, GShard
+    /// capacity buffers on (so failed routes have reroute machinery to
+    /// land on), the whole model drawn from one seeded stream.
+    pub fn build(
+        devices: usize,
+        n_experts: usize,
+        rows_per_replica: usize,
+        plan: FaultPlan,
+        seed: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(devices >= 1 && n_experts >= devices);
+        let tokens = devices * rows_per_replica;
+        let capacity =
+            Dispatcher::capacity_for(1.25, tokens, TOP_K, n_experts);
+        let (router, weights, xs) =
+            build_model(seed, devices, n_experts, rows_per_replica);
+        let sched = Scheduler::with_policy(
+            ShardLayout::new(devices, n_experts),
+            ExpertBackend::Native,
+            WavePolicy::Fixed(Some(capacity)),
+        )
+        .with_dispatch_capacity(Some(capacity))
+        .with_fault_plan(Some(plan.clone()));
+        Ok(ChaosSim {
+            devices,
+            n_experts,
+            d_model: D_MODEL,
+            hidden: HIDDEN,
+            k: TOP_K,
+            rows_per_replica,
+            capacity,
+            seed,
+            plan,
+            router,
+            weights,
+            xs,
+            sched,
+        })
+    }
+
+    /// One streamed step under the fault plan (seeded eq-4 noise;
+    /// `fold` varies the gating draw across steps deterministically
+    /// while the fault draws follow the engine's own step counter).
+    pub fn step(&self, fold: u64) -> Result<(StreamedStep, u64)> {
+        let refs: Vec<&TensorF> = self.xs.iter().collect();
+        let mut nrng = Rng::new(self.seed).fold_in(fold);
+        let t0 = Instant::now();
+        let s = self.sched.execute_streamed(
+            &self.router,
+            &refs,
+            &self.weights,
+            Some(&mut nrng),
+        )?;
+        Ok((s, t0.elapsed().as_nanos() as u64))
+    }
+
+    /// Replay a paced request burst on a [`ServeLoop`] running the same
+    /// model under the same fault plan, with retry-with-backoff and
+    /// health-aware shedding on.
+    pub fn serve_burst(
+        &self,
+        requests: usize,
+    ) -> Result<crate::serve::ServeReport> {
+        let (router, weights, _) = build_model(
+            self.seed,
+            self.devices,
+            self.n_experts,
+            self.rows_per_replica,
+        );
+        let sched = Scheduler::with_policy(
+            ShardLayout::new(self.devices, self.n_experts),
+            ExpertBackend::Native,
+            WavePolicy::Fixed(Some(self.capacity)),
+        )
+        .with_dispatch_capacity(Some(self.capacity))
+        .with_fault_plan(Some(self.plan.clone()));
+        let cfg = ServeConfig {
+            queue_depth: 64,
+            policy: AdmissionPolicy::Reject,
+            max_batch_tokens: 16,
+            latency_budget_ns: 50_000,
+            capture_outputs: false,
+            retry_max: 1,
+            retry_backoff_ns: 10_000,
+            // generous SLO: health-aware shedding engages only when
+            // shard deaths genuinely collapse live capacity
+            deadline_ns: Some(2_000_000_000),
+        };
+        let serve = ServeLoop::new(sched, router, weights, cfg)?;
+        let mut rng = Rng::new(self.seed ^ 0x5eed);
+        let d = self.d_model;
+        let trace: Vec<TimedRequest> = (0..requests)
+            .map(|i| TimedRequest {
+                arrival_ns: i as u64 * 5_000,
+                x: TensorF::new(
+                    vec![2, d],
+                    (0..2 * d).map(|_| rng.normal_f32()).collect(),
+                ),
+            })
+            .collect();
+        serve.run_trace(&trace)
+    }
+}
+
+/// One measured point of the chaos sweep.
+#[derive(Clone, Debug)]
+pub struct ChaosPoint {
+    pub fault_rate: f64,
+    pub policy: RecoveryPolicy,
+    pub shard_deaths: usize,
+    pub steps: usize,
+    /// worst measured step wall — liveness means this is finite and the
+    /// loop got here at all
+    pub max_step_ns: u64,
+    pub failed_chunks: usize,
+    pub redispatched_routes: usize,
+    pub degraded_tokens: usize,
+    pub renorm_mass_lost: f64,
+    /// shards still live after the last step
+    pub live_fraction: f64,
+    /// every output value of every step was finite
+    pub all_finite: bool,
+    // serving-boundary conservation buckets
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub retried: u64,
+}
+
+impl ChaosPoint {
+    /// The conservation invariant at the serving boundary.
+    pub fn conserved(&self) -> bool {
+        self.offered == self.completed + self.shed + self.failed
+    }
+}
+
+/// Run `steps` engine steps plus one serve burst for a configuration.
+pub fn run_point(
+    sim: &ChaosSim,
+    steps: usize,
+    requests: usize,
+) -> Result<ChaosPoint> {
+    let mut p = ChaosPoint {
+        fault_rate: sim.plan.chunk_fail_rate,
+        policy: sim.plan.policy,
+        shard_deaths: sim.plan.shard_deaths.len(),
+        steps,
+        max_step_ns: 0,
+        failed_chunks: 0,
+        redispatched_routes: 0,
+        degraded_tokens: 0,
+        renorm_mass_lost: 0.0,
+        live_fraction: 1.0,
+        all_finite: true,
+        offered: requests as u64,
+        completed: 0,
+        shed: 0,
+        failed: 0,
+        retried: 0,
+    };
+    for i in 0..steps {
+        let (s, ns) = sim.step(i as u64 + 1)?;
+        p.max_step_ns = p.max_step_ns.max(ns);
+        p.failed_chunks += s.stats.failed_chunks;
+        p.redispatched_routes += s.stats.redispatched_routes;
+        p.degraded_tokens += s.stats.degraded_tokens;
+        p.renorm_mass_lost += s.stats.renorm_mass_lost;
+        p.all_finite &= s
+            .outs
+            .iter()
+            .all(|o| o.data.iter().all(|v| v.is_finite()));
+    }
+    p.live_fraction = sim.sched.live_fraction();
+    let report = sim.serve_burst(requests)?;
+    p.completed = report.stats.completed;
+    p.shed = report.stats.shed;
+    p.failed = report.stats.failed;
+    p.retried = report.stats.retried;
+    Ok(p)
+}
+
+/// One formatted row of the chaos table (shared by `repro chaos` and
+/// the quickstart).
+pub fn point_line(p: &ChaosPoint) -> String {
+    let policy = match p.policy {
+        RecoveryPolicy::Redispatch => "redispatch",
+        RecoveryPolicy::DegradeOnly => "degrade",
+    };
+    format!(
+        "rate={:<5.2} {:<10} deaths={:<2} live={:>4.0}%  \
+         chunks_failed={:<4} redisp={:<4} degraded_tok={:<5} \
+         mass_lost={:>8.4}  step_max={:>8.3}ms  \
+         serve {}+{}+{}/{} (ok+shed+failed/offered){}",
+        p.fault_rate,
+        policy,
+        p.shard_deaths,
+        p.live_fraction * 100.0,
+        p.failed_chunks,
+        p.redispatched_routes,
+        p.degraded_tokens,
+        p.renorm_mass_lost,
+        p.max_step_ns as f64 / 1e6,
+        p.completed,
+        p.shed,
+        p.failed,
+        p.offered,
+        if p.conserved() { "" } else { "  CONSERVATION BROKEN" },
+    )
+}
+
+/// The chaos study: every fault rate × both recovery policies, plus a
+/// shard-death schedule (including one seed where every shard dies) at
+/// the maximum rate.  Returns every point after asserting liveness and
+/// conservation on each.
+pub fn run_chaos_study(
+    rows_per_replica: usize,
+    fault_rates: &[f64],
+    seed: u64,
+) -> Result<Vec<ChaosPoint>> {
+    let (devices, n_experts) = (4usize, 8usize);
+    let (steps, requests) = (3usize, 32usize);
+    let mut points = Vec::new();
+    println!(
+        "chaos study ({devices} devices, {n_experts} experts, \
+         deterministic seeded faults):"
+    );
+    for &rate in fault_rates {
+        for policy in [RecoveryPolicy::Redispatch, RecoveryPolicy::DegradeOnly]
+        {
+            let plan = FaultPlan {
+                seed: seed ^ 0xc4a0_5000,
+                chunk_fail_rate: rate,
+                straggler_rate: rate * 0.5,
+                straggler_delay_ns: 30_000,
+                deadline_ns: 60_000,
+                combine_drop_rate: rate * 0.25,
+                shard_deaths: Vec::new(),
+                policy,
+            };
+            let sim = ChaosSim::build(
+                devices,
+                n_experts,
+                rows_per_replica,
+                plan,
+                seed,
+            )?;
+            let p = run_point(&sim, steps, requests)?;
+            println!("  {}", point_line(&p));
+            points.push(p);
+        }
+    }
+    // shard deaths at the max rate: one shard dies mid-run, and the
+    // all-dead extreme (every shard dead from step 0) must still
+    // terminate with finite (all-zero) outputs
+    let max_rate = fault_rates.iter().copied().fold(0.0, f64::max);
+    for deaths in [
+        vec![(1u64, 1usize)],
+        (0..devices).map(|sh| (0u64, sh)).collect::<Vec<_>>(),
+    ] {
+        let plan = FaultPlan {
+            seed: seed ^ 0xdead,
+            chunk_fail_rate: max_rate,
+            straggler_rate: 0.0,
+            straggler_delay_ns: 0,
+            deadline_ns: u64::MAX,
+            combine_drop_rate: max_rate * 0.25,
+            shard_deaths: deaths,
+            policy: RecoveryPolicy::Redispatch,
+        };
+        let sim =
+            ChaosSim::build(devices, n_experts, rows_per_replica, plan, seed)?;
+        let p = run_point(&sim, steps, requests)?;
+        println!("  {}", point_line(&p));
+        points.push(p);
+    }
+    for p in &points {
+        anyhow::ensure!(
+            p.all_finite,
+            "non-finite output at rate {} policy {:?}",
+            p.fault_rate,
+            p.policy
+        );
+        anyhow::ensure!(
+            p.max_step_ns > 0 && p.max_step_ns < 60_000_000_000,
+            "step latency unbounded at rate {}",
+            p.fault_rate
+        );
+        anyhow::ensure!(
+            p.conserved(),
+            "conservation broken at rate {}: {} != {} + {} + {}",
+            p.fault_rate,
+            p.offered,
+            p.completed,
+            p.shed,
+            p.failed
+        );
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_point_is_fault_free_and_conserved() {
+        let sim = ChaosSim::build(
+            2,
+            4,
+            6,
+            FaultPlan::none(3),
+            11,
+        )
+        .unwrap();
+        let p = run_point(&sim, 2, 12).unwrap();
+        assert_eq!(p.failed_chunks, 0);
+        assert_eq!(p.degraded_tokens, 0);
+        assert_eq!(p.failed, 0);
+        assert_eq!(p.live_fraction, 1.0);
+        assert!(p.all_finite);
+        assert!(p.conserved());
+        assert_eq!(p.completed + p.shed, p.offered);
+    }
+
+    #[test]
+    fn faulty_point_recovers_and_conserves() {
+        let plan = FaultPlan {
+            seed: 5,
+            chunk_fail_rate: 0.3,
+            combine_drop_rate: 0.1,
+            ..Default::default()
+        };
+        let sim = ChaosSim::build(2, 4, 8, plan, 13).unwrap();
+        let p = run_point(&sim, 3, 16).unwrap();
+        assert!(p.failed_chunks > 0, "rate 0.3 must hit some chunk");
+        assert!(p.all_finite, "degraded outputs must stay finite");
+        assert!(p.conserved());
+    }
+}

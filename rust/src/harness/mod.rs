@@ -1,12 +1,14 @@
 //! Experiment harnesses: one entry point per paper table/figure.
 //! See DESIGN.md's experiment index for the mapping.
 
+pub mod chaos;
 pub mod cluster_sim;
 pub mod distributed;
 pub mod experiments;
 pub mod tables;
 pub mod workload;
 
+pub use chaos::{run_chaos_study, ChaosPoint, ChaosSim};
 pub use cluster_sim::{run_scaling_study, ClusterPoint, ClusterSim};
 pub use experiments::{run_lm_experiment, LmRun};
 pub use workload::SyntheticMoe;

@@ -8,6 +8,7 @@
 //! repro table1|table6|table7|table8|table9|fig2|fig4|mt|mt5  [--steps N]
 //! repro efficiency --devices 16
 //! repro cluster --rows 8 [--seed S]
+//! repro chaos --rows 8 [--seed S]
 //! repro serve --devices 4 --requests 400
 //! repro info
 //! ```
@@ -75,6 +76,9 @@ fn usage() -> ! {
            cluster      [--rows R] [--seed S]   (64..4096-expert scaling\n\
                         study: real engine, corrected \u{a7}3.2 traffic, GShard\n\
                         capacity sweep on the multi-host topology model)\n\
+           chaos        [--rows R] [--seed S]   (deterministic fault\n\
+                        injection sweep: rates x recovery policies + shard\n\
+                        deaths, proving liveness and conservation)\n\
            serve        [--devices D] [--requests N] [--seed S]\n\
            info\n\
          common flags: --artifacts DIR (default: artifacts)"
@@ -178,6 +182,19 @@ fn main() -> Result<()> {
             moe::harness::cluster_sim::run_scaling_study(
                 rows,
                 &[None, Some(1.0), Some(2.0)],
+                seed,
+            )?;
+        }
+        "chaos" => {
+            // artifact-free: fault-rate x recovery-policy sweep on the
+            // real engine + serve loop under a seeded FaultPlan; every
+            // point asserts liveness (finite step latency, finite
+            // outputs) and conservation (offered == ok + shed + failed)
+            let rows = args.get_u64("rows", 8)? as usize;
+            let seed = args.get_u64("seed", 7)?;
+            moe::harness::chaos::run_chaos_study(
+                rows,
+                &[0.0, 0.05, 0.2, 0.5],
                 seed,
             )?;
         }

@@ -48,6 +48,15 @@ pub struct ServeConfig {
     /// keep per-request outputs in the report (differential tests /
     /// actual serving); off for pure load measurement
     pub capture_outputs: bool,
+    /// re-offer a request whose batch was degraded by fault recovery,
+    /// up to this many times (0 = serve the degraded output as-is)
+    pub retry_max: u32,
+    /// serve-clock delay before a degraded request is re-offered
+    pub retry_backoff_ns: u64,
+    /// per-request latency SLO; when set, arrivals that cannot meet it
+    /// at the current (possibly fault-degraded) throughput estimate are
+    /// shed up-front ([`RequestQueue::feasible`])
+    pub deadline_ns: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -58,6 +67,9 @@ impl Default for ServeConfig {
             max_batch_tokens: 1024,
             latency_budget_ns: 1_000_000, // 1ms
             capture_outputs: false,
+            retry_max: 0,
+            retry_backoff_ns: 0,
+            deadline_ns: None,
         }
     }
 }
@@ -152,6 +164,19 @@ impl ServeLoop {
 
     /// Replay an arrival-sorted trace (module docs).  Requests are
     /// identified by trace index in the report.
+    ///
+    /// Under an active [`FaultPlan`](crate::coordinator::FaultPlan) the
+    /// loop adds two recovery behaviours.  **Retry with backoff**: a
+    /// request whose batch was degraded (lost chunks, renormalized
+    /// combine) is re-offered `retry_backoff_ns` later, up to
+    /// `retry_max` times; a request still degraded on its final attempt
+    /// keeps its renormalized output but counts as `failed`, so
+    /// `offered == completed + shed + failed` always holds.
+    /// **Health-aware shedding**: when `deadline_ns` is set, each
+    /// arrival is checked against the backlog at the EWMA-estimated
+    /// per-token cost scaled by [`Scheduler::live_fraction`] — as fault
+    /// recovery masks shards out, infeasible requests are shed at the
+    /// edge instead of queueing to blow their SLO.
     pub fn run_trace(&self, trace: &[TimedRequest]) -> Result<ServeReport> {
         let d = self.d_model;
         for (i, r) in trace.iter().enumerate() {
@@ -181,14 +206,48 @@ impl ServeLoop {
             Vec::new()
         };
 
+        // retry-with-backoff state: attempts consumed per trace index,
+        // and degraded requests parked until their backoff expires
+        // (`due_ns` is nondecreasing — the clock only moves forward and
+        // the backoff is constant — so a deque stays sorted)
+        let mut attempts: Vec<u32> = vec![0; trace.len()];
+        let mut retries: std::collections::VecDeque<(u64, ServeRequest)> =
+            std::collections::VecDeque::new();
+        // EWMA of measured engine cost, the throughput side of the
+        // deadline-feasibility check (0 until the first batch lands)
+        let mut est_ns_per_token: f64 = 0.0;
+
         let mut now: u64 = 0;
         let mut next = 0usize; // next trace entry not yet offered
-        while next < trace.len() || !queue.is_empty() {
+        while next < trace.len() || !queue.is_empty() || !retries.is_empty() {
             // 1. admit everything due at the current clock; dropped
             // requests are counted by the queue and their outputs stay
-            // None in the report
+            // None in the report.  Backed-off retries re-enter through
+            // the same admission control as fresh arrivals.
+            let live = self.sched.live_fraction();
+            while retries.front().is_some_and(|(due, _)| *due <= now) {
+                let (_, req) = retries.pop_front().expect("front was Some");
+                let infeasible = self.cfg.deadline_ns.is_some_and(|dl| {
+                    !queue.feasible(req.rows(), est_ns_per_token, live, dl)
+                });
+                if infeasible {
+                    queue.reject_infeasible();
+                } else if queue.will_reject_next() {
+                    queue.reject_next();
+                } else {
+                    queue.offer(req);
+                }
+            }
             while next < trace.len() && trace[next].arrival_ns <= now {
-                if queue.will_reject_next() {
+                let rows = trace[next].x.shape[0];
+                let infeasible = self.cfg.deadline_ns.is_some_and(|dl| {
+                    !queue.feasible(rows, est_ns_per_token, live, dl)
+                });
+                if infeasible {
+                    // health-aware shed: at the current backlog and
+                    // live-shard throughput this deadline cannot be met
+                    queue.reject_infeasible();
+                } else if queue.will_reject_next() {
                     // O(1) refusal: don't clone an activation tensor
                     // admission control would immediately discard
                     queue.reject_next();
@@ -202,23 +261,38 @@ impl ServeLoop {
                 next += 1;
             }
             if queue.is_empty() {
-                // idle: jump to the next arrival (next < len because the
-                // outer condition held and the queue is empty)
-                now = trace[next].arrival_ns;
+                // idle: jump to the next actionable instant (at least
+                // one exists because the outer condition held, and both
+                // candidates are strictly ahead of the current clock)
+                let mut wake = u64::MAX;
+                if next < trace.len() {
+                    wake = trace[next].arrival_ns;
+                }
+                if let Some((due, _)) = retries.front() {
+                    wake = wake.min(*due);
+                }
+                now = wake;
                 continue;
             }
             // 2. dispatch decision
-            let drained = next >= trace.len();
+            let drained = next >= trace.len() && retries.is_empty();
             if !batcher.should_dispatch(&queue, now, drained) {
                 // sleep the serve clock to the next actionable instant:
                 // a drained trace with a non-empty queue always
-                // dispatches above, so more arrivals exist here, and
-                // both candidates are strictly ahead of `now` (arrivals
-                // due were admitted, an expired deadline dispatches)
-                let deadline = batcher
+                // dispatches above, so an arrival or a parked retry
+                // exists here, and every candidate is strictly ahead of
+                // `now` (due arrivals/retries were admitted, an expired
+                // deadline dispatches)
+                let mut wake = batcher
                     .deadline_ns(&queue)
                     .expect("non-empty queue has a deadline");
-                now = now.max(deadline.min(trace[next].arrival_ns));
+                if next < trace.len() {
+                    wake = wake.min(trace[next].arrival_ns);
+                }
+                if let Some((due, _)) = retries.front() {
+                    wake = wake.min(*due);
+                }
+                now = now.max(wake);
                 continue;
             }
             // 3. one forward-only engine step over the coalesced batch
@@ -235,13 +309,39 @@ impl ServeLoop {
             let wall = t0.elapsed().as_nanos() as u64;
             now += wall;
             stats.record_batch(&step, batch.rows(), self.cfg.max_batch_tokens);
+            let per_tok = wall as f64 / batch.rows().max(1) as f64;
+            est_ns_per_token = if est_ns_per_token == 0.0 {
+                per_tok
+            } else {
+                0.7 * est_ns_per_token + 0.3 * per_tok
+            };
+            // fault recovery degraded this batch iff any chunk was lost
+            // (renormalized rows may sit on any replica of the batch,
+            // so attribution is per-batch, not per-slot)
+            let degraded =
+                step.failed_chunks > 0 || step.degraded_tokens > 0;
             let combined = &outs[0];
             for slot in &batch.slots {
-                stats.queue_wait.push(dispatched_at - slot.arrival_ns);
-                stats.compute.push(wall);
-                stats.total.push(now - slot.arrival_ns);
-                stats.completed += 1;
-                stats.tokens_served += slot.rows.len() as u64;
+                if degraded && attempts[slot.id] < self.cfg.retry_max {
+                    // re-offer after backoff; this attempt's output is
+                    // discarded and latency keeps accruing from the
+                    // original arrival
+                    attempts[slot.id] += 1;
+                    stats.retried += 1;
+                    let rows = slot.rows.len();
+                    let data = batch.x.data
+                        [slot.rows.start * d..slot.rows.end * d]
+                        .to_vec();
+                    retries.push_back((
+                        now + self.cfg.retry_backoff_ns,
+                        ServeRequest {
+                            id: slot.id,
+                            arrival_ns: slot.arrival_ns,
+                            x: TensorF::new(vec![rows, d], data),
+                        },
+                    ));
+                    continue;
+                }
                 if self.cfg.capture_outputs {
                     let rows = slot.rows.len();
                     let data = combined.data
@@ -249,6 +349,18 @@ impl ServeLoop {
                         .to_vec();
                     outputs[slot.id] = Some(TensorF::new(vec![rows, d], data));
                 }
+                if degraded {
+                    // out of retries: the renormalized output above is
+                    // still delivered, but the request counts against
+                    // the quality SLO, not as completed
+                    stats.failed += 1;
+                    continue;
+                }
+                stats.queue_wait.push(dispatched_at - slot.arrival_ns);
+                stats.compute.push(wall);
+                stats.total.push(now - slot.arrival_ns);
+                stats.completed += 1;
+                stats.tokens_served += slot.rows.len() as u64;
             }
         }
         stats.shed = queue.shed();

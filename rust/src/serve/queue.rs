@@ -105,6 +105,37 @@ impl RequestQueue {
         self.shed += 1;
     }
 
+    /// Deadline feasibility under (possibly degraded) capacity: can a
+    /// request of `rows` tokens, entering behind the current backlog,
+    /// still finish within `deadline_ns` of arrival?  Throughput is
+    /// `est_ns_per_token` scaled by `1 / live_fraction` — when fault
+    /// recovery has masked shards out, the surviving shards serve the
+    /// same token stream and the effective per-token cost rises
+    /// proportionally.  `est_ns_per_token <= 0` (no measurement yet)
+    /// is always feasible.
+    pub fn feasible(
+        &self,
+        rows: usize,
+        est_ns_per_token: f64,
+        live_fraction: f64,
+        deadline_ns: u64,
+    ) -> bool {
+        if est_ns_per_token <= 0.0 {
+            return true;
+        }
+        let eff = est_ns_per_token / live_fraction.clamp(1e-9, 1.0);
+        let wait = (self.depth_tokens() + rows) as f64 * eff;
+        wait <= deadline_ns as f64
+    }
+
+    /// Record the up-front rejection of a request whose deadline is
+    /// infeasible (pairs with [`feasible`](Self::feasible)); counts
+    /// into the same [`shed`](Self::shed) total as admission-control
+    /// drops so `offered == admitted + shed` stays a single invariant.
+    pub fn reject_infeasible(&mut self) {
+        self.shed += 1;
+    }
+
     /// Offer a request.  Returns the requests admission control dropped:
     /// the newcomer under [`AdmissionPolicy::Reject`], the displaced
     /// oldest under [`AdmissionPolicy::ShedOldest`], empty when the
@@ -214,6 +245,57 @@ mod tests {
         let mut s = RequestQueue::new(1, AdmissionPolicy::ShedOldest);
         s.offer(req(0, 0, 1));
         assert!(!s.will_reject_next());
+    }
+
+    #[test]
+    fn deadline_feasibility_under_degraded_capacity() {
+        let mut q = RequestQueue::new(16, AdmissionPolicy::Reject);
+        q.offer(req(0, 0, 8)); // 8-token backlog
+        // healthy: 10 tokens at 100ns/tok = 1000ns, inside a 2000ns SLO
+        assert!(q.feasible(2, 100.0, 1.0, 2_000));
+        // half the shards dead: effective cost doubles, SLO blown
+        assert!(!q.feasible(2, 100.0, 0.5, 2_000));
+        // no throughput estimate yet: always feasible
+        assert!(q.feasible(2, 0.0, 0.5, 1));
+        // zero live capacity clamps rather than dividing by zero
+        assert!(!q.feasible(2, 100.0, 0.0, u64::MAX / 2));
+        q.reject_infeasible();
+        assert_eq!(q.shed(), 1);
+        assert_eq!(q.len(), 1, "up-front rejection leaves the queue alone");
+    }
+
+    #[test]
+    fn accounting_invariant_admitted_equals_popped_plus_shed_plus_queued() {
+        // every offered request is exactly one of: popped, shed (by
+        // admission control or infeasibility), or still queued
+        let mut q = RequestQueue::new(4, AdmissionPolicy::Reject);
+        let mut offered = 0u64;
+        let mut popped = 0u64;
+        for i in 0..50 {
+            offered += 1;
+            // degrade live capacity over time; the deadline tightens
+            let live = 1.0 - (i as f64 / 100.0);
+            if !q.feasible(2, 50.0, live, 600) {
+                q.reject_infeasible();
+                continue;
+            }
+            if q.will_reject_next() {
+                q.reject_next();
+                continue;
+            }
+            q.offer(req(i, i as u64, 2));
+            if i % 3 == 0 && q.pop().is_some() {
+                popped += 1;
+            }
+            assert_eq!(
+                offered,
+                popped + q.shed() + q.len() as u64,
+                "conservation broke at offer {i}"
+            );
+        }
+        assert_eq!(offered, popped + q.shed() + q.len() as u64);
+        assert!(q.shed() > 0, "test never exercised a shed path");
+        assert!(popped > 0);
     }
 
     #[test]

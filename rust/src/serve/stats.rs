@@ -36,6 +36,20 @@ pub struct ServeStats {
     pub peak_queue_depth: usize,
     /// engine phase nanoseconds summed over every dispatched batch
     pub phases: PhaseNanos,
+    /// degraded-batch re-offers (retry-with-backoff attempts)
+    pub retried: u64,
+    /// requests whose final attempt still rode a degraded batch — their
+    /// (renormalized) outputs are delivered but they don't count as
+    /// `completed`, so `offered == completed + shed + failed` holds
+    pub failed: u64,
+    /// expert chunks lost to injected faults across all batches
+    pub failed_chunks: u64,
+    /// failed routes recovered onto the token's other selected experts
+    pub redispatched_routes: u64,
+    /// token rows combined with renormalized (partial) gate mass
+    pub degraded_tokens: u64,
+    /// total eq-1 gate mass renormalized away across all batches
+    pub renorm_mass_lost: f64,
 }
 
 impl ServeStats {
@@ -62,6 +76,10 @@ impl ServeStats {
         self.phases.compute += step.phases.compute;
         self.phases.combine += step.phases.combine;
         self.phases.overlap_ns += step.phases.overlap_ns;
+        self.failed_chunks += step.failed_chunks as u64;
+        self.redispatched_routes += step.redispatched_routes as u64;
+        self.degraded_tokens += step.degraded_tokens as u64;
+        self.renorm_mass_lost += step.renorm_mass_lost;
     }
 
     /// Achieved throughput over the whole replay (serve-clock seconds).
@@ -87,7 +105,7 @@ impl ServeStats {
     pub fn summary_line(&self) -> String {
         let queue = self.queue_wait.percentiles(&[0.50, 0.99]);
         let total = self.total.percentiles(&[0.50, 0.99]);
-        format!(
+        let mut line = format!(
             "served {:>5} req ({:>4} shed)  {:>9.0} tok/s  occupancy {:>3.0}%  \
              queue p50/p99 {:>8.3}/{:>8.3}ms  total p50/p99 {:>8.3}/{:>8.3}ms",
             self.completed,
@@ -98,7 +116,14 @@ impl ServeStats {
             queue[1] as f64 / 1e6,
             total[0] as f64 / 1e6,
             total[1] as f64 / 1e6,
-        )
+        );
+        if self.failed > 0 || self.failed_chunks > 0 || self.retried > 0 {
+            line.push_str(&format!(
+                "  faults: {} failed / {} retried / {} chunks / {} tok degraded",
+                self.failed, self.retried, self.failed_chunks, self.degraded_tokens,
+            ));
+        }
+        line
     }
 }
 
@@ -119,6 +144,10 @@ mod tests {
                 combine: 100,
                 ..Default::default()
             },
+            failed_chunks: 2,
+            redispatched_routes: 1,
+            degraded_tokens: 3,
+            renorm_mass_lost: 0.25,
             ..Default::default()
         };
         s.record_batch(&step, 24, 32);
@@ -130,6 +159,11 @@ mod tests {
         assert!((s.tokens_per_sec() - 32.0).abs() < 1e-9);
         assert_eq!(s.phases.compute, 1000);
         assert_eq!(s.phases.combine, 200);
+        assert_eq!(s.failed_chunks, 4);
+        assert_eq!(s.redispatched_routes, 2);
+        assert_eq!(s.degraded_tokens, 6);
+        assert!((s.renorm_mass_lost - 0.5).abs() < 1e-12);
+        assert!(s.summary_line().contains("faults:"));
 
         // an oversized single-request batch counts its true size as
         // capacity, so mean occupancy cannot exceed 1

@@ -1,0 +1,425 @@
+//! Fault-tolerance proofs: the deterministic fault layer against its
+//! serial failure-masked oracle.
+//!
+//! The contract under test (see `coordinator::faults` and the module
+//! docs' "Fault tolerance and the degraded combine" section):
+//!
+//! - a zero-fault [`FaultPlan`] is *bit-neutral*: the streamed engine
+//!   with the plan threaded through is bit-identical to the engine
+//!   without one;
+//! - degraded streamed outputs are *bit-equal* to the serial oracle
+//!   that replays the same chunking under the same fault draws
+//!   ([`degrade_plan`] + [`combine_degraded`]), across both recovery
+//!   policies, combine drops and shard deaths;
+//! - same seed ⇒ same faults ⇒ same degraded outputs, bit for bit;
+//! - every shard-death schedule — including all shards dead — leaves
+//!   the engine live: steps return (no hang), outputs stay finite,
+//!   and permanently dead shards are masked out of routing on
+//!   subsequent steps;
+//! - a worker panic without a fault session surfaces as a step error
+//!   and leaves the engine reusable.
+
+use moe::coordinator::router::Router;
+use moe::coordinator::scheduler::{
+    ExpertBackend, ExpertWeights, Scheduler, ShardLayout, WavePolicy,
+};
+use moe::coordinator::{
+    combine_degraded, degrade_plan, FaultPlan, RecoveryPolicy,
+};
+use moe::gating::noisy_topk::GateVec;
+use moe::runtime::TensorF;
+use moe::util::prop;
+use moe::util::rng::Rng;
+
+const TOL: f32 = 1e-5;
+
+fn mk_weights(
+    n: usize,
+    d: usize,
+    h: usize,
+    rng: &mut Rng,
+) -> Vec<ExpertWeights> {
+    (0..n)
+        .map(|_| ExpertWeights {
+            w_in: prop::vec_f32(rng, d * h, 0.3),
+            w_out: prop::vec_f32(rng, h * d, 0.3),
+            d_model: d,
+            hidden: h,
+        })
+        .collect()
+}
+
+fn mk_router(d: usize, n: usize, k: usize, rng: &mut Rng) -> Router {
+    Router::flat_native(
+        d,
+        n,
+        k,
+        prop::vec_f32(rng, d * n, 0.5),
+        Some(prop::vec_f32(rng, d * n, 0.3)),
+    )
+}
+
+fn mk_xs(replicas: usize, d: usize, rng: &mut Rng) -> Vec<TensorF> {
+    (0..replicas)
+        .map(|_| {
+            let rows = prop::dim(rng, 1, 8);
+            TensorF::new(vec![rows, d], prop::vec_f32(rng, rows * d, 1.0))
+        })
+        .collect()
+}
+
+fn assert_outs_bit_eq(a: &[TensorF], b: &[TensorF], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}");
+    for (r, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.shape, tb.shape, "{ctx}: replica {r}");
+        let ba: Vec<u32> = ta.data.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = tb.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb, "{ctx}: replica {r} outputs not bit-equal");
+    }
+}
+
+fn sched_with(
+    devices: usize,
+    n: usize,
+    wave_cap: usize,
+    dispatch_cap: Option<usize>,
+    plan: Option<FaultPlan>,
+) -> Scheduler {
+    Scheduler::with_policy(
+        ShardLayout::new(devices, n),
+        ExpertBackend::Native,
+        WavePolicy::Fixed(Some(wave_cap)),
+    )
+    .with_dispatch_capacity(dispatch_cap)
+    .with_fault_plan(plan)
+}
+
+/// A zero-fault plan threads the whole fault machinery through the
+/// streamed step — per-chunk outcome draws, gate-vector retention, the
+/// combine's lost-mass bookkeeping — and must change *nothing*:
+/// decisions, plan and outputs bit-identical to an engine with no plan.
+#[test]
+fn zero_fault_plan_is_bit_neutral() {
+    prop::forall("zero-fault plan is bit-neutral", |rng| {
+        let d = prop::dim(rng, 2, 6);
+        let h = prop::dim(rng, 2, 8);
+        let n = prop::dim(rng, 2, 8);
+        let k = prop::dim(rng, 1, n.min(3));
+        let replicas = prop::dim(rng, 1, 3);
+        let devices = prop::dim(rng, 1, n);
+        let wave_cap = prop::dim(rng, 1, 6);
+        let weights = mk_weights(n, d, h, rng);
+        let router = mk_router(d, n, k, rng);
+        let xs = mk_xs(replicas, d, rng);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let seed_rng = rng.fold_in(41);
+
+        let plain = sched_with(devices, n, wave_cap, None, None);
+        let mut ra = seed_rng.clone();
+        let a = plain
+            .execute_streamed(&router, &refs, &weights, Some(&mut ra))
+            .unwrap();
+
+        let faulted =
+            sched_with(devices, n, wave_cap, None, Some(FaultPlan::none(9)));
+        let mut rb = seed_rng.clone();
+        let b = faulted
+            .execute_streamed(&router, &refs, &weights, Some(&mut rb))
+            .unwrap();
+
+        assert_outs_bit_eq(&a.outs, &b.outs, "zero-fault");
+        assert_eq!(b.stats.failed_chunks, 0);
+        assert_eq!(b.stats.redispatched_routes, 0);
+        assert_eq!(b.stats.degraded_tokens, 0);
+        assert_eq!(b.stats.renorm_mass_lost, 0.0);
+        assert_eq!(faulted.live_fraction(), 1.0);
+    });
+}
+
+/// The core equivalence: streamed outputs under injected faults are
+/// bit-equal to the serial oracle that replays the engine's chunking
+/// over the finished plan, applies the identical draws, re-homes
+/// redirectable routes and renormalizes the combine — across recovery
+/// policies, chunk failures, timed-out stragglers, combine drops and
+/// day-0 shard deaths, with and without GShard dispatch capacity.
+#[test]
+fn degraded_streamed_outputs_match_failure_masked_oracle() {
+    prop::forall("degraded == failure-masked oracle", |rng| {
+        let d = prop::dim(rng, 2, 6);
+        let h = prop::dim(rng, 2, 8);
+        let n = prop::dim(rng, 2, 8);
+        let k = prop::dim(rng, 1, n.min(3));
+        let replicas = prop::dim(rng, 1, 3);
+        let devices = prop::dim(rng, 1, n);
+        let wave_cap = prop::dim(rng, 1, 5);
+        let dispatch_cap = if prop::dim(rng, 0, 1) == 1 {
+            Some(prop::dim(rng, 1, 6))
+        } else {
+            None
+        };
+        let weights = mk_weights(n, d, h, rng);
+        let router = mk_router(d, n, k, rng);
+        let xs = mk_xs(replicas, d, rng);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+
+        let policy = if prop::dim(rng, 0, 1) == 1 {
+            RecoveryPolicy::Redispatch
+        } else {
+            RecoveryPolicy::DegradeOnly
+        };
+        let mut shard_deaths = Vec::new();
+        if prop::dim(rng, 0, 2) == 0 {
+            shard_deaths.push((0u64, prop::dim(rng, 0, devices - 1)));
+        }
+        let fp = FaultPlan {
+            seed: prop::dim(rng, 0, 1 << 20) as u64,
+            chunk_fail_rate: [0.0, 0.15, 0.4][prop::dim(rng, 0, 2)],
+            straggler_rate: 0.25,
+            straggler_delay_ns: 5_000,
+            // sometimes under the injected delay, so stragglers time out
+            deadline_ns: if prop::dim(rng, 0, 1) == 1 { 2_000 } else { 1 << 20 },
+            combine_drop_rate: [0.0, 0.2][prop::dim(rng, 0, 1)],
+            shard_deaths,
+            policy,
+        };
+        let seed_rng = rng.fold_in(43);
+
+        let sched =
+            sched_with(devices, n, wave_cap, dispatch_cap, Some(fp.clone()));
+        let mut r = seed_rng.clone();
+        let s = sched
+            .execute_streamed(&router, &refs, &weights, Some(&mut r))
+            .unwrap();
+
+        // the serial oracle over the same finished plan and fault step
+        let layout = ShardLayout::new(devices, n);
+        let sel: Vec<Vec<GateVec>> =
+            s.decisions.iter().map(|dec| dec.per_token.clone()).collect();
+        let dp = degrade_plan(&s.plan, &layout, &sel, wave_cap, 0, &fp);
+        let expert_outputs: Vec<TensorF> = dp
+            .plan
+            .per_expert
+            .iter()
+            .enumerate()
+            .map(|(e, batch)| {
+                let rows = batch.tokens.len();
+                let mut data = Vec::with_capacity(rows * d);
+                for addr in &batch.tokens {
+                    data.extend_from_slice(
+                        &xs[addr.replica].data
+                            [addr.row * d..(addr.row + 1) * d],
+                    );
+                }
+                weights[e].forward(&TensorF::new(vec![rows, d], data))
+            })
+            .collect();
+        let want = combine_degraded(&dp, &expert_outputs, d);
+
+        assert_outs_bit_eq(&s.outs, &want, "degraded oracle");
+        assert_eq!(s.stats.failed_chunks, dp.failed_chunks);
+        assert_eq!(s.stats.redispatched_routes, dp.redispatched_routes);
+        let oracle_degraded = dp
+            .lost_mass
+            .iter()
+            .flat_map(|lm| lm.iter())
+            .filter(|&&m| m > 0.0)
+            .count();
+        assert_eq!(s.stats.degraded_tokens, oracle_degraded);
+        let oracle_lost: f64 = dp
+            .lost_mass
+            .iter()
+            .flat_map(|lm| lm.iter())
+            .map(|&m| m as f64)
+            .sum();
+        assert!(
+            (s.stats.renorm_mass_lost - oracle_lost).abs()
+                <= 1e-4 * oracle_lost.max(1.0),
+            "lost mass {} vs oracle {}",
+            s.stats.renorm_mass_lost,
+            oracle_lost
+        );
+    });
+}
+
+/// Same seed, same faults: two fresh engines under the same plan
+/// produce bit-identical degraded outputs and identical recovery
+/// counters — chaos runs are exactly reproducible.
+#[test]
+fn same_seed_fault_runs_are_deterministic() {
+    prop::forall("same seed same faults", |rng| {
+        let (d, h) = (5, 7);
+        let n = prop::dim(rng, 3, 8);
+        let k = prop::dim(rng, 2, n.min(3));
+        let devices = prop::dim(rng, 1, n);
+        let weights = mk_weights(n, d, h, rng);
+        let router = mk_router(d, n, k, rng);
+        let xs = mk_xs(2, d, rng);
+        let refs: Vec<&TensorF> = xs.iter().collect();
+        let fp = FaultPlan {
+            seed: prop::dim(rng, 0, 1 << 20) as u64,
+            chunk_fail_rate: 0.35,
+            combine_drop_rate: 0.15,
+            ..Default::default()
+        };
+        let seed_rng = rng.fold_in(47);
+
+        let run = || {
+            let sched =
+                sched_with(devices, n, 3, Some(4), Some(fp.clone()));
+            let mut r = seed_rng.clone();
+            let first = sched
+                .execute_streamed(&router, &refs, &weights, Some(&mut r))
+                .unwrap();
+            // second step advances the fault counter: different draws,
+            // still deterministic across engines
+            let mut r2 = seed_rng.clone();
+            let second = sched
+                .execute_streamed(&router, &refs, &weights, Some(&mut r2))
+                .unwrap();
+            (first, second)
+        };
+        let (a1, a2) = run();
+        let (b1, b2) = run();
+        assert_outs_bit_eq(&a1.outs, &b1.outs, "step 0");
+        assert_outs_bit_eq(&a2.outs, &b2.outs, "step 1");
+        assert_eq!(a1.stats.failed_chunks, b1.stats.failed_chunks);
+        assert_eq!(
+            a1.stats.redispatched_routes,
+            b1.stats.redispatched_routes
+        );
+        assert_eq!(a1.stats.degraded_tokens, b1.stats.degraded_tokens);
+        assert_eq!(a2.stats.failed_chunks, b2.stats.failed_chunks);
+    });
+}
+
+/// Liveness under every death schedule: for every subset of shards
+/// (including all of them) dying at step 0, three consecutive steps
+/// return without hanging, outputs stay finite, dead shards are masked
+/// out of routing on the steps after the death, and the all-dead
+/// extreme degrades every row to zero.
+#[test]
+fn every_shard_death_schedule_terminates() {
+    let (d, h, n, k, devices) = (4usize, 6usize, 4usize, 2usize, 2usize);
+    let mut rng = Rng::new(61);
+    let weights = mk_weights(n, d, h, &mut rng);
+    let router = mk_router(d, n, k, &mut rng);
+    let xs = mk_xs(2, d, &mut rng);
+    let refs: Vec<&TensorF> = xs.iter().collect();
+    let layout = ShardLayout::new(devices, n);
+
+    for bits in 0..(1u32 << devices) {
+        let deaths: Vec<(u64, usize)> = (0..devices)
+            .filter(|sh| bits & (1 << sh) != 0)
+            .map(|sh| (0u64, sh))
+            .collect();
+        let all_dead = deaths.len() == devices;
+        let fp = FaultPlan {
+            seed: 71,
+            shard_deaths: deaths.clone(),
+            ..Default::default()
+        };
+        let sched = sched_with(devices, n, 3, None, Some(fp));
+        for step in 0..3u64 {
+            let mut r = Rng::new(5).fold_in(step);
+            let s = sched
+                .execute_streamed(&router, &refs, &weights, Some(&mut r))
+                .unwrap_or_else(|e| {
+                    panic!("deaths {deaths:?} step {step}: {e}")
+                });
+            for o in &s.outs {
+                assert!(
+                    o.data.iter().all(|v| v.is_finite()),
+                    "deaths {deaths:?} step {step}: non-finite output"
+                );
+            }
+            if all_dead {
+                // no live redirect target and no survivable chunk:
+                // every row renormalizes to zero delivered mass
+                for o in &s.outs {
+                    assert!(
+                        o.data.iter().all(|&v| v == 0.0),
+                        "all-dead step {step} must zero every row"
+                    );
+                }
+            } else if !deaths.is_empty() && step >= 1 {
+                // permanently dead shards are masked out of the router
+                // on the steps after the death step
+                let loads = s.plan.expert_loads();
+                for e in 0..n {
+                    let dead =
+                        deaths.iter().any(|&(_, sh)| sh == layout.owner(e));
+                    if dead {
+                        assert_eq!(
+                            loads[e], 0,
+                            "deaths {deaths:?} step {step}: dead expert \
+                             {e} still routed"
+                        );
+                    }
+                }
+            }
+        }
+        if !deaths.is_empty() {
+            let want = (devices - deaths.len()) as f64 / devices as f64;
+            assert!((sched.live_fraction() - want).abs() < 1e-12);
+        }
+    }
+}
+
+/// Satellite: a worker panic without a fault session is surfaced as a
+/// step error (not a hang, not a poisoned engine) and the same engine
+/// serves the next step normally.
+#[test]
+fn worker_panic_surfaces_as_error_and_engine_survives() {
+    let (d, h, n) = (4usize, 6usize, 4usize);
+    let mut rng = Rng::new(77);
+    let good = mk_weights(n, d, h, &mut rng);
+    let mut bad = good.clone();
+    // undersized weight: the worker's matmul indexes out of bounds and
+    // panics inside catch_unwind
+    bad[2].w_in = vec![0.0; 3];
+    // k = n so expert 2 is guaranteed a chunk
+    let router = mk_router(d, n, n, &mut rng);
+    let xs = mk_xs(2, d, &mut rng);
+    let refs: Vec<&TensorF> = xs.iter().collect();
+    let sched = sched_with(2, n, 3, None, None);
+
+    let err = sched.execute_streamed(&router, &refs, &bad, None);
+    assert!(err.is_err(), "panicked worker must fail the step");
+
+    // the engine (and its worker threads) survive for the next step
+    let s = sched
+        .execute_streamed(&router, &refs, &good, None)
+        .expect("engine must be reusable after a worker panic");
+    let (want, _) = sched.execute_serial(&s.plan, &refs, &good).unwrap();
+    for (g, w) in s.outs.iter().zip(&want) {
+        assert_eq!(g.shape, w.shape);
+        for (a, b) in g.data.iter().zip(&w.data) {
+            assert!((a - b).abs() <= TOL, "{a} vs {b}");
+        }
+    }
+}
+
+/// Satellite: under a fault session the same panic degrades instead of
+/// failing — the step completes, the panicked chunk's rows renormalize
+/// over their surviving experts, and outputs stay finite.
+#[test]
+fn worker_panic_under_fault_session_degrades_instead_of_failing() {
+    let (d, h, n) = (4usize, 6usize, 4usize);
+    let mut rng = Rng::new(83);
+    let good = mk_weights(n, d, h, &mut rng);
+    let mut bad = good.clone();
+    bad[2].w_in = vec![0.0; 3];
+    let router = mk_router(d, n, n, &mut rng);
+    let xs = mk_xs(2, d, &mut rng);
+    let refs: Vec<&TensorF> = xs.iter().collect();
+    let sched = sched_with(2, n, 3, None, Some(FaultPlan::none(7)));
+
+    let s = sched
+        .execute_streamed(&router, &refs, &bad, None)
+        .expect("fault session must absorb the panic as degradation");
+    assert!(s.stats.failed_chunks > 0, "panic must be charged as a fault");
+    assert!(s.stats.degraded_tokens > 0);
+    for o in &s.outs {
+        assert!(o.data.iter().all(|v| v.is_finite()));
+    }
+}
