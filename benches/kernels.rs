@@ -1,0 +1,168 @@
+//! Bench: the kernel layer itself — every kernel the host can run,
+//! swept over the hot-path GEMM shapes, f32 and int8.
+//!
+//! Rows are named `"<op> <m>x<k>x<n> [<kernel>]"`; the scalar oracle is
+//! always measured first so every row carries `speedup_vs_scalar`
+//! (scalar rows themselves report 1.0 by construction).  Int8 rows also
+//! carry `int8_max_rel_err` — the measured normwise error of the
+//! quantized fused FFN against the same kernel's f32 fused FFN on the
+//! same inputs — asserted under the serve budget both here and by the
+//! CI validator.
+//!
+//! Results go to `BENCH_kernels.json`.  Set `BENCH_SMOKE=1` for a
+//! single-iteration CI smoke run.
+
+use moe::coordinator::scheduler::ExpertWeights;
+use moe::kernels::quant::{QuantizedExpertWeights, SERVE_REL_ERR_BUDGET};
+use moe::kernels::{ffn_forward, Kernel, MatmulKernel};
+use moe::util::bench::{black_box, BenchReport, Bencher};
+use moe::util::prop;
+use moe::util::rng::Rng;
+
+/// Quantized fused FFN on an explicit kernel (the serve path routes
+/// through the selected kernel; the sweep needs to pin each one).
+fn ffn_q8(
+    kern: &dyn MatmulKernel,
+    q: &QuantizedExpertWeights,
+    x: &[f32],
+    rows: usize,
+    hid: &mut [f32],
+    out: &mut [f32],
+) {
+    let (d, h) = (q.d_model, q.hidden);
+    kern.matmul_q8(x, &q.q_in, &q.s_in, hid, rows, d, h);
+    for v in hid.iter_mut() {
+        *v = v.max(0.0);
+    }
+    kern.matmul_q8(hid, &q.q_out, &q.s_out, out, rows, h, d);
+}
+
+fn gemm_section(bench: &Bencher, report: &mut BenchReport) {
+    // (op, m, k, n): gating logits (tokens × d_model → n_experts), the
+    // expert in/out projections, and the two backward transposes
+    let cases: &[(&str, usize, usize, usize)] = &[
+        ("matmul", 512, 64, 64),
+        ("matmul", 128, 64, 256),
+        ("matmul", 128, 256, 64),
+        ("matmul_tn", 128, 64, 256),
+        ("matmul_nt", 128, 64, 256),
+    ];
+    let mut rng = Rng::new(7);
+    println!("== kernel GEMM sweep (f32) ==");
+    for &(op, m, k, n) in cases {
+        // matmul_nt reads (m,n,k): a (m,k)·bᵀ with b (n,k); flops match
+        let (alen, blen, olen) = match op {
+            "matmul" => (m * k, k * n, m * n),
+            "matmul_tn" => (m * k, m * n, k * n),
+            _ => (m * k, n * k, m * n),
+        };
+        let a = prop::vec_f32(&mut rng, alen, 1.0);
+        let b = prop::vec_f32(&mut rng, blen, 1.0);
+        let flops = 2.0 * (m * k * n) as f64;
+        let mut scalar_mean = 0.0f64;
+        for kern in Kernel::available() {
+            let mut out = vec![0f32; olen];
+            let name = format!("{op} {m}x{k}x{n} [{}]", kern.name());
+            let r = bench.run(&name, || match op {
+                "matmul" => kern.matmul(&a, &b, &mut out, m, k, n),
+                "matmul_tn" => {
+                    // += contract: reset so every iteration is the same work
+                    out.fill(0.0);
+                    kern.matmul_tn(&a, &b, &mut out, m, k, n);
+                }
+                _ => kern.matmul_nt(&a, &b, &mut out, m, n, k),
+            });
+            black_box(&out);
+            r.report_throughput("flop", flops);
+            if kern.name() == "scalar" {
+                scalar_mean = r.mean_secs();
+            }
+            let speedup = scalar_mean / r.mean_secs();
+            report.push(
+                &r,
+                None,
+                &[
+                    ("gflops", flops / r.mean_secs() / 1e9),
+                    ("speedup_vs_scalar", speedup),
+                ],
+            );
+        }
+    }
+}
+
+fn ffn_section(bench: &Bencher, report: &mut BenchReport) {
+    let (rows, d, h) = (256, 64, 256);
+    let mut rng = Rng::new(11);
+    let w = ExpertWeights {
+        w_in: prop::vec_f32(&mut rng, d * h, 0.3),
+        w_out: prop::vec_f32(&mut rng, h * d, 0.3),
+        d_model: d,
+        hidden: h,
+    };
+    let q = QuantizedExpertWeights::from_f32(&w);
+    let x = prop::vec_f32(&mut rng, rows * d, 1.0);
+    let flops = 2.0 * (rows * d * h) as f64 * 2.0;
+    println!("== fused expert FFN: f32 vs int8, per kernel ==");
+    for kern in Kernel::available() {
+        let mut scratch = Vec::new();
+        let mut out = vec![0f32; rows * d];
+        let f32_name = format!("ffn_f32 {rows}x{d}x{h} [{}]", kern.name());
+        let rf = bench.run(&f32_name, || {
+            ffn_forward(kern, &x, rows, d, h, &w.w_in, &w.w_out, &mut scratch, &mut out);
+        });
+        black_box(&out);
+        rf.report_throughput("flop", flops);
+        let y32 = out.clone();
+        report.push(&rf, Some(("row", rows as f64)), &[(
+            "gflops",
+            flops / rf.mean_secs() / 1e9,
+        )]);
+
+        let mut hid = vec![0f32; rows * h];
+        let mut out8 = vec![0f32; rows * d];
+        let q8_name = format!("ffn_int8 {rows}x{d}x{h} [{}]", kern.name());
+        let r8 = bench.run(&q8_name, || {
+            ffn_q8(kern, &q, &x, rows, &mut hid, &mut out8);
+        });
+        black_box(&out8);
+        r8.report_throughput("flop", flops);
+        // measured int8 error vs the same kernel's f32 output, normwise
+        let norm: f64 =
+            y32.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let err: f64 = y32
+            .iter()
+            .zip(out8.iter())
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let rel = if norm > 0.0 { err / norm } else { 0.0 };
+        assert!(
+            rel <= SERVE_REL_ERR_BUDGET,
+            "{q8_name}: int8 rel err {rel:.3e} over serve budget"
+        );
+        report.push(
+            &r8,
+            Some(("row", rows as f64)),
+            &[
+                ("gflops", flops / r8.mean_secs() / 1e9),
+                ("speedup_vs_f32", rf.mean_secs() / r8.mean_secs()),
+                ("int8_max_rel_err", rel),
+            ],
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher::from_env_quick();
+    let mut report = BenchReport::new("kernels");
+    println!(
+        "selected kernel: {} (MOE_KERNEL overrides; sweep measures all \
+         available)",
+        Kernel::selected_name()
+    );
+    gemm_section(&bench, &mut report);
+    ffn_section(&bench, &mut report);
+    report.write("BENCH_kernels.json")?;
+    println!("wrote BENCH_kernels.json");
+    Ok(())
+}

@@ -71,9 +71,14 @@ use anyhow::Result;
 use moe::data::synthetic::{CorpusSpec, TopicCorpus};
 use moe::data::Batcher;
 use moe::harness::distributed::{expert_weights, router_for};
-use moe::harness::workload::phase_line;
+use moe::harness::workload::{
+    phase_line, poisson_trace, trace_requests, TraceSpec,
+};
 use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
+use moe::kernels::quant::{Precision, SERVE_REL_ERR_BUDGET};
+use moe::kernels::Kernel;
 use moe::runtime::{Engine, Manifest, ModelConfig, TensorF};
+use moe::serve::{ServeConfig, ServeLoop};
 use moe::train::{StreamedStepOptions, Trainer};
 use moe::util::rng::Rng;
 
@@ -214,6 +219,74 @@ fn main() -> Result<()> {
     let cp = moe::harness::chaos::run_point(&chaos, 2, 16)?;
     println!("chaos point: {}", moe::harness::chaos::point_line(&cp));
     assert!(cp.conserved() && cp.all_finite);
+
+    // --- 8. kernels & quantized serving: every hot-path GEMM routes
+    //        through one selected SIMD kernel (MOE_KERNEL=scalar pins
+    //        the retained bit-exact oracle), and serving can run the
+    //        experts int8 weight-only — quantized at load, f32
+    //        checkpoints untouched, error budgeted against the f32
+    //        path over the same weights ---
+    println!(
+        "matmul kernel: {} (MOE_KERNEL overrides; scalar = bit-exact \
+         oracle)",
+        Kernel::selected_name()
+    );
+    let trace = trace_requests(
+        &poisson_trace(&TraceSpec {
+            seed: 33,
+            rate_per_sec: 30_000.0,
+            n_requests: 16,
+            min_rows: 1,
+            max_rows: 5,
+            bursty: false,
+        }),
+        c.d_model,
+        35,
+    );
+    let run_precision = |precision| -> Result<Vec<Option<TensorF>>> {
+        let serve = ServeLoop::new(
+            Scheduler::new(
+                ShardLayout::new(2, c.n_experts),
+                ExpertBackend::Native,
+            ),
+            router_for(&entry, &state.params.data, &engine, &manifest, false)?,
+            weights.clone(),
+            ServeConfig {
+                queue_depth: 64,
+                max_batch_tokens: 16,
+                latency_budget_ns: 200_000,
+                capture_outputs: true,
+                precision,
+                ..Default::default()
+            },
+        )?;
+        Ok(serve.run_trace(&trace)?.outputs)
+    };
+    let y32 = run_precision(Precision::F32)?;
+    let y8 = run_precision(Precision::Int8)?;
+    let mut worst = 0f64;
+    for (a, b) in y32.iter().zip(y8.iter()) {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        let norm: f64 =
+            a.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let err: f64 = a
+            .data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(x, y)| (*x as f64 - *y as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        if norm > 1e-9 {
+            worst = worst.max(err / norm);
+        }
+    }
+    println!(
+        "int8 serving: {} requests, worst normwise rel err {:.2e} \
+         (budget {SERVE_REL_ERR_BUDGET})",
+        trace.len(),
+        worst
+    );
+    assert!(worst < SERVE_REL_ERR_BUDGET);
 
     println!("quickstart OK");
     Ok(())

@@ -101,6 +101,7 @@ use crate::coordinator::scheduler::{
     StepStats, WavePolicy,
 };
 use crate::gating::noisy_topk::GateVec;
+use crate::kernels::quant::QuantizedExpertWeights;
 use crate::runtime::{Executable, Host, TensorF};
 use crate::util::rng::Rng;
 
@@ -141,10 +142,41 @@ struct ExpertTask {
     retry: Option<RetryTask>,
 }
 
+/// Expert weights for one step, either width: the f32 training weights
+/// or the int8 serve-time quantization
+/// ([`crate::kernels::quant::QuantizedExpertWeights`]).  Both variants
+/// run through identical engine machinery — same jobs, same combine,
+/// same fault recovery — the only difference is which `forward_into`
+/// the shard worker calls.
+#[derive(Clone, Copy)]
+pub enum StepWeights<'a> {
+    F32(&'a [ExpertWeights]),
+    Int8(&'a [QuantizedExpertWeights]),
+}
+
+impl StepWeights<'_> {
+    /// Erase the lifetime for smuggling through a [`ComputeJob`] — see
+    /// module safety notes (only dereferenced while the coordinating
+    /// `execute_*` call is blocked on the job's reply).
+    fn raw(self) -> WeightsPtr {
+        match self {
+            StepWeights::F32(w) => WeightsPtr::F32(w),
+            StepWeights::Int8(w) => WeightsPtr::Int8(w),
+        }
+    }
+}
+
+/// Raw-pointer twin of [`StepWeights`] carried by in-flight jobs.
+#[derive(Clone, Copy)]
+enum WeightsPtr {
+    F32(*const [ExpertWeights]),
+    Int8(*const [QuantizedExpertWeights]),
+}
+
 struct ComputeJob {
     device: usize,
-    /// borrowed `&[ExpertWeights]` — see module safety notes
-    weights: *const [ExpertWeights],
+    /// borrowed [`StepWeights`] — see module safety notes
+    weights: WeightsPtr,
     tasks: Vec<ExpertTask>,
     /// injected straggler delay (fault plan); the worker sleeps this
     /// long inside its timed compute window
@@ -545,6 +577,18 @@ impl ExecutionEngine {
         xs: &[&TensorF],
         weights: &[ExpertWeights],
     ) -> Result<(Vec<TensorF>, StepStats)> {
+        self.execute_native_w(plan, xs, StepWeights::F32(weights))
+    }
+
+    /// [`execute_native`](Self::execute_native) generalized over the
+    /// weight width ([`StepWeights`]); the f32 and int8 paths share
+    /// every line of executor machinery.
+    pub fn execute_native_w(
+        &mut self,
+        plan: &DispatchPlan,
+        xs: &[&TensorF],
+        weights: StepWeights<'_>,
+    ) -> Result<(Vec<TensorF>, StepStats)> {
         let d = xs
             .first()
             .map(|t| t.shape[1])
@@ -616,7 +660,7 @@ impl ExecutionEngine {
                 }
                 let job = ComputeJob {
                     device: dev,
-                    weights,
+                    weights: weights.raw(),
                     tasks,
                     delay_ns: 0,
                     reply: reply_tx.clone(),
@@ -884,7 +928,7 @@ impl ExecutionEngine {
         weights: &[ExpertWeights],
         rng: Option<&mut Rng>,
     ) -> Result<StreamedStep> {
-        self.execute_streaming_impl(router, xs, weights, rng, true)
+        self.execute_streaming_impl(router, xs, StepWeights::F32(weights), rng, true)
     }
 
     /// Forward-only (inference) variant of
@@ -901,7 +945,37 @@ impl ExecutionEngine {
         xs: &[&TensorF],
         weights: &[ExpertWeights],
     ) -> Result<(Vec<TensorF>, StepStats)> {
-        let s = self.execute_streaming_impl(router, xs, weights, None, false)?;
+        let s = self.execute_streaming_impl(
+            router,
+            xs,
+            StepWeights::F32(weights),
+            None,
+            false,
+        )?;
+        Ok((s.outs, s.stats))
+    }
+
+    /// [`execute_streaming_forward`](Self::execute_streaming_forward)
+    /// with int8-quantized expert weights: the
+    /// [`crate::kernels::quant::Precision::Int8`] serving path.  Same
+    /// streaming pipeline, same workers, same pooled arenas and fault
+    /// recovery — only the shard workers' `forward_into` differs, so
+    /// outputs track the f32 path within the quantization error budget
+    /// ([`crate::kernels::quant::SERVE_REL_ERR_BUDGET`]) instead of
+    /// bit-exactly.
+    pub fn execute_streaming_forward_quant(
+        &mut self,
+        router: &Router,
+        xs: &[&TensorF],
+        weights: &[QuantizedExpertWeights],
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        let s = self.execute_streaming_impl(
+            router,
+            xs,
+            StepWeights::Int8(weights),
+            None,
+            false,
+        )?;
         Ok((s.outs, s.stats))
     }
 
@@ -913,7 +987,7 @@ impl ExecutionEngine {
         &mut self,
         router: &Router,
         xs: &[&TensorF],
-        weights: &[ExpertWeights],
+        weights: StepWeights<'_>,
         mut rng: Option<&mut Rng>,
         collect_decisions: bool,
     ) -> Result<StreamedStep> {
@@ -1309,7 +1383,7 @@ impl ExecutionEngine {
         plan: &DispatchPlan,
         trackers: &mut [ReplicaTracker],
         xs: &[&TensorF],
-        weights: &[ExpertWeights],
+        weights: StepWeights<'_>,
         e: usize,
         lo: usize,
         hi: usize,
@@ -1355,7 +1429,7 @@ impl ExecutionEngine {
                 let tdev = self.layout.owner(target);
                 let job = ComputeJob {
                     device: tdev,
-                    weights,
+                    weights: weights.raw(),
                     tasks: vec![ExpertTask {
                         expert: target,
                         rows: 1,
@@ -1393,7 +1467,7 @@ impl ExecutionEngine {
         output.resize((hi - lo) * d, 0.0);
         let job = ComputeJob {
             device: dev,
-            weights,
+            weights: weights.raw(),
             tasks: vec![ExpertTask {
                 expert: e,
                 rows: hi - lo,
@@ -1776,16 +1850,36 @@ fn worker_loop(rx: Receiver<Job>) {
                     std::thread::sleep(Duration::from_nanos(j.delay_ns));
                 }
                 let ok = catch_unwind(AssertUnwindSafe(|| {
-                    // SAFETY: the coordinator blocks until our reply
-                    let weights: &[ExpertWeights] = unsafe { &*j.weights };
-                    for t in j.tasks.iter_mut() {
-                        let w = &weights[t.expert];
-                        w.forward_into(
-                            &t.input[..t.rows * w.d_model],
-                            t.rows,
-                            &mut scratch,
-                            &mut t.output,
-                        );
+                    // SAFETY (both arms): the coordinator blocks until
+                    // our reply.  The arms are line-for-line twins; the
+                    // only difference is which width's forward_into the
+                    // selected kernel runs.
+                    match j.weights {
+                        WeightsPtr::F32(p) => {
+                            let weights: &[ExpertWeights] = unsafe { &*p };
+                            for t in j.tasks.iter_mut() {
+                                let w = &weights[t.expert];
+                                w.forward_into(
+                                    &t.input[..t.rows * w.d_model],
+                                    t.rows,
+                                    &mut scratch,
+                                    &mut t.output,
+                                );
+                            }
+                        }
+                        WeightsPtr::Int8(p) => {
+                            let weights: &[QuantizedExpertWeights] =
+                                unsafe { &*p };
+                            for t in j.tasks.iter_mut() {
+                                let w = &weights[t.expert];
+                                w.forward_into(
+                                    &t.input[..t.rows * w.d_model],
+                                    t.rows,
+                                    &mut scratch,
+                                    &mut t.output,
+                                );
+                            }
+                        }
                     }
                 }))
                 .is_ok();

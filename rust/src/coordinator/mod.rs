@@ -98,7 +98,7 @@ pub use balance::BalanceMeter;
 pub use dispatcher::{
     DispatchPlan, Dispatcher, ExpertBatch, PlanBuilder, ResidualPolicy,
 };
-pub use engine::{ExecutionEngine, StreamedStep};
+pub use engine::{ExecutionEngine, StepWeights, StreamedStep};
 pub use faults::{
     combine_degraded, degrade_plan, renormalize_row, ChunkOutcome,
     DegradedPlan, FaultPlan, FaultSession, FaultTally, RecoveryPolicy,

@@ -22,6 +22,17 @@
 //!   pipelined waves);
 //! - [`Scheduler::execute_serial`] — the retained single-threaded
 //!   reference, kept as the oracle for `rust/tests/engine_parity.rs`.
+//!
+//! All three paths run their GEMMs on the one process-wide kernel
+//! selected by [`crate::kernels::Kernel::select`] (scalar oracle, AVX2
+//! or NEON; `MOE_KERNEL` overrides).  The old per-matmul contract —
+//! "bit-identical to the naive triple loop" — now holds for the scalar
+//! kernel only; engine-vs-serial bit-equality is preserved regardless
+//! of kernel because both sides share the selection, while
+//! kernel-vs-oracle (and int8-vs-f32, see
+//! [`Scheduler::execute_forward_quant`]) comparisons are
+//! error-budgeted in `rust/tests/kernels.rs`.  [`StepStats::kernel`]
+//! records the selected name per step.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -34,6 +45,7 @@ use crate::coordinator::dispatcher::{
 use crate::coordinator::engine::{ExecutionEngine, StreamedStep};
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::router::{Router, RouterBackend};
+use crate::kernels::quant::QuantizedExpertWeights;
 use crate::runtime::{Executable, Host, TensorF};
 
 /// Which device owns which experts.
@@ -81,10 +93,13 @@ impl ExpertWeights {
         TensorF::new(vec![b, self.d_model], out)
     }
 
-    /// Arena variant of [`forward`](Self::forward): `relu(x·w_in)·w_out`
-    /// written into caller-owned buffers, so the persistent workers
-    /// allocate nothing on the step hot path.  Rows are independent, so
-    /// computing a batch in row-chunks is bit-identical to one pass.
+    /// Arena variant of [`forward`](Self::forward): the fused
+    /// `relu(x·w_in)·w_out` ([`crate::kernels::ffn_forward`]) on the
+    /// selected kernel, written into caller-owned buffers, so the
+    /// persistent workers allocate nothing on the step hot path and the
+    /// hidden layer only ever exists as a cache-resident row block.
+    /// Rows are independent, so computing a batch in row-chunks is
+    /// bit-identical to one pass (a kernel-layer invariant).
     pub fn forward_into(
         &self,
         x: &[f32],
@@ -94,15 +109,19 @@ impl ExpertWeights {
     ) {
         let (d, h) = (self.d_model, self.hidden);
         debug_assert_eq!(x.len(), rows * d);
-        scratch.clear();
-        scratch.resize(rows * h, 0.0);
-        crate::gating::noisy_topk::matmul(x, &self.w_in, scratch, rows, d, h);
-        for v in scratch.iter_mut() {
-            *v = v.max(0.0);
-        }
         out.clear();
         out.resize(rows * d, 0.0);
-        crate::gating::noisy_topk::matmul(scratch, &self.w_out, out, rows, h, d);
+        crate::kernels::ffn_forward(
+            crate::kernels::Kernel::select(),
+            x,
+            rows,
+            d,
+            h,
+            &self.w_in,
+            &self.w_out,
+            scratch,
+            out,
+        );
     }
 }
 
@@ -328,6 +347,11 @@ pub struct StepStats {
     pub degraded_tokens: usize,
     /// total eq-1 gate mass lost to unrecovered faults this step
     pub renorm_mass_lost: f64,
+    /// name of the matmul kernel every GEMM of this step dispatched to
+    /// ([`crate::kernels::Kernel::selected_name`]): `"scalar"`,
+    /// `"avx2"` or `"neon"` — `repro efficiency` prints it so perf rows
+    /// say which path ran ("" on `Default`-built stats)
+    pub kernel: &'static str,
 }
 
 impl StepStats {
@@ -385,6 +409,7 @@ pub(crate) fn build_stats(
         redispatched_routes: 0,
         degraded_tokens: 0,
         renorm_mass_lost: 0.0,
+        kernel: crate::kernels::Kernel::selected_name(),
     }
 }
 
@@ -501,8 +526,10 @@ impl Scheduler {
     }
 
     /// Can the full step run as the engine's streaming pipeline?
-    /// (Native-math router and Native expert backend.)
-    fn streams_natively(&self, router: &Router) -> bool {
+    /// (Native-math router and Native expert backend.)  `pub(crate)` so
+    /// [`crate::serve::ServeLoop`] can reject int8 configurations that
+    /// would have no quantized path at construction time.
+    pub(crate) fn streams_natively(&self, router: &Router) -> bool {
         (router.groups > 0 || matches!(router.backend, RouterBackend::Native))
             && matches!(self.backend, ExpertBackend::Native)
     }
@@ -605,6 +632,37 @@ impl Scheduler {
             } else {
                 let s = self.composed_step(engine, router, xs, weights, None)?;
                 Ok((s.outs, s.stats))
+            }
+        })
+    }
+
+    /// [`execute_forward`](Self::execute_forward) with int8-quantized
+    /// expert weights ([`QuantizedExpertWeights`], quantized at load
+    /// from the f32 checkpoint): the serving hot path under
+    /// [`crate::kernels::quant::Precision::Int8`].  Outputs are
+    /// error-budgeted against the f32 path over the same weights
+    /// ([`crate::kernels::quant::SERVE_REL_ERR_BUDGET`]), not
+    /// bit-identical.
+    ///
+    /// Int8 serving is streaming-only: there is no quantized composed
+    /// or artifact fallback (those paths are f32 by design — training
+    /// and checkpoints stay f32), so non-streamable configurations are
+    /// an error rather than a silent f32 fallback.
+    pub fn execute_forward_quant(
+        &self,
+        router: &Router,
+        xs: &[&TensorF],
+        qweights: &[QuantizedExpertWeights],
+    ) -> Result<(Vec<TensorF>, StepStats)> {
+        self.with_engine(|engine| {
+            if self.streams_natively(router) {
+                engine.execute_streaming_forward_quant(router, xs, qweights)
+            } else {
+                Err(anyhow!(
+                    "int8 serving requires Native router + expert backends \
+                     (streaming path); this configuration would fall back \
+                     to the f32 composed step"
+                ))
             }
         })
     }

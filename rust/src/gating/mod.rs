@@ -13,6 +13,19 @@
 //!   task-loss gradients through the top-k softmax and the eq-4 noise
 //!   path, and the eq-6/7 importance and eq-8 smooth-load balance-loss
 //!   gradients into `w_g` / `w_noise`.
+//!
+//! # Matmul contract (kernel layer)
+//!
+//! The matmuls here ([`noisy_topk::matmul`] and friends) dispatch
+//! through [`crate::kernels`].  The old contract — "bit-identical to
+//! the naive triple loop" — now belongs to the **scalar oracle kernel**
+//! only (`MOE_KERNEL=scalar` restores it process-wide); the dispatched
+//! kernel may be SIMD (AVX2/NEON) and is **error-budgeted** against
+//! that oracle instead (`rust/tests/kernels.rs`).  All same-process
+//! bit-equality proofs (engine vs serial, row-blocked vs whole-batch
+//! gating) are unaffected: every path shares the one selected kernel,
+//! and every kernel keeps row independence and a fixed per-element
+//! reduction order.
 
 pub mod backward;
 pub mod balanced;

@@ -176,6 +176,7 @@ impl ChaosSim {
             // generous SLO: health-aware shedding engages only when
             // shard deaths genuinely collapse live capacity
             deadline_ns: Some(2_000_000_000),
+            ..Default::default()
         };
         let serve = ServeLoop::new(sched, router, weights, cfg)?;
         let mut rng = Rng::new(self.seed ^ 0x5eed);

@@ -243,6 +243,11 @@ pub fn measured_engine_report(devices: usize, tokens: usize) -> Result<()> {
         devices,
         work.tokens()
     );
+    println!(
+        "# matmul kernel: {} (MOE_KERNEL overrides; scalar = bit-exact \
+         oracle)",
+        crate::kernels::Kernel::selected_name()
+    );
     work.run_streamed(&sched, None)?; // warm the engine + arenas
     let phase_line = crate::harness::workload::phase_line;
     {

@@ -1,0 +1,377 @@
+//! Explicit-SIMD kernel layer for the MoE hot path.
+//!
+//! Every f32 GEMM on the step hot path — gating logits
+//! ([`crate::gating::noisy_topk`]), the expert FFN forward
+//! ([`crate::coordinator::scheduler::ExpertWeights::forward_into`]) and
+//! the training backward ([`crate::train`], [`crate::gating::backward`])
+//! — routes through one process-wide selected [`MatmulKernel`].  Three
+//! implementations exist:
+//!
+//! - [`scalar::ScalarKernel`] — the pre-kernel-layer cache-blocked
+//!   scalar code, retained verbatim as the **bit-exact oracle** (its
+//!   `matmul` is bit-identical to the naive triple loop);
+//! - `Avx2Kernel` (x86_64) — `std::arch` AVX2 + FMA, 8-lane with
+//!   32-wide register tiles, behind `is_x86_feature_detected!`;
+//! - `NeonKernel` (aarch64) — `std::arch` NEON, 4-lane with 16-wide
+//!   register tiles, behind `is_aarch64_feature_detected!`.
+//!
+//! # Selection
+//!
+//! [`Kernel::select`] picks the fastest kernel the host supports, once,
+//! at first use; the `MOE_KERNEL` env var (`scalar` / `avx2` / `neon`)
+//! overrides the policy for A/B runs.  An override naming a kernel the
+//! host cannot run falls back to auto-selection with a warning rather
+//! than crashing.  [`crate::coordinator::StepStats::kernel`] records
+//! the selected name per step so `repro efficiency` shows which path
+//! ran.
+//!
+//! # Numerical contract
+//!
+//! The engine-vs-serial differential proofs
+//! (`rust/tests/engine_parity.rs`, `serve.rs`, `faults.rs`) stay
+//! **bit-identical**: every execution path calls the *same* selected
+//! kernel, so those comparisons never cross kernels.  What is
+//! kernel-dependent is the relation to the scalar oracle: SIMD kernels
+//! reassociate the k-reduction (FMA contraction, lane-tiled
+//! accumulation), so kernel-vs-oracle and int8-vs-f32 comparisons are
+//! **error-budgeted** differential tests with tolerances derived from
+//! accumulation-order analysis (`rust/tests/kernels.rs`).
+//!
+//! Two structural invariants every implementation must keep, because
+//! the engine's streaming paths depend on them:
+//!
+//! - **row independence** — computing any contiguous row block of `a`
+//!   yields bit-identical rows to a full-batch call (expert chunks and
+//!   row-blocked gating rely on it);
+//! - **fixed reduction order per element** — the reduction order over
+//!   `k` for a given output element must not depend on `m` or `n`.
+//!
+//! # Quantized serving
+//!
+//! [`quant`] adds int8 row-quantized expert weights (per-output-channel
+//! symmetric scales, quantize-at-load from f32 checkpoints) for the
+//! forward/serve path only, behind
+//! [`quant::Precision`] in [`crate::serve::ServeConfig`]; the int8 GEMM
+//! ([`MatmulKernel::matmul_q8`]) dispatches through the same kernel
+//! selection.
+
+pub mod quant;
+pub mod scalar;
+#[cfg(target_arch = "aarch64")]
+pub mod simd_neon;
+#[cfg(target_arch = "x86_64")]
+pub mod simd_x86;
+
+use std::sync::OnceLock;
+
+/// The three hot GEMM shapes of the MoE step plus the int8 serve GEMM.
+///
+/// Shape conventions (all row-major):
+/// - [`matmul`](Self::matmul):    `out (m,n) = a (m,k) · b (k,n)` — overwrites `out`;
+/// - [`matmul_tn`](Self::matmul_tn): `out (k,n) += aᵀ · b` for `a (m,k)`, `b (m,n)` —
+///   *accumulates* (the backward-pass `dW = xᵀ·dY` contract);
+/// - [`matmul_nt`](Self::matmul_nt): `out (m,n) = a (m,k) · bᵀ` for `b (n,k)` — overwrites.
+///
+/// See the module docs for the row-independence and reduction-order
+/// invariants implementations must keep.
+pub trait MatmulKernel: Sync {
+    /// Stable identifier (`"scalar"`, `"avx2"`, `"neon"`) used by the
+    /// `MOE_KERNEL` override, bench rows and [`crate::coordinator::StepStats`].
+    fn name(&self) -> &'static str;
+
+    /// `out (m,n) = a (m,k) · b (k,n)`.
+    fn matmul(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize);
+
+    /// Like [`matmul`](Self::matmul), but the caller asserts `a` is
+    /// mostly zeros (e.g. a post-ReLU hidden block).  Implementations
+    /// may skip zero elements of `a` — bit-neutral for finite inputs,
+    /// since accumulating `0.0 * b` is an exact no-op — or ignore the
+    /// hint (the SIMD kernels do: a per-element branch costs more than
+    /// the multiply it saves on 8 lanes).
+    fn matmul_sparse(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        self.matmul(a, b, out, m, k, n);
+    }
+
+    /// `out (k,n) += aᵀ · b` for `a (m,k)`, `b (m,n)` (accumulating).
+    fn matmul_tn(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize);
+
+    /// `out (m,n) = a (m,k) · bᵀ` for `b (n,k)`.
+    fn matmul_nt(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize);
+
+    /// Int8 GEMM for the quantized serve path:
+    /// `out (m,n) = (a (m,k) · q (k,n)) · diag(scales)`, with `q`
+    /// symmetric per-output-channel int8 (`scales[j]` dequantizes
+    /// column `j`).  Accumulation is f32; scales are applied once after
+    /// the full k-reduction, so the error budget is the quantization
+    /// error itself plus the usual accumulation term.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_q8(
+        &self,
+        a: &[f32],
+        q: &[i8],
+        scales: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        scalar::matmul_q8(a, q, scales, out, m, k, n);
+    }
+}
+
+static SCALAR: scalar::ScalarKernel = scalar::ScalarKernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2: simd_x86::Avx2Kernel = simd_x86::Avx2Kernel;
+#[cfg(target_arch = "aarch64")]
+static NEON: simd_neon::NeonKernel = simd_neon::NeonKernel;
+
+static SELECTED: OnceLock<&'static dyn MatmulKernel> = OnceLock::new();
+
+/// Kernel selection policy (see module docs).
+pub struct Kernel;
+
+impl Kernel {
+    /// The process-wide selected kernel: the `MOE_KERNEL` env override
+    /// when set and runnable, else the fastest kernel the host
+    /// supports.  Resolved once and cached — every GEMM on the hot
+    /// path shares the result, which is what keeps the engine-vs-serial
+    /// differentials bit-identical.
+    pub fn select() -> &'static dyn MatmulKernel {
+        *SELECTED.get_or_init(|| {
+            if let Ok(name) = std::env::var("MOE_KERNEL") {
+                if let Some(k) = Self::by_name(&name) {
+                    return k;
+                }
+                eprintln!(
+                    "MOE_KERNEL={name:?} is unknown or unsupported on this \
+                     host; auto-selecting"
+                );
+            }
+            Self::fastest()
+        })
+    }
+
+    /// Name of the selected kernel (stamped into
+    /// [`crate::coordinator::StepStats::kernel`]).
+    pub fn selected_name() -> &'static str {
+        Self::select().name()
+    }
+
+    /// The scalar bit-exact oracle, independent of selection — the
+    /// reference side of every error-budgeted kernel test.
+    pub fn scalar() -> &'static dyn MatmulKernel {
+        &SCALAR
+    }
+
+    /// Look a kernel up by its [`MatmulKernel::name`]; `None` when the
+    /// name is unknown *or* the host cannot run it.  Tests and benches
+    /// use this to A/B kernels directly without racing on the
+    /// process-wide `MOE_KERNEL` selection.
+    pub fn by_name(name: &str) -> Option<&'static dyn MatmulKernel> {
+        match name {
+            "scalar" => Some(&SCALAR),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" if simd_x86::supported() => Some(&AVX2),
+            #[cfg(target_arch = "aarch64")]
+            "neon" if simd_neon::supported() => Some(&NEON),
+            _ => None,
+        }
+    }
+
+    /// Every kernel runnable on this host (scalar first).  The bench
+    /// sweep iterates this.
+    pub fn available() -> Vec<&'static dyn MatmulKernel> {
+        let mut v: Vec<&'static dyn MatmulKernel> = vec![&SCALAR];
+        #[cfg(target_arch = "x86_64")]
+        if simd_x86::supported() {
+            v.push(&AVX2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if simd_neon::supported() {
+            v.push(&NEON);
+        }
+        v
+    }
+
+    /// Auto-selection: the widest SIMD the host supports, else scalar.
+    fn fastest() -> &'static dyn MatmulKernel {
+        #[cfg(target_arch = "x86_64")]
+        if simd_x86::supported() {
+            return &AVX2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if simd_neon::supported() {
+            return &NEON;
+        }
+        &SCALAR
+    }
+}
+
+/// `out (m,n) = a (m,k) · b (k,n)` on the selected kernel.
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    Kernel::select().matmul(a, b, out, m, k, n);
+}
+
+/// `out (k,n) += aᵀ · b` on the selected kernel (see
+/// [`MatmulKernel::matmul_tn`]).
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    Kernel::select().matmul_tn(a, b, out, m, k, n);
+}
+
+/// `out (m,n) = a (m,k) · bᵀ` on the selected kernel.
+pub fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    Kernel::select().matmul_nt(a, b, out, m, n, k);
+}
+
+/// Fused expert-FFN forward: `out = relu(x · w_in) · w_out` in
+/// cache-resident row blocks, so the `(rows, h)` hidden layer is never
+/// materialized whole — each block's hidden activations are produced,
+/// rectified and consumed while still hot (~128 KiB per block).
+///
+/// Rows are independent in both GEMMs, so the row blocking is
+/// bit-identical to a whole-batch two-matmul pass *on the same kernel*;
+/// with the scalar kernel the result is bit-identical to the
+/// pre-kernel-layer `forward_into` (dense first GEMM, sparse-aware
+/// second GEMM — the ReLU output is exactly where the retained
+/// `av == 0.0` skip pays).
+///
+/// `x` is `(rows, d)`, `w_in` is `(d, h)`, `w_out` is `(h, d)`,
+/// `out` must hold `rows * d`; `scratch` is the caller's reusable
+/// hidden-block arena.
+#[allow(clippy::too_many_arguments)]
+pub fn ffn_forward(
+    kern: &dyn MatmulKernel,
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    h: usize,
+    w_in: &[f32],
+    w_out: &[f32],
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(w_in.len(), d * h);
+    assert_eq!(w_out.len(), h * d);
+    assert_eq!(out.len(), rows * d);
+    if rows == 0 {
+        return;
+    }
+    // hidden block sized to stay L2-resident: ~128 KiB of f32
+    let rb = (32 * 1024 / h.max(1)).clamp(1, rows);
+    scratch.clear();
+    scratch.resize(rb * h, 0.0);
+    let mut r0 = 0;
+    while r0 < rows {
+        let rblk = rb.min(rows - r0);
+        let hid = &mut scratch[..rblk * h];
+        kern.matmul(&x[r0 * d..(r0 + rblk) * d], w_in, hid, rblk, d, h);
+        for v in hid.iter_mut() {
+            *v = v.max(0.0);
+        }
+        kern.matmul_sparse(hid, w_out, &mut out[r0 * d..(r0 + rblk) * d], rblk, h, d);
+        r0 += rblk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn selection_is_stable_and_listed() {
+        let a = Kernel::select().name();
+        let b = Kernel::selected_name();
+        assert_eq!(a, b, "selection must be cached, not re-resolved");
+        assert!(
+            Kernel::available().iter().any(|k| k.name() == a),
+            "selected kernel {a} missing from available()"
+        );
+        assert_eq!(Kernel::scalar().name(), "scalar");
+        assert!(Kernel::by_name("scalar").is_some());
+        assert!(Kernel::by_name("no-such-kernel").is_none());
+    }
+
+    #[test]
+    fn available_kernels_agree_on_small_shapes_within_budget() {
+        // cross-kernel agreement on the dispatch surface itself; the
+        // exhaustive per-shape oracle tests live in rust/tests/kernels.rs
+        prop::forall("kernels agree", |rng| {
+            let m = prop::dim(rng, 1, 7);
+            let k = prop::dim(rng, 1, 40);
+            let n = prop::dim(rng, 1, 40);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut want = vec![0f32; m * n];
+            Kernel::scalar().matmul(&a, &b, &mut want, m, k, n);
+            for kern in Kernel::available() {
+                let mut got = vec![0f32; m * n];
+                kern.matmul(&a, &b, &mut got, m, k, n);
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert!(
+                        (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                        "{}: {g} vs {w}",
+                        kern.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ffn_forward_matches_unfused_reference() {
+        prop::forall("fused ffn", |rng| {
+            let rows = prop::dim(rng, 1, 9);
+            let d = prop::dim(rng, 1, 12);
+            let h = prop::dim(rng, 1, 20);
+            let x = prop::vec_f32(rng, rows * d, 1.0);
+            let w_in = prop::vec_f32(rng, d * h, 0.5);
+            let w_out = prop::vec_f32(rng, h * d, 0.5);
+            for kern in Kernel::available() {
+                // unfused: whole-batch matmul → relu → matmul, same kernel
+                let mut hid = vec![0f32; rows * h];
+                kern.matmul(&x, &w_in, &mut hid, rows, d, h);
+                for v in hid.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                let mut want = vec![0f32; rows * d];
+                kern.matmul_sparse(&hid, &w_out, &mut want, rows, h, d);
+
+                let mut scratch = Vec::new();
+                let mut got = vec![0f32; rows * d];
+                ffn_forward(
+                    kern, &x, rows, d, h, &w_in, &w_out, &mut scratch, &mut got,
+                );
+                // row blocking is bit-identical (rows independent)
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{}: fused ffn drifted from unfused",
+                        kern.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ffn_forward_handles_empty_batches() {
+        let mut scratch = Vec::new();
+        let mut out: Vec<f32> = Vec::new();
+        ffn_forward(
+            Kernel::select(), &[], 0, 4, 8, &[0.0; 32], &[0.0; 32],
+            &mut scratch, &mut out,
+        );
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,274 @@
+//! Int8 row-quantized expert weights for the forward/serve path.
+//!
+//! Symmetric per-output-channel quantization (the MoE-in-LLMs survey's
+//! weight-only recipe): for each output column `j` of a weight matrix,
+//! `scale[j] = max_i |w[i,j]| / 127` (`1.0` when the column is all
+//! zeros) and `q[i,j] = round(w[i,j] / scale[j])` — so the int8 code
+//! range is fully used per channel, the quantizer is **deterministic**
+//! (same weights → same bytes, no calibration data), and dequantization
+//! error per element is at most `scale[j]/2 ≈ 0.4 %` of the column's
+//! amax.
+//!
+//! Training and checkpoints stay f32: quantization happens **at load**
+//! ([`QuantizedExpertWeights::from_f32`] /
+//! [`QuantizedExpertWeights::quantize_all`], called by
+//! `ServeLoop::new` when [`Precision::Int8`] is configured), and the
+//! f32 [`ExpertWeights`] are kept alongside untouched.  The int8 GEMM
+//! ([`MatmulKernel::matmul_q8`](super::MatmulKernel::matmul_q8))
+//! accumulates in f32 and applies the per-column scale once after the
+//! full k-reduction, so the serve-output error is the quantization
+//! error itself plus the usual accumulation term — budgeted normwise at
+//! [`SERVE_REL_ERR_BUDGET`] against the f32 path over the same weights
+//! (asserted in `rust/tests/kernels.rs` and `benches/kernels.rs`).
+
+use super::{Kernel, MatmulKernel};
+use crate::coordinator::scheduler::ExpertWeights;
+
+/// Serving numeric width for the expert FFNs
+/// (`crate::serve::ServeConfig::precision`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 weights — bit-identical to the training forward.
+    #[default]
+    F32,
+    /// Int8 weight-only quantization, error-budgeted against f32.
+    Int8,
+}
+
+/// Normwise relative error budget for int8 serve outputs vs the f32
+/// path over the same weights: `‖y_int8 − y_f32‖₂ ≤ 0.05 · ‖y_f32‖₂`
+/// per output batch.
+pub const SERVE_REL_ERR_BUDGET: f64 = 0.05;
+
+/// Int8 twin of [`ExpertWeights`]: both layers quantized per output
+/// channel, forward-only (no backward — training stays f32).
+#[derive(Clone)]
+pub struct QuantizedExpertWeights {
+    pub d_model: usize,
+    pub hidden: usize,
+    /// `w_in (d, h)` codes, row-major like the f32 original.
+    pub q_in: Vec<i8>,
+    /// Per-output-channel scales for `q_in` (`len == hidden`).
+    pub s_in: Vec<f32>,
+    /// `w_out (h, d)` codes, row-major.
+    pub q_out: Vec<i8>,
+    /// Per-output-channel scales for `q_out` (`len == d_model`).
+    pub s_out: Vec<f32>,
+}
+
+/// Quantize one row-major `(rows, cols)` matrix per output column.
+/// Deterministic: pure arithmetic on the input bytes, no RNG, no
+/// data-dependent tie-breaking (`round` half-away-from-zero).
+fn quantize_cols(w: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+    debug_assert_eq!(w.len(), rows * cols);
+    let mut scales = vec![1.0f32; cols];
+    for j in 0..cols {
+        let mut amax = 0.0f32;
+        for i in 0..rows {
+            amax = amax.max(w[i * cols + j].abs());
+        }
+        if amax > 0.0 {
+            scales[j] = amax / 127.0;
+        }
+    }
+    let mut q = vec![0i8; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let v = (w[i * cols + j] / scales[j]).round();
+            q[i * cols + j] = v.clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+impl QuantizedExpertWeights {
+    /// Quantize one expert's f32 weights (the f32 source is left
+    /// untouched — the caller keeps it for checkpointing/training).
+    pub fn from_f32(w: &ExpertWeights) -> Self {
+        let (q_in, s_in) = quantize_cols(&w.w_in, w.d_model, w.hidden);
+        let (q_out, s_out) = quantize_cols(&w.w_out, w.hidden, w.d_model);
+        QuantizedExpertWeights {
+            d_model: w.d_model,
+            hidden: w.hidden,
+            q_in,
+            s_in,
+            q_out,
+            s_out,
+        }
+    }
+
+    /// Quantize a whole expert set (the `ServeLoop::new` load path).
+    pub fn quantize_all(ws: &[ExpertWeights]) -> Vec<Self> {
+        ws.iter().map(Self::from_f32).collect()
+    }
+
+    /// Reconstruct f32 weights from the codes (`q[i,j] * scale[j]`) —
+    /// the round-trip the per-channel error budget is asserted on.
+    pub fn dequantize(&self) -> ExpertWeights {
+        let deq = |q: &[i8], s: &[f32], cols: usize| -> Vec<f32> {
+            q.chunks(cols)
+                .flat_map(|row| {
+                    row.iter().zip(s.iter()).map(|(&qv, &sv)| qv as f32 * sv)
+                })
+                .collect()
+        };
+        ExpertWeights {
+            w_in: deq(&self.q_in, &self.s_in, self.hidden),
+            w_out: deq(&self.q_out, &self.s_out, self.d_model),
+            d_model: self.d_model,
+            hidden: self.hidden,
+        }
+    }
+
+    /// Int8 twin of [`ExpertWeights::forward_into`]: fused
+    /// `relu(x·q_in·s_in)·q_out·s_out` in cache-resident row blocks on
+    /// the selected kernel's [`matmul_q8`](MatmulKernel::matmul_q8).
+    /// Same signature as the f32 version so the engine's worker arm
+    /// treats both symmetrically.
+    pub fn forward_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        scratch: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        let (d, h) = (self.d_model, self.hidden);
+        debug_assert_eq!(x.len(), rows * d);
+        out.clear();
+        out.resize(rows * d, 0.0);
+        if rows == 0 {
+            return;
+        }
+        let kern = Kernel::select();
+        let rb = (32 * 1024 / h.max(1)).clamp(1, rows);
+        scratch.clear();
+        scratch.resize(rb * h, 0.0);
+        let mut r0 = 0;
+        while r0 < rows {
+            let rblk = rb.min(rows - r0);
+            let hid = &mut scratch[..rblk * h];
+            kern.matmul_q8(
+                &x[r0 * d..(r0 + rblk) * d],
+                &self.q_in,
+                &self.s_in,
+                hid,
+                rblk,
+                d,
+                h,
+            );
+            for v in hid.iter_mut() {
+                *v = v.max(0.0);
+            }
+            kern.matmul_q8(
+                hid,
+                &self.q_out,
+                &self.s_out,
+                &mut out[r0 * d..(r0 + rblk) * d],
+                rblk,
+                h,
+                d,
+            );
+            r0 += rblk;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn rand_expert(rng: &mut crate::util::rng::Rng, d: usize, h: usize) -> ExpertWeights {
+        ExpertWeights {
+            w_in: prop::vec_f32(rng, d * h, 0.5),
+            w_out: prop::vec_f32(rng, h * d, 0.5),
+            d_model: d,
+            hidden: h,
+        }
+    }
+
+    #[test]
+    fn round_trip_error_within_per_channel_budget() {
+        prop::forall("q8 round trip", |rng| {
+            let d = prop::dim(rng, 1, 12);
+            let h = prop::dim(rng, 1, 17);
+            let w = rand_expert(rng, d, h);
+            let q = QuantizedExpertWeights::from_f32(&w);
+            let dq = q.dequantize();
+            for j in 0..h {
+                let bound = q.s_in[j] * 0.5 + 1e-12;
+                for i in 0..d {
+                    let e = (w.w_in[i * h + j] - dq.w_in[i * h + j]).abs();
+                    assert!(e <= bound, "w_in[{i},{j}]: err {e} > scale/2 {bound}");
+                }
+            }
+            for j in 0..d {
+                let bound = q.s_out[j] * 0.5 + 1e-12;
+                for i in 0..h {
+                    let e = (w.w_out[i * d + j] - dq.w_out[i * d + j]).abs();
+                    assert!(e <= bound, "w_out[{i},{j}]: err {e} > scale/2 {bound}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn quantization_is_bit_deterministic() {
+        let mut rng = prop::case_rng(7);
+        let w = rand_expert(&mut rng, 9, 13);
+        let q1 = QuantizedExpertWeights::from_f32(&w);
+        let q2 = QuantizedExpertWeights::from_f32(&w.clone());
+        assert_eq!(q1.q_in, q2.q_in);
+        assert_eq!(q1.q_out, q2.q_out);
+        assert_eq!(
+            q1.s_in.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            q2.s_in.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            q1.s_out.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            q2.s_out.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn zero_columns_quantize_to_zero_with_unit_scale() {
+        let w = ExpertWeights {
+            w_in: vec![0.0; 6],
+            w_out: vec![0.0; 6],
+            d_model: 2,
+            hidden: 3,
+        };
+        let q = QuantizedExpertWeights::from_f32(&w);
+        assert!(q.q_in.iter().all(|&v| v == 0));
+        assert!(q.s_in.iter().all(|&s| s == 1.0));
+        let dq = q.dequantize();
+        assert!(dq.w_in.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn int8_forward_tracks_f32_forward_within_budget() {
+        prop::forall("q8 forward budget", |rng| {
+            let d = prop::dim(rng, 2, 10);
+            let h = prop::dim(rng, 2, 16);
+            let rows = prop::dim(rng, 1, 6);
+            let w = rand_expert(rng, d, h);
+            let q = QuantizedExpertWeights::from_f32(&w);
+            let x = prop::vec_f32(rng, rows * d, 1.0);
+            let (mut s1, mut s2) = (Vec::new(), Vec::new());
+            let (mut y32, mut y8) = (Vec::new(), Vec::new());
+            w.forward_into(&x, rows, &mut s1, &mut y32);
+            q.forward_into(&x, rows, &mut s2, &mut y8);
+            let norm: f64 = y32.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            let err: f64 = y32
+                .iter()
+                .zip(y8.iter())
+                .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                err <= SERVE_REL_ERR_BUDGET * norm + 1e-6,
+                "int8 forward error {err:.3e} exceeds budget over norm {norm:.3e}"
+            );
+        });
+    }
+}

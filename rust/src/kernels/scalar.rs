@@ -1,0 +1,220 @@
+//! The scalar kernel: the pre-kernel-layer cache-blocked matmuls,
+//! retained as the **bit-exact oracle** every other kernel is budgeted
+//! against.
+//!
+//! [`ScalarKernel::matmul_sparse`] is the original
+//! `gating::noisy_topk::matmul` loop verbatim, `av == 0.0` skip branch
+//! included.  [`ScalarKernel::matmul`] is its branch-free twin: for
+//! finite inputs the two are bit-identical (skipping `out += 0.0 * b`
+//! skips an exact no-op — `0.0 * b` is `±0.0` and `x + ±0.0 == x` for
+//! every finite non-negative-zero `x`; when `x` is `-0.0` both paths
+//! still round to the same bits because `-0.0 + 0.0 == 0.0` only
+//! differs for exactly-zero accumulators that started at `+0.0` here),
+//! so `MOE_KERNEL=scalar` reproduces pre-kernel-layer step outputs
+//! bit-for-bit.  The dense twin exists because on dense activations the
+//! skip is a per-element branch in the innermost loop that the
+//! predictor loses on; the sparse entry stays the right call for
+//! post-ReLU hidden blocks where most of `a` really is zero.
+
+use super::MatmulKernel;
+
+/// See the module docs: the retained scalar oracle.
+pub struct ScalarKernel;
+
+impl MatmulKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    /// Cache-blocked row-major `(m,k) × (k,n) → (m,n)`, dense
+    /// (branch-free) inner loop.  Blocks over `k` and `n` so each
+    /// `KB × JB` panel of `b` stays in L1/L2 while `m` rows stream
+    /// through it, with a 4-wide unrolled inner loop.  For any fixed
+    /// output element the reduction runs over `l` in increasing order
+    /// (k-blocks are visited in order and the j-unroll never reorders a
+    /// single element's sum), so results are bit-identical to the naive
+    /// triple loop — and to [`matmul_sparse`](Self::matmul_sparse); the
+    /// engine differential tests rely on this.
+    fn matmul(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        const KB: usize = 64;
+        const JB: usize = 256;
+        out.fill(0.0);
+        for kb in (0..k).step_by(KB) {
+            let k_end = (kb + KB).min(k);
+            for jb in (0..n).step_by(JB) {
+                let j_end = (jb + JB).min(n);
+                for i in 0..m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n + jb..i * n + j_end];
+                    for (l, &av) in arow[kb..k_end].iter().enumerate() {
+                        let brow = &b[(kb + l) * n + jb..(kb + l) * n + j_end];
+                        let chunks = orow.len() & !3;
+                        let mut j = 0;
+                        while j < chunks {
+                            orow[j] += av * brow[j];
+                            orow[j + 1] += av * brow[j + 1];
+                            orow[j + 2] += av * brow[j + 2];
+                            orow[j + 3] += av * brow[j + 3];
+                            j += 4;
+                        }
+                        while j < orow.len() {
+                            orow[j] += av * brow[j];
+                            j += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The original `gating::noisy_topk::matmul` retained verbatim:
+    /// identical blocking, plus the `av == 0.0` skip that pays on
+    /// post-ReLU activations.  Bit-identical to
+    /// [`matmul`](Self::matmul) for finite inputs (see module docs).
+    fn matmul_sparse(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        const KB: usize = 64;
+        const JB: usize = 256;
+        out.fill(0.0);
+        for kb in (0..k).step_by(KB) {
+            let k_end = (kb + KB).min(k);
+            for jb in (0..n).step_by(JB) {
+                let j_end = (jb + JB).min(n);
+                for i in 0..m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n + jb..i * n + j_end];
+                    for (l, &av) in arow[kb..k_end].iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[(kb + l) * n + jb..(kb + l) * n + j_end];
+                        let chunks = orow.len() & !3;
+                        let mut j = 0;
+                        while j < chunks {
+                            orow[j] += av * brow[j];
+                            orow[j + 1] += av * brow[j + 1];
+                            orow[j + 2] += av * brow[j + 2];
+                            orow[j + 3] += av * brow[j + 3];
+                            j += 4;
+                        }
+                        while j < orow.len() {
+                            orow[j] += av * brow[j];
+                            j += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `out (k,n) += aᵀ · b` for row-major `a (m,k)`, `b (m,n)`,
+    /// retained verbatim: walks `a`/`b` row by row so the inner loops
+    /// stream contiguous memory.  The backward-pass workhorse
+    /// (`dW = xᵀ · dY`), shared by the trainer and the gating backward.
+    fn matmul_tn(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(out.len(), k * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (av, orow) in arow.iter().zip(out.chunks_mut(n)) {
+                for (o, bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    /// `out (m,n) = a · bᵀ` for row-major `a (m,k)`, `b (n,k)`, now
+    /// k-blocked: long `d_model` rows used to stream the whole of `a`'s
+    /// row per dot product, thrashing L1 on the backward path.  Each
+    /// `KB` slice of a row of `a` is now reused across all `n` rows of
+    /// `b` while L1-resident.
+    ///
+    /// Note on bit-identity: blocking sums each `KB` span into its own
+    /// partial accumulator and adds the partials in block order, which
+    /// *changes the reduction order* relative to the old single-pass
+    /// dot product — `matmul_nt` results are covered by the
+    /// error-budgeted oracle tests in `rust/tests/kernels.rs`, not a
+    /// bit-equality claim.  (The reduction order is still fixed per
+    /// element and row-independent, which is the invariant the engine
+    /// needs.)
+    fn matmul_nt(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(out.len(), m * n);
+        const KB: usize = 256;
+        if k == 0 {
+            out.fill(0.0);
+            return;
+        }
+        for (arow, orow) in a.chunks(k).zip(out.chunks_mut(n)) {
+            orow.fill(0.0);
+            for kb in (0..k).step_by(KB) {
+                let k_end = (kb + KB).min(k);
+                let ab = &arow[kb..k_end];
+                for (bv, o) in b.chunks(k).zip(orow.iter_mut()) {
+                    let bslice = &bv[kb..k_end];
+                    let mut acc = 0.0f32;
+                    for (x, y) in ab.iter().zip(bslice.iter()) {
+                        acc += x * y;
+                    }
+                    *o += acc;
+                }
+            }
+        }
+    }
+}
+
+/// Scalar int8 GEMM: `out (m,n) = (a (m,k) · q (k,n)) · diag(scales)`.
+/// Accumulates `a[i,l] * q[l,j] as f32` in f32 and applies the
+/// per-output-channel scale once after the full k-reduction — the
+/// default [`MatmulKernel::matmul_q8`] body, and the reference the
+/// SIMD int8 paths are budgeted against.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_q8(
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(q.len(), k * n);
+    debug_assert_eq!(scales.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    const KB: usize = 64;
+    const JB: usize = 256;
+    out.fill(0.0);
+    for kb in (0..k).step_by(KB) {
+        let k_end = (kb + KB).min(k);
+        for jb in (0..n).step_by(JB) {
+            let j_end = (jb + JB).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n + jb..i * n + j_end];
+                for (l, &av) in arow[kb..k_end].iter().enumerate() {
+                    let qrow = &q[(kb + l) * n + jb..(kb + l) * n + j_end];
+                    for (o, &qv) in orow.iter_mut().zip(qrow.iter()) {
+                        *o += av * qv as f32;
+                    }
+                }
+            }
+        }
+    }
+    for orow in out.chunks_mut(n) {
+        for (o, &s) in orow.iter_mut().zip(scales.iter()) {
+            *o *= s;
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! NEON kernel (aarch64).
+//!
+//! 4-lane `f32` with `vfmaq_f32`; the main GEMM tiles 16 output columns
+//! across 4 q-registers and reuses them over a k-block — the same
+//! register-tile shape as the AVX2 kernel at half the lane width.  Like
+//! that kernel it keeps the row-independence and fixed
+//! per-element-reduction-order invariants while contracting each
+//! multiply-add, so it is error-budgeted against the scalar oracle,
+//! not bit-equal to it.
+
+use super::MatmulKernel;
+use std::arch::aarch64::*;
+
+/// Runtime gate (NEON is baseline on aarch64, but keep the check
+/// symmetric with the x86 path).
+pub fn supported() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// See the module docs.
+pub struct NeonKernel;
+
+impl MatmulKernel for NeonKernel {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(out.len(), m * n);
+        unsafe { matmul_neon(a.as_ptr(), b.as_ptr(), out.as_mut_ptr(), m, k, n) }
+    }
+
+    fn matmul_tn(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), m * n);
+        assert_eq!(out.len(), k * n);
+        unsafe { matmul_tn_neon(a.as_ptr(), b.as_ptr(), out.as_mut_ptr(), m, k, n) }
+    }
+
+    fn matmul_nt(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k);
+        assert_eq!(out.len(), m * n);
+        unsafe { matmul_nt_neon(a.as_ptr(), b.as_ptr(), out.as_mut_ptr(), m, n, k) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_q8(
+        &self,
+        a: &[f32],
+        q: &[i8],
+        scales: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(q.len(), k * n);
+        assert_eq!(scales.len(), n);
+        assert_eq!(out.len(), m * n);
+        unsafe {
+            matmul_q8_neon(
+                a.as_ptr(),
+                q.as_ptr(),
+                scales.as_ptr(),
+                out.as_mut_ptr(),
+                m,
+                k,
+                n,
+            )
+        }
+    }
+}
+
+/// `out (m,n) = a (m,k) · b (k,n)` — 16-wide register tiles over a
+/// k-block.
+#[target_feature(enable = "neon")]
+unsafe fn matmul_neon(a: *const f32, b: *const f32, out: *mut f32, m: usize, k: usize, n: usize) {
+    std::ptr::write_bytes(out, 0, m * n);
+    const KB: usize = 128;
+    let mut kb = 0;
+    while kb < k {
+        let k_end = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = a.add(i * k);
+            let orow = out.add(i * n);
+            let mut j = 0;
+            while j + 16 <= n {
+                let mut acc0 = vld1q_f32(orow.add(j));
+                let mut acc1 = vld1q_f32(orow.add(j + 4));
+                let mut acc2 = vld1q_f32(orow.add(j + 8));
+                let mut acc3 = vld1q_f32(orow.add(j + 12));
+                for l in kb..k_end {
+                    let av = vdupq_n_f32(*arow.add(l));
+                    let brow = b.add(l * n + j);
+                    acc0 = vfmaq_f32(acc0, av, vld1q_f32(brow));
+                    acc1 = vfmaq_f32(acc1, av, vld1q_f32(brow.add(4)));
+                    acc2 = vfmaq_f32(acc2, av, vld1q_f32(brow.add(8)));
+                    acc3 = vfmaq_f32(acc3, av, vld1q_f32(brow.add(12)));
+                }
+                vst1q_f32(orow.add(j), acc0);
+                vst1q_f32(orow.add(j + 4), acc1);
+                vst1q_f32(orow.add(j + 8), acc2);
+                vst1q_f32(orow.add(j + 12), acc3);
+                j += 16;
+            }
+            while j + 4 <= n {
+                let mut acc = vld1q_f32(orow.add(j));
+                for l in kb..k_end {
+                    let av = vdupq_n_f32(*arow.add(l));
+                    acc = vfmaq_f32(acc, av, vld1q_f32(b.add(l * n + j)));
+                }
+                vst1q_f32(orow.add(j), acc);
+                j += 4;
+            }
+            while j < n {
+                let mut acc = *orow.add(j);
+                for l in kb..k_end {
+                    acc = (*arow.add(l)).mul_add(*b.add(l * n + j), acc);
+                }
+                *orow.add(j) = acc;
+                j += 1;
+            }
+        }
+        kb += KB;
+    }
+}
+
+/// `out (k,n) += aᵀ · b` — broadcast-axpy per `(i, l)` pair, 4-wide
+/// over `n`.
+#[target_feature(enable = "neon")]
+unsafe fn matmul_tn_neon(
+    a: *const f32,
+    b: *const f32,
+    out: *mut f32,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..m {
+        let arow = a.add(i * k);
+        let brow = b.add(i * n);
+        for l in 0..k {
+            let av = *arow.add(l);
+            let avv = vdupq_n_f32(av);
+            let orow = out.add(l * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                let o = vld1q_f32(orow.add(j));
+                let bb = vld1q_f32(brow.add(j));
+                vst1q_f32(orow.add(j), vfmaq_f32(o, avv, bb));
+                j += 4;
+            }
+            while j < n {
+                *orow.add(j) = av.mul_add(*brow.add(j), *orow.add(j));
+                j += 1;
+            }
+        }
+    }
+}
+
+/// `out (m,n) = a (m,k) · bᵀ (n,k)` — 4-lane dot products reduced with
+/// `vaddvq_f32`, scalar tail folded in last.
+#[target_feature(enable = "neon")]
+unsafe fn matmul_nt_neon(
+    a: *const f32,
+    b: *const f32,
+    out: *mut f32,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    for i in 0..m {
+        let arow = a.add(i * k);
+        for j in 0..n {
+            let brow = b.add(j * k);
+            let mut acc = vdupq_n_f32(0.0);
+            let mut l = 0;
+            while l + 4 <= k {
+                acc = vfmaq_f32(acc, vld1q_f32(arow.add(l)), vld1q_f32(brow.add(l)));
+                l += 4;
+            }
+            let mut s = vaddvq_f32(acc);
+            while l < k {
+                s = (*arow.add(l)).mul_add(*brow.add(l), s);
+                l += 1;
+            }
+            *out.add(i * n + j) = s;
+        }
+    }
+}
+
+/// Int8 GEMM: 8 weights at a time via
+/// `vld1_s8 → vmovl_s8 → vmovl_s16 → vcvtq_f32_s32` feeding two 4-lane
+/// accumulators, per-column scales applied once after the full
+/// k-reduction (same contract as [`crate::kernels::scalar::matmul_q8`]).
+#[target_feature(enable = "neon")]
+unsafe fn matmul_q8_neon(
+    a: *const f32,
+    q: *const i8,
+    scales: *const f32,
+    out: *mut f32,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    std::ptr::write_bytes(out, 0, m * n);
+    const KB: usize = 128;
+    let mut kb = 0;
+    while kb < k {
+        let k_end = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = a.add(i * k);
+            let orow = out.add(i * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut acc0 = vld1q_f32(orow.add(j));
+                let mut acc1 = vld1q_f32(orow.add(j + 4));
+                for l in kb..k_end {
+                    let av = vdupq_n_f32(*arow.add(l));
+                    let q16 = vmovl_s8(vld1_s8(q.add(l * n + j)));
+                    let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+                    let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+                    acc0 = vfmaq_f32(acc0, av, lo);
+                    acc1 = vfmaq_f32(acc1, av, hi);
+                }
+                vst1q_f32(orow.add(j), acc0);
+                vst1q_f32(orow.add(j + 4), acc1);
+                j += 8;
+            }
+            while j < n {
+                let mut acc = *orow.add(j);
+                for l in kb..k_end {
+                    acc = (*arow.add(l)).mul_add(*q.add(l * n + j) as f32, acc);
+                }
+                *orow.add(j) = acc;
+                j += 1;
+            }
+        }
+        kb += KB;
+    }
+    for i in 0..m {
+        let orow = out.add(i * n);
+        let mut j = 0;
+        while j + 4 <= n {
+            let o = vld1q_f32(orow.add(j));
+            let s = vld1q_f32(scales.add(j));
+            vst1q_f32(orow.add(j), vmulq_f32(o, s));
+            j += 4;
+        }
+        while j < n {
+            *orow.add(j) *= *scales.add(j);
+            j += 1;
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! AVX2 + FMA kernel (x86_64).
+//!
+//! 8-lane `f32` with `_mm256_fmadd_ps`; the main GEMM tiles 32 output
+//! columns across 4 ymm accumulators and reuses them over a k-block, so
+//! each `b` panel row is loaded once per 32 outputs and the accumulators
+//! never round-trip through memory inside the block.  Every entry point
+//! keeps the kernel-layer invariants (row independence; per-element
+//! reduction order fixed by `l` ascending) but *contracts* each
+//! multiply-add (FMA keeps the product unrounded), so results are
+//! error-budgeted against the scalar oracle, not bit-equal to it.
+//!
+//! All `unsafe` is confined to private `#[target_feature]` functions;
+//! the safe trait wrappers assert slice lengths and the runtime check
+//! lives in [`supported`] (callers go through `Kernel::by_name` /
+//! `Kernel::select`, which only hand out this kernel when
+//! [`supported`] is true).
+
+use super::MatmulKernel;
+use std::arch::x86_64::*;
+
+/// Runtime gate: both `avx2` (integer/shuffle ops) and `fma` are
+/// required.
+pub fn supported() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// See the module docs.
+pub struct Avx2Kernel;
+
+impl MatmulKernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(out.len(), m * n);
+        unsafe { matmul_avx2(a.as_ptr(), b.as_ptr(), out.as_mut_ptr(), m, k, n) }
+    }
+
+    fn matmul_tn(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), m * n);
+        assert_eq!(out.len(), k * n);
+        unsafe { matmul_tn_avx2(a.as_ptr(), b.as_ptr(), out.as_mut_ptr(), m, k, n) }
+    }
+
+    fn matmul_nt(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k);
+        assert_eq!(out.len(), m * n);
+        unsafe { matmul_nt_avx2(a.as_ptr(), b.as_ptr(), out.as_mut_ptr(), m, n, k) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_q8(
+        &self,
+        a: &[f32],
+        q: &[i8],
+        scales: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(q.len(), k * n);
+        assert_eq!(scales.len(), n);
+        assert_eq!(out.len(), m * n);
+        unsafe {
+            matmul_q8_avx2(
+                a.as_ptr(),
+                q.as_ptr(),
+                scales.as_ptr(),
+                out.as_mut_ptr(),
+                m,
+                k,
+                n,
+            )
+        }
+    }
+}
+
+/// Horizontal sum of 8 lanes.  Lane-pairwise (lo+hi halves, then a
+/// movehl/shuffle tree) — part of the fixed per-element reduction order
+/// of [`matmul_nt_avx2`].
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+    _mm_cvtss_f32(s)
+}
+
+/// `out (m,n) = a (m,k) · b (k,n)` — 32-wide register tiles over a
+/// k-block (see module docs).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_avx2(a: *const f32, b: *const f32, out: *mut f32, m: usize, k: usize, n: usize) {
+    std::ptr::write_bytes(out, 0, m * n);
+    const KB: usize = 128;
+    let mut kb = 0;
+    while kb < k {
+        let k_end = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = a.add(i * k);
+            let orow = out.add(i * n);
+            let mut j = 0;
+            while j + 32 <= n {
+                let mut acc0 = _mm256_loadu_ps(orow.add(j));
+                let mut acc1 = _mm256_loadu_ps(orow.add(j + 8));
+                let mut acc2 = _mm256_loadu_ps(orow.add(j + 16));
+                let mut acc3 = _mm256_loadu_ps(orow.add(j + 24));
+                for l in kb..k_end {
+                    let av = _mm256_set1_ps(*arow.add(l));
+                    let brow = b.add(l * n + j);
+                    acc0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(brow), acc0);
+                    acc1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(8)), acc1);
+                    acc2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(16)), acc2);
+                    acc3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(24)), acc3);
+                }
+                _mm256_storeu_ps(orow.add(j), acc0);
+                _mm256_storeu_ps(orow.add(j + 8), acc1);
+                _mm256_storeu_ps(orow.add(j + 16), acc2);
+                _mm256_storeu_ps(orow.add(j + 24), acc3);
+                j += 32;
+            }
+            while j + 8 <= n {
+                let mut acc = _mm256_loadu_ps(orow.add(j));
+                for l in kb..k_end {
+                    let av = _mm256_set1_ps(*arow.add(l));
+                    acc = _mm256_fmadd_ps(av, _mm256_loadu_ps(b.add(l * n + j)), acc);
+                }
+                _mm256_storeu_ps(orow.add(j), acc);
+                j += 8;
+            }
+            while j < n {
+                let mut acc = *orow.add(j);
+                for l in kb..k_end {
+                    acc = (*arow.add(l)).mul_add(*b.add(l * n + j), acc);
+                }
+                *orow.add(j) = acc;
+                j += 1;
+            }
+        }
+        kb += KB;
+    }
+}
+
+/// `out (k,n) += aᵀ · b` — broadcast-axpy per `(i, l)` pair, 8-wide
+/// over `n`.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_tn_avx2(
+    a: *const f32,
+    b: *const f32,
+    out: *mut f32,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..m {
+        let arow = a.add(i * k);
+        let brow = b.add(i * n);
+        for l in 0..k {
+            let av = *arow.add(l);
+            let avv = _mm256_set1_ps(av);
+            let orow = out.add(l * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let o = _mm256_loadu_ps(orow.add(j));
+                let bb = _mm256_loadu_ps(brow.add(j));
+                _mm256_storeu_ps(orow.add(j), _mm256_fmadd_ps(avv, bb, o));
+                j += 8;
+            }
+            while j < n {
+                *orow.add(j) = av.mul_add(*brow.add(j), *orow.add(j));
+                j += 1;
+            }
+        }
+    }
+}
+
+/// `out (m,n) = a (m,k) · bᵀ (n,k)` — 8-lane dot products with a fixed
+/// lane-pairwise horizontal reduction, scalar tail folded in last.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_nt_avx2(
+    a: *const f32,
+    b: *const f32,
+    out: *mut f32,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    for i in 0..m {
+        let arow = a.add(i * k);
+        for j in 0..n {
+            let brow = b.add(j * k);
+            let mut acc = _mm256_setzero_ps();
+            let mut l = 0;
+            while l + 8 <= k {
+                acc = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(arow.add(l)),
+                    _mm256_loadu_ps(brow.add(l)),
+                    acc,
+                );
+                l += 8;
+            }
+            let mut s = hsum256(acc);
+            while l < k {
+                s = (*arow.add(l)).mul_add(*brow.add(l), s);
+                l += 1;
+            }
+            *out.add(i * n + j) = s;
+        }
+    }
+}
+
+/// Int8 GEMM: 8 weights at a time via
+/// `_mm_loadl_epi64 → _mm256_cvtepi8_epi32 → _mm256_cvtepi32_ps`, FMA
+/// against the broadcast activation, per-column scales applied once
+/// after the full k-reduction (same contract as
+/// [`crate::kernels::scalar::matmul_q8`]).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matmul_q8_avx2(
+    a: *const f32,
+    q: *const i8,
+    scales: *const f32,
+    out: *mut f32,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    std::ptr::write_bytes(out, 0, m * n);
+    const KB: usize = 128;
+    let mut kb = 0;
+    while kb < k {
+        let k_end = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = a.add(i * k);
+            let orow = out.add(i * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut acc = _mm256_loadu_ps(orow.add(j));
+                for l in kb..k_end {
+                    let av = _mm256_set1_ps(*arow.add(l));
+                    let qv = _mm_loadl_epi64(q.add(l * n + j) as *const __m128i);
+                    let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qv));
+                    acc = _mm256_fmadd_ps(av, qf, acc);
+                }
+                _mm256_storeu_ps(orow.add(j), acc);
+                j += 8;
+            }
+            while j < n {
+                let mut acc = *orow.add(j);
+                for l in kb..k_end {
+                    acc = (*arow.add(l)).mul_add(*q.add(l * n + j) as f32, acc);
+                }
+                *orow.add(j) = acc;
+                j += 1;
+            }
+        }
+        kb += KB;
+    }
+    for i in 0..m {
+        let orow = out.add(i * n);
+        let mut j = 0;
+        while j + 8 <= n {
+            let o = _mm256_loadu_ps(orow.add(j));
+            let s = _mm256_loadu_ps(scales.add(j));
+            _mm256_storeu_ps(orow.add(j), _mm256_mul_ps(o, s));
+            j += 8;
+        }
+        while j < n {
+            *orow.add(j) *= *scales.add(j);
+            j += 1;
+        }
+    }
+}

@@ -70,6 +70,25 @@
 //! proves the serve path bit-identical to the serial oracle per
 //! request.
 //!
+//! ## Kernel layer and quantized serving
+//!
+//! Every hot-path GEMM — gating logits, expert FFN forward, training
+//! backward — dispatches through [`kernels`]: a [`kernels::MatmulKernel`]
+//! trait with the original scalar implementation retained as the
+//! bit-exact oracle plus explicit-SIMD kernels (AVX2+FMA on x86_64,
+//! NEON on aarch64) selected at runtime by [`kernels::Kernel::select`]
+//! (`MOE_KERNEL=scalar|avx2|neon` overrides for A/B runs;
+//! [`coordinator::StepStats::kernel`] records which path ran).  Engine
+//! and serial oracle share the selected kernel, so the differential
+//! proofs stay bit-identical; kernel-vs-oracle and int8-vs-f32
+//! comparisons are error-budgeted (`rust/tests/kernels.rs`,
+//! `benches/kernels.rs` → `BENCH_kernels.json`).  For serving,
+//! [`kernels::quant::QuantizedExpertWeights`] adds int8 weight-only
+//! expert FFNs (per-output-channel symmetric scales, quantized at load
+//! from f32 checkpoints) behind
+//! [`serve::ServeConfig`]`::precision` —
+//! [`kernels::quant::Precision::Int8`].
+//!
 //! The `xla` dependency is a vendored API-compatible stub by default
 //! (see `vendor/xla`); artifact-backed paths report "PJRT unavailable"
 //! until the real bindings are swapped in, while every Native path —
@@ -81,6 +100,7 @@ pub mod coordinator;
 pub mod data;
 pub mod gating;
 pub mod harness;
+pub mod kernels;
 pub mod metrics;
 pub mod ngram;
 pub mod runtime;

@@ -28,6 +28,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::scheduler::ExpertWeights;
 use crate::coordinator::{Router, Scheduler};
+use crate::kernels::quant::{Precision, QuantizedExpertWeights};
 use crate::runtime::{ModelConfig, TensorF};
 use crate::serve::batcher::MicroBatcher;
 use crate::serve::queue::{AdmissionPolicy, RequestQueue, ServeRequest};
@@ -57,6 +58,14 @@ pub struct ServeConfig {
     /// at the current (possibly fault-degraded) throughput estimate are
     /// shed up-front ([`RequestQueue::feasible`])
     pub deadline_ns: Option<u64>,
+    /// expert-FFN numeric width: [`Precision::F32`] serves the
+    /// checkpoint weights bit-exactly; [`Precision::Int8`] quantizes
+    /// them at load (per-output-channel symmetric, the f32 originals
+    /// are kept untouched) and serves within
+    /// [`crate::kernels::quant::SERVE_REL_ERR_BUDGET`] of the f32
+    /// outputs.  Int8 requires a natively-streaming configuration —
+    /// [`ServeLoop::new`] rejects others up front.
+    pub precision: Precision,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +79,7 @@ impl Default for ServeConfig {
             retry_max: 0,
             retry_backoff_ns: 0,
             deadline_ns: None,
+            precision: Precision::F32,
         }
     }
 }
@@ -94,6 +104,10 @@ pub struct ServeLoop {
     sched: Scheduler,
     router: Router,
     weights: Vec<ExpertWeights>,
+    /// int8 twins of `weights`, quantized once at load when the config
+    /// asks for [`Precision::Int8`] (the f32 `weights` stay untouched —
+    /// checkpoints and any later re-training are unaffected)
+    qweights: Option<Vec<QuantizedExpertWeights>>,
     cfg: ServeConfig,
     d_model: usize,
 }
@@ -130,7 +144,22 @@ impl ServeLoop {
                 bail!("expert {e} has d_model {} (router {})", w.d_model, d_model);
             }
         }
-        Ok(ServeLoop { sched, router, weights, cfg, d_model })
+        let qweights = match cfg.precision {
+            Precision::F32 => None,
+            Precision::Int8 => {
+                // fail at load, not mid-trace: the quantized path only
+                // exists on the streaming pipeline
+                if !sched.streams_natively(&router) {
+                    bail!(
+                        "Precision::Int8 requires Native router + expert \
+                         backends (streaming path); this configuration \
+                         would silently serve f32"
+                    );
+                }
+                Some(QuantizedExpertWeights::quantize_all(&weights))
+            }
+        };
+        Ok(ServeLoop { sched, router, weights, qweights, cfg, d_model })
     }
 
     /// Freeze a streamed training state (gating included) for serving.
@@ -160,6 +189,18 @@ impl ServeLoop {
 
     pub fn d_model(&self) -> usize {
         self.d_model
+    }
+
+    /// The frozen f32 expert weights (always the checkpoint values —
+    /// int8 serving quantizes a *copy* at load, so these are unchanged
+    /// under [`Precision::Int8`]; tests assert exactly that).
+    pub fn weights(&self) -> &[ExpertWeights] {
+        &self.weights
+    }
+
+    /// The int8 weight twins when serving at [`Precision::Int8`].
+    pub fn quantized_weights(&self) -> Option<&[QuantizedExpertWeights]> {
+        self.qweights.as_deref()
     }
 
     /// Replay an arrival-sorted trace (module docs).  Requests are
@@ -301,11 +342,18 @@ impl ServeLoop {
                 .expect("dispatch decision implies a non-empty queue");
             let dispatched_at = now;
             let t0 = Instant::now();
-            let (outs, step) = self.sched.execute_forward(
-                &self.router,
-                &[&batch.x],
-                &self.weights,
-            )?;
+            let (outs, step) = match &self.qweights {
+                Some(q) => self.sched.execute_forward_quant(
+                    &self.router,
+                    &[&batch.x],
+                    q,
+                )?,
+                None => self.sched.execute_forward(
+                    &self.router,
+                    &[&batch.x],
+                    &self.weights,
+                )?,
+            };
             let wall = t0.elapsed().as_nanos() as u64;
             now += wall;
             stats.record_batch(&step, batch.rows(), self.cfg.max_batch_tokens);

@@ -1,0 +1,504 @@
+//! Kernel-layer differential proofs: every kernel the host can run is
+//! checked against an f64 naive oracle with an error budget derived
+//! from accumulation analysis, and the int8 serve path is budgeted
+//! normwise against the f32 path over the same weights.
+//!
+//! Two tiers of claim (see `rust/src/kernels/mod.rs`):
+//!
+//! - **bit-exact**: the scalar kernel vs the naive triple loop, the
+//!   sparse-aware scalar entry vs its dense twin, and row-block
+//!   invariance *within* any one kernel (the engine's streaming paths
+//!   depend on it);
+//! - **error-budgeted**: any kernel vs the f64 oracle (SIMD kernels
+//!   reassociate the k-reduction), and int8 vs f32 end to end.
+//!
+//! Budget: one output element reduces `k` products; worst-case f32
+//! accumulation error is `O(k) · eps · Σ|aₗ·bₗ|`, so the per-element
+//! tolerance is `2(k+8) · eps · Σ|aₗ·bₗ| + 1e-9` — loose enough for any
+//! reduction order (sequential, lane-tiled, pairwise), tight enough
+//! that a single wrong/missing term (order `|aₗ·bₗ|` itself) fails.
+
+use moe::coordinator::scheduler::{
+    ExpertBackend, ExpertWeights, Scheduler, ShardLayout,
+};
+use moe::coordinator::Router;
+use moe::harness::workload::{poisson_trace, trace_requests, TraceSpec};
+use moe::kernels::quant::{
+    Precision, QuantizedExpertWeights, SERVE_REL_ERR_BUDGET,
+};
+use moe::kernels::{Kernel, MatmulKernel};
+use moe::runtime::TensorF;
+use moe::serve::{ServeConfig, ServeLoop};
+use moe::util::prop;
+use moe::util::rng::Rng;
+
+/// Accumulation-analysis tolerance (module docs): per-element bound for
+/// a k-term f32 reduction, valid for any reduction order.
+fn assert_within(got: &[f32], want: &[f64], abs_sum: &[f64], k: usize, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    let eps = f32::EPSILON as f64;
+    for (idx, ((g, w), s)) in
+        got.iter().zip(want.iter()).zip(abs_sum.iter()).enumerate()
+    {
+        let tol = 2.0 * (k as f64 + 8.0) * eps * s + 1e-9;
+        let err = (*g as f64 - w).abs();
+        assert!(
+            err <= tol,
+            "{ctx}[{idx}]: got {g}, want {w:.9e}, err {err:.3e} > tol {tol:.3e}"
+        );
+    }
+}
+
+/// f64 oracle for `a (m,k) · b (k,n)`; also returns `Σ|aₗ·bₗ|` per
+/// element for the tolerance.
+fn oracle_mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut want = vec![0f64; m * n];
+    let mut abs = vec![0f64; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l] as f64;
+            for j in 0..n {
+                let p = av * b[l * n + j] as f64;
+                want[i * n + j] += p;
+                abs[i * n + j] += p.abs();
+            }
+        }
+    }
+    (want, abs)
+}
+
+/// f64 oracle for `init (k,n) + aᵀ (k,m) · b (m,n)` (the accumulating
+/// `matmul_tn` contract).
+fn oracle_tn(
+    a: &[f32],
+    b: &[f32],
+    init: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut want: Vec<f64> = init.iter().map(|v| *v as f64).collect();
+    let mut abs: Vec<f64> = init.iter().map(|v| (*v as f64).abs()).collect();
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l] as f64;
+            for j in 0..n {
+                let p = av * b[i * n + j] as f64;
+                want[l * n + j] += p;
+                abs[l * n + j] += p.abs();
+            }
+        }
+    }
+    (want, abs)
+}
+
+/// f64 oracle for `a (m,k) · bᵀ (n,k)`.
+fn oracle_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut want = vec![0f64; m * n];
+    let mut abs = vec![0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            for l in 0..k {
+                let p = a[i * k + l] as f64 * b[j * k + l] as f64;
+                want[i * n + j] += p;
+                abs[i * n + j] += p.abs();
+            }
+        }
+    }
+    (want, abs)
+}
+
+/// Shapes that hit the structural edges: empty batches (`m = 0`),
+/// degenerate reductions (`k = 0`, `k = 1`), widths off every unroll
+/// multiple (9, 17, 31, 33 vs the 4/8/16/32-wide tiles), and spans
+/// crossing the KB = 64/128/256 k-block boundaries.
+const EDGE_SHAPES: &[(usize, usize, usize)] = &[
+    (0, 5, 7),
+    (2, 0, 4),
+    (1, 1, 1),
+    (3, 1, 9),
+    (2, 1, 33),
+    (3, 7, 31),
+    (2, 65, 17),
+    (4, 130, 33),
+    (2, 257, 9),
+    (1, 300, 40),
+];
+
+#[test]
+fn matmul_matches_f64_oracle_on_all_kernels() {
+    let run = |m: usize, k: usize, n: usize, rng: &mut Rng| {
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let (want, abs) = oracle_mm(&a, &b, m, k, n);
+        for kern in Kernel::available() {
+            let mut got = vec![f32::NAN; m * n];
+            kern.matmul(&a, &b, &mut got, m, k, n);
+            let ctx = format!("{} matmul {m}x{k}x{n}", kern.name());
+            assert_within(&got, &want, &abs, k, &ctx);
+        }
+    };
+    let mut rng = prop::case_rng(1);
+    for &(m, k, n) in EDGE_SHAPES {
+        run(m, k, n, &mut rng);
+    }
+    prop::forall("matmul vs f64", |rng| {
+        let m = prop::dim(rng, 0, 6);
+        let k = prop::dim(rng, 1, 90);
+        let n = prop::dim(rng, 1, 70);
+        run(m, k, n, rng);
+    });
+}
+
+#[test]
+fn matmul_tn_accumulates_and_matches_f64_oracle_on_all_kernels() {
+    let run = |m: usize, k: usize, n: usize, rng: &mut Rng| {
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, m * n, 1.0);
+        // seeded output: the += (dW accumulation) contract is part of
+        // the oracle, not zeroed away
+        let init = prop::vec_f32(rng, k * n, 1.0);
+        let (want, abs) = oracle_tn(&a, &b, &init, m, k, n);
+        for kern in Kernel::available() {
+            let mut got = init.clone();
+            kern.matmul_tn(&a, &b, &mut got, m, k, n);
+            let ctx = format!("{} matmul_tn {m}x{k}x{n}", kern.name());
+            // m terms fold into each element on top of the seed
+            assert_within(&got, &want, &abs, m + 1, &ctx);
+        }
+    };
+    let mut rng = prop::case_rng(2);
+    for &(k, m, n) in EDGE_SHAPES {
+        // reuse the edge list with m as the reduced dim (tn reduces m)
+        run(m, k, n, &mut rng);
+    }
+    prop::forall("matmul_tn vs f64", |rng| {
+        let m = prop::dim(rng, 0, 40);
+        let k = prop::dim(rng, 1, 12);
+        let n = prop::dim(rng, 1, 70);
+        run(m, k, n, rng);
+    });
+}
+
+#[test]
+fn matmul_nt_matches_f64_oracle_on_all_kernels() {
+    let run = |m: usize, n: usize, k: usize, rng: &mut Rng| {
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, n * k, 1.0);
+        let (want, abs) = oracle_nt(&a, &b, m, n, k);
+        for kern in Kernel::available() {
+            let mut got = vec![f32::NAN; m * n];
+            kern.matmul_nt(&a, &b, &mut got, m, n, k);
+            let ctx = format!("{} matmul_nt {m}x{n}x{k}", kern.name());
+            assert_within(&got, &want, &abs, k, &ctx);
+        }
+    };
+    let mut rng = prop::case_rng(3);
+    for &(m, k, n) in EDGE_SHAPES {
+        run(m, n, k, &mut rng);
+    }
+    prop::forall("matmul_nt vs f64", |rng| {
+        let m = prop::dim(rng, 0, 6);
+        let n = prop::dim(rng, 1, 12);
+        let k = prop::dim(rng, 1, 300);
+        run(m, n, k, rng);
+    });
+}
+
+#[test]
+fn scalar_sparse_entry_is_bit_identical_to_dense_twin() {
+    // the retained `av == 0.0` skip branch lives only in the
+    // sparse-aware entry; for finite inputs (dense or post-ReLU sparse)
+    // it must be an exact no-op vs the branch-free twin
+    let scalar = Kernel::scalar();
+    prop::forall("sparse == dense bitwise", |rng| {
+        let m = prop::dim(rng, 1, 6);
+        let k = prop::dim(rng, 1, 80);
+        let n = prop::dim(rng, 1, 40);
+        let dense = prop::vec_f32(rng, m * k, 1.0);
+        // post-ReLU-shaped input: roughly half the entries exactly 0.0
+        let sparse: Vec<f32> = dense.iter().map(|v| v.max(0.0)).collect();
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        for a in [&dense, &sparse] {
+            let mut d = vec![0f32; m * n];
+            let mut s = vec![0f32; m * n];
+            scalar.matmul(a, &b, &mut d, m, k, n);
+            scalar.matmul_sparse(a, &b, &mut s, m, k, n);
+            for (x, y) in d.iter().zip(s.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "sparse entry drifted");
+            }
+        }
+    });
+}
+
+#[test]
+fn row_blocks_are_bit_identical_to_full_batch_on_all_kernels() {
+    // the engine streams expert chunks and gating row blocks; every
+    // kernel must keep contiguous row blocks bit-identical to the
+    // full-batch call (module-doc invariant)
+    prop::forall("row-block invariance", |rng| {
+        let m = prop::dim(rng, 2, 9);
+        let k = prop::dim(rng, 1, 70);
+        let n = prop::dim(rng, 1, 40);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let m1 = m / 2;
+        for kern in Kernel::available() {
+            let mut full = vec![0f32; m * n];
+            kern.matmul(&a, &b, &mut full, m, k, n);
+            let mut blocked = vec![0f32; m * n];
+            kern.matmul(&a[..m1 * k], &b, &mut blocked[..m1 * n], m1, k, n);
+            kern.matmul(&a[m1 * k..], &b, &mut blocked[m1 * n..], m - m1, k, n);
+            for (x, y) in full.iter().zip(blocked.iter()) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{}: row block drifted from full batch",
+                    kern.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn matmul_q8_matches_f64_oracle_on_dequantized_weights_on_all_kernels() {
+    // the int8 GEMM applies per-column scales once after the full
+    // k-reduction: in exact arithmetic (Σ a·q)·s == Σ a·(q·s), so the
+    // f64 oracle over the *dequantized* matrix is the reference
+    prop::forall("matmul_q8 vs f64", |rng| {
+        let m = prop::dim(rng, 0, 5);
+        let k = prop::dim(rng, 1, 80);
+        let n = prop::dim(rng, 1, 40);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let q: Vec<i8> =
+            (0..k * n).map(|_| (prop::dim(rng, 0, 254) as i32 - 127) as i8).collect();
+        let scales: Vec<f32> =
+            prop::vec_f32(rng, n, 0.02).iter().map(|s| s.abs() + 1e-3).collect();
+        let dq: Vec<f32> = q
+            .chunks(n)
+            .flat_map(|row| {
+                row.iter().zip(scales.iter()).map(|(&qv, &sv)| qv as f32 * sv)
+            })
+            .collect();
+        let (want, abs) = oracle_mm(&a, &dq, m, k, n);
+        for kern in Kernel::available() {
+            let mut got = vec![f32::NAN; m * n];
+            kern.matmul_q8(&a, &q, &scales, &mut got, m, k, n);
+            let ctx = format!("{} matmul_q8 {m}x{k}x{n}", kern.name());
+            assert_within(&got, &want, &abs, k, &ctx);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// end-to-end: kernel selection surfaced in telemetry, int8 serving
+// budgeted against f32 serving, f32 checkpoints untouched by int8 load
+// ---------------------------------------------------------------------
+
+struct Frozen {
+    d: usize,
+    n: usize,
+    w_g: Vec<f32>,
+    w_noise: Vec<f32>,
+    weights: Vec<ExpertWeights>,
+}
+
+impl Frozen {
+    fn build(seed: u64, d: usize, h: usize, n: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let weights = (0..n)
+            .map(|_| ExpertWeights {
+                w_in: prop::vec_f32(&mut rng, d * h, 0.3),
+                w_out: prop::vec_f32(&mut rng, h * d, 0.3),
+                d_model: d,
+                hidden: h,
+            })
+            .collect();
+        Frozen {
+            d,
+            n,
+            w_g: prop::vec_f32(&mut rng, d * n, 0.5),
+            w_noise: prop::vec_f32(&mut rng, d * n, 0.3),
+            weights,
+        }
+    }
+
+    fn router(&self, k: usize) -> Router {
+        Router::flat_native(
+            self.d,
+            self.n,
+            k,
+            self.w_g.clone(),
+            Some(self.w_noise.clone()),
+        )
+    }
+}
+
+fn assert_weights_bit_equal(a: &[ExpertWeights], b: &[ExpertWeights], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: expert count");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let bits =
+            |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&x.w_in), bits(&y.w_in), "{ctx}: expert {i} w_in");
+        assert_eq!(bits(&x.w_out), bits(&y.w_out), "{ctx}: expert {i} w_out");
+    }
+}
+
+#[test]
+fn step_stats_record_the_selected_kernel() {
+    let (d, h, n, k) = (6, 8, 4, 2);
+    let frozen = Frozen::build(17, d, h, n);
+    let sched = Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+    let mut rng = Rng::new(5);
+    let x = TensorF::new(vec![7, d], prop::vec_f32(&mut rng, 7 * d, 1.0));
+    let (outs, stats) = sched
+        .execute_forward(&frozen.router(k), &[&x], &frozen.weights)
+        .unwrap();
+    assert_eq!(outs[0].shape, vec![7, d]);
+    assert_eq!(stats.kernel, Kernel::selected_name());
+    assert!(
+        Kernel::available().iter().any(|kk| kk.name() == stats.kernel),
+        "stats.kernel {:?} not runnable on this host",
+        stats.kernel
+    );
+}
+
+#[test]
+fn int8_serving_tracks_f32_serving_within_budget() {
+    let (d, h, n, k) = (8, 12, 5, 2);
+    let frozen = Frozen::build(43, d, h, n);
+    let trace = trace_requests(
+        &poisson_trace(&TraceSpec {
+            seed: 71,
+            rate_per_sec: 40_000.0,
+            n_requests: 23,
+            min_rows: 1,
+            max_rows: 6,
+            bursty: true,
+        }),
+        d,
+        91,
+    );
+    let mk = |precision: Precision| {
+        ServeLoop::new(
+            Scheduler::new(ShardLayout::new(3, n), ExpertBackend::Native),
+            frozen.router(k),
+            frozen.weights.clone(),
+            ServeConfig {
+                queue_depth: 64,
+                max_batch_tokens: 16,
+                latency_budget_ns: 200_000,
+                capture_outputs: true,
+                precision,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let f32_loop = mk(Precision::F32);
+    let int8_loop = mk(Precision::Int8);
+    assert!(f32_loop.quantized_weights().is_none());
+    let q = int8_loop.quantized_weights().expect("int8 config quantizes at load");
+    assert_eq!(q.len(), n);
+    // quantize-at-load must leave the f32 weights untouched
+    assert_weights_bit_equal(int8_loop.weights(), &frozen.weights, "int8 load");
+
+    let rf = f32_loop.run_trace(&trace).unwrap();
+    let r8 = int8_loop.run_trace(&trace).unwrap();
+    assert_eq!(rf.stats.shed, 0);
+    assert_eq!(r8.stats.shed, 0);
+    let mut worst = 0f64;
+    for (i, (a, b)) in rf.outputs.iter().zip(r8.outputs.iter()).enumerate() {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(a.shape, b.shape, "request {i} shape");
+        let norm: f64 =
+            a.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let err: f64 = a
+            .data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(x, y)| (*x as f64 - *y as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            err <= SERVE_REL_ERR_BUDGET * norm + 1e-6,
+            "request {i}: int8 serve error {err:.3e} over budget (norm {norm:.3e})"
+        );
+        if norm > 1e-9 {
+            worst = worst.max(err / norm);
+        }
+    }
+    assert!(
+        worst > 0.0,
+        "int8 and f32 serve outputs are bitwise identical — the \
+         quantized path did not run"
+    );
+}
+
+#[test]
+fn int8_quantization_is_deterministic_across_loads() {
+    let frozen = Frozen::build(29, 6, 9, 3);
+    let q1 = QuantizedExpertWeights::quantize_all(&frozen.weights);
+    let q2 = QuantizedExpertWeights::quantize_all(&frozen.weights.clone());
+    for (a, b) in q1.iter().zip(q2.iter()) {
+        assert_eq!(a.q_in, b.q_in);
+        assert_eq!(a.q_out, b.q_out);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a.s_in), bits(&b.s_in));
+        assert_eq!(bits(&a.s_out), bits(&b.s_out));
+    }
+}
+
+#[test]
+fn f32_checkpoints_load_bit_unchanged_under_int8_serving() {
+    use moe::runtime::ModelConfig;
+    use moe::train::{checkpoint, Trainer};
+
+    // train a few streamed f32 steps, freeze, then load the same
+    // checkpoint under both precisions: the f32 weights must be
+    // bit-identical (quantization is load-time and additive only)
+    let (d, h, n, k) = (6, 8, 4, 2);
+    let model = ModelConfig::native_moe("kernels-ckpt", d, n, k, h, 1, 8);
+    let trainer = Trainer::native(model.clone());
+    let mut state = trainer.init_streamed(13);
+    let sched = Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+    let mut rng = Rng::new(31);
+    let xs = vec![TensorF::new(vec![9, d], prop::vec_f32(&mut rng, 9 * d, 1.0))];
+    let targets =
+        vec![TensorF::new(vec![9, d], prop::vec_f32(&mut rng, 9 * d, 1.0))];
+    for _ in 0..2 {
+        trainer
+            .step_streamed(&sched, &mut state, &xs, &targets, 0.05, None)
+            .unwrap();
+    }
+    let dir = std::env::temp_dir().join("moe_kernels_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("kernels.ckpt");
+    checkpoint::save_streamed(&path, &model.name, &state).unwrap();
+
+    let load = |precision: Precision| {
+        ServeLoop::from_checkpoint(
+            Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native),
+            &path,
+            &model.name,
+            &model,
+            ServeConfig { precision, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let serve_f32 = load(Precision::F32);
+    let serve_int8 = load(Precision::Int8);
+    assert_weights_bit_equal(
+        serve_f32.weights(),
+        serve_int8.weights(),
+        "checkpoint under int8",
+    );
+    // and the quantized side really derives from those f32 weights
+    let q = serve_int8.quantized_weights().unwrap();
+    let expect = QuantizedExpertWeights::quantize_all(serve_int8.weights());
+    for (a, b) in q.iter().zip(expect.iter()) {
+        assert_eq!(a.q_in, b.q_in, "quantized codes drifted from f32 source");
+        assert_eq!(a.q_out, b.q_out);
+    }
+}
