@@ -1,0 +1,190 @@
+//! Bench: observability overhead and export well-formedness.
+//!
+//! The tracing contract is "zero-cost when disabled, cheap and
+//! bit-neutral when enabled".  This bench measures both sides on the
+//! streamed step executor with a *paired, interleaved* design — each
+//! repeat times one untraced and one traced step back to back, and the
+//! overhead fraction is computed from the medians — so slow drift on
+//! the CI host cancels instead of biasing the comparison.  It also
+//! replays a traced serve burst and validates the exports the way CI
+//! gates them: the Chrome trace parses as JSON, the registry snapshot
+//! parses and round-trips, and the serve ledger conserves
+//! (`offered == completed + shed + failed`).  Emits `BENCH_obs.json`
+//! with `trace_overhead_frac` budgeted at < 5% by the CI validator.
+
+use moe::harness::workload::{poisson_trace, trace_requests, SyntheticMoe, TraceSpec};
+use moe::obs::{chrome_trace_json, ObsConfig, Registry};
+use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
+use moe::serve::{ServeConfig, ServeLoop};
+use moe::util::bench::{black_box, BenchReport, Bencher};
+use moe::util::json;
+
+const DEVICES: usize = 4;
+const N_EXPERTS: usize = 16;
+
+fn sched(obs: ObsConfig) -> Scheduler {
+    Scheduler::new(
+        ShardLayout::new(DEVICES, N_EXPERTS),
+        ExpertBackend::Native,
+    )
+    .with_obs(obs)
+}
+
+fn median(mut v: Vec<u64>) -> u64 {
+    v.sort_unstable();
+    v[v.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let bench = Bencher::from_env_quick();
+    let mut report = BenchReport::new("obs");
+
+    // a step big enough that per-span clock reads are measurable noise,
+    // not the workload: 512 tokens routed k=2 over 16 experts
+    let work = SyntheticMoe::build(77, 64, 128, N_EXPERTS, 2, DEVICES, 128)?;
+    let plain = sched(ObsConfig::default());
+    let traced = sched(ObsConfig::enabled());
+    work.run_streamed(&plain, None)?; // warm engines + arenas
+    work.run_streamed(&traced, None)?;
+    traced.take_spans();
+
+    println!(
+        "== obs: tracing overhead on the streamed step ({} tokens, {} \
+         experts, {} shards) ==",
+        work.tokens(),
+        N_EXPERTS,
+        DEVICES
+    );
+
+    // paired interleaved measurement: medians over `repeats` A/B pairs
+    let repeats = if smoke { 24 } else { 50 };
+    let mut off_ns = Vec::with_capacity(repeats);
+    let mut on_ns = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = std::time::Instant::now();
+        black_box(work.run_streamed(&plain, None)?);
+        off_ns.push(t0.elapsed().as_nanos() as u64);
+        let t1 = std::time::Instant::now();
+        black_box(work.run_streamed(&traced, None)?);
+        on_ns.push(t1.elapsed().as_nanos() as u64);
+    }
+    let spans = traced.take_spans();
+    let (med_off, med_on) = (median(off_ns), median(on_ns));
+    let overhead = med_on as f64 / med_off.max(1) as f64 - 1.0;
+    let spans_per_step = spans.len() as f64 / repeats as f64;
+    println!(
+        "  step median: untraced {:.3}ms, traced {:.3}ms -> overhead \
+         {:+.2}%  ({spans_per_step:.0} spans/step, {} dropped)",
+        med_off as f64 / 1e6,
+        med_on as f64 / 1e6,
+        overhead * 100.0,
+        traced.trace_dropped(),
+    );
+    anyhow::ensure!(
+        traced.trace_dropped() == 0,
+        "default ring capacity dropped spans on a bench-sized step"
+    );
+    // the Chrome export parses and carries every span
+    let doc = chrome_trace_json(&spans, DEVICES);
+    let parsed = json::parse(&doc)
+        .map_err(|e| anyhow::anyhow!("chrome trace unparseable: {e:?}"))?;
+    let n_events = parsed
+        .field("traceEvents")?
+        .as_arr()
+        .map_or(0, |a| a.len());
+
+    // named timing rows for the PR-over-PR trajectory
+    let r_off = bench.run("streamed step, tracing off", || {
+        black_box(work.run_streamed(&plain, None).unwrap());
+    });
+    r_off.report_throughput("tok", work.tokens() as f64);
+    report.push(&r_off, Some(("tok", work.tokens() as f64)), &[]);
+    let r_on = bench.run("streamed step, tracing on", || {
+        black_box(work.run_streamed(&traced, None).unwrap());
+    });
+    r_on.report_throughput("tok", work.tokens() as f64);
+    report.push(
+        &r_on,
+        Some(("tok", work.tokens() as f64)),
+        &[
+            ("trace_overhead_frac", overhead),
+            ("paired_repeats", repeats as f64),
+            ("median_off_ns", med_off as f64),
+            ("median_on_ns", med_on as f64),
+            ("spans_per_step", spans_per_step),
+            ("trace_events", n_events as f64),
+            ("ring_dropped", traced.trace_dropped() as f64),
+        ],
+    );
+    traced.take_spans();
+
+    // a traced serve burst: ledger conservation + snapshot parseability
+    let serve_work = SyntheticMoe::build(31, 32, 64, N_EXPERTS, 2, 1, 8)?;
+    let serve = ServeLoop::new(
+        sched(ObsConfig::enabled()),
+        serve_work.router,
+        serve_work.weights,
+        ServeConfig {
+            queue_depth: 32,
+            max_batch_tokens: 64,
+            latency_budget_ns: 200_000,
+            ..Default::default()
+        },
+    )?;
+    let trace = trace_requests(
+        &poisson_trace(&TraceSpec {
+            seed: 19,
+            rate_per_sec: 30_000.0,
+            n_requests: if smoke { 32 } else { 128 },
+            min_rows: 1,
+            max_rows: 8,
+            bursty: false,
+        }),
+        32,
+        21,
+    );
+    let r_serve = bench.run("traced serve replay", || {
+        black_box(serve.run_trace(&trace).unwrap());
+    });
+    let stats = serve.run_trace(&trace)?.stats;
+    let serve_spans = serve.take_spans();
+    r_serve.report_throughput("req", trace.len() as f64);
+    println!("  {}", stats.summary_line());
+    anyhow::ensure!(
+        stats.offered == stats.completed + stats.shed + stats.failed,
+        "serve ledger broke: {} != {} + {} + {}",
+        stats.offered,
+        stats.completed,
+        stats.shed,
+        stats.failed
+    );
+    anyhow::ensure!(!serve_spans.is_empty(), "traced serve had no spans");
+    let mut reg = Registry::new();
+    stats.publish(&mut reg);
+    let snap = reg.snapshot();
+    json::parse(&snap.to_json())
+        .map_err(|e| anyhow::anyhow!("snapshot JSON unparseable: {e:?}"))?;
+    anyhow::ensure!(
+        snap.to_prometheus().contains("# TYPE"),
+        "prometheus export missing TYPE lines"
+    );
+    report.push(
+        &r_serve,
+        Some(("req", trace.len() as f64)),
+        &[
+            ("offered", stats.offered as f64),
+            ("completed", stats.completed as f64),
+            ("shed", stats.shed as f64),
+            ("failed", stats.failed as f64),
+            ("slo_violations", stats.slo_violations as f64),
+            ("ledger_conserved", 1.0),
+            ("snapshot_parses", 1.0),
+            ("serve_spans", serve_spans.len() as f64),
+        ],
+    );
+
+    report.write("BENCH_obs.json")?;
+    println!("wrote BENCH_obs.json");
+    Ok(())
+}

@@ -102,6 +102,7 @@ use crate::coordinator::scheduler::{
 };
 use crate::gating::noisy_topk::GateVec;
 use crate::kernels::quant::QuantizedExpertWeights;
+use crate::obs::{ObsConfig, Span, SpanKind, TraceShared, NO_ID};
 use crate::runtime::{Executable, Host, TensorF};
 use crate::util::rng::Rng;
 
@@ -473,7 +474,17 @@ pub struct ExecutionEngine {
     txs: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     pool: BufferPool,
+    /// tracing state shared with the workers (`None` = tracing off:
+    /// one branch per job, nothing recorded — see [`crate::obs`])
+    obs: Option<Arc<TraceShared>>,
+    /// spans drained from completed steps, awaiting [`take_spans`]
+    /// (bounded: the oldest spans are discarded past `SPAN_KEEP`)
+    spans: Vec<Span>,
 }
+
+/// Retained-span bound: a serve loop tracing thousands of steps without
+/// a `take_spans` drain must not grow without limit.
+const SPAN_KEEP: usize = 1 << 18;
 
 impl ExecutionEngine {
     /// Spawn one persistent worker per simulated device shard.
@@ -490,15 +501,32 @@ impl ExecutionEngine {
     }
 
     /// Like [`start`](Self::start) with an explicit wave-capacity
-    /// policy (fixed or adaptive).
+    /// policy (fixed or adaptive).  Tracing follows the ambient
+    /// environment (`MOE_TRACE` — [`ObsConfig::from_env`]).
     pub fn with_policy(layout: ShardLayout, policy: WavePolicy) -> Self {
+        Self::with_policy_obs(layout, policy, ObsConfig::from_env())
+    }
+
+    /// Full constructor: wave policy plus explicit observability
+    /// switches.  When tracing is on, every worker is spawned holding
+    /// the shared trace state and records spans into its own ring; when
+    /// off, workers hold `None` and tracing costs one branch per job.
+    pub fn with_policy_obs(
+        layout: ShardLayout,
+        policy: WavePolicy,
+        obs_cfg: ObsConfig,
+    ) -> Self {
+        let obs = obs_cfg
+            .tracing
+            .then(|| TraceShared::new(layout.n_devices, obs_cfg.ring_capacity));
         let mut txs = Vec::with_capacity(layout.n_devices);
         let mut handles = Vec::with_capacity(layout.n_devices);
         for dev in 0..layout.n_devices {
             let (tx, rx) = channel::<Job>();
+            let tr = obs.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("moe-shard-{dev}"))
-                .spawn(move || worker_loop(rx))
+                .spawn(move || worker_loop(rx, dev, tr))
                 .expect("spawning shard worker");
             txs.push(tx);
             handles.push(handle);
@@ -513,6 +541,8 @@ impl ExecutionEngine {
             txs,
             handles,
             pool: BufferPool::default(),
+            obs,
+            spans: Vec::new(),
         }
     }
 
@@ -560,6 +590,83 @@ impl ExecutionEngine {
         &self.tally
     }
 
+    /// Whether this engine records trace spans.
+    pub fn tracing_enabled(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    /// Spans drained from completed steps, in drain order (empty when
+    /// tracing is off).  Ownership transfers to the caller; the engine
+    /// starts accumulating afresh.
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        std::mem::take(&mut self.spans)
+    }
+
+    /// Spans lost to full rings since engine start (0 when tracing is
+    /// off) — nonzero means `ObsConfig::ring_capacity` is too small for
+    /// the step size.
+    pub fn trace_dropped(&self) -> u64 {
+        self.obs.as_ref().map(|t| t.dropped()).unwrap_or(0)
+    }
+
+    /// Stamp the start of a traced step: bump the shared step counter
+    /// and remember `(step, start_ns)` for the closing Step span.
+    /// `None` when tracing is off.
+    fn begin_step_trace(&self) -> Option<(u64, u64)> {
+        self.obs.as_ref().map(|tr| (tr.begin_step(), tr.now_ns()))
+    }
+
+    /// Close a traced step: record the coordinator's whole-step span,
+    /// then drain every worker ring into the engine-held span buffer.
+    /// Called at step end, after the reply drain — worker quiescence is
+    /// what makes consuming the SPSC rings from this thread sound.
+    fn finish_step_trace(&mut self, begun: Option<(u64, u64)>) {
+        let Some((step, start_ns)) = begun else { return };
+        let Some(tr) = self.obs.clone() else { return };
+        tr.coord_ring().push(Span {
+            kind: SpanKind::Step,
+            step,
+            shard: NO_ID,
+            expert: NO_ID,
+            chunk: NO_ID,
+            replica: NO_ID,
+            rows: 0,
+            start_ns,
+            dur_ns: tr.now_ns().saturating_sub(start_ns),
+        });
+        tr.drain_into(&mut self.spans);
+        if self.spans.len() > SPAN_KEEP {
+            let cut = self.spans.len() - SPAN_KEEP;
+            self.spans.drain(..cut);
+        }
+    }
+
+    /// Record a coordinator-side instant event (Dispatch / Retry) on
+    /// the coordinator lane.  No-op when tracing is off.
+    fn trace_coord_event(
+        &self,
+        kind: SpanKind,
+        expert: u32,
+        chunk: u32,
+        replica: u32,
+        rows: u32,
+    ) {
+        if let Some(tr) = &self.obs {
+            let now = tr.now_ns();
+            tr.coord_ring().push(Span {
+                kind,
+                step: tr.step_id(),
+                shard: NO_ID,
+                expert,
+                chunk,
+                replica,
+                rows,
+                start_ns: now,
+                dur_ns: 0,
+            });
+        }
+    }
+
     /// The wave capacity the next Native step will use.
     pub fn wave_capacity(&self) -> Option<usize> {
         self.policy.capacity()
@@ -604,6 +711,7 @@ impl ExecutionEngine {
         let cap_opt = self.policy.capacity();
         let cap = cap_opt.unwrap_or(usize::MAX).max(1);
         let n_waves = waves_for_loads(&loads, cap_opt);
+        let trace = self.begin_step_trace();
         let mut phases = PhaseNanos::default();
         let mut shard_compute = vec![0u64; self.layout.n_devices];
 
@@ -745,6 +853,7 @@ impl ExecutionEngine {
             .filter(|t| **t <= last_compute_done)
             .count();
         self.policy.observe(&stats);
+        self.finish_step_trace(trace);
         Ok((outs, stats))
     }
 
@@ -776,6 +885,7 @@ impl ExecutionEngine {
         let cap = capacity.max(1);
         let loads = plan.expert_loads();
         let n_waves = waves_for_loads(&loads, Some(cap));
+        let trace = self.begin_step_trace();
         let mut phases = PhaseNanos::default();
         let mut shard_compute = vec![0u64; self.layout.n_devices];
 
@@ -908,6 +1018,7 @@ impl ExecutionEngine {
             shard_compute,
             compute_serialized,
         );
+        self.finish_step_trace(trace);
         Ok((outs, stats))
     }
 
@@ -1022,6 +1133,7 @@ impl ExecutionEngine {
             .capacity()
             .unwrap_or(STREAM_DEFAULT_CAP)
             .max(1);
+        let trace = self.begin_step_trace();
         let mut phases = PhaseNanos::default();
         let mut shard_compute = vec![0u64; n_dev];
 
@@ -1362,6 +1474,7 @@ impl ExecutionEngine {
         stats.degraded_tokens = self.tally.degraded_tokens;
         stats.renorm_mass_lost = self.tally.renorm_mass_lost;
         self.policy.observe(&stats);
+        self.finish_step_trace(trace);
         Ok(StreamedStep { outs, decisions, plan, stats })
     }
 
@@ -1450,6 +1563,13 @@ impl ExecutionEngine {
                 self.txs[tdev]
                     .send(Job::Compute(job))
                     .map_err(|_| anyhow!("shard worker {tdev} unavailable"))?;
+                self.trace_coord_event(
+                    SpanKind::Retry,
+                    target as u32,
+                    pos as u32,
+                    addr.replica as u32,
+                    1,
+                );
                 trackers[addr.replica].outstanding += 1;
                 self.tally.redispatched_routes += 1;
                 sent += 1;
@@ -1482,6 +1602,13 @@ impl ExecutionEngine {
         self.txs[dev]
             .send(Job::Compute(job))
             .map_err(|_| anyhow!("shard worker {dev} unavailable"))?;
+        self.trace_coord_event(
+            SpanKind::Dispatch,
+            e as u32,
+            lo as u32,
+            NO_ID,
+            (hi - lo) as u32,
+        );
         Ok(1)
     }
 
@@ -1835,9 +1962,35 @@ fn send_gather(
         .map_err(|_| anyhow!("gather worker unavailable"))
 }
 
+/// Record one expert-task span on the worker's ring: kind Retry for a
+/// fault re-dispatch (carrying the replica it serves), Compute
+/// otherwise.  Tracing reads the clock and writes the ring — it never
+/// touches job data, so traced steps stay bit-identical to untraced.
+fn record_task_span(
+    tr: &TraceShared,
+    dev: usize,
+    t: &ExpertTask,
+    start_ns: u64,
+) {
+    tr.ring(dev).push(Span {
+        kind: if t.retry.is_some() { SpanKind::Retry } else { SpanKind::Compute },
+        step: tr.step_id(),
+        shard: dev as u32,
+        expert: t.expert as u32,
+        chunk: t.out_offset as u32,
+        replica: t.retry.as_ref().map(|r| r.replica as u32).unwrap_or(NO_ID),
+        rows: t.rows as u32,
+        start_ns,
+        dur_ns: tr.now_ns().saturating_sub(start_ns),
+    });
+}
+
 /// Persistent shard worker: waits for jobs, computes into its arena,
-/// always replies (even on panic — see module safety notes).
-fn worker_loop(rx: Receiver<Job>) {
+/// always replies (even on panic — see module safety notes).  With
+/// tracing on (`obs` is `Some`), each job additionally records spans
+/// into this worker's own SPSC ring; with tracing off the cost is one
+/// branch per job.
+fn worker_loop(rx: Receiver<Job>, dev: usize, obs: Option<Arc<TraceShared>>) {
     // persistent hidden-layer scratch arena, reused across steps
     let mut scratch: Vec<f32> = Vec::new();
     while let Ok(job) = rx.recv() {
@@ -1858,6 +2011,7 @@ fn worker_loop(rx: Receiver<Job>) {
                         WeightsPtr::F32(p) => {
                             let weights: &[ExpertWeights] = unsafe { &*p };
                             for t in j.tasks.iter_mut() {
+                                let s0 = obs.as_ref().map(|tr| tr.now_ns());
                                 let w = &weights[t.expert];
                                 w.forward_into(
                                     &t.input[..t.rows * w.d_model],
@@ -1865,12 +2019,16 @@ fn worker_loop(rx: Receiver<Job>) {
                                     &mut scratch,
                                     &mut t.output,
                                 );
+                                if let (Some(tr), Some(s0)) = (&obs, s0) {
+                                    record_task_span(tr, dev, t, s0);
+                                }
                             }
                         }
                         WeightsPtr::Int8(p) => {
                             let weights: &[QuantizedExpertWeights] =
                                 unsafe { &*p };
                             for t in j.tasks.iter_mut() {
+                                let s0 = obs.as_ref().map(|tr| tr.now_ns());
                                 let w = &weights[t.expert];
                                 w.forward_into(
                                     &t.input[..t.rows * w.d_model],
@@ -1878,6 +2036,9 @@ fn worker_loop(rx: Receiver<Job>) {
                                     &mut scratch,
                                     &mut t.output,
                                 );
+                                if let (Some(tr), Some(s0)) = (&obs, s0) {
+                                    record_task_span(tr, dev, t, s0);
+                                }
                             }
                         }
                     }
@@ -1891,6 +2052,7 @@ fn worker_loop(rx: Receiver<Job>) {
                 });
             }
             Job::Route(j) => {
+                let s0 = obs.as_ref().map(|tr| tr.now_ns());
                 let result = match catch_unwind(AssertUnwindSafe(|| {
                     // SAFETY: the coordinator blocks until our reply;
                     // route_rows is pure Native math (never touches a
@@ -1907,9 +2069,23 @@ fn worker_loop(rx: Receiver<Job>) {
                     Ok(Err(e)) => Err(e.to_string()),
                     Err(_) => Err("route worker panicked".to_string()),
                 };
+                if let (Some(tr), Some(s0)) = (&obs, s0) {
+                    tr.ring(dev).push(Span {
+                        kind: SpanKind::Route,
+                        step: tr.step_id(),
+                        shard: dev as u32,
+                        expert: NO_ID,
+                        chunk: j.lo as u32,
+                        replica: NO_ID,
+                        rows: (j.hi - j.lo) as u32,
+                        start_ns: s0,
+                        dur_ns: tr.now_ns().saturating_sub(s0),
+                    });
+                }
                 let _ = j.reply.send(RouteReply { block: j.block, result });
             }
             Job::Gather(mut j) => {
+                let s0 = obs.as_ref().map(|tr| tr.now_ns());
                 let ok = catch_unwind(AssertUnwindSafe(|| {
                     // SAFETY: the coordinator blocks until our reply
                     let plan: &DispatchPlan = unsafe { &*j.plan };
@@ -1924,6 +2100,19 @@ fn worker_loop(rx: Receiver<Job>) {
                     );
                 }))
                 .is_ok();
+                if let (Some(tr), Some(s0)) = (&obs, s0) {
+                    tr.ring(dev).push(Span {
+                        kind: SpanKind::Gather,
+                        step: tr.step_id(),
+                        shard: dev as u32,
+                        expert: j.expert as u32,
+                        chunk: j.lo as u32,
+                        replica: NO_ID,
+                        rows: (j.hi - j.lo) as u32,
+                        start_ns: s0,
+                        dur_ns: tr.now_ns().saturating_sub(s0),
+                    });
+                }
                 let _ = j.reply.send(GatherReply { ok, buf: j.buf });
             }
             Job::Combine(mut j) => {
@@ -1933,6 +2122,7 @@ fn worker_loop(rx: Receiver<Job>) {
                 // lost gate mass attached, delivered mass is tallied in
                 // the same accumulation order and the affected rows are
                 // renormalized over it (degraded combine).
+                let s0 = obs.as_ref().map(|tr| tr.now_ns());
                 let t0 = Instant::now();
                 let ok = catch_unwind(AssertUnwindSafe(|| {
                     let d = j.d;
@@ -1972,6 +2162,19 @@ fn worker_loop(rx: Receiver<Job>) {
                     }
                 }))
                 .is_ok();
+                if let (Some(tr), Some(s0)) = (&obs, s0) {
+                    tr.ring(dev).push(Span {
+                        kind: SpanKind::Combine,
+                        step: tr.step_id(),
+                        shard: dev as u32,
+                        expert: NO_ID,
+                        chunk: NO_ID,
+                        replica: j.replica as u32,
+                        rows: j.rows as u32,
+                        start_ns: s0,
+                        dur_ns: tr.now_ns().saturating_sub(s0),
+                    });
+                }
                 let _ = j.reply.send(CombineReply {
                     replica: j.replica,
                     ok,

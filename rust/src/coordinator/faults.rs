@@ -270,6 +270,22 @@ pub struct FaultTally {
     pub renorm_mass_lost: f64,
 }
 
+impl FaultTally {
+    /// Publish into the unified registry under the shared `fault_*`
+    /// keys — the same series `StepStats::publish` and
+    /// `ServeStats::publish` feed, so per-step, per-run and serve-side
+    /// fault accounting all aggregate into one place.
+    pub fn publish(&self, reg: &mut crate::obs::Registry) {
+        reg.counter_add("fault_failed_chunks", self.failed_chunks as u64);
+        reg.counter_add(
+            "fault_redispatched_routes",
+            self.redispatched_routes as u64,
+        );
+        reg.counter_add("fault_degraded_tokens", self.degraded_tokens as u64);
+        reg.gauge_add("fault_renorm_mass_lost", self.renorm_mass_lost);
+    }
+}
+
 /// Renormalize one combined output row over its delivered gate mass:
 /// the degraded eq-1.  `mass` is the sum of the gates that actually
 /// contributed; zero delivered mass zeroes the row (every route lost).

@@ -86,6 +86,21 @@
 //! `(expert, retry_order, lo)` with re-dispatches keyed by their source
 //! route, which reproduces the oracle's per-destination-row f32
 //! sequence exactly.
+//!
+//! # Observability
+//!
+//! The engine optionally records structured spans — route / gather /
+//! compute / combine / retry / dispatch, tagged with
+//! `(step, shard, expert, chunk, replica)` — into per-worker lock-free
+//! rings ([`crate::obs::TraceShared`]), drained by the coordinator at
+//! each step's quiescence point and exportable as a Chrome trace
+//! (`repro trace`).  Tracing is off by default
+//! ([`crate::obs::ObsConfig`], `MOE_TRACE=1`), costs one branch per job
+//! when off, and is *bit-neutral* when on: it only reads clocks, never
+//! touching rng draws, accumulation order or scheduling
+//! (`rust/tests/obs.rs` proves outputs identical either way).
+//! [`scheduler::StepStats::publish`] feeds the same telemetry into the
+//! unified metrics registry ([`crate::obs::Registry`]).
 
 pub mod balance;
 pub mod dispatcher;

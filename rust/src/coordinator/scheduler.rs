@@ -46,6 +46,7 @@ use crate::coordinator::engine::{ExecutionEngine, StreamedStep};
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::router::{Router, RouterBackend};
 use crate::kernels::quant::QuantizedExpertWeights;
+use crate::obs::{key, ObsConfig, Registry, Span};
 use crate::runtime::{Executable, Host, TensorF};
 
 /// Which device owns which experts.
@@ -182,6 +183,20 @@ impl PhaseNanos {
             0.0
         } else {
             self.overlap_ns as f64 / total as f64
+        }
+    }
+
+    /// Publish the per-phase walls as `step_phase_ns{phase=...}`
+    /// counters (accumulating — publishing N steps sums them).
+    pub fn publish(&self, reg: &mut Registry) {
+        for (phase, ns) in [
+            ("route", self.route),
+            ("gather", self.gather),
+            ("compute", self.compute),
+            ("combine", self.combine),
+            ("overlap_hidden", self.overlap_ns),
+        ] {
+            reg.counter_add(&key("step_phase_ns", &[("phase", phase)]), ns);
         }
     }
 }
@@ -360,6 +375,52 @@ impl StepStats {
     pub fn combine_overlap_ratio(&self) -> f64 {
         self.phases.combine_overlap_ratio()
     }
+
+    /// Publish this step's telemetry into the unified registry
+    /// ([`crate::obs::Registry`]): phase walls, dispatch counters,
+    /// per-shard busy/idle, and the fault tally (under the same
+    /// `fault_*` keys [`crate::coordinator::faults::FaultTally`] uses,
+    /// so engine- and serve-side fault accounting aggregate into one
+    /// series).  Counters accumulate — publishing every step of a run
+    /// yields run totals.
+    pub fn publish(&self, reg: &mut Registry) {
+        self.phases.publish(reg);
+        reg.counter_add("step_waves", self.waves as u64);
+        reg.counter_add("step_network_bytes", self.network_bytes);
+        reg.counter_add("step_rerouted_routes", self.rerouted_routes as u64);
+        reg.counter_add("step_dropped_routes", self.dropped_routes as u64);
+        reg.counter_add(
+            "step_busiest_shard_tokens",
+            self.busiest_shard_tokens as u64,
+        );
+        reg.counter_add(
+            "step_combines_overlapped",
+            self.combines_overlapped as u64,
+        );
+        for (i, (&busy, &idle)) in self
+            .shard_compute_ns
+            .iter()
+            .zip(self.shard_idle_ns.iter())
+            .enumerate()
+        {
+            let shard = i.to_string();
+            reg.counter_add(
+                &key("step_shard_compute_ns", &[("shard", &shard)]),
+                busy,
+            );
+            reg.counter_add(
+                &key("step_shard_idle_ns", &[("shard", &shard)]),
+                idle,
+            );
+        }
+        reg.counter_add("fault_failed_chunks", self.failed_chunks as u64);
+        reg.counter_add(
+            "fault_redispatched_routes",
+            self.redispatched_routes as u64,
+        );
+        reg.counter_add("fault_degraded_tokens", self.degraded_tokens as u64);
+        reg.gauge_add("fault_renorm_mass_lost", self.renorm_mass_lost);
+    }
 }
 
 /// Waves needed for the given loads at `capacity` tokens per wave:
@@ -428,6 +489,9 @@ pub struct Scheduler {
     /// deterministic fault-injection schedule handed to the engine when
     /// it starts (`None` = no faults)
     fault_plan: Option<FaultPlan>,
+    /// observability switches handed to the engine when it starts
+    /// (defaults to the environment — `MOE_TRACE`)
+    obs: ObsConfig,
     /// Persistent execution engine, started on first use and reused for
     /// every subsequent step (no per-step thread spawn).
     engine: Mutex<Option<ExecutionEngine>>,
@@ -452,6 +516,7 @@ impl Scheduler {
             dispatch_capacity: None,
             residual: ResidualPolicy::default(),
             fault_plan: None,
+            obs: ObsConfig::from_env(),
             engine: Mutex::new(None),
         }
     }
@@ -484,6 +549,36 @@ impl Scheduler {
         self
     }
 
+    /// Set the observability switches explicitly (overriding the
+    /// `MOE_TRACE` environment default).  Must be set before the first
+    /// step — the engine spawns its workers with or without trace
+    /// rings.
+    pub fn with_obs(mut self, obs: ObsConfig) -> Self {
+        self.obs = obs;
+        self
+    }
+
+    /// Whether steps through this scheduler record trace spans.
+    pub fn tracing_enabled(&self) -> bool {
+        self.obs.tracing
+    }
+
+    /// Drain the spans recorded by completed steps, in drain order
+    /// (empty when tracing is off or no traced step ran yet) — the feed
+    /// for [`crate::obs::chrome_trace_json`].
+    pub fn take_spans(&self) -> Vec<Span> {
+        self.with_engine(|engine| Ok(engine.take_spans()))
+            .unwrap_or_default()
+    }
+
+    /// Spans lost to full rings since the engine started (0 when
+    /// tracing is off) — nonzero means [`ObsConfig::ring_capacity`] is
+    /// too small for the step size.
+    pub fn trace_dropped(&self) -> u64 {
+        self.with_engine(|engine| Ok(engine.trace_dropped()))
+            .unwrap_or(0)
+    }
+
     /// Fraction of shards still live at the engine's current fault step
     /// (1.0 without a fault plan) — the serve loop's health signal.
     pub fn live_fraction(&self) -> f64 {
@@ -514,9 +609,10 @@ impl Scheduler {
             .lock()
             .unwrap_or_else(|poison| poison.into_inner());
         let engine = guard.get_or_insert_with(|| {
-            ExecutionEngine::with_policy(
+            ExecutionEngine::with_policy_obs(
                 self.layout.clone(),
                 self.policy.clone(),
+                self.obs.clone(),
             )
             .with_dispatch_capacity(self.dispatch_capacity)
             .with_residual_policy(self.residual)

@@ -225,6 +225,27 @@ impl ChaosPoint {
     pub fn conserved(&self) -> bool {
         self.offered == self.completed + self.shed + self.failed
     }
+
+    /// Publish the point into the unified registry, reusing the same
+    /// `serve_*` / `fault_*` keys the serve loop and step executor
+    /// publish under so one snapshot format covers the chaos sweep
+    /// too; `chaos_live_fraction` is the sweep-only gauge (surviving
+    /// shard capacity after the last step).
+    pub fn publish(&self, reg: &mut crate::obs::Registry) {
+        reg.counter_add("serve_offered", self.offered);
+        reg.counter_add("serve_completed", self.completed);
+        reg.counter_add("serve_shed", self.shed);
+        reg.counter_add("serve_failed", self.failed);
+        reg.counter_add("serve_retried", self.retried);
+        reg.counter_add("fault_failed_chunks", self.failed_chunks as u64);
+        reg.counter_add(
+            "fault_redispatched_routes",
+            self.redispatched_routes as u64,
+        );
+        reg.counter_add("fault_degraded_tokens", self.degraded_tokens as u64);
+        reg.gauge_add("fault_renorm_mass_lost", self.renorm_mass_lost);
+        reg.gauge_set("chaos_live_fraction", self.live_fraction);
+    }
 }
 
 /// Run `steps` engine steps plus one serve burst for a configuration.
@@ -265,6 +286,7 @@ pub fn run_point(
     }
     p.live_fraction = sim.sched.live_fraction();
     let report = sim.serve_burst(requests)?;
+    p.offered = report.stats.offered;
     p.completed = report.stats.completed;
     p.shed = report.stats.shed;
     p.failed = report.stats.failed;
@@ -413,6 +435,18 @@ mod tests {
         assert!(p.all_finite);
         assert!(p.conserved());
         assert_eq!(p.completed + p.shed, p.offered);
+        // the registry view carries the same ledger
+        let mut reg = crate::obs::Registry::new();
+        p.publish(&mut reg);
+        let s = reg.snapshot();
+        assert_eq!(s.counter("serve_offered"), p.offered);
+        assert_eq!(
+            s.counter("serve_offered"),
+            s.counter("serve_completed")
+                + s.counter("serve_shed")
+                + s.counter("serve_failed")
+        );
+        assert_eq!(s.gauge("chaos_live_fraction"), 1.0);
     }
 
     #[test]

@@ -100,6 +100,31 @@ impl ClusterPoint {
     pub fn tokens_per_sec(&self) -> f64 {
         self.tokens as f64 / self.timing.total().max(1e-12)
     }
+
+    /// Publish the point's traffic and routing tallies into the unified
+    /// registry: per-link bytes under one labelled family
+    /// (`cluster_link_bytes{link=...}`) so a Prometheus scrape of the
+    /// scaling study sums/splits the §3.2 story the same way the table
+    /// renders it, plus the capacity-drop counters the step executor
+    /// also publishes (`step_dropped_routes` / `step_rerouted_routes`).
+    pub fn publish(&self, reg: &mut crate::obs::Registry) {
+        use crate::obs::key;
+        for (link, bytes) in [
+            ("intra_host", self.intra_host_bytes),
+            ("inter_host", self.inter_host_bytes),
+            ("local", self.local_bytes),
+        ] {
+            reg.counter_add(
+                &key("cluster_link_bytes", &[("link", link)]),
+                bytes,
+            );
+        }
+        reg.counter_add("cluster_messages", self.messages);
+        reg.counter_add("step_network_bytes", self.interconnect_bytes);
+        reg.counter_add("step_dropped_routes", self.dropped_routes as u64);
+        reg.counter_add("step_rerouted_routes", self.rerouted_routes as u64);
+        reg.gauge_set("cluster_tokens_per_sec", self.tokens_per_sec());
+    }
 }
 
 impl ClusterSim {
@@ -342,6 +367,22 @@ mod tests {
         // 4 devices on one host: nothing crosses the fabric
         assert_eq!(p.n_hosts, 1);
         assert_eq!(p.inter_host_bytes, 0);
+        // the registry view splits the same bytes by link label
+        let mut reg = crate::obs::Registry::new();
+        p.publish(&mut reg);
+        let s = reg.snapshot();
+        let link = |l: &str| {
+            s.counter(&crate::obs::key("cluster_link_bytes", &[("link", l)]))
+        };
+        assert_eq!(link("intra_host"), p.intra_host_bytes);
+        assert_eq!(link("inter_host"), 0);
+        assert_eq!(link("local"), p.local_bytes);
+        assert_eq!(
+            link("intra_host") + link("inter_host"),
+            s.counter("step_network_bytes"),
+            "per-link split must sum to the corrected interconnect total"
+        );
+        assert!(s.gauge("cluster_tokens_per_sec") > 0.0);
     }
 
     #[test]

@@ -250,6 +250,7 @@ pub fn measured_engine_report(devices: usize, tokens: usize) -> Result<()> {
     );
     work.run_streamed(&sched, None)?; // warm the engine + arenas
     let phase_line = crate::harness::workload::phase_line;
+    let streamed_stats;
     {
         let t0 = std::time::Instant::now();
         let s = work.run_streamed(&sched, None)?;
@@ -259,6 +260,7 @@ pub fn measured_engine_report(devices: usize, tokens: usize) -> Result<()> {
             t0.elapsed().as_secs_f64() * 1e3,
             phase_line(&s.stats),
         );
+        streamed_stats = s.stats.clone();
     }
     {
         let t0 = std::time::Instant::now();
@@ -280,6 +282,12 @@ pub fn measured_engine_report(devices: usize, tokens: usize) -> Result<()> {
             phase_line(&stats),
         );
     }
+    // the same streamed-row numbers as a unified-registry snapshot —
+    // the machine-readable form every console line above renders from
+    // (and what `repro trace` / the Prometheus export serialise)
+    let mut reg = crate::obs::Registry::new();
+    streamed_stats.publish(&mut reg);
+    println!("registry snapshot: {}", reg.snapshot().to_json().trim_end());
     Ok(())
 }
 

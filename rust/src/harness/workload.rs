@@ -163,45 +163,95 @@ impl SyntheticMoe {
 
 /// The route/gather/compute/combine fragment shared by every phase
 /// report ([`phase_line`], [`serve_phase_line`]) so the rendering lives
-/// in exactly one place.  `combine` is the critical-path tail; the
-/// parenthesised hidden time is combine work the executor ran under
-/// expert compute (`overlap` = fraction of combine hidden).
-fn phase_fragment(p: &crate::coordinator::PhaseNanos) -> String {
-    let overlap_pct = p.combine_overlap_ratio() * 100.0;
+/// in exactly one place.  Reads the `step_phase_ns{phase=...}` counters
+/// `PhaseNanos::publish` writes, so any registry snapshot — one step's
+/// or a whole run's — renders the same way.  `combine` is the
+/// critical-path tail; the parenthesised hidden time is combine work
+/// the executor ran under expert compute (`overlap` = fraction of
+/// combine hidden).
+fn phase_fragment(s: &crate::obs::Snapshot) -> String {
+    let phase =
+        |p: &str| s.counter(&crate::obs::key("step_phase_ns", &[("phase", p)]));
+    let (combine, hidden) = (phase("combine"), phase("overlap_hidden"));
+    let overlap_pct = if hidden + combine == 0 {
+        0.0
+    } else {
+        hidden as f64 / (hidden + combine) as f64 * 100.0
+    };
     format!(
         "route {:.3}ms  gather {:.3}ms  compute {:.3}ms  combine {:.3}ms \
          (+{:.3}ms hidden, overlap {overlap_pct:.0}%)",
-        p.route as f64 / 1e6,
-        p.gather as f64 / 1e6,
-        p.compute as f64 / 1e6,
-        p.combine as f64 / 1e6,
-        p.overlap_ns as f64 / 1e6,
+        phase("route") as f64 / 1e6,
+        phase("gather") as f64 / 1e6,
+        phase("compute") as f64 / 1e6,
+        combine as f64 / 1e6,
+        hidden as f64 / 1e6,
     )
 }
 
+/// Max per-shard idle out of the `step_shard_idle_ns{shard=...}`
+/// counters of a snapshot (0 when no shard published).
+fn max_shard_idle_ns(s: &crate::obs::Snapshot) -> u64 {
+    s.counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("step_shard_idle_ns{"))
+        .map(|&(_, v)| v)
+        .max()
+        .unwrap_or(0)
+}
+
 /// One-line rendering of a step's per-phase breakdown (benches,
-/// efficiency report, quickstart — all through here).
+/// efficiency report, quickstart — all through here).  A renderer over
+/// the unified registry: publishes `stats` into a fresh registry and
+/// formats via [`render_phase_line`].
 pub fn phase_line(stats: &StepStats) -> String {
+    let mut reg = crate::obs::Registry::new();
+    stats.publish(&mut reg);
+    render_phase_line(&reg.snapshot())
+}
+
+/// Format the step-phase report from a registry snapshot (the `step_*`
+/// keys `StepStats::publish` writes).
+pub fn render_phase_line(s: &crate::obs::Snapshot) -> String {
     format!(
         "{}  waves={}  busiest_shard={} tok  max shard idle {:.3}ms",
-        phase_fragment(&stats.phases),
-        stats.waves,
-        stats.busiest_shard_tokens,
-        stats.shard_idle_ns.iter().copied().max().unwrap_or(0) as f64 / 1e6,
+        phase_fragment(s),
+        s.counter("step_waves"),
+        s.counter("step_busiest_shard_tokens"),
+        max_shard_idle_ns(s) as f64 / 1e6,
     )
 }
 
 /// The serving variant of [`phase_line`]: the same phase fragment
 /// (summed over every dispatched batch) prefixed with the queue-wait
 /// column the serve path adds in front of the engine, plus batching
-/// telemetry.
+/// telemetry.  Publishes into a fresh registry and formats via
+/// [`render_serve_phase_line`].
 pub fn serve_phase_line(stats: &crate::serve::ServeStats) -> String {
+    let mut reg = crate::obs::Registry::new();
+    stats.publish(&mut reg);
+    render_serve_phase_line(&reg.snapshot())
+}
+
+/// Format the serve-phase report from a registry snapshot (the keys
+/// `ServeStats::publish` writes).
+pub fn render_serve_phase_line(s: &crate::obs::Snapshot) -> String {
+    let queue_p50 = s
+        .hist("serve_queue_wait_ns")
+        .map(|h| h.p50_ns)
+        .unwrap_or(0);
+    let cap = s.counter("serve_batch_capacity");
+    let occupancy = if cap == 0 {
+        0.0
+    } else {
+        s.counter("serve_batch_tokens") as f64 / cap as f64
+    };
     format!(
         "queue p50 {:.3}ms  {}  batches={}  occupancy {:.0}%",
-        stats.queue_wait.percentile(0.5) as f64 / 1e6,
-        phase_fragment(&stats.phases),
-        stats.batches,
-        stats.batch_occupancy() * 100.0,
+        queue_p50 as f64 / 1e6,
+        phase_fragment(s),
+        s.counter("serve_batches"),
+        occupancy * 100.0,
     )
 }
 
@@ -296,6 +346,17 @@ impl ServeHarness {
     /// d=32) behind a 64-deep queue batching up to 256 tokens under a
     /// 0.5ms latency budget.
     pub fn build(seed: u64, devices: usize) -> Result<Self> {
+        Self::build_with_obs(seed, devices, crate::obs::ObsConfig::from_env())
+    }
+
+    /// [`build`](Self::build) with an explicit observability config —
+    /// `repro trace` and `rust/tests/obs.rs` turn span recording on
+    /// here regardless of `MOE_TRACE`.
+    pub fn build_with_obs(
+        seed: u64,
+        devices: usize,
+        obs: crate::obs::ObsConfig,
+    ) -> Result<Self> {
         let (d, h, n, k) = (32, 128, 16, 2);
         let devices = devices.max(1);
         let work = SyntheticMoe::build(seed, d, h, n, k, 1, 8)?;
@@ -308,7 +369,8 @@ impl ServeHarness {
         let sched = Scheduler::new(
             ShardLayout::new(devices, n),
             ExpertBackend::Native,
-        );
+        )
+        .with_obs(obs);
         Ok(ServeHarness {
             serve: ServeLoop::new(sched, work.router, work.weights, cfg)?,
             d_model: d,
@@ -392,6 +454,75 @@ pub fn serve_load_curve(
         );
         println!("  {}", serve_phase_line(&report.stats));
     }
+    Ok(())
+}
+
+/// `repro trace`: run one traced streamed step plus one traced serve
+/// burst, merge both span streams into a single Chrome trace-event file
+/// (`out`, loadable in `chrome://tracing` or Perfetto), and print the
+/// unified registry snapshot both ways (JSON + Prometheus text).
+pub fn trace_report(
+    devices: usize,
+    tokens: usize,
+    requests: usize,
+    seed: u64,
+    out: &str,
+) -> Result<()> {
+    use crate::obs::{push_chrome_events, ObsConfig, Registry};
+
+    let devices = devices.max(1);
+    let mut reg = Registry::new();
+    let mut events = Vec::new();
+
+    // one streamed step, span recording on (engine workers + coordinator)
+    let (d, h, n, k) = (64usize, 128usize, 64.max(devices), 4usize);
+    let rows = (tokens / devices).max(1);
+    let work = SyntheticMoe::build(seed, d, h, n, k, devices, rows)?;
+    let sched =
+        Scheduler::new(ShardLayout::new(devices, n), ExpertBackend::Native)
+            .with_obs(ObsConfig::enabled());
+    let s = work.run_streamed(&sched, None)?;
+    s.stats.publish(&mut reg);
+    let step_spans = sched.take_spans();
+    anyhow::ensure!(!step_spans.is_empty(), "traced step recorded no spans");
+    push_chrome_events(&mut events, &step_spans, 0, "streamed step", devices);
+    println!(
+        "streamed step: {:>5} spans  {}",
+        step_spans.len(),
+        phase_line(&s.stats)
+    );
+
+    // a serve burst on the shared serving stack, span recording on
+    let harness =
+        ServeHarness::build_with_obs(seed, devices, ObsConfig::enabled())?;
+    let trace =
+        harness.trace(seed ^ 0x77ace, 2_000.0, requests, false, seed ^ 1);
+    let report = harness.serve.run_trace(&trace)?;
+    report.stats.publish(&mut reg);
+    let serve_spans = harness.serve.take_spans();
+    anyhow::ensure!(
+        !serve_spans.is_empty(),
+        "traced serve run recorded no spans"
+    );
+    push_chrome_events(&mut events, &serve_spans, 1, "serve", devices);
+    println!(
+        "serve burst:   {:>5} spans  {}",
+        serve_spans.len(),
+        report.stats.summary_line()
+    );
+
+    let json = format!("{{\"traceEvents\": [{}]}}\n", events.join(", "));
+    std::fs::write(out, &json)?;
+    println!(
+        "wrote {out} ({} events) — open in chrome://tracing or \
+         https://ui.perfetto.dev",
+        events.len()
+    );
+    let snap = reg.snapshot();
+    println!("--- registry snapshot (json) ---");
+    println!("{}", snap.to_json().trim_end());
+    println!("--- registry snapshot (prometheus) ---");
+    print!("{}", snap.to_prometheus());
     Ok(())
 }
 

@@ -89,6 +89,23 @@
 //! [`serve::ServeConfig`]`::precision` —
 //! [`kernels::quant::Precision::Int8`].
 //!
+//! ## Observability
+//!
+//! [`obs`] is the cross-cutting telemetry layer: per-worker lock-free
+//! span rings record route/gather/compute/combine/retry intervals with
+//! (step, shard, expert, chunk, replica) identity, drained by the
+//! coordinator at step-end quiescence and exported as Chrome
+//! trace-event JSON (`repro trace` → `trace.json`, loadable in
+//! Perfetto); a unified [`obs::Registry`] of typed
+//! counters/gauges/histograms receives every stats producer
+//! ([`coordinator::StepStats`], [`serve::ServeStats`],
+//! fault/capacity/cluster counters) and renders one snapshot as JSON or
+//! Prometheus-style text.  Tracing is off by default (`MOE_TRACE=1` or
+//! [`obs::ObsConfig`] enables it), costs one branch per job when off,
+//! and is bit-neutral when on — `rust/tests/obs.rs` proves traced runs
+//! bit-identical to untraced; `benches/obs.rs` → `BENCH_obs.json`
+//! budgets the enabled overhead below 5%.
+//!
 //! The `xla` dependency is a vendored API-compatible stub by default
 //! (see `vendor/xla`); artifact-backed paths report "PJRT unavailable"
 //! until the real bindings are swapped in, while every Native path —
@@ -103,6 +120,7 @@ pub mod harness;
 pub mod kernels;
 pub mod metrics;
 pub mod ngram;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod train;

@@ -10,6 +10,7 @@
 //! repro cluster --rows 8 [--seed S]
 //! repro chaos --rows 8 [--seed S]
 //! repro serve --devices 4 --requests 400
+//! repro trace --out trace.json
 //! repro info
 //! ```
 //!
@@ -80,6 +81,10 @@ fn usage() -> ! {
                         injection sweep: rates x recovery policies + shard\n\
                         deaths, proving liveness and conservation)\n\
            serve        [--devices D] [--requests N] [--seed S]\n\
+           trace        [--devices D] [--tokens N] [--requests N] [--seed S]\n\
+                        [--out PATH]   (one traced streamed step + one traced\n\
+                        serve burst -> Chrome trace JSON for Perfetto, plus\n\
+                        the registry snapshot as JSON and Prometheus text)\n\
            info\n\
          common flags: --artifacts DIR (default: artifacts)"
     );
@@ -209,6 +214,21 @@ fn main() -> Result<()> {
                 devices,
                 &[0.3, 1.0, 3.0],
                 requests,
+            )?;
+        }
+        "trace" => {
+            // artifact-free: span recording on for one streamed engine
+            // step and one serve burst; outputs stay bit-identical to
+            // untraced runs (tracing only reads clocks) while the
+            // workers' route/compute/combine timelines land in a
+            // Perfetto-loadable trace file
+            let devices = args.get_u64("devices", 4)? as usize;
+            let tokens = args.get_u64("tokens", 2048)? as usize;
+            let requests = args.get_u64("requests", 64)? as usize;
+            let seed = args.get_u64("seed", 17)?;
+            let out = args.get("out", "trace.json");
+            moe::harness::workload::trace_report(
+                devices, tokens, requests, seed, &out,
             )?;
         }
         "info" => {

@@ -4,6 +4,15 @@
 //! coefficient-of-variation balance stats (Table 6), BLEU is in
 //! [`crate::translate::bleu`], and the FLOP accounting used for the
 //! ops/timestep and TFLOPS/GPU columns (Tables 1, 7, 8).
+//!
+//! These are *evaluation* metrics, computed at reporting time from
+//! model outputs.  Runtime telemetry — step phases, serve SLOs, fault
+//! and traffic counters — lives in the unified registry instead
+//! ([`crate::obs::Registry`]): producers publish typed
+//! counters/gauges/histograms and every export (console line, JSON
+//! snapshot, Prometheus text) renders from one snapshot.  Accumulators
+//! here (e.g. [`Running`]) feed evaluation summaries; registry gauges
+//! hold whatever scalar a run wants exported.
 
 use crate::runtime::ModelConfig;
 
@@ -23,12 +32,23 @@ pub fn max_over_mean(v: &[f32]) -> f32 {
 }
 
 /// Simple online mean/min/max accumulator for step metrics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Running {
     pub n: usize,
     pub sum: f64,
     pub min: f64,
     pub max: f64,
+}
+
+/// Must match [`new`](Running::new): the derived impl used to start
+/// `min`/`max` at 0.0, so a `Running::default()` that only ever saw
+/// positive samples reported `min == 0.0` (and negative-only samples
+/// reported `max == 0.0`) — the ±infinity identities are what make the
+/// first `push` win unconditionally.
+impl Default for Running {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Running {
@@ -128,6 +148,29 @@ mod tests {
         assert_eq!(r.mean(), 3.0);
         assert_eq!(r.min, 1.0);
         assert_eq!(r.max, 6.0);
+    }
+
+    #[test]
+    fn default_matches_new_so_first_push_wins_min_and_max() {
+        // regression: the derived Default started min/max at 0.0, so a
+        // defaulted accumulator fed only positive samples reported
+        // min == 0.0 (a value it never saw)
+        let mut d = Running::default();
+        for v in [3.0, 5.0] {
+            d.push(v);
+        }
+        assert_eq!(d.min, 3.0);
+        assert_eq!(d.max, 5.0);
+        let mut neg = Running::default();
+        neg.push(-2.0);
+        assert_eq!(neg.max, -2.0);
+        assert_eq!(neg.min, -2.0);
+        // and the empty default is identical to the empty new()
+        let (a, b) = (Running::default(), Running::new());
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.sum, b.sum);
+        assert_eq!(a.min, b.min);
+        assert_eq!(a.max, b.max);
     }
 
     #[test]

@@ -1,0 +1,81 @@
+//! Observability: structured tracing + the unified metrics registry.
+//!
+//! Two halves, one contract:
+//!
+//! - [`trace`] — per-worker lock-free span rings ([`SpanRing`]) the
+//!   engine's shard workers record route / gather / compute / combine /
+//!   retry intervals into, drained by the coordinator at step-end
+//!   quiescence and exportable as Chrome trace-event JSON
+//!   ([`chrome_trace_json`], `repro trace` → `trace.json`, loadable in
+//!   Perfetto).  Zero-cost when disabled (the engine holds
+//!   `Option<Arc<TraceShared>>` — one branch per job when `None`) and
+//!   **bit-neutral** when enabled: recording reads clocks and writes
+//!   rings, nothing else, so traced outputs are bit-identical to
+//!   untraced ones (`rust/tests/obs.rs`).
+//! - [`registry`] — typed counters / gauges / histograms every stats
+//!   producer publishes into (`StepStats::publish`,
+//!   `ServeStats::publish`, `FaultTally::publish`, chaos and cluster
+//!   points), with one snapshot format rendered as JSON or
+//!   Prometheus-style text.  The console reporters (`phase_line`,
+//!   `serve_phase_line`, `summary_line`) are renderers over
+//!   [`Snapshot`]s, so console, JSON and exposition always agree.
+//!
+//! [`ObsConfig`] gates both: constructed explicitly
+//! (`Scheduler::with_obs`) or from the environment
+//! ([`ObsConfig::from_env`], `MOE_TRACE=1`).  The enabled-vs-disabled
+//! overhead is measured in `benches/obs.rs` → `BENCH_obs.json` and
+//! budgeted at < 5% in CI.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{key, HistSummary, Registry, Snapshot};
+pub use trace::{
+    chrome_trace_json, push_chrome_events, Span, SpanKind, SpanRing,
+    TraceShared, NO_ID,
+};
+
+/// Observability switches, fixed at engine start (the workers are
+/// spawned with or without ring handles).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// record spans (default off — tracing is opt-in per engine)
+    pub tracing: bool,
+    /// per-worker ring capacity in spans; a full ring drops (counted)
+    pub ring_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { tracing: false, ring_capacity: 8192 }
+    }
+}
+
+impl ObsConfig {
+    /// Tracing on with default ring sizing.
+    pub fn enabled() -> Self {
+        ObsConfig { tracing: true, ..Default::default() }
+    }
+
+    /// `MOE_TRACE` set (and not `0`/empty) turns tracing on — the
+    /// ambient default every `Scheduler` starts from, so any demo or
+    /// bench can be traced without code changes.
+    pub fn from_env() -> Self {
+        let tracing = std::env::var("MOE_TRACE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        ObsConfig { tracing, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off_and_enabled_is_on() {
+        assert!(!ObsConfig::default().tracing);
+        assert!(ObsConfig::enabled().tracing);
+        assert!(ObsConfig::default().ring_capacity >= 2);
+    }
+}

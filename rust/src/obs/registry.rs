@@ -1,0 +1,367 @@
+//! Unified metrics registry: typed counters / gauges / histograms with
+//! one snapshot format.
+//!
+//! Every telemetry producer in the repo — `StepStats`, `ServeStats`,
+//! `FaultTally`, chaos points, per-link cluster traffic — publishes
+//! into a [`Registry`] through a `publish(&self, &mut Registry)`
+//! method, and every human-facing report (`phase_line`,
+//! `serve_phase_line`, `ServeStats::summary_line`) renders from the
+//! resulting [`Snapshot`] rather than reaching into ad-hoc struct
+//! fields.  That makes the registry the single source of truth: the
+//! same numbers feed the console lines, the JSON snapshot
+//! ([`Snapshot::to_json`], parseable by `crate::util::json`) and the
+//! Prometheus-style text exposition ([`Snapshot::to_prometheus`]).
+//!
+//! Metric identity is a canonical key built by [`key`]:
+//! `name{label="value",...}` with caller-ordered labels — the same
+//! string in both export formats, so a metric seen in the console can
+//! be grepped verbatim in the exposition.
+
+use std::collections::BTreeMap;
+
+use crate::util::bench::Histogram;
+
+/// Canonical metric key: `name` alone, or `name{k="v",k2="v2"}`.
+/// Labels render in the order given — callers keep them sorted so
+/// equal metrics always share one key.
+pub fn key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let inner = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("{name}{{{inner}}}")
+}
+
+/// Insert one more label into an existing canonical key (used by the
+/// Prometheus renderer to add `quantile` to histogram keys).
+fn with_label(k: &str, label: &str, value: &str) -> String {
+    match k.strip_suffix('}') {
+        Some(head) => format!("{head},{label}=\"{value}\"}}"),
+        None => format!("{k}{{{label}=\"{value}\"}}"),
+    }
+}
+
+/// Base metric name of a canonical key (everything before `{`).
+fn base(k: &str) -> &str {
+    k.split('{').next().unwrap_or(k)
+}
+
+/// Typed metric store.  Counters are monotonic `u64` sums, gauges are
+/// last-write-wins `f64` (with an additive variant for mass-style
+/// values), histograms are exact nanosecond sample sets
+/// ([`crate::util::bench::Histogram`] — same nearest-rank percentile
+/// convention as the bench harness and `ServeStats`).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter_add(&mut self, key: &str, v: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&mut self, key: &str, v: f64) {
+        self.gauges.insert(key.to_string(), v);
+    }
+
+    pub fn gauge_add(&mut self, key: &str, v: f64) {
+        *self.gauges.entry(key.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Record one nanosecond sample into the named histogram.
+    pub fn observe_ns(&mut self, key: &str, ns: u64) {
+        self.hists.entry(key.to_string()).or_default().push(ns);
+    }
+
+    /// Merge a whole pre-accumulated histogram (e.g. a `ServeStats`
+    /// latency histogram) into the named one, sample for sample.
+    pub fn merge_hist(&mut self, key: &str, h: &Histogram) {
+        self.hists.entry(key.to_string()).or_default().merge(h);
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, key: &str) -> f64 {
+        self.gauges.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Freeze the current values into an immutable, sorted snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), v))
+                .collect(),
+            gauges: self
+                .gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), v))
+                .collect(),
+            hists: self
+                .hists
+                .iter()
+                .map(|(k, h)| {
+                    let q = h.percentiles(&[0.5, 0.95, 0.99]);
+                    (
+                        k.clone(),
+                        HistSummary {
+                            count: h.count() as u64,
+                            mean_ns: h.mean_ns(),
+                            p50_ns: q[0],
+                            p95_ns: q[1],
+                            p99_ns: q[2],
+                            max_ns: h.max_ns(),
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Percentile summary of one histogram at snapshot time (nearest-rank,
+/// matching [`Histogram::percentile`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+/// An immutable, key-sorted view of a [`Registry`] — what renderers
+/// format and exporters serialize.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistSummary)>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, key: &str) -> u64 {
+        match self.counters.binary_search_by(|(k, _)| k.as_str().cmp(key)) {
+            Ok(i) => self.counters[i].1,
+            Err(_) => 0,
+        }
+    }
+
+    pub fn gauge(&self, key: &str) -> f64 {
+        match self.gauges.binary_search_by(|(k, _)| k.as_str().cmp(key)) {
+            Ok(i) => self.gauges[i].1,
+            Err(_) => 0.0,
+        }
+    }
+
+    pub fn hist(&self, key: &str) -> Option<&HistSummary> {
+        self.hists
+            .binary_search_by(|(k, _)| k.as_str().cmp(key))
+            .ok()
+            .map(|i| &self.hists[i].1)
+    }
+
+    /// JSON document — exactly the dialect `crate::util::json` parses
+    /// (round-trip asserted in tests):
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+    pub fn to_json(&self) -> String {
+        use crate::util::bench::{json_num, json_str};
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| format!("{}: {v}", json_str(k)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(k, v)| format!("{}: {}", json_str(k), json_num(*v)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                format!(
+                    "{}: {{\"count\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \
+                     \"p95_ns\": {}, \"p99_ns\": {}, \"max_ns\": {}}}",
+                    json_str(k),
+                    h.count,
+                    h.mean_ns,
+                    h.p50_ns,
+                    h.p95_ns,
+                    h.p99_ns,
+                    h.max_ns
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "{{\"counters\": {{{counters}}}, \"gauges\": {{{gauges}}}, \
+             \"histograms\": {{{hists}}}}}\n"
+        )
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` comments per base
+    /// name, histograms as summary quantiles plus `_count` / `_max_ns`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last = String::new();
+        for (k, v) in &self.counters {
+            if base(k) != last {
+                last = base(k).to_string();
+                out.push_str(&format!("# TYPE {last} counter\n"));
+            }
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        last.clear();
+        for (k, v) in &self.gauges {
+            if base(k) != last {
+                last = base(k).to_string();
+                out.push_str(&format!("# TYPE {last} gauge\n"));
+            }
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            out.push_str(&format!("# TYPE {} summary\n", base(k)));
+            for (q, v) in [
+                ("0.5", h.p50_ns),
+                ("0.95", h.p95_ns),
+                ("0.99", h.p99_ns),
+            ] {
+                out.push_str(&format!(
+                    "{} {v}\n",
+                    with_label(k, "quantile", q)
+                ));
+            }
+            out.push_str(&format!("{}_count {}\n", base(k), h.count));
+            out.push_str(&format!("{}_max_ns {}\n", base(k), h.max_ns));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_canonical() {
+        assert_eq!(key("moe_waves", &[]), "moe_waves");
+        assert_eq!(
+            key("link_bytes", &[("link", "inter_host"), ("tier", "2")]),
+            "link_bytes{link=\"inter_host\",tier=\"2\"}"
+        );
+        assert_eq!(
+            with_label("x{a=\"b\"}", "quantile", "0.5"),
+            "x{a=\"b\",quantile=\"0.5\"}"
+        );
+        assert_eq!(with_label("x", "quantile", "0.5"), "x{quantile=\"0.5\"}");
+    }
+
+    #[test]
+    fn counters_gauges_hists_round_trip_through_snapshot() {
+        let mut r = Registry::new();
+        r.counter_add("served", 3);
+        r.counter_add("served", 4);
+        r.counter_add(&key("link_bytes", &[("link", "local")]), 100);
+        r.gauge_set("live_fraction", 0.75);
+        r.gauge_add("mass", 0.5);
+        r.gauge_add("mass", 0.25);
+        for ns in [10u64, 20, 30, 40, 50] {
+            r.observe_ns("lat_ns", ns);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.counter("served"), 7);
+        assert_eq!(s.counter("link_bytes{link=\"local\"}"), 100);
+        assert_eq!(s.counter("missing"), 0);
+        assert_eq!(s.gauge("live_fraction"), 0.75);
+        assert_eq!(s.gauge("mass"), 0.75);
+        let h = s.hist("lat_ns").unwrap();
+        assert_eq!(h.count, 5);
+        assert_eq!(h.p50_ns, 30);
+        assert_eq!(h.max_ns, 50);
+        assert!(h.p50_ns <= h.p95_ns && h.p95_ns <= h.p99_ns);
+        assert!(s.hist("missing").is_none());
+    }
+
+    #[test]
+    fn merge_hist_is_sample_exact() {
+        let mut h = Histogram::new();
+        for ns in [5u64, 15, 25] {
+            h.push(ns);
+        }
+        let mut r = Registry::new();
+        r.observe_ns("lat_ns", 35);
+        r.merge_hist("lat_ns", &h);
+        let s = r.snapshot();
+        assert_eq!(s.hist("lat_ns").unwrap().count, 4);
+        assert_eq!(s.hist("lat_ns").unwrap().max_ns, 35);
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_preserves_values() {
+        let mut r = Registry::new();
+        r.counter_add("serve_completed", 12);
+        r.gauge_set("live_fraction", 0.5);
+        r.observe_ns("serve_total_ns", 1000);
+        let doc = r.snapshot().to_json();
+        let v = crate::util::json::parse(&doc).unwrap();
+        assert_eq!(
+            v.get("counters")
+                .unwrap()
+                .get("serve_completed")
+                .unwrap()
+                .as_usize(),
+            Some(12)
+        );
+        assert_eq!(
+            v.get("gauges").unwrap().get("live_fraction").unwrap().as_f64(),
+            Some(0.5)
+        );
+        let h = v.get("histograms").unwrap().get("serve_total_ns").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(h.get("p50_ns").unwrap().as_usize(), Some(1000));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let mut r = Registry::new();
+        r.counter_add(&key("link_bytes", &[("link", "local")]), 9);
+        r.counter_add(&key("link_bytes", &[("link", "xhost")]), 4);
+        r.gauge_set("live_fraction", 1.0);
+        r.observe_ns("lat_ns", 7);
+        let text = r.snapshot().to_prometheus();
+        // one TYPE line per base name, not per labeled series
+        assert_eq!(text.matches("# TYPE link_bytes counter").count(), 1);
+        assert!(text.contains("link_bytes{link=\"local\"} 9\n"));
+        assert!(text.contains("link_bytes{link=\"xhost\"} 4\n"));
+        assert!(text.contains("# TYPE live_fraction gauge\n"));
+        assert!(text.contains("live_fraction 1\n"));
+        assert!(text.contains("# TYPE lat_ns summary\n"));
+        assert!(text.contains("lat_ns{quantile=\"0.5\"} 7\n"));
+        assert!(text.contains("lat_ns_count 1\n"));
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE ")
+                    || line.split(' ').count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! Structured tracing: per-worker lock-free span rings + Chrome export.
+//!
+//! Every instrumented site records a [`Span`] — a fixed-size `Copy`
+//! record carrying the full (step, shard, expert, chunk, replica)
+//! identity plus wall-clock start/duration — into a single-producer
+//! ring owned by that worker thread ([`SpanRing`]).  The coordinator
+//! drains all rings after each step, at quiescence (the engine's drain
+//! guards guarantee every worker has replied before the step returns),
+//! so the hot path never takes a lock and never allocates: a push is
+//! two atomic loads, one slot write and one atomic store.  A full ring
+//! drops the span and counts it ([`SpanRing::dropped`]) rather than
+//! blocking — tracing must never perturb the execution it observes.
+//!
+//! **Bit-neutrality contract**: recording only *reads* the clock and
+//! *writes* rings.  It draws no randomness, reorders no accumulation,
+//! and changes no scheduling decision, so traced runs produce outputs
+//! bit-identical to untraced runs (proven differentially in
+//! `rust/tests/obs.rs`).
+//!
+//! [`chrome_trace_json`] renders drained spans as Chrome trace-event
+//! JSON (`"X"` complete events, microsecond timestamps, one `tid` per
+//! shard plus a coordinator lane) — `repro trace` writes `trace.json`,
+//! loadable directly in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Sentinel for an identity field a span does not carry (a route span
+/// has no expert yet; a combine span has no single expert).
+pub const NO_ID: u32 = u32::MAX;
+
+/// What an instrumented interval did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// a row block gated on a route worker
+    Route,
+    /// token rows staged into one expert chunk (all-to-all "send")
+    Gather,
+    /// one expert task's FFN forward on its owning shard
+    Compute,
+    /// one replica's gate-weighted combine (all-to-all "receive")
+    Combine,
+    /// a failed route re-dispatched to another selected expert
+    Retry,
+    /// coordinator-side chunk dispatch onto a shard's queue
+    Dispatch,
+    /// one full engine step (coordinator lane)
+    Step,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Route => "route",
+            SpanKind::Gather => "gather",
+            SpanKind::Compute => "compute",
+            SpanKind::Combine => "combine",
+            SpanKind::Retry => "retry",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Step => "step",
+        }
+    }
+}
+
+/// One traced interval.  `Copy` and exactly 48 bytes so ring slots are
+/// plain stores; identity fields use [`NO_ID`] when not applicable.
+/// `shard == NO_ID` means the coordinator lane.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// engine step counter (1-based; monotonic per engine)
+    pub step: u64,
+    pub shard: u32,
+    pub expert: u32,
+    /// chunk identity: the chunk's row offset (`chunk_lo` for expert
+    /// chunks, block `lo` for route blocks)
+    pub chunk: u32,
+    pub replica: u32,
+    pub rows: u32,
+    /// nanoseconds since the owning [`TraceShared`] epoch
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+impl Span {
+    pub const fn empty() -> Self {
+        Span {
+            kind: SpanKind::Step,
+            step: 0,
+            shard: NO_ID,
+            expert: NO_ID,
+            chunk: NO_ID,
+            replica: NO_ID,
+            rows: 0,
+            start_ns: 0,
+            dur_ns: 0,
+        }
+    }
+}
+
+/// Lock-free single-producer / single-consumer span ring.
+///
+/// The producer is the one worker thread that owns the ring; the
+/// consumer is the coordinator, which drains only at step-end
+/// quiescence.  `head` is advanced by the producer with a `Release`
+/// store after the slot write; the consumer `Acquire`-loads it, so
+/// every drained slot's contents are visible.  A push into a full ring
+/// increments `dropped` and returns — never blocks, never overwrites
+/// undrained spans.
+pub struct SpanRing {
+    slots: Box<[UnsafeCell<Span>]>,
+    /// next write index (producer-owned)
+    head: AtomicUsize,
+    /// next read index (consumer-owned)
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// Sound: `head`/`tail` ordering establishes happens-before between the
+// single producer's slot writes and the single consumer's reads; a slot
+// is never accessed by both sides at once (full rings drop).
+unsafe impl Send for SpanRing {}
+unsafe impl Sync for SpanRing {}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2);
+        SpanRing {
+            slots: (0..cap)
+                .map(|_| UnsafeCell::new(Span::empty()))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Producer side: record one span; drops (counted) when full.
+    pub fn push(&self, span: Span) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // sole producer: `head` slot is ours until the store below
+        unsafe {
+            *self.slots[head % self.slots.len()].get() = span;
+        }
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side: move every recorded span into `out` (in push
+    /// order) and free the slots.
+    pub fn drain_into(&self, out: &mut Vec<Span>) {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        while tail != head {
+            out.push(unsafe { *self.slots[tail % self.slots.len()].get() });
+            tail = tail.wrapping_add(1);
+        }
+        self.tail.store(tail, Ordering::Release);
+    }
+
+    /// Spans lost to a full ring since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// The trace state one engine shares with its workers: a common clock
+/// epoch (all span timestamps are offsets from it, so lanes line up in
+/// the viewer), the engine step counter, and one ring per worker plus a
+/// coordinator ring (index `n_shards`).
+pub struct TraceShared {
+    epoch: Instant,
+    step: AtomicU64,
+    rings: Vec<SpanRing>,
+}
+
+impl TraceShared {
+    pub fn new(n_shards: usize, ring_capacity: usize) -> Arc<Self> {
+        Arc::new(TraceShared {
+            epoch: Instant::now(),
+            step: AtomicU64::new(0),
+            rings: (0..n_shards + 1)
+                .map(|_| SpanRing::new(ring_capacity))
+                .collect(),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.rings.len() - 1
+    }
+
+    /// Nanoseconds since this trace's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Advance to a new step; returns its 1-based id.
+    pub fn begin_step(&self) -> u64 {
+        self.step.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Id of the step currently in flight (0 before the first).
+    pub fn step_id(&self) -> u64 {
+        self.step.load(Ordering::Relaxed)
+    }
+
+    pub fn ring(&self, shard: usize) -> &SpanRing {
+        &self.rings[shard]
+    }
+
+    pub fn coord_ring(&self) -> &SpanRing {
+        self.rings.last().unwrap()
+    }
+
+    /// Drain every ring (workers first, coordinator last) into `out`.
+    pub fn drain_into(&self, out: &mut Vec<Span>) {
+        for ring in &self.rings {
+            ring.drain_into(out);
+        }
+    }
+
+    /// Total spans dropped across all rings.
+    pub fn dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+}
+
+/// Chrome trace-event timestamps are microseconds (fractional ok).
+fn fmt_us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+/// Append one process's worth of Chrome trace events (metadata + one
+/// `"X"` complete event per span) as pre-rendered JSON objects.
+/// `n_shards` maps `shard == NO_ID` spans onto the coordinator lane
+/// (`tid == n_shards`).
+pub fn push_chrome_events(
+    events: &mut Vec<String>,
+    spans: &[Span],
+    pid: usize,
+    process: &str,
+    n_shards: usize,
+) {
+    events.push(format!(
+        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {pid}, \
+         \"tid\": 0, \"args\": {{\"name\": \"{process}\"}}}}"
+    ));
+    for tid in 0..=n_shards {
+        let tname = if tid == n_shards {
+            "coordinator".to_string()
+        } else {
+            format!("shard-{tid}")
+        };
+        events.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {pid}, \
+             \"tid\": {tid}, \"args\": {{\"name\": \"{tname}\"}}}}"
+        ));
+    }
+    for s in spans {
+        let tid =
+            if s.shard == NO_ID { n_shards } else { s.shard as usize };
+        let mut args = format!("\"step\": {}", s.step);
+        if s.expert != NO_ID {
+            args.push_str(&format!(", \"expert\": {}", s.expert));
+        }
+        if s.chunk != NO_ID {
+            args.push_str(&format!(", \"chunk\": {}", s.chunk));
+        }
+        if s.replica != NO_ID {
+            args.push_str(&format!(", \"replica\": {}", s.replica));
+        }
+        if s.rows > 0 {
+            args.push_str(&format!(", \"rows\": {}", s.rows));
+        }
+        events.push(format!(
+            "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \
+             \"pid\": {pid}, \"tid\": {tid}, \"args\": {{{args}}}}}",
+            s.kind.name(),
+            fmt_us(s.start_ns),
+            fmt_us(s.dur_ns),
+        ));
+    }
+}
+
+/// Render one span stream as a complete Chrome trace-event document.
+/// The output is the dialect `crate::util::json` parses (round-trip
+/// asserted in tests) and loads directly in Perfetto.
+pub fn chrome_trace_json(spans: &[Span], n_shards: usize) -> String {
+    let mut events = Vec::new();
+    push_chrome_events(&mut events, spans, 0, "moe", n_shards);
+    format!("{{\"traceEvents\": [{}]}}\n", events.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, start: u64) -> Span {
+        Span { kind, step: 1, start_ns: start, dur_ns: 10, ..Span::empty() }
+    }
+
+    #[test]
+    fn ring_preserves_push_order_and_drains_clean() {
+        let ring = SpanRing::new(8);
+        for i in 0..5 {
+            ring.push(span(SpanKind::Compute, i));
+        }
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 5);
+        for (i, s) in out.iter().enumerate() {
+            assert_eq!(s.start_ns, i as u64);
+        }
+        assert_eq!(ring.dropped(), 0);
+        out.clear();
+        ring.drain_into(&mut out);
+        assert!(out.is_empty(), "second drain must find nothing");
+        // the ring is reusable after a drain
+        ring.push(span(SpanKind::Route, 99));
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].start_ns, 99);
+    }
+
+    #[test]
+    fn full_ring_drops_and_counts_instead_of_blocking() {
+        let ring = SpanRing::new(4);
+        for i in 0..10 {
+            ring.push(span(SpanKind::Gather, i));
+        }
+        assert_eq!(ring.dropped(), 6);
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        // the *first* 4 survive: a full ring never overwrites undrained
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].start_ns, 0);
+        assert_eq!(out[3].start_ns, 3);
+    }
+
+    #[test]
+    fn trace_shared_steps_and_drains_all_rings() {
+        let tr = TraceShared::new(3, 16);
+        assert_eq!(tr.n_shards(), 3);
+        assert_eq!(tr.step_id(), 0);
+        assert_eq!(tr.begin_step(), 1);
+        assert_eq!(tr.begin_step(), 2);
+        assert_eq!(tr.step_id(), 2);
+        tr.ring(0).push(span(SpanKind::Compute, 1));
+        tr.ring(2).push(span(SpanKind::Combine, 2));
+        tr.coord_ring().push(span(SpanKind::Step, 0));
+        let mut out = Vec::new();
+        tr.drain_into(&mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(tr.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_parseable_and_schema_valid() {
+        let spans = vec![
+            Span {
+                kind: SpanKind::Compute,
+                step: 1,
+                shard: 0,
+                expert: 3,
+                chunk: 128,
+                replica: NO_ID,
+                rows: 64,
+                start_ns: 1_500,
+                dur_ns: 2_000,
+            },
+            Span {
+                kind: SpanKind::Step,
+                step: 1,
+                shard: NO_ID,
+                expert: NO_ID,
+                chunk: NO_ID,
+                replica: NO_ID,
+                rows: 0,
+                start_ns: 0,
+                dur_ns: 10_000,
+            },
+        ];
+        let doc = chrome_trace_json(&spans, 2);
+        let v = crate::util::json::parse(&doc).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 3 thread_name + 2 spans
+        assert_eq!(events.len(), 6);
+        let xs: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        let compute = &xs[0];
+        assert_eq!(compute.get("name").unwrap().as_str(), Some("compute"));
+        assert_eq!(compute.get("tid").unwrap().as_usize(), Some(0));
+        assert_eq!(compute.get("ts").unwrap().as_f64(), Some(1.5));
+        assert_eq!(compute.get("dur").unwrap().as_f64(), Some(2.0));
+        let args = compute.get("args").unwrap();
+        assert_eq!(args.get("expert").unwrap().as_usize(), Some(3));
+        assert_eq!(args.get("chunk").unwrap().as_usize(), Some(128));
+        assert!(args.get("replica").is_none(), "NO_ID fields omitted");
+        // the coordinator span lands on the coordinator lane
+        assert_eq!(xs[1].get("tid").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn rings_move_spans_across_threads() {
+        let tr = TraceShared::new(2, 1024);
+        let t2 = Arc::clone(&tr);
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                t2.ring(1).push(span(SpanKind::Compute, i));
+            }
+        });
+        h.join().unwrap();
+        let mut out = Vec::new();
+        tr.drain_into(&mut out);
+        assert_eq!(out.len(), 100);
+        assert_eq!(out[99].start_ns, 99);
+    }
+}

@@ -203,6 +203,13 @@ impl ServeLoop {
         self.qweights.as_deref()
     }
 
+    /// Drain the trace spans the underlying engine recorded across the
+    /// batches served so far (empty unless the scheduler was built
+    /// [`Scheduler::with_obs`]-enabled or `MOE_TRACE` is set).
+    pub fn take_spans(&self) -> Vec<crate::obs::Span> {
+        self.sched.take_spans()
+    }
+
     /// Replay an arrival-sorted trace (module docs).  Requests are
     /// identified by trace index in the report.
     ///
@@ -280,6 +287,7 @@ impl ServeLoop {
                 }
             }
             while next < trace.len() && trace[next].arrival_ns <= now {
+                stats.offered += 1;
                 let rows = trace[next].x.shape[0];
                 let infeasible = self.cfg.deadline_ns.is_some_and(|dl| {
                     !queue.feasible(rows, est_ns_per_token, live, dl)
@@ -407,6 +415,13 @@ impl ServeLoop {
                 stats.queue_wait.push(dispatched_at - slot.arrival_ns);
                 stats.compute.push(wall);
                 stats.total.push(now - slot.arrival_ns);
+                if let Some(dl) = self.cfg.deadline_ns {
+                    // delivered, but past its deadline: a latency-SLO
+                    // violation, counted per completed request
+                    if now - slot.arrival_ns > dl {
+                        stats.slo_violations += 1;
+                    }
+                }
                 stats.completed += 1;
                 stats.tokens_served += slot.rows.len() as u64;
             }

@@ -25,9 +25,14 @@
 //!   clock: deterministic seeded arrivals, measured compute walls;
 //! - [`ServeStats`] (`stats.rs`) — per-request queue/compute/total
 //!   latency histograms (p50/p95/p99 order statistics), achieved
-//!   tokens/sec, batch occupancy and shed counts, rendered by the one
-//!   shared [`ServeStats::summary_line`] and exported to
-//!   `BENCH_serve.json` by `benches/serve.rs`.
+//!   tokens/sec, batch occupancy, and the admission ledger (`offered ==
+//!   completed + shed + failed`, plus deadline/SLO violations among the
+//!   completions).  Everything publishes into the unified
+//!   [`crate::obs::Registry`] under `serve_*` keys; the one shared
+//!   console line ([`ServeStats::summary_line`]) is a renderer over a
+//!   registry snapshot ([`ServeStats::render_summary`]), the same
+//!   snapshot `benches/serve.rs` exports to `BENCH_serve.json` and
+//!   `repro trace` serialises as JSON/Prometheus text.
 //!
 //! The open-loop Poisson traffic generator lives in
 //! [`crate::harness::workload`] (seeded, ragged request lengths,
@@ -38,7 +43,10 @@
 //! alone through
 //! [`Scheduler::execute_serial`](crate::coordinator::Scheduler::execute_serial),
 //! and backpressure is asserted observable (bounded queue, counted
-//! sheds) at offered loads above engine throughput.
+//! sheds) at offered loads above engine throughput.  `rust/tests/obs.rs`
+//! proves the serve path is *bit-neutral under tracing*: the same trace
+//! replayed with span recording on yields byte-identical outputs and
+//! stats.
 
 pub mod batcher;
 pub mod driver;

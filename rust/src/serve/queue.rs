@@ -45,6 +45,7 @@ pub struct RequestQueue {
     max_depth: usize,
     policy: AdmissionPolicy,
     queue: VecDeque<ServeRequest>,
+    offered: u64,
     shed: u64,
     peak_depth: usize,
 }
@@ -55,6 +56,7 @@ impl RequestQueue {
             max_depth: max_depth.max(1),
             policy,
             queue: VecDeque::new(),
+            offered: 0,
             shed: 0,
             peak_depth: 0,
         }
@@ -84,6 +86,15 @@ impl RequestQueue {
         self.shed
     }
 
+    /// Offer events seen by admission control so far — every
+    /// [`offer`](Self::offer), [`reject_next`](Self::reject_next) and
+    /// [`reject_infeasible`](Self::reject_infeasible) counts one, so
+    /// `offered == admitted + shed` is checkable without a caller-side
+    /// ledger.
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
     /// High-water queue depth — the witness that memory stayed bounded.
     pub fn peak_depth(&self) -> usize {
         self.peak_depth
@@ -102,6 +113,7 @@ impl RequestQueue {
     /// (pairs with [`will_reject_next`](Self::will_reject_next)).
     pub fn reject_next(&mut self) {
         debug_assert!(self.will_reject_next());
+        self.offered += 1;
         self.shed += 1;
     }
 
@@ -133,6 +145,7 @@ impl RequestQueue {
     /// into the same [`shed`](Self::shed) total as admission-control
     /// drops so `offered == admitted + shed` stays a single invariant.
     pub fn reject_infeasible(&mut self) {
+        self.offered += 1;
         self.shed += 1;
     }
 
@@ -141,6 +154,7 @@ impl RequestQueue {
     /// oldest under [`AdmissionPolicy::ShedOldest`], empty when the
     /// queue had room.
     pub fn offer(&mut self, req: ServeRequest) -> Vec<ServeRequest> {
+        self.offered += 1;
         let mut dropped = Vec::new();
         if self.queue.len() >= self.max_depth {
             match self.policy {
@@ -269,31 +283,31 @@ mod tests {
         // every offered request is exactly one of: popped, shed (by
         // admission control or infeasibility), or still queued
         let mut q = RequestQueue::new(4, AdmissionPolicy::Reject);
-        let mut offered = 0u64;
         let mut popped = 0u64;
         for i in 0..50 {
-            offered += 1;
             // degrade live capacity over time; the deadline tightens
             let live = 1.0 - (i as f64 / 100.0);
             if !q.feasible(2, 50.0, live, 600) {
                 q.reject_infeasible();
-                continue;
-            }
-            if q.will_reject_next() {
+            } else if q.will_reject_next() {
                 q.reject_next();
-                continue;
+            } else {
+                q.offer(req(i, i as u64, 2));
+                if i % 3 == 0 && q.pop().is_some() {
+                    popped += 1;
+                }
             }
-            q.offer(req(i, i as u64, 2));
-            if i % 3 == 0 && q.pop().is_some() {
-                popped += 1;
-            }
+            // the queue's own ledger: every offer event (including the
+            // unmaterialised rejections) is popped, shed, or queued
+            assert_eq!(q.offered(), i as u64 + 1);
             assert_eq!(
-                offered,
+                q.offered(),
                 popped + q.shed() + q.len() as u64,
                 "conservation broke at offer {i}"
             );
         }
-        assert_eq!(offered, popped + q.shed() + q.len() as u64);
+        assert_eq!(q.offered(), 50);
+        assert_eq!(q.offered(), popped + q.shed() + q.len() as u64);
         assert!(q.shed() > 0, "test never exercised a shed path");
         assert!(popped > 0);
     }

@@ -1,5 +1,6 @@
 //! Serving SLO telemetry: per-request latency histograms, achieved
-//! throughput, batch occupancy and backpressure counters.
+//! throughput, batch occupancy, backpressure and SLO-violation
+//! counters — all published into the unified metrics registry.
 //!
 //! Latency is decomposed the way an SLO dashboard wants it:
 //! `queue_wait` (arrival → batch dispatch), `compute` (the batch's
@@ -7,8 +8,19 @@
 //! (arrival → outputs scattered back).  All three are exact sample
 //! histograms ([`Histogram`]) so p50/p95/p99 are true order
 //! statistics, not bucket interpolations.
+//!
+//! [`ServeStats::publish`] writes everything into a
+//! [`crate::obs::Registry`] under the `serve_*` keys (latency
+//! histograms merged sample-exactly, fault counters under the shared
+//! `fault_*` keys), and [`ServeStats::summary_line`] is a *renderer
+//! over the resulting snapshot* — the console line, the JSON snapshot
+//! ([`crate::obs::Snapshot::to_json`]) and the Prometheus exposition
+//! always show the same numbers.  The request ledger conserves:
+//! `offered == completed + shed + failed`, with `slo_violations`
+//! counting completed requests that still blew `deadline_ns`.
 
 use crate::coordinator::scheduler::{PhaseNanos, StepStats};
+use crate::obs::{Registry, Snapshot};
 use crate::util::bench::Histogram;
 
 /// Aggregated telemetry of one [`ServeLoop`](crate::serve::ServeLoop)
@@ -21,9 +33,16 @@ pub struct ServeStats {
     pub compute: Histogram,
     /// arrival → output scattered back, per completed request
     pub total: Histogram,
+    /// requests the trace offered to admission control — the ledger
+    /// total: `offered == completed + shed + failed`
+    pub offered: u64,
     pub completed: u64,
     /// requests dropped by admission control (reject or shed-oldest)
     pub shed: u64,
+    /// completed requests whose total latency exceeded the configured
+    /// `deadline_ns` (0 when no deadline is set) — delivered, but
+    /// counted against the latency SLO
+    pub slo_violations: u64,
     pub tokens_served: u64,
     pub batches: u64,
     /// sum of batch rows (numerator of [`batch_occupancy`](Self::batch_occupancy))
@@ -100,28 +119,93 @@ impl ServeStats {
         }
     }
 
+    /// Publish into the unified registry: the request ledger and batch
+    /// counters under `serve_*` keys, the latency histograms merged
+    /// sample-exactly (`serve_queue_wait_ns` / `serve_compute_ns` /
+    /// `serve_total_ns`), the summed engine phases as
+    /// `step_phase_ns{phase=...}`, and the fault tally under the shared
+    /// `fault_*` keys.
+    pub fn publish(&self, reg: &mut Registry) {
+        reg.counter_add("serve_offered", self.offered);
+        reg.counter_add("serve_completed", self.completed);
+        reg.counter_add("serve_shed", self.shed);
+        reg.counter_add("serve_failed", self.failed);
+        reg.counter_add("serve_retried", self.retried);
+        reg.counter_add("serve_slo_violations", self.slo_violations);
+        reg.counter_add("serve_tokens_served", self.tokens_served);
+        reg.counter_add("serve_batches", self.batches);
+        reg.counter_add("serve_batch_tokens", self.batch_tokens);
+        reg.counter_add("serve_batch_capacity", self.batch_capacity);
+        reg.counter_add("serve_wall_ns", self.wall_ns);
+        reg.counter_add("serve_peak_queue_depth", self.peak_queue_depth as u64);
+        reg.merge_hist("serve_queue_wait_ns", &self.queue_wait);
+        reg.merge_hist("serve_compute_ns", &self.compute);
+        reg.merge_hist("serve_total_ns", &self.total);
+        self.phases.publish(reg);
+        reg.counter_add("fault_failed_chunks", self.failed_chunks);
+        reg.counter_add("fault_redispatched_routes", self.redispatched_routes);
+        reg.counter_add("fault_degraded_tokens", self.degraded_tokens);
+        reg.gauge_add("fault_renorm_mass_lost", self.renorm_mass_lost);
+    }
+
     /// One-line SLO summary — the single place the serve report format
-    /// lives (demos, benches and `repro serve` all print this).
+    /// lives (demos, benches and `repro serve` all print this).  A
+    /// renderer over the registry: publishes into a fresh [`Registry`]
+    /// and formats the snapshot via
+    /// [`render_summary`](Self::render_summary).
     pub fn summary_line(&self) -> String {
-        let queue = self.queue_wait.percentiles(&[0.50, 0.99]);
-        let total = self.total.percentiles(&[0.50, 0.99]);
+        let mut reg = Registry::new();
+        self.publish(&mut reg);
+        Self::render_summary(&reg.snapshot())
+    }
+
+    /// Format the serve summary from a registry snapshot (the `serve_*`
+    /// / `fault_*` keys [`publish`](Self::publish) writes) — any
+    /// aggregated snapshot renders with the same line, not just a
+    /// single replay's.
+    pub fn render_summary(s: &Snapshot) -> String {
+        let wall_ns = s.counter("serve_wall_ns");
+        let tokens = s.counter("serve_tokens_served");
+        let tok_per_sec = if wall_ns == 0 {
+            0.0
+        } else {
+            tokens as f64 / (wall_ns as f64 / 1e9)
+        };
+        let cap = s.counter("serve_batch_capacity");
+        let occupancy = if cap == 0 {
+            0.0
+        } else {
+            s.counter("serve_batch_tokens") as f64 / cap as f64
+        };
+        let queue = s.hist("serve_queue_wait_ns").cloned().unwrap_or_default();
+        let total = s.hist("serve_total_ns").cloned().unwrap_or_default();
         let mut line = format!(
             "served {:>5} req ({:>4} shed)  {:>9.0} tok/s  occupancy {:>3.0}%  \
              queue p50/p99 {:>8.3}/{:>8.3}ms  total p50/p99 {:>8.3}/{:>8.3}ms",
-            self.completed,
-            self.shed,
-            self.tokens_per_sec(),
-            self.batch_occupancy() * 100.0,
-            queue[0] as f64 / 1e6,
-            queue[1] as f64 / 1e6,
-            total[0] as f64 / 1e6,
-            total[1] as f64 / 1e6,
+            s.counter("serve_completed"),
+            s.counter("serve_shed"),
+            tok_per_sec,
+            occupancy * 100.0,
+            queue.p50_ns as f64 / 1e6,
+            queue.p99_ns as f64 / 1e6,
+            total.p50_ns as f64 / 1e6,
+            total.p99_ns as f64 / 1e6,
         );
-        if self.failed > 0 || self.failed_chunks > 0 || self.retried > 0 {
+        let failed = s.counter("serve_failed");
+        let retried = s.counter("serve_retried");
+        let failed_chunks = s.counter("fault_failed_chunks");
+        if failed > 0 || failed_chunks > 0 || retried > 0 {
             line.push_str(&format!(
                 "  faults: {} failed / {} retried / {} chunks / {} tok degraded",
-                self.failed, self.retried, self.failed_chunks, self.degraded_tokens,
+                failed,
+                retried,
+                failed_chunks,
+                s.counter("fault_degraded_tokens"),
             ));
+        }
+        let slo = s.counter("serve_slo_violations");
+        if slo > 0 {
+            line.push_str(&format!("  slo: {slo} violated"));
         }
         line
     }
@@ -169,5 +253,45 @@ mod tests {
         // capacity, so mean occupancy cannot exceed 1
         s.record_batch(&step, 48, 32);
         assert!(s.batch_occupancy() <= 1.0);
+    }
+
+    #[test]
+    fn summary_line_is_a_renderer_over_the_registry_snapshot() {
+        let mut s = ServeStats::new();
+        s.offered = 10;
+        s.completed = 7;
+        s.shed = 2;
+        s.failed = 1;
+        s.retried = 3;
+        s.slo_violations = 2;
+        s.tokens_served = 140;
+        s.batches = 4;
+        s.batch_tokens = 140;
+        s.batch_capacity = 160;
+        s.wall_ns = 2_000_000;
+        for ns in [1_000_000u64, 2_000_000, 3_000_000] {
+            s.queue_wait.push(ns);
+            s.compute.push(ns / 2);
+            s.total.push(ns * 2);
+        }
+        let mut reg = Registry::new();
+        s.publish(&mut reg);
+        let snap = reg.snapshot();
+        // the console line and the snapshot agree by construction
+        assert_eq!(s.summary_line(), ServeStats::render_summary(&snap));
+        assert!(s.summary_line().contains("faults: 1 failed / 3 retried"));
+        assert!(s.summary_line().contains("slo: 2 violated"));
+        // ledger keys round-trip
+        assert_eq!(snap.counter("serve_offered"), 10);
+        assert_eq!(
+            snap.counter("serve_offered"),
+            snap.counter("serve_completed")
+                + snap.counter("serve_shed")
+                + snap.counter("serve_failed")
+        );
+        assert_eq!(snap.hist("serve_total_ns").unwrap().count, 3);
+        // publishing twice accumulates (counters are monotonic sums)
+        s.publish(&mut reg);
+        assert_eq!(reg.snapshot().counter("serve_offered"), 20);
     }
 }

@@ -162,6 +162,18 @@ impl Histogram {
             .collect()
     }
 
+    /// Raw recorded samples, in push order (the registry merges whole
+    /// serve-side histograms sample-exactly).
+    pub fn samples(&self) -> &[u64] {
+        &self.samples
+    }
+
+    /// Append every sample of `other` (exact merge — percentiles of the
+    /// merged set are computed over the union, not approximated).
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn mean_ns(&self) -> u64 {
         if self.samples.is_empty() {
             return 0;
@@ -240,7 +252,9 @@ impl BenchReport {
 }
 
 /// RFC 8259 string escaping (bench names are ASCII, but stay correct).
-fn json_str(s: &str) -> String {
+/// `pub(crate)`: the metrics-registry snapshot (`crate::obs::registry`)
+/// renders the same JSON dialect.
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -258,7 +272,7 @@ fn json_str(s: &str) -> String {
 }
 
 /// Finite JSON number (NaN/inf have no JSON encoding; emit 0 instead).
-fn json_num(v: f64) -> String {
+pub(crate) fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {

@@ -1,0 +1,292 @@
+//! Observability correctness (tier-1): tracing is **bit-neutral** and
+//! the span/metrics exports are well-formed.
+//!
+//! The load-bearing property is the differential one: recording spans
+//! must not perturb the computation it observes.  Tracing only reads
+//! clocks and writes per-worker rings — it draws no randomness,
+//! reorders no accumulation and changes no scheduling decision — so a
+//! traced run must produce outputs **bit-identical** to an untraced run
+//! from the same seeds, on both the streamed engine step and the serve
+//! loop.  On top of that: the drained span stream is non-empty and
+//! schema-valid (known kinds, sane durations, correct lanes), the
+//! Chrome trace export parses as JSON, and the registry snapshot
+//! round-trips through `moe::util::json` with the console lines
+//! rendering byte-identically from it.
+
+use moe::coordinator::scheduler::{ExpertBackend, Scheduler, ShardLayout};
+use moe::harness::workload::{
+    phase_line, poisson_trace, render_phase_line, trace_requests,
+    SyntheticMoe, TraceSpec,
+};
+use moe::obs::{
+    chrome_trace_json, ObsConfig, Registry, Span, SpanKind, NO_ID,
+};
+use moe::serve::{ServeConfig, ServeLoop, ServeStats};
+use moe::util::json;
+use moe::util::rng::Rng;
+
+const DEVICES: usize = 2;
+const N_EXPERTS: usize = 8;
+
+fn sched(obs: ObsConfig) -> Scheduler {
+    Scheduler::new(
+        ShardLayout::new(DEVICES, N_EXPERTS),
+        ExpertBackend::Native,
+    )
+    .with_obs(obs)
+}
+
+/// Every span the engine may emit, checked against the schema: a known
+/// kind, a 1-based step id, the coordinator lane exactly for
+/// coordinator-side kinds, and durations far below the step wall.
+fn assert_schema(spans: &[Span], max_step: u64) {
+    assert!(!spans.is_empty(), "traced run recorded no spans");
+    for s in spans {
+        assert!(
+            s.step >= 1 && s.step <= max_step,
+            "span step {} outside 1..={max_step}",
+            s.step
+        );
+        assert!(!s.kind.name().is_empty());
+        assert!(
+            s.dur_ns < 60_000_000_000,
+            "{} span claims {}ns — clock bug",
+            s.kind.name(),
+            s.dur_ns
+        );
+        match s.kind {
+            SpanKind::Step | SpanKind::Dispatch | SpanKind::Retry
+                if s.shard == NO_ID => {}
+            SpanKind::Retry | SpanKind::Compute => {
+                // worker-side compute/retry lands on a real shard lane
+                assert!(
+                    (s.shard as usize) < DEVICES || s.shard == NO_ID,
+                    "shard {} out of range",
+                    s.shard
+                );
+                assert!(s.rows >= 1, "{} span with 0 rows", s.kind.name());
+            }
+            SpanKind::Route | SpanKind::Gather | SpanKind::Combine => {
+                assert!(
+                    (s.shard as usize) < DEVICES,
+                    "{} span off-lane: shard {}",
+                    s.kind.name(),
+                    s.shard
+                );
+            }
+            _ => {}
+        }
+    }
+    let step_count =
+        spans.iter().filter(|s| s.kind == SpanKind::Step).count() as u64;
+    assert_eq!(
+        step_count, max_step,
+        "exactly one Step span per traced step"
+    );
+}
+
+#[test]
+fn traced_streamed_step_is_bit_identical_to_untraced() {
+    let work = SyntheticMoe::build(91, 8, 16, N_EXPERTS, 2, DEVICES, 24)
+        .unwrap();
+    let plain = sched(ObsConfig::default());
+    let traced = sched(ObsConfig::enabled());
+    assert!(!plain.tracing_enabled());
+    assert!(traced.tracing_enabled());
+
+    let steps = 3u64;
+    for step in 0..steps {
+        let mut r1 = Rng::new(400 + step);
+        let mut r2 = Rng::new(400 + step);
+        let a = work.run_streamed(&plain, Some(&mut r1)).unwrap();
+        let b = work.run_streamed(&traced, Some(&mut r2)).unwrap();
+        for (x, y) in a.outs.iter().zip(b.outs.iter()) {
+            assert_eq!(x.shape, y.shape);
+            assert_eq!(
+                x.data, y.data,
+                "step {step}: tracing perturbed the streamed outputs"
+            );
+        }
+        assert_eq!(a.stats.expert_loads, b.stats.expert_loads);
+        assert_eq!(a.stats.waves, b.stats.waves);
+        assert_eq!(a.stats.network_bytes, b.stats.network_bytes);
+    }
+
+    assert!(plain.take_spans().is_empty(), "untraced engine has no spans");
+    let spans = traced.take_spans();
+    assert_schema(&spans, steps);
+    for kind in [SpanKind::Route, SpanKind::Compute, SpanKind::Combine] {
+        assert!(
+            spans.iter().any(|s| s.kind == kind),
+            "streamed step recorded no {} span",
+            kind.name()
+        );
+    }
+    // drained means drained: a second take starts empty
+    assert!(traced.take_spans().is_empty());
+}
+
+#[test]
+fn traced_unpipelined_step_is_bit_identical_to_untraced() {
+    let work = SyntheticMoe::build(17, 8, 16, N_EXPERTS, 2, DEVICES, 16)
+        .unwrap();
+    let plain = sched(ObsConfig::default());
+    let traced = sched(ObsConfig::enabled());
+    let mut r1 = Rng::new(7);
+    let mut r2 = Rng::new(7);
+    let (a, _) = work.run_unpipelined(&plain, Some(&mut r1)).unwrap();
+    let (b, _) = work.run_unpipelined(&traced, Some(&mut r2)).unwrap();
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(
+            x.data, y.data,
+            "tracing perturbed the pre-routed engine step"
+        );
+    }
+    let spans = traced.take_spans();
+    assert_schema(&spans, 1);
+    assert!(
+        spans.iter().any(|s| s.kind == SpanKind::Compute),
+        "engine step recorded no compute span"
+    );
+}
+
+#[test]
+fn traced_serve_run_is_bit_identical_to_untraced() {
+    // same frozen model behind two serve loops (SyntheticMoe is
+    // seed-deterministic), same trace; the queue is deep enough that
+    // nothing sheds, so both runs complete every request and each
+    // completed output must match bit for bit
+    let trace = trace_requests(
+        &poisson_trace(&TraceSpec {
+            seed: 51,
+            rate_per_sec: 5_000.0,
+            n_requests: 20,
+            min_rows: 1,
+            max_rows: 5,
+            bursty: false,
+        }),
+        8,
+        53,
+    );
+    let run = |obs: ObsConfig| {
+        let work =
+            SyntheticMoe::build(29, 8, 16, N_EXPERTS, 2, 1, 8).unwrap();
+        let serve = ServeLoop::new(
+            sched(obs),
+            work.router,
+            work.weights,
+            ServeConfig {
+                queue_depth: 64,
+                max_batch_tokens: 12,
+                latency_budget_ns: 100_000,
+                capture_outputs: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let report = serve.run_trace(&trace).unwrap();
+        let spans = serve.take_spans();
+        (report, spans)
+    };
+    let (plain, no_spans) = run(ObsConfig::default());
+    let (traced, spans) = run(ObsConfig::enabled());
+    assert!(no_spans.is_empty(), "untraced serve loop has no spans");
+    assert!(!spans.is_empty(), "traced serve loop recorded no spans");
+    assert_eq!(plain.stats.offered, trace.len() as u64);
+    assert_eq!(traced.stats.offered, plain.stats.offered);
+    assert_eq!(traced.stats.completed, plain.stats.completed);
+    assert_eq!(traced.stats.shed, 0, "queue_depth covers the whole trace");
+    assert_eq!(
+        traced.stats.completed + traced.stats.shed + traced.stats.failed,
+        traced.stats.offered,
+        "admission ledger must conserve"
+    );
+    for (i, (a, b)) in
+        plain.outputs.iter().zip(traced.outputs.iter()).enumerate()
+    {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(
+            a.data, b.data,
+            "request {i}: tracing perturbed the served output"
+        );
+    }
+    // serve spans cover one engine step per dispatched batch
+    let batch_steps =
+        spans.iter().filter(|s| s.kind == SpanKind::Step).count() as u64;
+    assert_eq!(batch_steps, traced.stats.batches);
+}
+
+#[test]
+fn chrome_trace_export_is_parseable_and_complete() {
+    let work = SyntheticMoe::build(5, 8, 16, N_EXPERTS, 2, DEVICES, 12)
+        .unwrap();
+    let traced = sched(ObsConfig::enabled());
+    work.run_streamed(&traced, None).unwrap();
+    let spans = traced.take_spans();
+    let doc = chrome_trace_json(&spans, DEVICES);
+    let v = json::parse(&doc).expect("chrome trace must be valid JSON");
+    let events = v
+        .get("traceEvents")
+        .expect("traceEvents key")
+        .as_arr()
+        .expect("traceEvents is an array");
+    // thread metadata for every shard lane + the coordinator lane, then
+    // one X event per span
+    let ph = |e: &json::Value| -> Option<String> {
+        e.get("ph").and_then(|p| p.as_str()).map(|s| s.to_string())
+    };
+    let meta = events
+        .iter()
+        .filter(|e| ph(e).as_deref() == Some("M"))
+        .count();
+    let complete: Vec<_> = events
+        .iter()
+        .filter(|e| ph(e).as_deref() == Some("X"))
+        .collect();
+    assert!(meta >= DEVICES + 1, "a tid label per lane plus the process");
+    assert_eq!(complete.len(), spans.len(), "every span exports once");
+    for e in complete {
+        for key in ["name", "pid", "tid", "ts", "dur", "args"] {
+            assert!(e.get(key).is_some(), "X event missing {key}");
+        }
+        let tid = e.get("tid").unwrap().as_usize().unwrap();
+        assert!(tid <= DEVICES, "tid {tid} beyond the coordinator lane");
+    }
+}
+
+#[test]
+fn registry_snapshot_roundtrips_and_renders_the_console_lines() {
+    let work = SyntheticMoe::build(3, 8, 16, N_EXPERTS, 2, DEVICES, 12)
+        .unwrap();
+    let s = work.run_streamed(&sched(ObsConfig::default()), None).unwrap();
+    let mut reg = Registry::new();
+    s.stats.publish(&mut reg);
+    let snap = reg.snapshot();
+
+    // console line == renderer over the snapshot, byte for byte
+    assert_eq!(phase_line(&s.stats), render_phase_line(&snap));
+
+    // JSON export parses and carries the published counters
+    let v = json::parse(&snap.to_json()).expect("snapshot JSON parses");
+    let counters = v.get("counters").expect("counters object");
+    assert_eq!(
+        counters.get("step_waves").and_then(|x| x.as_usize()),
+        Some(snap.counter("step_waves") as usize)
+    );
+
+    // Prometheus text has a TYPE line and a sample per base family
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("# TYPE step_phase_ns counter"));
+    assert!(prom.contains("step_phase_ns{phase=\"compute\"}"));
+    assert!(prom.contains("step_waves"));
+
+    // serve stats publish + render the same way (empty stats: the
+    // degenerate snapshot still renders without panicking)
+    let stats = ServeStats::default();
+    let mut sreg = Registry::new();
+    stats.publish(&mut sreg);
+    assert_eq!(
+        stats.summary_line(),
+        ServeStats::render_summary(&sreg.snapshot())
+    );
+}

@@ -255,13 +255,29 @@ fn admission_accounting_is_conserved_across_random_traces() {
             .unwrap();
             let report = serve.run_trace(&trace).unwrap();
             assert_eq!(
-                report.stats.completed + report.stats.shed,
+                report.stats.offered,
                 trace.len() as u64,
+                "case {case} {policy:?}: every trace entry is offered once"
+            );
+            assert_eq!(
+                report.stats.completed + report.stats.shed
+                    + report.stats.failed,
+                report.stats.offered,
                 "case {case} {policy:?}: requests leaked or double-counted \
-                 (completed {} + shed {} != offered {})",
+                 (completed {} + shed {} + failed {} != offered {})",
                 report.stats.completed,
                 report.stats.shed,
-                trace.len()
+                report.stats.failed,
+                report.stats.offered
+            );
+            assert_eq!(
+                report.stats.failed, 0,
+                "case {case} {policy:?}: no faults injected, nothing fails"
+            );
+            assert_eq!(
+                report.stats.slo_violations, 0,
+                "case {case} {policy:?}: no deadline configured, no SLO \
+                 violations"
             );
             let served = report.outputs.iter().filter(|o| o.is_some()).count();
             assert_eq!(
@@ -281,6 +297,65 @@ fn admission_accounting_is_conserved_across_random_traces() {
             );
         }
     }
+}
+
+#[test]
+fn deadline_violations_are_counted_among_completions() {
+    // with a latency SLO configured, every delivered request that beat
+    // its deadline counts once in completed only, and every delivered
+    // request past it also counts once in slo_violations — while the
+    // admission ledger keeps conserving.  A 1ns deadline makes every
+    // completion a violation; the first arrivals still complete because
+    // the feasibility check has no throughput estimate yet.
+    let (d, h, n, k) = (5, 7, 4, 2);
+    let frozen = Frozen::build(67, d, h, n);
+    let trace = trace_requests(
+        &poisson_trace(&TraceSpec {
+            seed: 71,
+            rate_per_sec: 20_000.0,
+            n_requests: 24,
+            min_rows: 1,
+            max_rows: 4,
+            bursty: false,
+        }),
+        d,
+        73,
+    );
+    let run = |deadline_ns: Option<u64>| {
+        let serve = ServeLoop::new(
+            Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native),
+            frozen.router(k),
+            frozen.weights.clone(),
+            ServeConfig {
+                queue_depth: 32,
+                max_batch_tokens: 8,
+                latency_budget_ns: 100_000,
+                deadline_ns,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        serve.run_trace(&trace).unwrap().stats
+    };
+    // generous SLO: everything completes, nothing violates
+    let lax = run(Some(u64::MAX / 2));
+    assert_eq!(lax.offered, trace.len() as u64);
+    assert_eq!(lax.completed + lax.shed + lax.failed, lax.offered);
+    assert_eq!(lax.slo_violations, 0, "an unreachable deadline never trips");
+    // impossible SLO: whatever completes (measured latency > 1ns always)
+    // is a violation, and the up-front feasibility shed handles the rest
+    let tight = run(Some(1));
+    assert_eq!(tight.offered, trace.len() as u64);
+    assert_eq!(tight.completed + tight.shed + tight.failed, tight.offered);
+    assert!(tight.completed > 0, "first arrivals beat the estimator");
+    assert_eq!(
+        tight.slo_violations, tight.completed,
+        "every completion past a 1ns deadline is a violation"
+    );
+    assert!(
+        tight.slo_violations <= tight.completed,
+        "violations are a subset of completions"
+    );
 }
 
 #[test]
