@@ -1,0 +1,86 @@
+//! Bench/report: the multi-tenant fairness sweep, writing
+//! `BENCH_tenants.json`.
+//!
+//! Three rows — the victim-solo baseline, the heavy-hitter mix under
+//! the weighted-fair drain, and the same mix under the global-FIFO
+//! baseline.  The timed quantity is one full trace replay through the
+//! tenant front-end; the extras carry every tenant's admission ledger
+//! (offered/completed/shed/failed + fractions), p99 latency and the
+//! conservation flag, so CI can re-assert per-tenant conservation and
+//! the isolation claim (victim survives WFQ, drowns under FIFO) from
+//! the artifact alone.  Set `BENCH_SMOKE=1` for a single-iteration CI
+//! run.
+
+use moe::harness::workload::{
+    fairness_solo_traffic, fairness_tenants, fairness_traffic,
+    tenant_fairness_run, TenantHarness,
+};
+use moe::serve::DrainPolicy;
+use moe::util::bench::{black_box, BenchReport, Bencher};
+
+const SEED: u64 = 17;
+const N_VICTIM: usize = 16;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bencher::from_env_quick();
+    let mut report = BenchReport::new("tenants");
+    println!("== tenant fairness sweep: heavy hitter vs SLO victim ==");
+
+    // the structured outcome (warm replays) supplies every ledger
+    // number; the timing loop below re-replays the same traces
+    let out = tenant_fairness_run(SEED, 1, N_VICTIM)?;
+    println!("{}", out.isolation_line());
+
+    let h = TenantHarness::new(SEED, 1);
+    let hh = fairness_traffic(&h, out.capacity_tok_per_sec, N_VICTIM);
+    let solo = fairness_solo_traffic(&hh);
+    let runs = [
+        ("tenants solo", DrainPolicy::WeightedFair, &solo, &out.solo),
+        ("tenants wfq", DrainPolicy::WeightedFair, &hh, &out.wfq),
+        ("tenants fifo", DrainPolicy::GlobalFifo, &hh, &out.fifo),
+    ];
+    for (label, drain, traffic, rep) in runs {
+        let lp = h.single_loop(
+            fairness_tenants(out.victim_deadline_ns),
+            h.config(drain),
+        )?;
+        let trace = h.trace(traffic);
+        lp.run_trace(&trace)?; // warm
+        let r = bench.run(label, || {
+            black_box(lp.run_trace(&trace).unwrap());
+        });
+        r.report_throughput("req", trace.len() as f64);
+        for line in rep.summary_lines() {
+            println!("  {line}");
+        }
+        let mut extras: Vec<(String, f64)> = vec![
+            ("capacity_tok_per_sec".into(), out.capacity_tok_per_sec),
+            ("victim_deadline_ns".into(), out.victim_deadline_ns as f64),
+        ];
+        for row in out.rows().into_iter().filter(|row| {
+            label.ends_with(row.run)
+        }) {
+            let t = &row.tenant;
+            extras.push((format!("{t}_offered"), row.offered as f64));
+            extras.push((format!("{t}_completed"), row.completed as f64));
+            extras.push((format!("{t}_shed"), row.shed as f64));
+            extras.push((format!("{t}_failed"), row.failed as f64));
+            extras.push((
+                format!("{t}_completed_fraction"),
+                row.completed_fraction,
+            ));
+            extras.push((format!("{t}_shed_fraction"), row.shed_fraction));
+            extras.push((format!("{t}_p99_ns"), row.p99_total_ns as f64));
+            extras.push((
+                format!("{t}_conserved"),
+                if row.conserved { 1.0 } else { 0.0 },
+            ));
+        }
+        let borrowed: Vec<(&str, f64)> =
+            extras.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        report.push(&r, Some(("req", trace.len() as f64)), &borrowed);
+    }
+    report.write("BENCH_tenants.json")?;
+    println!("wrote BENCH_tenants.json");
+    Ok(())
+}

@@ -16,8 +16,13 @@ use crate::coordinator::scheduler::{
     ExpertBackend, ExpertWeights, Scheduler, ShardLayout, StepStats,
 };
 use crate::coordinator::{DispatchPlan, Dispatcher};
+use crate::kernels::quant::Precision;
 use crate::runtime::TensorF;
-use crate::serve::{ServeConfig, ServeLoop, TimedRequest};
+use crate::serve::{
+    AdmissionPolicy, DrainPolicy, EngineBackend, ServeBackend, ServeConfig,
+    ServeLoop, ServeStats, TenantRequest, TenantServeConfig, TenantServeLoop,
+    TenantServeReport, TenantSpec, TimedRequest,
+};
 use crate::util::rng::Rng;
 
 /// A fully routed synthetic MoE step: expert weights, gating router,
@@ -457,6 +462,465 @@ pub fn serve_load_curve(
     Ok(())
 }
 
+/// Tenant index of the flooding tenant in [`heavy_hitter_specs`]
+/// traces (and the fairness sweep built on them).
+pub const HITTER: usize = 0;
+/// Tenant index of the well-behaved victim in [`heavy_hitter_specs`]
+/// traces.
+pub const VICTIM: usize = 1;
+
+/// Merge per-tenant [`TraceSpec`]s into one arrival-sorted multi-tenant
+/// trace.  Tenant `t` gets `specs[t]`'s arrival process and a payload
+/// stream folded from `payload_seed` and `t`, so tenants' activations
+/// differ but the whole trace is a pure function of its seeds.
+pub fn tenant_trace(
+    specs: &[TraceSpec],
+    d: usize,
+    payload_seed: u64,
+) -> Vec<TenantRequest> {
+    let mut all: Vec<TenantRequest> = Vec::new();
+    for (t, spec) in specs.iter().enumerate() {
+        let mut rng =
+            Rng::new(payload_seed.wrapping_add(0x9e37_79b9 * (t as u64 + 1)));
+        for r in poisson_trace(spec) {
+            all.push(TenantRequest {
+                tenant: t,
+                arrival_ns: r.arrival_ns,
+                x: TensorF::new(
+                    vec![r.rows, d],
+                    (0..r.rows * d).map(|_| rng.normal_f32()).collect(),
+                ),
+            });
+        }
+    }
+    // stable: simultaneous arrivals keep per-tenant generation order
+    all.sort_by_key(|r| r.arrival_ns);
+    all
+}
+
+/// The adversarial two-tenant mix: tenant [`HITTER`] floods bursty at
+/// `hitter_rate`, tenant [`VICTIM`] trickles smoothly at `victim_rate`,
+/// and both streams span the *same* time horizon (the hitter's request
+/// count is scaled up so it keeps flooding for the victim's whole
+/// trace — isolation claims are vacuous if the flood ends early).
+pub fn heavy_hitter_specs(
+    seed: u64,
+    hitter_rate: f64,
+    victim_rate: f64,
+    n_victim: usize,
+    min_rows: usize,
+    max_rows: usize,
+) -> Vec<TraceSpec> {
+    let horizon_secs = n_victim as f64 / victim_rate.max(1e-9);
+    let n_hitter = (hitter_rate * horizon_secs).ceil().max(1.0) as usize;
+    vec![
+        TraceSpec {
+            seed: seed ^ 0x4177,
+            rate_per_sec: hitter_rate,
+            n_requests: n_hitter,
+            min_rows,
+            max_rows,
+            bursty: true,
+        },
+        TraceSpec {
+            seed: seed ^ 0x1c71,
+            rate_per_sec: victim_rate,
+            n_requests: n_victim,
+            min_rows,
+            max_rows,
+            bursty: false,
+        },
+    ]
+}
+
+/// A head tenant plus `n_tail` trickle tenants (the long-tail shape:
+/// one hot customer, many sporadic ones) — the conservation tests run
+/// this under every admission × drain policy combination.
+pub fn long_tail_specs(
+    seed: u64,
+    head_rate: f64,
+    n_head: usize,
+    n_tail: usize,
+    min_rows: usize,
+    max_rows: usize,
+) -> Vec<TraceSpec> {
+    let mut specs = vec![TraceSpec {
+        seed: seed ^ 0x4ead,
+        rate_per_sec: head_rate,
+        n_requests: n_head,
+        min_rows,
+        max_rows,
+        bursty: true,
+    }];
+    for t in 0..n_tail {
+        specs.push(TraceSpec {
+            seed: seed ^ 0x7a11 ^ ((t as u64 + 1) << 8),
+            rate_per_sec: (head_rate / 16.0).max(1.0),
+            n_requests: (n_head / 8).max(2),
+            min_rows,
+            max_rows,
+            bursty: false,
+        });
+    }
+    specs
+}
+
+/// The multi-tenant counterpart of [`ServeHarness`]: the same frozen
+/// synthetic serving model (16 experts, k=2, d=32, 256-token batches
+/// under a 0.5ms budget) behind a [`TenantServeLoop`], with one- and
+/// two-backend fleet builders.  `rust/tests/tenants.rs`,
+/// `benches/tenants.rs` and `repro tenants` all drive this, so the
+/// model and calibration ritual live in exactly one place.
+pub struct TenantHarness {
+    pub seed: u64,
+    pub devices: usize,
+    pub d_model: usize,
+    pub hidden: usize,
+    pub n_experts: usize,
+    pub k: usize,
+    pub max_batch_tokens: usize,
+    pub latency_budget_ns: u64,
+    pub min_rows: usize,
+    pub max_rows: usize,
+}
+
+impl TenantHarness {
+    pub fn new(seed: u64, devices: usize) -> Self {
+        TenantHarness {
+            seed,
+            devices: devices.max(1),
+            d_model: 32,
+            hidden: 128,
+            n_experts: 16,
+            k: 2,
+            max_batch_tokens: 256,
+            latency_budget_ns: 500_000, // 0.5ms
+            min_rows: 4,
+            max_rows: 24,
+        }
+    }
+
+    /// Freeze one engine backend over a seeded synthetic checkpoint.
+    /// Different `ckpt_seed`s give genuinely different model weights —
+    /// that's what makes the A/B routing bit-identity test meaningful.
+    pub fn backend(
+        &self,
+        name: &str,
+        variant: &str,
+        precision: Precision,
+        ckpt_seed: u64,
+    ) -> Result<EngineBackend> {
+        let work = SyntheticMoe::build(
+            ckpt_seed,
+            self.d_model,
+            self.hidden,
+            self.n_experts,
+            self.k,
+            1,
+            8,
+        )?;
+        let sched = Scheduler::new(
+            ShardLayout::new(self.devices, self.n_experts),
+            ExpertBackend::Native,
+        );
+        EngineBackend::new(
+            name,
+            variant,
+            sched,
+            work.router,
+            work.weights,
+            precision,
+            self.max_batch_tokens,
+        )
+    }
+
+    /// Front-end config with the harness's latency budget and the
+    /// requested drain policy (Reject admission — the fairness sweep's
+    /// contrast is about *which* tenant gets refused, not how).
+    pub fn config(&self, drain: DrainPolicy) -> TenantServeConfig {
+        TenantServeConfig {
+            admission: AdmissionPolicy::Reject,
+            drain,
+            latency_budget_ns: self.latency_budget_ns,
+            capture_outputs: false,
+        }
+    }
+
+    /// A single-engine fleet: one f32 `"base"` backend.  The fairness
+    /// sweep uses this so drain policy is the only variable.
+    pub fn single_loop(
+        &self,
+        specs: Vec<TenantSpec>,
+        cfg: TenantServeConfig,
+    ) -> Result<TenantServeLoop> {
+        let backends: Vec<Box<dyn ServeBackend>> =
+            vec![Box::new(self.backend(
+                "engine",
+                "base",
+                Precision::F32,
+                self.seed,
+            )?)];
+        TenantServeLoop::new(backends, specs, cfg)
+    }
+
+    /// A two-engine A/B fleet: an exact f32 `"base"` backend plus an
+    /// int8 `"canary"` over a *different* checkpoint seed — tenants pin
+    /// precision/variant to force routing, or leave both unset and let
+    /// least-wait scoring pick.
+    pub fn ab_loop(
+        &self,
+        specs: Vec<TenantSpec>,
+        cfg: TenantServeConfig,
+    ) -> Result<TenantServeLoop> {
+        let backends: Vec<Box<dyn ServeBackend>> = vec![
+            Box::new(self.backend(
+                "exact",
+                "base",
+                Precision::F32,
+                self.seed,
+            )?),
+            Box::new(self.backend(
+                "turbo",
+                "canary",
+                Precision::Int8,
+                self.seed ^ 0xab,
+            )?),
+        ];
+        TenantServeLoop::new(backends, specs, cfg)
+    }
+
+    /// Materialise a multi-tenant trace for these model dims.
+    pub fn trace(&self, specs: &[TraceSpec]) -> Vec<TenantRequest> {
+        tenant_trace(specs, self.d_model, self.seed ^ 0x9a71)
+    }
+
+    /// Single-engine serving capacity (tokens/sec) from a simultaneous
+    /// burst, measured on the second of two runs (the first warms the
+    /// engine) — the same ritual as [`ServeHarness::calibrate`].
+    pub fn calibrate(&self) -> Result<f64> {
+        let lp = self.single_loop(
+            vec![TenantSpec::new("calib", 64)],
+            self.config(DrainPolicy::WeightedFair),
+        )?;
+        let trace = self.trace(&[TraceSpec {
+            seed: self.seed ^ 0xca11b8,
+            rate_per_sec: 1e12,
+            n_requests: 64,
+            min_rows: self.min_rows,
+            max_rows: self.max_rows,
+            bursty: false,
+        }]);
+        lp.run_trace(&trace)?;
+        Ok(lp.run_trace(&trace)?.global.tokens_per_sec().max(1.0))
+    }
+
+    /// Request rate offering `mult` × a calibrated token capacity.
+    pub fn rate_for(&self, capacity_tok_per_sec: f64, mult: f64) -> f64 {
+        let mean_rows = (self.min_rows + self.max_rows) as f64 / 2.0;
+        (capacity_tok_per_sec * mult / mean_rows).max(1.0)
+    }
+}
+
+/// Completed fraction of a ledger (1.0 when nothing was offered, so a
+/// zero-traffic tenant doesn't read as fully shed).
+pub fn completed_fraction(s: &ServeStats) -> f64 {
+    if s.offered == 0 {
+        1.0
+    } else {
+        s.completed as f64 / s.offered as f64
+    }
+}
+
+/// One structured fairness-sweep row — `repro tenants`,
+/// `benches/tenants.rs` and the CI validator all read these instead of
+/// re-deriving numbers from three reports.
+pub struct TenantRow {
+    /// which replay: `"solo"`, `"wfq"` or `"fifo"`
+    pub run: &'static str,
+    pub tenant: String,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub completed_fraction: f64,
+    pub shed_fraction: f64,
+    pub p99_total_ns: u64,
+    /// per-tenant ledger conservation: `offered == completed + shed + failed`
+    pub conserved: bool,
+}
+
+/// The isolation experiment: the same heavy-hitter trace replayed under
+/// weighted-fair and global-FIFO drains, plus the victim's solo
+/// baseline (identical victim traffic, hitter silenced).  The claim the
+/// tier-1 test pins down: WFQ keeps the victim's completed fraction and
+/// p99 near solo while global FIFO demonstrably sheds it.
+pub struct FairnessOutcome {
+    pub capacity_tok_per_sec: f64,
+    pub victim_deadline_ns: u64,
+    pub solo: TenantServeReport,
+    pub wfq: TenantServeReport,
+    pub fifo: TenantServeReport,
+}
+
+impl FairnessOutcome {
+    pub fn victim_fraction(run: &TenantServeReport) -> f64 {
+        completed_fraction(&run.per_tenant[VICTIM])
+    }
+
+    pub fn victim_p99_ns(run: &TenantServeReport) -> u64 {
+        run.per_tenant[VICTIM].total.percentile(0.99)
+    }
+
+    pub fn rows(&self) -> Vec<TenantRow> {
+        let mut rows = Vec::new();
+        for (run, rep) in
+            [("solo", &self.solo), ("wfq", &self.wfq), ("fifo", &self.fifo)]
+        {
+            for (name, s) in rep.tenants.iter().zip(&rep.per_tenant) {
+                rows.push(TenantRow {
+                    run,
+                    tenant: name.clone(),
+                    offered: s.offered,
+                    completed: s.completed,
+                    shed: s.shed,
+                    failed: s.failed,
+                    completed_fraction: completed_fraction(s),
+                    shed_fraction: if s.offered == 0 {
+                        0.0
+                    } else {
+                        s.shed as f64 / s.offered as f64
+                    },
+                    p99_total_ns: s.total.percentile(0.99),
+                    conserved: s.offered == s.completed + s.shed + s.failed,
+                });
+            }
+        }
+        rows
+    }
+
+    /// The one-line verdict `repro tenants` prints.
+    pub fn isolation_line(&self) -> String {
+        format!(
+            "isolation: victim completed {:.0}% solo / {:.0}% weighted-fair \
+             / {:.0}% global-fifo; victim p99 {:.3}ms solo vs {:.3}ms \
+             weighted-fair — per-lane DRR holds the victim near its solo \
+             baseline while the shared FIFO lets the heavy hitter shed it",
+            Self::victim_fraction(&self.solo) * 100.0,
+            Self::victim_fraction(&self.wfq) * 100.0,
+            Self::victim_fraction(&self.fifo) * 100.0,
+            Self::victim_p99_ns(&self.solo) as f64 / 1e6,
+            Self::victim_p99_ns(&self.wfq) as f64 / 1e6,
+        )
+    }
+}
+
+/// The fairness experiment's tenant contracts: a 64-deep flood lane
+/// and a 16-deep victim lane whose latency SLO gates admission.
+pub fn fairness_tenants(victim_deadline_ns: u64) -> Vec<TenantSpec> {
+    vec![
+        TenantSpec::new("hitter", 64),
+        TenantSpec {
+            deadline_ns: Some(victim_deadline_ns),
+            ..TenantSpec::new("victim", 16)
+        },
+    ]
+}
+
+/// The fairness experiment's traffic: hitter at 10× calibrated
+/// capacity, victim trickling at 0.25×, over one shared horizon.
+pub fn fairness_traffic(
+    h: &TenantHarness,
+    capacity_tok_per_sec: f64,
+    n_victim: usize,
+) -> Vec<TraceSpec> {
+    heavy_hitter_specs(
+        h.seed,
+        h.rate_for(capacity_tok_per_sec, 10.0),
+        h.rate_for(capacity_tok_per_sec, 0.25),
+        n_victim,
+        h.min_rows,
+        h.max_rows,
+    )
+}
+
+/// [`fairness_traffic`] with the hitter silenced — identical victim
+/// arrivals, so the solo replay is a true baseline.
+pub fn fairness_solo_traffic(hh: &[TraceSpec]) -> Vec<TraceSpec> {
+    let mut s = hh.to_vec();
+    s[HITTER].n_requests = 0;
+    s
+}
+
+/// Victim latency SLO derived from measured capacity: ~350 effective
+/// tokens of backlog — a few requests' worth under weighted-fair, a
+/// small fraction of the shared backlog a 64-deep flooded FIFO
+/// carries, so the same deadline admits under one drain policy and
+/// sheds under the other.
+pub fn fairness_deadline_ns(capacity_tok_per_sec: f64) -> u64 {
+    (350.0 * 1e9 / capacity_tok_per_sec) as u64
+}
+
+/// Run the fairness experiment: calibrate, derive the victim's SLO
+/// ([`fairness_deadline_ns`]), then replay the same heavy-hitter mix
+/// under both drain policies plus the victim-solo baseline.  Every
+/// replay runs twice and reports the warm run, so the EWMA throughput
+/// estimates feeding deadline admission are stable.
+pub fn tenant_fairness_run(
+    seed: u64,
+    devices: usize,
+    n_victim: usize,
+) -> Result<FairnessOutcome> {
+    let h = TenantHarness::new(seed, devices);
+    let capacity = h.calibrate()?;
+    let victim_deadline_ns = fairness_deadline_ns(capacity);
+    let hh = fairness_traffic(&h, capacity, n_victim);
+    let solo_specs = fairness_solo_traffic(&hh);
+    let run = |drain: DrainPolicy,
+               traffic: &[TraceSpec]|
+     -> Result<TenantServeReport> {
+        let lp = h.single_loop(
+            fairness_tenants(victim_deadline_ns),
+            h.config(drain),
+        )?;
+        let trace = h.trace(traffic);
+        lp.run_trace(&trace)?; // warm the engine + EWMA walls
+        lp.run_trace(&trace)
+    };
+    Ok(FairnessOutcome {
+        capacity_tok_per_sec: capacity,
+        victim_deadline_ns,
+        solo: run(DrainPolicy::WeightedFair, &solo_specs)?,
+        wfq: run(DrainPolicy::WeightedFair, &hh)?,
+        fifo: run(DrainPolicy::GlobalFifo, &hh)?,
+    })
+}
+
+/// `repro tenants`: the fairness sweep as a console report — calibrated
+/// capacity, per-tenant summary lines for all three replays, and the
+/// isolation verdict.
+pub fn tenant_report(seed: u64, devices: usize, n_victim: usize) -> Result<()> {
+    let out = tenant_fairness_run(seed, devices, n_victim)?;
+    println!(
+        "# tenant fairness: capacity {:.0} tok/s on {} device(s), victim \
+         SLO {:.3}ms, hitter 10.0x / victim 0.25x offered",
+        out.capacity_tok_per_sec,
+        devices.max(1),
+        out.victim_deadline_ns as f64 / 1e6,
+    );
+    for (label, rep) in [
+        ("victim solo (weighted-fair)", &out.solo),
+        ("heavy hitter, weighted-fair", &out.wfq),
+        ("heavy hitter, global fifo", &out.fifo),
+    ] {
+        println!("-- {label}");
+        for line in rep.summary_lines() {
+            println!("  {line}");
+        }
+    }
+    println!("{}", out.isolation_line());
+    Ok(())
+}
+
 /// `repro trace`: run one traced streamed step plus one traced serve
 /// burst, merge both span streams into a single Chrome trace-event file
 /// (`out`, loadable in `chrome://tracing` or Perfetto), and print the
@@ -663,6 +1127,73 @@ mod tests {
         let reqs2 = trace_requests(&trace, 6, 10);
         assert_eq!(reqs2[0].arrival_ns, reqs[0].arrival_ns);
         assert_ne!(reqs2[0].x.data, reqs[0].x.data);
+    }
+
+    #[test]
+    fn tenant_trace_merges_sorted_and_tags_tenants() {
+        let specs = vec![
+            TraceSpec {
+                seed: 5,
+                rate_per_sec: 800.0,
+                n_requests: 12,
+                min_rows: 2,
+                max_rows: 6,
+                bursty: false,
+            },
+            TraceSpec {
+                seed: 6,
+                rate_per_sec: 400.0,
+                n_requests: 7,
+                min_rows: 2,
+                max_rows: 6,
+                bursty: true,
+            },
+        ];
+        let trace = tenant_trace(&specs, 4, 17);
+        assert_eq!(trace.len(), 19);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_ns <= w[1].arrival_ns, "unsorted merge");
+        }
+        let per_tenant =
+            |t: usize| trace.iter().filter(|r| r.tenant == t).count();
+        assert_eq!(per_tenant(0), 12);
+        assert_eq!(per_tenant(1), 7);
+        for r in &trace {
+            assert_eq!(r.x.shape.len(), 2);
+            assert_eq!(r.x.shape[1], 4);
+            assert!((2..=6).contains(&r.x.shape[0]));
+        }
+        // deterministic, and payload seed varies payloads only
+        let again = tenant_trace(&specs, 4, 17);
+        assert_eq!(trace.len(), again.len());
+        assert!(trace
+            .iter()
+            .zip(&again)
+            .all(|(a, b)| a.x.data == b.x.data && a.tenant == b.tenant));
+        let other = tenant_trace(&specs, 4, 18);
+        assert_eq!(trace[0].arrival_ns, other[0].arrival_ns);
+        assert_ne!(trace[0].x.data, other[0].x.data);
+    }
+
+    #[test]
+    fn heavy_hitter_specs_share_one_horizon() {
+        let specs = heavy_hitter_specs(9, 4_000.0, 100.0, 20, 4, 24);
+        assert_eq!(specs.len(), 2);
+        assert!(specs[HITTER].bursty, "the hitter clumps");
+        assert!(!specs[VICTIM].bursty);
+        assert_eq!(specs[VICTIM].n_requests, 20);
+        // hitter keeps flooding for the victim's whole horizon:
+        // (4000/100) × 20 victim requests
+        assert_eq!(specs[HITTER].n_requests, 800);
+        let tails = long_tail_specs(9, 4_000.0, 64, 5, 4, 24);
+        assert_eq!(tails.len(), 6);
+        assert!(tails[0].bursty && tails[0].n_requests == 64);
+        for t in &tails[1..] {
+            assert!(t.rate_per_sec < tails[0].rate_per_sec / 10.0);
+            assert!(t.n_requests >= 2);
+        }
+        // per-tail seeds differ so arrivals don't duplicate
+        assert_ne!(tails[1].seed, tails[2].seed);
     }
 
     #[test]

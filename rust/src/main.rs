@@ -10,6 +10,7 @@
 //! repro cluster --rows 8 [--seed S]
 //! repro chaos --rows 8 [--seed S]
 //! repro serve --devices 4 --requests 400
+//! repro tenants --devices 2 --victims 16
 //! repro trace --out trace.json
 //! repro info
 //! ```
@@ -81,6 +82,10 @@ fn usage() -> ! {
                         injection sweep: rates x recovery policies + shard\n\
                         deaths, proving liveness and conservation)\n\
            serve        [--devices D] [--requests N] [--seed S]\n\
+           tenants      [--devices D] [--victims N] [--seed S]   (multi-tenant\n\
+                        fairness sweep: one heavy hitter vs one SLO victim,\n\
+                        weighted-fair vs global-FIFO drains vs victim-solo\n\
+                        baseline, per-tenant ledgers + isolation verdict)\n\
            trace        [--devices D] [--tokens N] [--requests N] [--seed S]\n\
                         [--out PATH]   (one traced streamed step + one traced\n\
                         serve burst -> Chrome trace JSON for Perfetto, plus\n\
@@ -215,6 +220,15 @@ fn main() -> Result<()> {
                 &[0.3, 1.0, 3.0],
                 requests,
             )?;
+        }
+        "tenants" => {
+            // artifact-free: per-tenant weighted-fair admission vs the
+            // global-FIFO baseline under an adversarial heavy hitter,
+            // with the victim-solo run as the isolation yardstick
+            let devices = args.get_u64("devices", 2)? as usize;
+            let victims = args.get_u64("victims", 16)? as usize;
+            let seed = args.get_u64("seed", 17)?;
+            moe::harness::workload::tenant_report(seed, devices, victims)?;
         }
         "trace" => {
             // artifact-free: span recording on for one streamed engine

@@ -79,6 +79,16 @@ impl Registry {
         *self.gauges.entry(key.to_string()).or_insert(0.0) += v;
     }
 
+    /// Max-combining gauge for high-water marks (`peak_queue_depth` and
+    /// friends): re-publishing the same peak is idempotent, and merging
+    /// replays keeps the maximum rather than summing.
+    pub fn gauge_max(&mut self, key: &str, v: f64) {
+        let e = self.gauges.entry(key.to_string()).or_insert(v);
+        if v > *e {
+            *e = v;
+        }
+    }
+
     /// Record one nanosecond sample into the named histogram.
     pub fn observe_ns(&mut self, key: &str, ns: u64) {
         self.hists.entry(key.to_string()).or_default().push(ns);
@@ -283,6 +293,9 @@ mod tests {
         r.gauge_set("live_fraction", 0.75);
         r.gauge_add("mass", 0.5);
         r.gauge_add("mass", 0.25);
+        r.gauge_max("peak", 8.0);
+        r.gauge_max("peak", 3.0);
+        r.gauge_max("peak", 8.0);
         for ns in [10u64, 20, 30, 40, 50] {
             r.observe_ns("lat_ns", ns);
         }
@@ -292,6 +305,7 @@ mod tests {
         assert_eq!(s.counter("missing"), 0);
         assert_eq!(s.gauge("live_fraction"), 0.75);
         assert_eq!(s.gauge("mass"), 0.75);
+        assert_eq!(s.gauge("peak"), 8.0);
         let h = s.hist("lat_ns").unwrap();
         assert_eq!(h.count, 5);
         assert_eq!(h.p50_ns, 30);

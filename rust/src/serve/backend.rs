@@ -1,0 +1,294 @@
+//! Pluggable serving backends: the engine-agnostic boundary between
+//! admission control and model execution.
+//!
+//! [`ServeBackend`] is the lm-router-shaped seam — a named engine with
+//! declared capabilities ([`BackendCaps`]: model dimension, batch
+//! ceiling, numeric [`Precision`], checkpoint variant) and one
+//! `execute_forward`-shaped entry point.  Admission control treats
+//! capabilities as *hard filters*: a request that needs a capability a
+//! backend lacks is never offered to it, no matter how idle it is —
+//! filtering precedes scoring, so load balancing can only choose among
+//! backends that could actually serve the request correctly.
+//!
+//! [`EngineBackend`] is the first implementation: one persistent
+//! [`Scheduler`] engine over a frozen router + expert weights, serving
+//! f32 bit-exactly or int8 within the kernel error budget — exactly
+//! the execution core [`ServeLoop`](crate::serve::ServeLoop) always
+//! had, now behind the trait so a fleet can mix checkpoints and
+//! precisions (A/B serving, cheap-tier int8 + exact-tier f32) and the
+//! multi-tenant front-end ([`crate::serve::TenantServeLoop`]) can
+//! route per-request.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::scheduler::{ExpertWeights, StepStats};
+use crate::coordinator::{Router, Scheduler};
+use crate::kernels::quant::{Precision, QuantizedExpertWeights};
+use crate::runtime::TensorF;
+
+/// What a backend can serve — the hard-filter side of admission
+/// (anything here that mismatches a request's requirements disqualifies
+/// the backend before any load scoring happens).
+#[derive(Clone, Debug)]
+pub struct BackendCaps {
+    /// model width every request's activations must match
+    pub d_model: usize,
+    /// engine batch ceiling (tokens); requests larger than this are
+    /// hard-filtered rather than shipped as oversized solo batches
+    pub max_batch_tokens: usize,
+    /// numeric width this backend serves at
+    pub precision: Precision,
+    /// checkpoint / model-variant label requests can pin
+    /// (e.g. `"base"` vs `"distilled"`)
+    pub variant: String,
+}
+
+impl BackendCaps {
+    /// Can this backend serve a `rows`-token request that requires
+    /// `precision` / `variant` (either `None` = no requirement)?
+    /// Pure capability check — no load or deadline terms.
+    pub fn admits(
+        &self,
+        rows: usize,
+        precision: Option<Precision>,
+        variant: Option<&str>,
+    ) -> bool {
+        rows <= self.max_batch_tokens
+            && precision.map_or(true, |p| p == self.precision)
+            && variant.map_or(true, |v| v == self.variant)
+    }
+}
+
+/// A named model-serving engine: capabilities plus one forward entry.
+/// The serve loops own backends boxed, so heterogeneous fleets (mixed
+/// checkpoints, mixed precisions, mock engines in tests) share one
+/// dispatch path.
+pub trait ServeBackend {
+    fn name(&self) -> &str;
+
+    fn caps(&self) -> &BackendCaps;
+
+    /// Fraction of expert capacity currently alive (1.0 when no fault
+    /// plan is active) — the throughput scale of deadline feasibility.
+    fn live_fraction(&self) -> f64;
+
+    /// One forward-only step over a coalesced `(rows, d_model)` batch.
+    fn execute_forward(&self, x: &TensorF) -> Result<(TensorF, StepStats)>;
+
+    /// Drain any engine trace spans recorded so far (empty unless the
+    /// backend's engine has tracing enabled).
+    fn take_spans(&self) -> Vec<crate::obs::Span> {
+        Vec::new()
+    }
+}
+
+/// The [`Scheduler`]-engine implementation of [`ServeBackend`]: a
+/// frozen router + expert weights on one persistent engine, serving at
+/// [`Precision::F32`] (bit-exact) or [`Precision::Int8`] (weight-only
+/// quantized twins created at load; the f32 originals stay untouched).
+pub struct EngineBackend {
+    name: String,
+    caps: BackendCaps,
+    sched: Scheduler,
+    router: Router,
+    weights: Vec<ExpertWeights>,
+    /// int8 twins of `weights` when `caps.precision` is `Int8`
+    qweights: Option<Vec<QuantizedExpertWeights>>,
+}
+
+impl EngineBackend {
+    /// Validate and freeze one engine.  Mirrors the checks the serve
+    /// loop has always made: expert count consistent across router /
+    /// weights / shard layout, uniform `d_model`, and int8 only on a
+    /// natively-streaming configuration (fail at load, not mid-trace).
+    pub fn new(
+        name: &str,
+        variant: &str,
+        sched: Scheduler,
+        router: Router,
+        weights: Vec<ExpertWeights>,
+        precision: Precision,
+        max_batch_tokens: usize,
+    ) -> Result<Self> {
+        if weights.is_empty() {
+            bail!("backend {name} needs at least one expert");
+        }
+        if router.n_experts != weights.len() {
+            bail!(
+                "backend {name}: router has {} experts but {} expert \
+                 weights given",
+                router.n_experts,
+                weights.len()
+            );
+        }
+        if sched.layout().n_experts != router.n_experts {
+            bail!(
+                "backend {name}: scheduler layout has {} experts but \
+                 router has {}",
+                sched.layout().n_experts,
+                router.n_experts
+            );
+        }
+        let d_model = router.d_model;
+        for (e, w) in weights.iter().enumerate() {
+            if w.d_model != d_model {
+                bail!(
+                    "backend {name}: expert {e} has d_model {} (router {})",
+                    w.d_model,
+                    d_model
+                );
+            }
+        }
+        let qweights = match precision {
+            Precision::F32 => None,
+            Precision::Int8 => {
+                if !sched.streams_natively(&router) {
+                    bail!(
+                        "Precision::Int8 requires Native router + expert \
+                         backends (streaming path); this configuration \
+                         would silently serve f32"
+                    );
+                }
+                Some(QuantizedExpertWeights::quantize_all(&weights))
+            }
+        };
+        Ok(EngineBackend {
+            name: name.to_string(),
+            caps: BackendCaps {
+                d_model,
+                max_batch_tokens: max_batch_tokens.max(1),
+                precision,
+                variant: variant.to_string(),
+            },
+            sched,
+            router,
+            weights,
+            qweights,
+        })
+    }
+
+    /// The frozen f32 expert weights (always the checkpoint values —
+    /// int8 serving quantizes a *copy* at load).
+    pub fn weights(&self) -> &[ExpertWeights] {
+        &self.weights
+    }
+
+    /// The int8 weight twins when serving at [`Precision::Int8`].
+    pub fn quantized_weights(&self) -> Option<&[QuantizedExpertWeights]> {
+        self.qweights.as_deref()
+    }
+}
+
+impl ServeBackend for EngineBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn caps(&self) -> &BackendCaps {
+        &self.caps
+    }
+
+    fn live_fraction(&self) -> f64 {
+        self.sched.live_fraction()
+    }
+
+    fn execute_forward(&self, x: &TensorF) -> Result<(TensorF, StepStats)> {
+        let (mut outs, step) = match &self.qweights {
+            Some(q) => {
+                self.sched.execute_forward_quant(&self.router, &[x], q)?
+            }
+            None => {
+                self.sched.execute_forward(&self.router, &[x], &self.weights)?
+            }
+        };
+        Ok((outs.remove(0), step))
+    }
+
+    fn take_spans(&self) -> Vec<crate::obs::Span> {
+        self.sched.take_spans()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::ExpertBackend;
+    use crate::coordinator::ShardLayout;
+    use crate::util::{prop, rng::Rng};
+
+    fn mk_backend(name: &str, precision: Precision, seed: u64) -> EngineBackend {
+        let (d, h, n, k) = (4, 6, 4, 2);
+        let mut rng = Rng::new(seed);
+        let weights = (0..n)
+            .map(|_| ExpertWeights {
+                w_in: prop::vec_f32(&mut rng, d * h, 0.3),
+                w_out: prop::vec_f32(&mut rng, h * d, 0.3),
+                d_model: d,
+                hidden: h,
+            })
+            .collect();
+        let router = Router::flat_native(
+            d, n, k,
+            prop::vec_f32(&mut rng, d * n, 0.5),
+            Some(prop::vec_f32(&mut rng, d * n, 0.3)),
+        );
+        let sched =
+            Scheduler::new(ShardLayout::new(2, n), ExpertBackend::Native);
+        EngineBackend::new(name, "base", sched, router, weights, precision, 64)
+            .unwrap()
+    }
+
+    #[test]
+    fn caps_admit_is_a_pure_hard_filter() {
+        let b = mk_backend("exact", Precision::F32, 1);
+        let caps = b.caps();
+        assert_eq!(caps.d_model, 4);
+        assert!(caps.admits(64, None, None), "at the batch ceiling");
+        assert!(!caps.admits(65, None, None), "over the batch ceiling");
+        assert!(caps.admits(1, Some(Precision::F32), Some("base")));
+        assert!(!caps.admits(1, Some(Precision::Int8), None));
+        assert!(!caps.admits(1, None, Some("distilled")));
+    }
+
+    #[test]
+    fn engine_backend_executes_deterministically() {
+        let b = mk_backend("exact", Precision::F32, 2);
+        let mut rng = Rng::new(9);
+        let x = crate::runtime::TensorF::new(
+            vec![3, 4],
+            prop::vec_f32(&mut rng, 12, 1.0),
+        );
+        let (y1, s1) = b.execute_forward(&x).unwrap();
+        let (y2, _) = b.execute_forward(&x).unwrap();
+        assert_eq!(y1.shape, vec![3, 4]);
+        assert_eq!(y1.data, y2.data, "same input must serve identical bits");
+        assert_eq!(s1.failed_chunks, 0);
+        assert_eq!(b.name(), "exact");
+        assert!((b.live_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constructor_validates_like_the_serve_loop() {
+        let (d, h, n) = (4, 6, 4);
+        let mut rng = Rng::new(3);
+        let weights: Vec<ExpertWeights> = (0..n - 1)
+            .map(|_| ExpertWeights {
+                w_in: prop::vec_f32(&mut rng, d * h, 0.3),
+                w_out: prop::vec_f32(&mut rng, h * d, 0.3),
+                d_model: d,
+                hidden: h,
+            })
+            .collect();
+        let router = Router::flat_native(
+            d, n, 2,
+            prop::vec_f32(&mut rng, d * n, 0.5),
+            None,
+        );
+        let sched =
+            Scheduler::new(ShardLayout::new(1, n), ExpertBackend::Native);
+        assert!(EngineBackend::new(
+            "bad", "base", sched, router, weights, Precision::F32, 64
+        )
+        .is_err());
+    }
+}

@@ -14,7 +14,49 @@
 use std::ops::Range;
 
 use crate::runtime::TensorF;
-use crate::serve::queue::{RequestId, RequestQueue};
+use crate::serve::queue::{RequestId, RequestQueue, ServeRequest};
+
+/// Anything the micro-batcher can drain: the single global
+/// [`RequestQueue`], or the multi-tenant
+/// [`TenantQueue`](crate::serve::TenantQueue) whose `pop_next` follows
+/// its drain policy (deficit-round-robin or global FIFO) instead of
+/// plain FIFO order.
+pub trait BatchSource {
+    fn is_empty(&self) -> bool;
+    /// Total queued tokens across every backing lane.
+    fn depth_tokens(&self) -> usize;
+    /// Arrival stamp of the longest-waiting queued request (the
+    /// latency-budget dispatch trigger watches this).
+    fn oldest_arrival_ns(&self) -> Option<u64>;
+    /// Rows of the request the next [`pop_next`](Self::pop_next) will
+    /// return.  Takes `&mut self` because choosing the next request may
+    /// advance scheduler state (e.g. DRR deficit replenishment).
+    fn next_rows(&mut self) -> Option<usize>;
+    /// Pop the request [`next_rows`](Self::next_rows) described.
+    fn pop_next(&mut self) -> Option<ServeRequest>;
+}
+
+impl BatchSource for RequestQueue {
+    fn is_empty(&self) -> bool {
+        RequestQueue::is_empty(self)
+    }
+
+    fn depth_tokens(&self) -> usize {
+        RequestQueue::depth_tokens(self)
+    }
+
+    fn oldest_arrival_ns(&self) -> Option<u64> {
+        RequestQueue::oldest_arrival_ns(self)
+    }
+
+    fn next_rows(&mut self) -> Option<usize> {
+        self.front().map(|r| r.rows())
+    }
+
+    fn pop_next(&mut self) -> Option<ServeRequest> {
+        self.pop()
+    }
+}
 
 /// Where one request's rows landed inside a coalesced batch.
 #[derive(Clone, Debug)]
@@ -55,7 +97,10 @@ impl MicroBatcher {
     }
 
     /// The oldest queued request's dispatch deadline.
-    pub fn deadline_ns(&self, queue: &RequestQueue) -> Option<u64> {
+    pub fn deadline_ns<S: BatchSource + ?Sized>(
+        &self,
+        queue: &S,
+    ) -> Option<u64> {
         queue
             .oldest_arrival_ns()
             .map(|a| a.saturating_add(self.latency_budget_ns))
@@ -64,9 +109,9 @@ impl MicroBatcher {
     /// Should a batch be dispatched now?  `drained` marks that no more
     /// arrivals are coming (trace exhausted), so waiting for a fuller
     /// batch would only burn latency.
-    pub fn should_dispatch(
+    pub fn should_dispatch<S: BatchSource + ?Sized>(
         &self,
-        queue: &RequestQueue,
+        queue: &S,
         now_ns: u64,
         drained: bool,
     ) -> bool {
@@ -78,20 +123,28 @@ impl MicroBatcher {
             || self.deadline_ns(queue).is_some_and(|d| now_ns >= d)
     }
 
-    /// Pop whole requests FIFO until the next one would overflow
-    /// `max_tokens`, concatenating their rows into one (rows, d) tensor.
-    /// The first request is always taken, so a request as large as the
-    /// cap still ships alone.  `None` on an empty queue.
-    pub fn form(&self, queue: &mut RequestQueue, d: usize) -> Option<MicroBatch> {
-        queue.front()?;
+    /// Pop whole requests in source order (FIFO for a [`RequestQueue`],
+    /// policy order for a tenant front-end) until the next one would
+    /// overflow `max_tokens`, concatenating their rows into one
+    /// (rows, d) tensor.  The first request is always taken, so a
+    /// request as large as the cap still ships alone.  `None` on an
+    /// empty source.
+    pub fn form<S: BatchSource + ?Sized>(
+        &self,
+        queue: &mut S,
+        d: usize,
+    ) -> Option<MicroBatch> {
+        if queue.is_empty() {
+            return None;
+        }
         let mut data: Vec<f32> = Vec::new();
         let mut slots: Vec<BatchSlot> = Vec::new();
         let mut rows = 0usize;
-        while let Some(next_rows) = queue.front().map(|r| r.rows()) {
+        while let Some(next_rows) = queue.next_rows() {
             if !slots.is_empty() && rows + next_rows > self.max_tokens {
                 break;
             }
-            let req = queue.pop().expect("front() was Some");
+            let req = queue.pop_next().expect("next_rows was Some");
             data.extend_from_slice(&req.x.data);
             slots.push(BatchSlot {
                 id: req.id,

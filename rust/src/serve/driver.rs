@@ -30,6 +30,7 @@ use crate::coordinator::scheduler::ExpertWeights;
 use crate::coordinator::{Router, Scheduler};
 use crate::kernels::quant::{Precision, QuantizedExpertWeights};
 use crate::runtime::{ModelConfig, TensorF};
+use crate::serve::backend::{EngineBackend, ServeBackend};
 use crate::serve::batcher::MicroBatcher;
 use crate::serve::queue::{AdmissionPolicy, RequestQueue, ServeRequest};
 use crate::serve::stats::ServeStats;
@@ -100,16 +101,12 @@ pub struct ServeReport {
 }
 
 /// Continuous micro-batching inference runtime over a frozen MoE.
+/// Executes through a single [`EngineBackend`] — the same validation
+/// and dispatch the loop always had, factored behind [`ServeBackend`]
+/// so the multi-tenant front-end can route across a fleet of these.
 pub struct ServeLoop {
-    sched: Scheduler,
-    router: Router,
-    weights: Vec<ExpertWeights>,
-    /// int8 twins of `weights`, quantized once at load when the config
-    /// asks for [`Precision::Int8`] (the f32 `weights` stay untouched —
-    /// checkpoints and any later re-training are unaffected)
-    qweights: Option<Vec<QuantizedExpertWeights>>,
+    backend: EngineBackend,
     cfg: ServeConfig,
-    d_model: usize,
 }
 
 impl ServeLoop {
@@ -121,45 +118,16 @@ impl ServeLoop {
         weights: Vec<ExpertWeights>,
         cfg: ServeConfig,
     ) -> Result<Self> {
-        if weights.is_empty() {
-            bail!("serve loop needs at least one expert");
-        }
-        if router.n_experts != weights.len() {
-            bail!(
-                "router has {} experts but {} expert weights given",
-                router.n_experts,
-                weights.len()
-            );
-        }
-        if sched.layout().n_experts != router.n_experts {
-            bail!(
-                "scheduler layout has {} experts but router has {}",
-                sched.layout().n_experts,
-                router.n_experts
-            );
-        }
-        let d_model = router.d_model;
-        for (e, w) in weights.iter().enumerate() {
-            if w.d_model != d_model {
-                bail!("expert {e} has d_model {} (router {})", w.d_model, d_model);
-            }
-        }
-        let qweights = match cfg.precision {
-            Precision::F32 => None,
-            Precision::Int8 => {
-                // fail at load, not mid-trace: the quantized path only
-                // exists on the streaming pipeline
-                if !sched.streams_natively(&router) {
-                    bail!(
-                        "Precision::Int8 requires Native router + expert \
-                         backends (streaming path); this configuration \
-                         would silently serve f32"
-                    );
-                }
-                Some(QuantizedExpertWeights::quantize_all(&weights))
-            }
-        };
-        Ok(ServeLoop { sched, router, weights, qweights, cfg, d_model })
+        let backend = EngineBackend::new(
+            "engine",
+            "base",
+            sched,
+            router,
+            weights,
+            cfg.precision,
+            cfg.max_batch_tokens,
+        )?;
+        Ok(ServeLoop { backend, cfg })
     }
 
     /// Freeze a streamed training state (gating included) for serving.
@@ -188,26 +156,31 @@ impl ServeLoop {
     }
 
     pub fn d_model(&self) -> usize {
-        self.d_model
+        self.backend.caps().d_model
+    }
+
+    /// The single engine backend this loop executes on.
+    pub fn backend(&self) -> &EngineBackend {
+        &self.backend
     }
 
     /// The frozen f32 expert weights (always the checkpoint values —
     /// int8 serving quantizes a *copy* at load, so these are unchanged
     /// under [`Precision::Int8`]; tests assert exactly that).
     pub fn weights(&self) -> &[ExpertWeights] {
-        &self.weights
+        self.backend.weights()
     }
 
     /// The int8 weight twins when serving at [`Precision::Int8`].
     pub fn quantized_weights(&self) -> Option<&[QuantizedExpertWeights]> {
-        self.qweights.as_deref()
+        self.backend.quantized_weights()
     }
 
     /// Drain the trace spans the underlying engine recorded across the
     /// batches served so far (empty unless the scheduler was built
     /// [`Scheduler::with_obs`]-enabled or `MOE_TRACE` is set).
     pub fn take_spans(&self) -> Vec<crate::obs::Span> {
-        self.sched.take_spans()
+        self.backend.take_spans()
     }
 
     /// Replay an arrival-sorted trace (module docs).  Requests are
@@ -226,7 +199,7 @@ impl ServeLoop {
     /// recovery masks shards out, infeasible requests are shed at the
     /// edge instead of queueing to blow their SLO.
     pub fn run_trace(&self, trace: &[TimedRequest]) -> Result<ServeReport> {
-        let d = self.d_model;
+        let d = self.d_model();
         for (i, r) in trace.iter().enumerate() {
             if r.x.shape.len() != 2 || r.x.shape[1] != d {
                 bail!(
@@ -272,7 +245,7 @@ impl ServeLoop {
             // requests are counted by the queue and their outputs stay
             // None in the report.  Backed-off retries re-enter through
             // the same admission control as fresh arrivals.
-            let live = self.sched.live_fraction();
+            let live = self.backend.live_fraction();
             while retries.front().is_some_and(|(due, _)| *due <= now) {
                 let (_, req) = retries.pop_front().expect("front was Some");
                 let infeasible = self.cfg.deadline_ns.is_some_and(|dl| {
@@ -350,18 +323,7 @@ impl ServeLoop {
                 .expect("dispatch decision implies a non-empty queue");
             let dispatched_at = now;
             let t0 = Instant::now();
-            let (outs, step) = match &self.qweights {
-                Some(q) => self.sched.execute_forward_quant(
-                    &self.router,
-                    &[&batch.x],
-                    q,
-                )?,
-                None => self.sched.execute_forward(
-                    &self.router,
-                    &[&batch.x],
-                    &self.weights,
-                )?,
-            };
+            let (combined, step) = self.backend.execute_forward(&batch.x)?;
             let wall = t0.elapsed().as_nanos() as u64;
             now += wall;
             stats.record_batch(&step, batch.rows(), self.cfg.max_batch_tokens);
@@ -376,7 +338,6 @@ impl ServeLoop {
             // so attribution is per-batch, not per-slot)
             let degraded =
                 step.failed_chunks > 0 || step.degraded_tokens > 0;
-            let combined = &outs[0];
             for slot in &batch.slots {
                 if degraded && attempts[slot.id] < self.cfg.retry_max {
                     // re-offer after backoff; this attempt's output is

@@ -34,9 +34,26 @@
 //!   snapshot `benches/serve.rs` exports to `BENCH_serve.json` and
 //!   `repro trace` serialises as JSON/Prometheus text.
 //!
+//! Above the single-queue loop sits the multi-tenant front-end:
+//!
+//! - [`ServeBackend`] (`backend.rs`) — the engine-agnostic execution
+//!   seam: a named backend with declared capabilities (`d_model`,
+//!   batch ceiling, [`Precision`](crate::kernels::quant::Precision),
+//!   checkpoint variant) and one `execute_forward` entry;
+//!   [`EngineBackend`] wraps the [`Scheduler`](crate::coordinator::Scheduler)
+//!   engine and is what [`ServeLoop`] executes through, so a fleet can
+//!   mix checkpoints and precisions;
+//! - [`TenantQueue`] / [`TenantServeLoop`] (`tenant.rs`) — per-tenant
+//!   bounded lanes drained weighted-fair (deficit round-robin) or
+//!   global-FIFO into the same [`MicroBatcher`] (via [`BatchSource`]),
+//!   with capability-first admission (hard filters before load
+//!   scoring) routing each request to a capable backend, and
+//!   per-tenant [`ServeStats`] published as `serve_*{tenant="..."}`.
+//!
 //! The open-loop Poisson traffic generator lives in
 //! [`crate::harness::workload`] (seeded, ragged request lengths,
-//! bursty mode); `examples/serve_demo.rs` and `repro serve` print
+//! bursty mode, multi-tenant heavy-hitter/long-tail mixes);
+//! `examples/serve_demo.rs` and `repro serve` print
 //! latency-vs-offered-load curves from it.  `rust/tests/serve.rs`
 //! proves serve-path correctness differentially: scattered
 //! [`ServeLoop`] outputs are bit-identical to running every request
@@ -46,14 +63,25 @@
 //! sheds) at offered loads above engine throughput.  `rust/tests/obs.rs`
 //! proves the serve path is *bit-neutral under tracing*: the same trace
 //! replayed with span recording on yields byte-identical outputs and
-//! stats.
+//! stats.  `rust/tests/tenants.rs` proves per-tenant conservation
+//! (tenant ledgers sum to the global ledger), weighted-fair isolation
+//! against a heavy hitter (with global FIFO as the violating
+//! baseline), and that backend routing is bit-identical to serving
+//! each request on its assigned backend alone.
 
+pub mod backend;
 pub mod batcher;
 pub mod driver;
 pub mod queue;
 pub mod stats;
+pub mod tenant;
 
-pub use batcher::{BatchSlot, MicroBatch, MicroBatcher};
+pub use backend::{BackendCaps, EngineBackend, ServeBackend};
+pub use batcher::{BatchSlot, BatchSource, MicroBatch, MicroBatcher};
 pub use driver::{ServeConfig, ServeLoop, ServeReport, TimedRequest};
 pub use queue::{AdmissionPolicy, RequestQueue, ServeRequest};
 pub use stats::ServeStats;
+pub use tenant::{
+    DrainPolicy, LaneLedger, TenantQueue, TenantRequest, TenantServeConfig,
+    TenantServeLoop, TenantServeReport, TenantSpec,
+};

@@ -45,6 +45,10 @@ pub struct RequestQueue {
     max_depth: usize,
     policy: AdmissionPolicy,
     queue: VecDeque<ServeRequest>,
+    /// running sum of queued rows — kept in lockstep with `queue` by
+    /// `offer`/`pop` so `depth_tokens` is O(1) on the per-offer
+    /// `feasible()` hot path instead of an O(depth) rescan
+    queued_tokens: usize,
     offered: u64,
     shed: u64,
     peak_depth: usize,
@@ -56,6 +60,7 @@ impl RequestQueue {
             max_depth: max_depth.max(1),
             policy,
             queue: VecDeque::new(),
+            queued_tokens: 0,
             offered: 0,
             shed: 0,
             peak_depth: 0,
@@ -72,8 +77,10 @@ impl RequestQueue {
 
     /// Total queued tokens (rows), the quantity the
     /// [`MicroBatcher`](crate::serve::MicroBatcher) fills batches from.
+    /// O(1): a running count maintained by `offer`/`pop`/shed, since
+    /// every `feasible()` call on the per-offer hot path reads it.
     pub fn depth_tokens(&self) -> usize {
-        self.queue.iter().map(|r| r.rows()).sum()
+        self.queued_tokens
     }
 
     /// Arrival stamp of the longest-waiting request.
@@ -168,15 +175,18 @@ impl RequestQueue {
                         match self.queue.pop_front() {
                             Some(old) => {
                                 self.shed += 1;
+                                self.queued_tokens -= old.rows();
                                 dropped.push(old);
                             }
                             None => break,
                         }
                     }
+                    self.queued_tokens += req.rows();
                     self.queue.push_back(req);
                 }
             }
         } else {
+            self.queued_tokens += req.rows();
             self.queue.push_back(req);
         }
         self.peak_depth = self.peak_depth.max(self.queue.len());
@@ -188,7 +198,11 @@ impl RequestQueue {
     }
 
     pub fn pop(&mut self) -> Option<ServeRequest> {
-        self.queue.pop_front()
+        let req = self.queue.pop_front();
+        if let Some(r) = &req {
+            self.queued_tokens -= r.rows();
+        }
+        req
     }
 }
 
@@ -310,6 +324,45 @@ mod tests {
         assert_eq!(q.offered(), popped + q.shed() + q.len() as u64);
         assert!(q.shed() > 0, "test never exercised a shed path");
         assert!(popped > 0);
+    }
+
+    #[test]
+    fn cached_token_count_matches_recompute_across_interleavings() {
+        // property test for the O(1) depth_tokens cache: across random
+        // offer/pop/shed interleavings under both policies, the running
+        // count always equals a from-scratch rescan of the queue
+        let mut state = 0x9e37_79b9_u64;
+        let mut rng = move || {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        for policy in [AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest] {
+            let mut q = RequestQueue::new(5, policy);
+            for i in 0..400 {
+                match rng() % 4 {
+                    // offers dominate so the queue fills and sheds
+                    0 | 1 | 2 => {
+                        q.offer(req(i, i as u64, 1 + rng() % 7));
+                    }
+                    _ => {
+                        q.pop();
+                    }
+                }
+                let recompute: usize =
+                    q.queue.iter().map(|r| r.rows()).sum();
+                assert_eq!(
+                    q.depth_tokens(),
+                    recompute,
+                    "{policy:?} cache diverged at op {i}"
+                );
+            }
+            assert!(q.shed() > 0, "interleaving never exercised a shed");
+            // drain to empty: the cache must return to exactly zero
+            while q.pop().is_some() {}
+            assert_eq!(q.depth_tokens(), 0);
+        }
     }
 
     #[test]

@@ -124,28 +124,46 @@ impl ServeStats {
     /// sample-exactly (`serve_queue_wait_ns` / `serve_compute_ns` /
     /// `serve_total_ns`), the summed engine phases as
     /// `step_phase_ns{phase=...}`, and the fault tally under the shared
-    /// `fault_*` keys.
+    /// `fault_*` keys.  `peak_queue_depth` is a high-water mark, not a
+    /// flow: it goes in as a max-combining gauge
+    /// ([`Registry::gauge_max`]) so re-publishing or merging replays is
+    /// idempotent instead of summing peaks.
     pub fn publish(&self, reg: &mut Registry) {
-        reg.counter_add("serve_offered", self.offered);
-        reg.counter_add("serve_completed", self.completed);
-        reg.counter_add("serve_shed", self.shed);
-        reg.counter_add("serve_failed", self.failed);
-        reg.counter_add("serve_retried", self.retried);
-        reg.counter_add("serve_slo_violations", self.slo_violations);
-        reg.counter_add("serve_tokens_served", self.tokens_served);
-        reg.counter_add("serve_batches", self.batches);
-        reg.counter_add("serve_batch_tokens", self.batch_tokens);
-        reg.counter_add("serve_batch_capacity", self.batch_capacity);
-        reg.counter_add("serve_wall_ns", self.wall_ns);
-        reg.counter_add("serve_peak_queue_depth", self.peak_queue_depth as u64);
-        reg.merge_hist("serve_queue_wait_ns", &self.queue_wait);
-        reg.merge_hist("serve_compute_ns", &self.compute);
-        reg.merge_hist("serve_total_ns", &self.total);
+        self.publish_with(reg, &[]);
+    }
+
+    /// [`publish`](Self::publish) under extra labels — the multi-tenant
+    /// front-end publishes each tenant's ledger as
+    /// `serve_*{tenant="..."}` so per-tenant and global series coexist
+    /// in one registry.
+    pub fn publish_with(&self, reg: &mut Registry, labels: &[(&str, &str)]) {
+        let k = |name: &str| crate::obs::key(name, labels);
+        reg.counter_add(&k("serve_offered"), self.offered);
+        reg.counter_add(&k("serve_completed"), self.completed);
+        reg.counter_add(&k("serve_shed"), self.shed);
+        reg.counter_add(&k("serve_failed"), self.failed);
+        reg.counter_add(&k("serve_retried"), self.retried);
+        reg.counter_add(&k("serve_slo_violations"), self.slo_violations);
+        reg.counter_add(&k("serve_tokens_served"), self.tokens_served);
+        reg.counter_add(&k("serve_batches"), self.batches);
+        reg.counter_add(&k("serve_batch_tokens"), self.batch_tokens);
+        reg.counter_add(&k("serve_batch_capacity"), self.batch_capacity);
+        reg.counter_add(&k("serve_wall_ns"), self.wall_ns);
+        reg.gauge_max(
+            &k("serve_peak_queue_depth"),
+            self.peak_queue_depth as f64,
+        );
+        reg.merge_hist(&k("serve_queue_wait_ns"), &self.queue_wait);
+        reg.merge_hist(&k("serve_compute_ns"), &self.compute);
+        reg.merge_hist(&k("serve_total_ns"), &self.total);
         self.phases.publish(reg);
-        reg.counter_add("fault_failed_chunks", self.failed_chunks);
-        reg.counter_add("fault_redispatched_routes", self.redispatched_routes);
-        reg.counter_add("fault_degraded_tokens", self.degraded_tokens);
-        reg.gauge_add("fault_renorm_mass_lost", self.renorm_mass_lost);
+        reg.counter_add(&k("fault_failed_chunks"), self.failed_chunks);
+        reg.counter_add(
+            &k("fault_redispatched_routes"),
+            self.redispatched_routes,
+        );
+        reg.counter_add(&k("fault_degraded_tokens"), self.degraded_tokens);
+        reg.gauge_add(&k("fault_renorm_mass_lost"), self.renorm_mass_lost);
     }
 
     /// One-line SLO summary — the single place the serve report format
@@ -293,5 +311,25 @@ mod tests {
         // publishing twice accumulates (counters are monotonic sums)
         s.publish(&mut reg);
         assert_eq!(reg.snapshot().counter("serve_offered"), 20);
+    }
+
+    #[test]
+    fn publish_with_labels_writes_tenant_scoped_keys() {
+        let mut s = ServeStats::new();
+        s.offered = 5;
+        s.completed = 4;
+        s.shed = 1;
+        s.peak_queue_depth = 6;
+        s.total.push(1_000);
+        let mut reg = Registry::new();
+        s.publish_with(&mut reg, &[("tenant", "acme")]);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("serve_offered{tenant=\"acme\"}"), 5);
+        assert_eq!(snap.counter("serve_offered"), 0);
+        assert_eq!(snap.gauge("serve_peak_queue_depth{tenant=\"acme\"}"), 6.0);
+        assert_eq!(
+            snap.hist("serve_total_ns{tenant=\"acme\"}").unwrap().count,
+            1
+        );
     }
 }

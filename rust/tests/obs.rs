@@ -290,3 +290,33 @@ fn registry_snapshot_roundtrips_and_renders_the_console_lines() {
         ServeStats::render_summary(&sreg.snapshot())
     );
 }
+
+#[test]
+fn peak_queue_depth_publish_is_idempotent_not_summing() {
+    // regression: peak_queue_depth used to go in via counter_add, so
+    // publishing the same stats twice (or merging replays into one
+    // registry) reported the *sum* of high-water marks — a queue that
+    // never got deeper than 6 showed peak 12.  High-water marks must
+    // max-combine.
+    let mut stats = ServeStats::default();
+    stats.offered = 4;
+    stats.completed = 4;
+    stats.peak_queue_depth = 6;
+    let mut reg = Registry::new();
+    stats.publish(&mut reg);
+    stats.publish(&mut reg);
+    let snap = reg.snapshot();
+    // flows legitimately accumulate across publishes...
+    assert_eq!(snap.counter("serve_offered"), 8);
+    // ...but the high-water mark must not
+    assert_eq!(
+        snap.gauge("serve_peak_queue_depth"),
+        6.0,
+        "double publish summed the peak instead of max-combining"
+    );
+    // and merging a replay with a lower peak keeps the maximum
+    let mut shallower = ServeStats::default();
+    shallower.peak_queue_depth = 2;
+    shallower.publish(&mut reg);
+    assert_eq!(reg.snapshot().gauge("serve_peak_queue_depth"), 6.0);
+}

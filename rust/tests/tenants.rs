@@ -1,0 +1,299 @@
+//! Multi-tenant admission front-end correctness (tier-1).
+//!
+//! Three load-bearing properties of `moe::serve::tenant`:
+//!
+//! 1. **Conservation** — under adversarial traffic (heavy hitter,
+//!    long tail) and every admission × drain policy combination, each
+//!    tenant's ledger conserves (`offered == completed + shed +
+//!    failed`) and the per-tenant ledgers sum *exactly* to the global
+//!    one.  No request is lost or double-counted at any boundary:
+//!    capability filtering, lane shedding, cross-tenant displacement,
+//!    batching, degraded completion.
+//! 2. **Isolation** — the fairness experiment: with a tenant flooding
+//!    at 10× capacity, the weighted-fair (DRR) drain keeps a
+//!    well-behaved victim's completed fraction and p99 latency near
+//!    its solo baseline, while the global-FIFO drain — same trace,
+//!    same engine — demonstrably sheds the victim.  This is the
+//!    paper's serving economics at the front door: capacity is only
+//!    affordable per query if one tenant can't buy the whole queue.
+//! 3. **Routing bit-identity** — a mixed trace routed across two
+//!    backends (exact f32 "base" + int8 "canary" over a different
+//!    checkpoint) produces, for every completed request, outputs
+//!    bit-identical to running that request alone on its assigned
+//!    backend: coalescing, tenancy and capability routing add zero
+//!    numeric perturbation.
+
+use moe::harness::workload::{
+    heavy_hitter_specs, long_tail_specs, tenant_fairness_run, FairnessOutcome,
+    TenantHarness, TraceSpec, HITTER, VICTIM,
+};
+use moe::kernels::quant::Precision;
+use moe::serve::{
+    AdmissionPolicy, DrainPolicy, ServeBackend, TenantServeConfig,
+    TenantServeReport, TenantSpec,
+};
+
+/// Per-tenant ledgers conserve and sum exactly to the global ledger.
+fn assert_conserved(rep: &TenantServeReport, trace_len: u64, ctx: &str) {
+    let (mut offered, mut completed, mut shed, mut failed) = (0, 0, 0, 0);
+    for (name, s) in rep.tenants.iter().zip(&rep.per_tenant) {
+        assert_eq!(
+            s.offered,
+            s.completed + s.shed + s.failed,
+            "{ctx}: tenant {name} ledger does not conserve"
+        );
+        offered += s.offered;
+        completed += s.completed;
+        shed += s.shed;
+        failed += s.failed;
+    }
+    assert_eq!(offered, rep.global.offered, "{ctx}: offered sums");
+    assert_eq!(completed, rep.global.completed, "{ctx}: completed sums");
+    assert_eq!(shed, rep.global.shed, "{ctx}: shed sums");
+    assert_eq!(failed, rep.global.failed, "{ctx}: failed sums");
+    assert_eq!(
+        rep.global.offered, trace_len,
+        "{ctx}: every trace entry must be offered exactly once"
+    );
+    assert_eq!(
+        rep.global.offered,
+        rep.global.completed + rep.global.shed + rep.global.failed,
+        "{ctx}: global ledger does not conserve"
+    );
+}
+
+#[test]
+fn ledgers_conserve_under_heavy_hitter_across_all_policies() {
+    let h = TenantHarness::new(33, 1);
+    // burst-scale rates so lane bounds actually bind: most of the
+    // flood sheds, a bounded prefix completes — both ledger branches
+    // exercised
+    let specs = heavy_hitter_specs(33, 2e8, 1e7, 12, h.min_rows, h.max_rows);
+    let trace = h.trace(&specs);
+    let tenants = || {
+        vec![
+            TenantSpec::new("hitter", 8),
+            TenantSpec {
+                deadline_ns: Some(2_000_000),
+                ..TenantSpec::new("victim", 4)
+            },
+        ]
+    };
+    for drain in [DrainPolicy::GlobalFifo, DrainPolicy::WeightedFair] {
+        for admission in [AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest]
+        {
+            let cfg = TenantServeConfig {
+                admission,
+                drain,
+                ..h.config(drain)
+            };
+            let lp = h.ab_loop(tenants(), cfg).unwrap();
+            let rep = lp.run_trace(&trace).unwrap();
+            let ctx = format!("heavy-hitter {drain:?}/{admission:?}");
+            assert_conserved(&rep, trace.len() as u64, &ctx);
+            assert!(
+                rep.global.shed > 0,
+                "{ctx}: burst trace should overflow the lanes"
+            );
+            assert!(
+                rep.per_tenant[HITTER].completed > 0,
+                "{ctx}: some of the flood must still serve"
+            );
+        }
+    }
+}
+
+#[test]
+fn ledgers_conserve_under_long_tail_with_capability_pins() {
+    let h = TenantHarness::new(47, 1);
+    let specs = long_tail_specs(47, 5e7, 48, 3, h.min_rows, h.max_rows);
+    let trace = h.trace(&specs);
+    // head + three tails; two tails pin capabilities so routing has to
+    // respect hard filters while conserving
+    let tenants = || {
+        vec![
+            TenantSpec {
+                weight: 4,
+                ..TenantSpec::new("head", 16)
+            },
+            TenantSpec {
+                required_precision: Some(Precision::F32),
+                ..TenantSpec::new("tail-exact", 4)
+            },
+            TenantSpec {
+                required_variant: Some("canary".to_string()),
+                ..TenantSpec::new("tail-canary", 4)
+            },
+            TenantSpec {
+                deadline_ns: Some(1_000_000),
+                ..TenantSpec::new("tail-slo", 4)
+            },
+        ]
+    };
+    for drain in [DrainPolicy::GlobalFifo, DrainPolicy::WeightedFair] {
+        for admission in [AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest]
+        {
+            let cfg = TenantServeConfig {
+                admission,
+                drain,
+                ..h.config(drain)
+            };
+            let lp = h.ab_loop(tenants(), cfg).unwrap();
+            let rep = lp.run_trace(&trace).unwrap();
+            let ctx = format!("long-tail {drain:?}/{admission:?}");
+            assert_conserved(&rep, trace.len() as u64, &ctx);
+        }
+    }
+}
+
+#[test]
+fn oversized_requests_are_hard_filtered_before_any_load_scoring() {
+    // capability-first ordering: a request larger than every backend's
+    // batch ceiling is shed at the edge even though all queues are
+    // empty — it never reaches slack scoring or a lane
+    let mut h = TenantHarness::new(5, 1);
+    h.max_batch_tokens = 16;
+    h.min_rows = 20;
+    h.max_rows = 24;
+    let trace = h.trace(&[TraceSpec {
+        seed: 5,
+        rate_per_sec: 1_000.0,
+        n_requests: 6,
+        min_rows: h.min_rows,
+        max_rows: h.max_rows,
+        bursty: false,
+    }]);
+    let lp = h
+        .single_loop(
+            vec![TenantSpec::new("big", 8)],
+            h.config(DrainPolicy::WeightedFair),
+        )
+        .unwrap();
+    let rep = lp.run_trace(&trace).unwrap();
+    assert_conserved(&rep, trace.len() as u64, "oversized");
+    assert_eq!(rep.global.completed, 0);
+    assert_eq!(rep.global.shed, trace.len() as u64);
+    assert_eq!(rep.per_tenant[0].shed, trace.len() as u64);
+}
+
+#[test]
+fn weighted_fair_isolates_the_victim_where_global_fifo_does_not() {
+    let out = tenant_fairness_run(17, 1, 16).unwrap();
+    for row in out.rows() {
+        assert!(
+            row.conserved,
+            "{}/{}: ledger does not conserve",
+            row.run, row.tenant
+        );
+        assert!(
+            (0.0..=1.0).contains(&row.shed_fraction),
+            "{}/{}: shed fraction {}",
+            row.run,
+            row.tenant,
+            row.shed_fraction
+        );
+    }
+    let solo = FairnessOutcome::victim_fraction(&out.solo);
+    let wfq = FairnessOutcome::victim_fraction(&out.wfq);
+    let fifo = FairnessOutcome::victim_fraction(&out.fifo);
+    // the victim alone (0.25x capacity) completes essentially all its
+    // requests — the yardstick isolation is measured against
+    assert!(solo >= 0.9, "solo victim only completed {solo:.2}");
+    // stated isolation bound: weighted-fair keeps the victim within
+    // 25% of its solo completed fraction despite a 10x-capacity flood
+    assert!(
+        wfq >= 0.75 * solo,
+        "weighted-fair victim completed {wfq:.2} vs solo {solo:.2}"
+    );
+    // the contrast baseline must demonstrably violate isolation: under
+    // the shared FIFO the flood takes the victim's admission away
+    assert!(
+        fifo <= 0.5 * wfq,
+        "global FIFO victim completed {fifo:.2} vs weighted-fair {wfq:.2} \
+         — the baseline is supposed to starve the victim"
+    );
+    // stated latency bound: weighted-fair victim p99 stays within 50x
+    // of the solo baseline (the FIFO run barely completes anything, so
+    // its p99 is not a meaningful statistic)
+    let solo_p99 = FairnessOutcome::victim_p99_ns(&out.solo).max(1);
+    let wfq_p99 = FairnessOutcome::victim_p99_ns(&out.wfq);
+    assert!(wfq_p99 > 0, "weighted-fair victim completed nothing");
+    assert!(
+        wfq_p99 <= 50 * solo_p99,
+        "weighted-fair victim p99 {wfq_p99}ns vs solo {solo_p99}ns"
+    );
+    // the hitter itself is not starved by fairness — it keeps the
+    // capacity the victim does not use
+    assert!(out.wfq.per_tenant[HITTER].completed > 0);
+    assert!(out.wfq.per_tenant[VICTIM].offered == out.solo.per_tenant[VICTIM].offered);
+}
+
+#[test]
+fn backend_routing_is_bit_identical_to_solo_execution() {
+    let h = TenantHarness::new(71, 1);
+    let mk_specs = |t: u64| TraceSpec {
+        seed: 71 ^ (t << 4),
+        rate_per_sec: 2_000.0,
+        n_requests: 10,
+        min_rows: 2,
+        max_rows: 6,
+        bursty: false,
+    };
+    let trace = h.trace(&[mk_specs(1), mk_specs(2), mk_specs(3)]);
+    let tenants = vec![
+        TenantSpec {
+            required_precision: Some(Precision::F32),
+            required_variant: Some("base".to_string()),
+            ..TenantSpec::new("exact", 64)
+        },
+        TenantSpec {
+            required_variant: Some("canary".to_string()),
+            ..TenantSpec::new("turbo", 64)
+        },
+        TenantSpec::new("free", 64),
+    ];
+    let cfg = TenantServeConfig {
+        capture_outputs: true,
+        ..h.config(DrainPolicy::WeightedFair)
+    };
+    let lp = h.ab_loop(tenants, cfg).unwrap();
+    let rep = lp.run_trace(&trace).unwrap();
+    assert_conserved(&rep, trace.len() as u64, "routing");
+    assert_eq!(
+        rep.global.shed, 0,
+        "lanes are deep enough that nothing sheds"
+    );
+    assert_eq!(rep.global.failed, 0);
+
+    // rebuild the fleet exactly as ab_loop froze it and serve every
+    // request alone on the backend the front-end assigned it to
+    let solo: Vec<_> = vec![
+        h.backend("exact", "base", Precision::F32, h.seed).unwrap(),
+        h.backend("turbo", "canary", Precision::Int8, h.seed ^ 0xab)
+            .unwrap(),
+    ];
+    let mut served_per_backend = [0usize; 2];
+    for (i, req) in trace.iter().enumerate() {
+        let b = rep.assigned_backend[i]
+            .expect("nothing shed, so every request was assigned");
+        served_per_backend[b] += 1;
+        // capability pins were honoured as hard filters
+        match req.tenant {
+            0 => assert_eq!(b, 0, "request {i}: 'exact' pinned to f32/base"),
+            1 => assert_eq!(b, 1, "request {i}: 'turbo' pinned to canary"),
+            _ => {}
+        }
+        let routed = rep.outputs[i].as_ref().expect("completed output");
+        let (alone, _) = solo[b].execute_forward(&req.x).unwrap();
+        assert_eq!(routed.shape, alone.shape, "request {i} shape");
+        assert_eq!(
+            routed.data, alone.data,
+            "request {i} on backend {b}: coalesced serving must be \
+             bit-identical to solo execution"
+        );
+    }
+    assert!(
+        served_per_backend.iter().all(|&n| n > 0),
+        "both backends must have served: {served_per_backend:?}"
+    );
+}
